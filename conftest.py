@@ -1,0 +1,6 @@
+# Makes `pytest python/tests/ -q` work from the repository root:
+# the test modules import the build-time `compile` package from python/.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

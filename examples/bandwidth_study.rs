@@ -1,0 +1,47 @@
+//! Bandwidth study (paper Fig. 9) across all four layer tables, plus the
+//! per-layer mechanism view: which layers become off-chip-cheap when the
+//! same-area MLC STT-RAM buffer replaces SRAM.
+//!
+//! ```bash
+//! cargo run --offline --release --example bandwidth_study
+//! ```
+
+use mlcstt::metrics::Table;
+use mlcstt::models;
+use mlcstt::systolic::{simulate_network, ArrayConfig};
+
+fn main() {
+    for net in ["vgg16", "inceptionv3", "vggmini", "inceptionmini"] {
+        let layers: Vec<_> = models::by_name(net)
+            .unwrap()
+            .into_iter()
+            .filter(|l| l.h > 1)
+            .collect();
+        let mut t = Table::new(
+            &format!("{net}: per-layer off-chip bytes/cycle vs buffer size"),
+            &["layer", "256KB(SRAM)", "512KB", "1024KB", "2048KB", "util%"],
+        );
+        let cfgs: Vec<ArrayConfig> = [256usize, 512, 1024, 2048]
+            .iter()
+            .map(|kb| ArrayConfig::new(kb * 1024))
+            .collect();
+        let all: Vec<Vec<_>> = cfgs.iter().map(|c| simulate_network(&layers, c)).collect();
+        for (i, layer) in layers.iter().enumerate() {
+            let util = all[0][i].utilization(&cfgs[0]);
+            t.row(vec![
+                layer.name.clone(),
+                format!("{:.2}", all[0][i].offchip_bpc()),
+                format!("{:.2}", all[1][i].offchip_bpc()),
+                format!("{:.2}", all[2][i].offchip_bpc()),
+                format!("{:.2}", all[3][i].offchip_bpc()),
+                format!("{:.0}", 100.0 * util),
+            ]);
+        }
+        println!("{t}");
+    }
+    println!(
+        "reading: early layers are ofmap/ifmap-bound (flat rows); the deep\n\
+         512-channel layers are weight-bound and drop sharply once the ifmap\n\
+         fits on-chip — the paper's Fig. 9 story."
+    );
+}

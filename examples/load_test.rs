@@ -1,0 +1,90 @@
+//! Open-loop load test of the serving coordinator: Poisson arrivals at a
+//! sweep of offered rates, measuring batch fill, p50/p99 latency, and
+//! achieved throughput — the batcher characterization behind the §Perf
+//! coordinator-overhead claim.
+//!
+//! ```bash
+//! make artifacts && cargo run --offline --release --example load_test
+//! ```
+//!
+//! Uses the faster inceptionmini artifact; `MLCSTT_RATES` (comma-separated
+//! req/s) and `MLCSTT_REQUESTS` override the sweep.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use mlcstt::coordinator::{
+    poisson_trace, InferenceEngine, Server, ServerConfig, StoreConfig, WeightStore,
+};
+use mlcstt::encoding::Policy;
+use mlcstt::experiments::load_model;
+use mlcstt::runtime::artifacts::{model_available, model_paths, TestSet};
+use mlcstt::runtime::Executor;
+use mlcstt::stt::ErrorModel;
+
+fn main() -> Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("MLCSTT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let model = "inceptionmini";
+    anyhow::ensure!(
+        model_available(&dir, model),
+        "{model}: run `make artifacts` first"
+    );
+    let requests: usize = std::env::var("MLCSTT_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(96);
+    let rates: Vec<f64> = std::env::var("MLCSTT_RATES")
+        .unwrap_or_else(|_| "50,200".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+
+    let (manifest, weights) = load_model(&dir, model)?;
+    let test = TestSet::read(&dir.join("testset.bin"))?;
+    let cfg = StoreConfig {
+        policy: Policy::Hybrid,
+        granularity: 4,
+        error_model: ErrorModel::at_rate(0.015),
+        ..StoreConfig::default()
+    };
+    let mut store = WeightStore::load(&cfg, &weights)?;
+    let tensors = store.materialize()?;
+
+    println!("open-loop Poisson load test — {model}, {requests} requests per rate");
+    for rate in rates {
+        let trace = poisson_trace(requests, rate, test.n, 0xBEEF);
+        let tensors = tensors.clone();
+        let manifest2 = manifest.clone();
+        let (hlo, _, _) = model_paths(&dir, model);
+        let server = Server::start(
+            move || {
+                let exec = Executor::from_hlo_file(&hlo)?;
+                InferenceEngine::new(exec, manifest2, &tensors)
+            },
+            ServerConfig {
+                max_wait: Duration::from_millis(25),
+            },
+        )?;
+
+        let start = Instant::now();
+        let mut tickets = Vec::with_capacity(trace.len());
+        for (arrival, &idx) in trace.arrivals.iter().zip(&trace.image_idx) {
+            if let Some(gap) = arrival.checked_sub(start.elapsed()) {
+                std::thread::sleep(gap);
+            }
+            tickets.push(server.submit(test.image(idx).to_vec())?);
+        }
+        for t in tickets {
+            t.wait()?;
+        }
+        let rep = server.shutdown();
+        println!(
+            "offered {rate:>6.0} req/s | served {} in {} batches (fill {:>4.1}) | p50 {:>7.1} ms p99 {:>7.1} ms | achieved {:>6.1} req/s",
+            rep.served, rep.batches, rep.mean_batch_fill, rep.p50_ms, rep.p99_ms, rep.throughput_rps
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! End-to-end driver (DESIGN.md §5 "E2E"): the full three-layer system on a
+//! real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --offline --release --example serve_e2e
+//! ```
+//!
+//! For each trained artifact model:
+//!  1. loads the JAX/Pallas-lowered HLO and the trained weights,
+//!  2. measures error-free accuracy through PJRT,
+//!  3. pushes the weights through the simulated MLC STT-RAM buffer under
+//!     each protection system at the published 2e-2 soft-error rate,
+//!  4. serves a request replay through the threaded coordinator (queue ->
+//!     batcher -> PJRT) and reports latency/throughput,
+//!  5. prints the paper's headline comparison: hybrid accuracy == error-free
+//!     while read/write energy drops vs the unprotected baseline.
+//!
+//! Environment: MLCSTT_EVAL (test images per accuracy point, default 256),
+//! MLCSTT_REQUESTS (serving replay length, default 128).
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use mlcstt::coordinator::{InferenceEngine, Server, ServerConfig, StoreConfig, WeightStore};
+use mlcstt::encoding::Policy;
+use mlcstt::experiments::{load_model, run_accuracy_experiment};
+use mlcstt::runtime::artifacts::{model_available, model_paths, TestSet};
+use mlcstt::runtime::Executor;
+use mlcstt::stt::{AccessKind, CostModel, ErrorModel};
+use mlcstt::util::rng::Xoshiro256;
+
+fn env_n(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("MLCSTT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let eval = env_n("MLCSTT_EVAL", 256);
+    let requests = env_n("MLCSTT_REQUESTS", 128);
+
+    let mut ran = false;
+    for model in ["vggmini", "inceptionmini"] {
+        if !model_available(&dir, model) {
+            eprintln!("{model}: artifacts missing — run `make artifacts`");
+            continue;
+        }
+        ran = true;
+        println!("\n================ {model} ================");
+
+        // --- Fig. 8 accuracy sweep at the published worst-case rate.
+        let exp = run_accuracy_experiment(&dir, model, 0.02, 4, eval, 7)?;
+        println!("{}", exp.table);
+
+        // --- Energy headline (payload accounting, hybrid g=4 vs baseline).
+        let (_, weights) = load_model(&dir, model)?;
+        let flat = weights.flat();
+        let cost = CostModel::default();
+        let base = mlcstt::encoding::WeightCodec::new(Policy::Unprotected, 1).encode(&flat);
+        let hyb = mlcstt::encoding::WeightCodec::hybrid(4).encode(&flat);
+        let pe = |e: &mlcstt::encoding::Encoded, k| {
+            e.words
+                .iter()
+                .map(|&w| cost.word(w, k).nanojoules)
+                .sum::<f64>()
+        };
+        println!(
+            "energy (payload): read -{:.1}%  write -{:.1}%  vs unprotected baseline",
+            100.0 * (1.0 - pe(&hyb, AccessKind::Read) / pe(&base, AccessKind::Read)),
+            100.0 * (1.0 - pe(&hyb, AccessKind::Write) / pe(&base, AccessKind::Write)),
+        );
+
+        // --- Serving replay through the coordinator (hybrid weights).
+        let (manifest, weights) = load_model(&dir, model)?;
+        let cfg = StoreConfig {
+            policy: Policy::Hybrid,
+            granularity: 4,
+            error_model: ErrorModel::at_rate(0.02),
+            seed: 11,
+            ..StoreConfig::default()
+        };
+        let mut store = WeightStore::load(&cfg, &weights)?;
+        let tensors = store.materialize()?;
+        let (hlo, _, _) = model_paths(&dir, model);
+        let test = TestSet::read(&dir.join("testset.bin"))?;
+
+        let manifest2 = manifest.clone();
+        let server = Server::start(
+            move || {
+                let exec = Executor::from_hlo_file(&hlo)?;
+                InferenceEngine::new(exec, manifest2, &tensors)
+            },
+            ServerConfig {
+                max_wait: Duration::from_millis(10),
+            },
+        )?;
+        let mut rng = Xoshiro256::seeded(3);
+        let mut tickets = Vec::new();
+        let mut expected = Vec::new();
+        for _ in 0..requests {
+            let i = rng.below(test.n as u64) as usize;
+            expected.push(test.labels[i] as usize);
+            tickets.push(server.submit(test.image(i).to_vec())?);
+        }
+        let mut correct = 0usize;
+        for (t, want) in tickets.into_iter().zip(expected) {
+            if t.wait().context("response")?.class == want {
+                correct += 1;
+            }
+        }
+        let rep = server.shutdown();
+        println!(
+            "serving: {} req, {} batches (fill {:.1}), acc {:.4}, p50 {:.1} ms, p99 {:.1} ms, {:.1} req/s",
+            rep.served,
+            rep.batches,
+            rep.mean_batch_fill,
+            correct as f64 / requests as f64,
+            rep.p50_ms,
+            rep.p99_ms,
+            rep.throughput_rps
+        );
+    }
+    anyhow::ensure!(ran, "no artifacts found — run `make artifacts` first");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""Binary artifact formats shared with the Rust runtime.
+
+No serde/npz on the Rust side (offline vendor set), so the interchange is a
+deliberately tiny format both sides implement and test:
+
+weights.bin  : b"MLCW" u32 version=1 u32 count
+               repeat count times:
+                 u16 name_len, name (utf-8), u8 ndim, u32 dims[ndim],
+                 f32 data (C order, little-endian)
+testset.bin  : b"MLCT" u32 version=1 u32 n u32 h u32 w u32 c
+               f32 images [n,h,w,c], i32 labels [n]
+manifest.json: human-readable sidecar (model name, batch size, param order,
+               shapes, training metadata). Rust parses it with the in-tree
+               JSON codec.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+WEIGHTS_MAGIC = b"MLCW"
+TESTSET_MAGIC = b"MLCT"
+VERSION = 1
+
+
+def write_weights(path: str, params: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<II", VERSION, len(params)))
+        for name, arr in params:
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_weights(path: str) -> list[tuple[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == WEIGHTS_MAGIC, "bad magic"
+    version, count = struct.unpack_from("<II", buf, 4)
+    assert version == VERSION
+    off = 12
+    out = []
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", buf, off)
+        off += 2
+        name = buf[off : off + nlen].decode("utf-8")
+        off += nlen
+        (ndim,) = struct.unpack_from("<B", buf, off)
+        off += 1
+        dims = struct.unpack_from(f"<{ndim}I", buf, off)
+        off += 4 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(buf, "<f4", n, off).reshape(dims)
+        off += 4 * n
+        out.append((name, arr))
+    return out
+
+
+def write_testset(path: str, images: np.ndarray, labels: np.ndarray) -> None:
+    images = np.ascontiguousarray(images, np.float32)
+    labels = np.ascontiguousarray(labels, np.int32)
+    n, h, w, c = images.shape
+    assert labels.shape == (n,)
+    with open(path, "wb") as f:
+        f.write(TESTSET_MAGIC)
+        f.write(struct.pack("<IIIII", VERSION, n, h, w, c))
+        f.write(images.tobytes())
+        f.write(labels.tobytes())
+
+
+def read_testset(path: str) -> tuple[np.ndarray, np.ndarray]:
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == TESTSET_MAGIC, "bad magic"
+    version, n, h, w, c = struct.unpack_from("<IIIII", buf, 4)
+    assert version == VERSION
+    off = 24
+    imgs = np.frombuffer(buf, "<f4", n * h * w * c, off).reshape(n, h, w, c)
+    off += 4 * n * h * w * c
+    labels = np.frombuffer(buf, "<i4", n, off)
+    return imgs, labels
+
+
+def write_manifest(path: str, manifest: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)

@@ -1,0 +1,17 @@
+# L1: Pallas kernels for the CNN accelerator hot-spot.
+#
+# The paper's compute substrate is a weight-stationary (WS) systolic array;
+# the TPU MXU is a 128x128 WS systolic array, so the convolution GEMM maps
+# directly: `matmul_ws` tiles the im2col GEMM into MXU-shaped blocks with a
+# VMEM accumulator, and BlockSpec index maps express the HBM<->VMEM schedule
+# that the paper's SRAM/STT double buffers express on the ASIC.
+#
+# All kernels are lowered with interpret=True: the CPU PJRT plugin cannot run
+# Mosaic custom-calls, and correctness (vs. kernels/ref.py) is the signal
+# that feeds the AOT artifacts. TPU-side performance is estimated
+# analytically in DESIGN.md / EXPERIMENTS.md from the BlockSpec.
+
+from .matmul_ws import matmul_ws, MXU_TILE
+from .conv_pool import bias_act, maxpool2x2
+
+__all__ = ["matmul_ws", "MXU_TILE", "bias_act", "maxpool2x2"]

@@ -1,0 +1,80 @@
+"""Elementwise / pooling Pallas kernels used around the GEMM hot loop.
+
+These are the "vector unit" companions to `matmul_ws`: on the paper's
+accelerator the PE array produces raw partial sums and a small post-processing
+unit applies bias + activation before results are written back to the output
+buffer; pooling runs as a separate pass over the output buffer. Expressing
+them as Pallas kernels keeps the whole layer inside one lowered HLO module.
+
+Both kernels are row-tiled so that arbitrarily large batches stream through a
+bounded VMEM footprint (one (block_rows, C) tile resident at a time).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bias_act_kernel(x_ref, b_ref, o_ref, *, act: str):
+    y = x_ref[...] + b_ref[...]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "linear":
+        pass
+    else:  # pragma: no cover - guarded in the wrapper
+        raise ValueError(act)
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_rows"))
+def bias_act(x: jax.Array, b: jax.Array, *, act: str = "relu", block_rows: int = 256) -> jax.Array:
+    """`act(x + b)` with x:[R, C], b:[C] — fused bias + activation kernel."""
+    if act not in ("relu", "linear"):
+        raise ValueError(f"unsupported activation {act!r}")
+    r, c = x.shape
+    pr = (-r) % block_rows
+    xp = jnp.pad(x, ((0, pr), (0, 0)))
+    rp = xp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_bias_act_kernel, act=act),
+        grid=(rp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c), x.dtype),
+        interpret=True,
+    )(xp, b)
+    return out[:r]
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # [rows, H, W, C]
+    r, h, w, c = x.shape
+    x = x.reshape(r, h // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(x, axis=(2, 4))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def maxpool2x2(x: jax.Array, *, block_rows: int = 8) -> jax.Array:
+    """2x2/stride-2 max pool over NHWC input (H, W even)."""
+    n, h, w, c = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2x2 needs even H, W; got {x.shape}")
+    pr = (-n) % block_rows
+    xp = jnp.pad(x, ((0, pr), (0, 0), (0, 0), (0, 0)))
+    np_ = xp.shape[0]
+    out = pl.pallas_call(
+        _maxpool_kernel,
+        grid=(np_ // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((block_rows, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, h // 2, w // 2, c), x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:n]

@@ -1,0 +1,109 @@
+"""Weight-stationary tiled matmul Pallas kernel.
+
+This is the hot-spot of the paper's accelerator: every convolution is
+lowered to an im2col GEMM `out[M, N] = x[M, K] @ w[K, N]` and executed on a
+weight-stationary systolic array. On TPU the MXU *is* a 128x128 WS systolic
+array, so the mapping is direct:
+
+  * grid = (M/BM, N/BN, K/BK); the K axis is the innermost (fastest moving)
+    grid dimension so a given weight tile w[K-block, N-block] stays resident
+    in VMEM across the accumulation — the "weight-stationary" schedule.
+  * the accumulator lives in a VMEM scratch buffer (pltpu-style scratch via
+    `pl.pallas_call`'s scratch_shapes), zeroed at k==0 and flushed to the
+    output tile at k==K/BK-1.
+  * BlockSpec index maps express the HBM->VMEM double-buffered transfers the
+    paper models with SRAM ping-pong buffers (SCALE-Sim "double buffer").
+
+VMEM/MXU accounting for one (BM, BN, BK) = (128, 128, 128) f32 step:
+  x tile 64 KiB + w tile 64 KiB + acc 64 KiB + out 64 KiB = 256 KiB << 16 MiB
+  VMEM, leaving room for >16 in-flight double-buffered tiles; each step
+  issues 128^3 MACs = 16 MXU passes at 8x128x128, i.e. the schedule is
+  MXU-bound, not transfer-bound (arithmetic intensity 128 FLOP/B at f32).
+
+interpret=True everywhere: CPU PJRT cannot run Mosaic custom-calls. The
+kernel still lowers into the same HLO module as the surrounding JAX program,
+which is what the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-shaped tile. The last two dims of a TPU tile must be (8k, 128); a
+# 128x128 f32 block is 16 lane-groups — the canonical MXU operand shape.
+MXU_TILE = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    """One grid step: acc += x_tile @ w_tile; flush on the last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU op: always accumulate in f32 regardless of operand dtype.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(a: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_ws(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = MXU_TILE,
+    bn: int = MXU_TILE,
+    bk: int = MXU_TILE,
+) -> jax.Array:
+    """`x[M, K] @ w[K, N]` on the weight-stationary Pallas schedule.
+
+    Shapes need not be tile-aligned; inputs are zero-padded to the block
+    grid and the result is sliced back (zero padding is exact for matmul).
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul_ws expects 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+
+    xp = _pad_to(x.astype(jnp.float32), bm, bk)
+    wp = _pad_to(w.astype(jnp.float32), bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    k_steps = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            # x tile follows (i, k): new ifmap slice each K step.
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            # w tile follows (k, j): stationary w.r.t. i — the WS schedule.
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

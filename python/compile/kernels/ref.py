@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contract: python/tests/test_kernels.py sweeps
+shapes/dtypes (hypothesis) and asserts the Pallas kernels match these
+references bit-for-bit (f32) or to tight tolerance where reassociation
+differs. The AOT pipeline refuses to emit artifacts if the oracle check
+fails (see aot.py --selfcheck).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def bias_act_ref(x: jax.Array, b: jax.Array, act: str = "relu") -> jax.Array:
+    y = x + b
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act != "linear":
+        raise ValueError(act)
+    return y
+
+
+def maxpool2x2_ref(x: jax.Array) -> jax.Array:
+    n, h, w, c = x.shape
+    return jnp.max(x.reshape(n, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1, padding: str = "SAME") -> jax.Array:
+    """NHWC x HWIO convolution oracle (used for the im2col path in model.py)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

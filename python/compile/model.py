@@ -1,0 +1,268 @@
+"""L2: the CNN models, written in JAX over the L1 Pallas kernels.
+
+Two model families mirror the paper's evaluation pair:
+
+  * ``vggmini``       — a plain 3x3-conv stack (VGG16's structural family)
+  * ``inceptionmini`` — multi-branch inception modules (Inception V3 family)
+
+Both are pure functions over an ordered parameter list, so the AOT artifact
+exposes weights as HLO *parameters*: the Rust coordinator owns the weights,
+pushes them through the simulated MLC STT-RAM buffer (encode -> store ->
+fault -> decode), and feeds the surviving values to the compiled executable.
+That is exactly the paper's threat model — faults hit the weight buffer, not
+the activations datapath.
+
+Every layer's GEMM goes through ``kernels.matmul_ws`` (the weight-stationary
+Pallas kernel) when ``use_pallas=True`` — the AOT path — and through the
+pure-jnp oracle when ``use_pallas=False`` — the training path (interpret-mode
+Pallas is orders of magnitude too slow to train under; the two paths are
+asserted equal in python/tests/test_model.py).
+
+Parameter convention: ``params`` is a list of (name, array) in a fixed
+topological order; conv weights are HWIO, dense weights are [in, out].
+The same order is serialized into the weight manifest consumed by Rust.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul_ws, bias_act, maxpool2x2
+from .kernels import ref
+
+NUM_CLASSES = 10
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def _tile(dim: int, cap: int) -> int:
+    """Block size for one GEMM dim: multiple of 8, capped.
+
+    Tile caps are a *deployment* parameter. On a real TPU the schedule is
+    MXU-shaped (128x128x128, DESIGN.md §Hardware-Adaptation). The artifacts
+    built here execute on CPU PJRT, where the interpret-lowered grid becomes
+    an XLA while-loop: small tiles mean thousands of loop trips (57 s per
+    batch measured at 128-caps on vggmini), so the CPU artifacts use large
+    tiles that collapse most layers to a single grid step while keeping the
+    same kernel code. EXPERIMENTS.md §Perf records the before/after.
+    """
+    return min(cap, ((dim + 7) // 8) * 8)
+
+
+# CPU-PJRT tile caps (TPU would use 128/128/128 — see DESIGN.md).
+TILE_CAPS_M = 4096
+TILE_CAPS_N = 512
+TILE_CAPS_K = 2048
+
+
+def _gemm(x2d: jax.Array, w2d: jax.Array, use_pallas: bool) -> jax.Array:
+    if use_pallas:
+        m, k = x2d.shape
+        _, n = w2d.shape
+        return matmul_ws(
+            x2d,
+            w2d,
+            bm=_tile(m, TILE_CAPS_M),
+            bn=_tile(n, TILE_CAPS_N),
+            bk=_tile(k, TILE_CAPS_K),
+        )
+    return ref.matmul_ref(x2d, w2d)
+
+
+def _bias_relu(x2d: jax.Array, b: jax.Array, act: str, use_pallas: bool) -> jax.Array:
+    if use_pallas:
+        return bias_act(x2d, b, act=act)
+    return ref.bias_act_ref(x2d, b, act)
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    act: str = "relu",
+    use_pallas: bool = False,
+) -> jax.Array:
+    """NHWC conv as im2col + WS GEMM (how the paper's accelerator runs it)."""
+    n, h, wd, c = x.shape
+    r, s, ci, co = w.shape
+    assert ci == c, (x.shape, w.shape)
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(r, s),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [n, ho, wo, c*r*s], feature order (C, R, S): channel-major
+    _, ho, wo, k = patches.shape
+    x2d = patches.reshape(n * ho * wo, k)
+    # Match the patch feature order: HWIO -> (I, R, S, O) -> [I*R*S, O].
+    w2d = jnp.transpose(w, (2, 0, 1, 3)).reshape(r * s * ci, co)
+    y2d = _gemm(x2d, w2d, use_pallas)
+    y2d = _bias_relu(y2d, b, act, use_pallas)
+    return y2d.reshape(n, ho, wo, co)
+
+
+def dense(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, act: str = "relu", use_pallas: bool = False
+) -> jax.Array:
+    y = _gemm(x, w, use_pallas)
+    return _bias_relu(y, b, act, use_pallas)
+
+
+def maxpool(x: jax.Array, use_pallas: bool = False) -> jax.Array:
+    if use_pallas:
+        return maxpool2x2(x)
+    return ref.maxpool2x2_ref(x)
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def _he(key, shape) -> jax.Array:
+    fan_in = int(np.prod(shape[:-1]))
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _conv_param(key, name, r, s, ci, co, params):
+    k1, k2 = jax.random.split(key)
+    params.append((f"{name}.w", _he(k1, (r, s, ci, co))))
+    params.append((f"{name}.b", jnp.zeros((co,), jnp.float32)))
+    return k2
+
+
+def _dense_param(key, name, ci, co, params):
+    k1, k2 = jax.random.split(key)
+    params.append((f"{name}.w", _he(k1, (ci, co))))
+    params.append((f"{name}.b", jnp.zeros((co,), jnp.float32)))
+    return k2
+
+
+# --------------------------------------------------------------------------
+# VGG-Mini
+# --------------------------------------------------------------------------
+
+VGG_CFG = [(32, 2), (64, 2), (128, 2)]  # (channels, convs-per-stage); pool after each
+
+
+def init_vggmini(key) -> list[tuple[str, jax.Array]]:
+    params: list[tuple[str, jax.Array]] = []
+    ci = 3
+    for si, (co, reps) in enumerate(VGG_CFG):
+        for rj in range(reps):
+            key = _conv_param(key, f"conv{si}_{rj}", 3, 3, ci, co, params)
+            ci = co
+    key = _dense_param(key, "fc0", 4 * 4 * 128, 256, params)
+    key = _dense_param(key, "fc1", 256, NUM_CLASSES, params)
+    return params
+
+
+def vggmini_apply(params: dict[str, jax.Array], x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+    for si, (_, reps) in enumerate(VGG_CFG):
+        for rj in range(reps):
+            x = conv2d(
+                x, params[f"conv{si}_{rj}.w"], params[f"conv{si}_{rj}.b"], use_pallas=use_pallas
+            )
+        x = maxpool(x, use_pallas)
+    x = x.reshape(x.shape[0], -1)
+    x = dense(x, params["fc0.w"], params["fc0.b"], use_pallas=use_pallas)
+    return dense(x, params["fc1.w"], params["fc1.b"], act="linear", use_pallas=use_pallas)
+
+
+# --------------------------------------------------------------------------
+# Inception-Mini
+# --------------------------------------------------------------------------
+#
+# Each module concatenates four branches (1x1 / 1x1->3x3 / 1x1->"5x5" as a
+# 3x3 pair, pool->1x1), the Inception V3 "module A" shape scaled down.
+
+INC_MODULES = [
+    # (b1, (r3, b3), (r5, b5a, b5b), bp) -> concat channels
+    dict(b1=24, r3=16, b3=32, r5=8, b5a=16, b5b=16, bp=24),   # -> 96ch
+    dict(b1=32, r3=24, b3=48, r5=12, b5a=24, b5b=24, bp=24),  # -> 128ch
+]
+
+
+def _inc_module_params(key, name, ci, m, params):
+    key = _conv_param(key, f"{name}.b1", 1, 1, ci, m["b1"], params)
+    key = _conv_param(key, f"{name}.b3r", 1, 1, ci, m["r3"], params)
+    key = _conv_param(key, f"{name}.b3", 3, 3, m["r3"], m["b3"], params)
+    key = _conv_param(key, f"{name}.b5r", 1, 1, ci, m["r5"], params)
+    key = _conv_param(key, f"{name}.b5a", 3, 3, m["r5"], m["b5a"], params)
+    key = _conv_param(key, f"{name}.b5b", 3, 3, m["b5a"], m["b5b"], params)
+    key = _conv_param(key, f"{name}.bp", 1, 1, ci, m["bp"], params)
+    return key
+
+
+def _inc_module_out(m) -> int:
+    return m["b1"] + m["b3"] + m["b5b"] + m["bp"]
+
+
+def init_inceptionmini(key) -> list[tuple[str, jax.Array]]:
+    params: list[tuple[str, jax.Array]] = []
+    key = _conv_param(key, "stem0", 3, 3, 3, 32, params)
+    ci = 32
+    for mi, m in enumerate(INC_MODULES):
+        key = _inc_module_params(key, f"inc{mi}", ci, m, params)
+        ci = _inc_module_out(m)
+    key = _dense_param(key, "fc", ci, NUM_CLASSES, params)
+    return params
+
+
+def _avgpool3x3_same(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 3, 3, 1), (1, 1, 1, 1), "SAME"
+    ) / 9.0
+
+
+def _inc_module_apply(params, name, x, m, use_pallas):
+    cv = functools.partial(conv2d, use_pallas=use_pallas)
+    b1 = cv(x, params[f"{name}.b1.w"], params[f"{name}.b1.b"])
+    b3 = cv(x, params[f"{name}.b3r.w"], params[f"{name}.b3r.b"])
+    b3 = cv(b3, params[f"{name}.b3.w"], params[f"{name}.b3.b"])
+    b5 = cv(x, params[f"{name}.b5r.w"], params[f"{name}.b5r.b"])
+    b5 = cv(b5, params[f"{name}.b5a.w"], params[f"{name}.b5a.b"])
+    b5 = cv(b5, params[f"{name}.b5b.w"], params[f"{name}.b5b.b"])
+    bp = _avgpool3x3_same(x)
+    bp = cv(bp, params[f"{name}.bp.w"], params[f"{name}.bp.b"])
+    return jnp.concatenate([b1, b3, b5, bp], axis=-1)
+
+
+def inceptionmini_apply(
+    params: dict[str, jax.Array], x: jax.Array, *, use_pallas: bool = False
+) -> jax.Array:
+    x = conv2d(x, params["stem0.w"], params["stem0.b"], use_pallas=use_pallas)
+    x = maxpool(x, use_pallas)  # 16x16
+    x = _inc_module_apply(params, "inc0", x, INC_MODULES[0], use_pallas)
+    x = maxpool(x, use_pallas)  # 8x8
+    x = _inc_module_apply(params, "inc1", x, INC_MODULES[1], use_pallas)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    return dense(x, params["fc.w"], params["fc.b"], act="linear", use_pallas=use_pallas)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+MODELS: dict[str, tuple[Callable, Callable]] = {
+    "vggmini": (init_vggmini, vggmini_apply),
+    "inceptionmini": (init_inceptionmini, inceptionmini_apply),
+}
+
+
+def param_dict(params: list[tuple[str, jax.Array]]) -> dict[str, jax.Array]:
+    return dict(params)
+
+
+def num_params(params: list[tuple[str, jax.Array]]) -> int:
+    return int(sum(np.prod(a.shape) for _, a in params))

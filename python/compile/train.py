@@ -1,0 +1,126 @@
+"""Training loop (build-time only): SGD + momentum with weight clipping.
+
+The paper's premise is that "weights are normalized between -1 and 1 after
+each convolutional layer" (weight normalization [38]); we realize it as
+projected SGD — after every update all parameters are clipped into
+[-1, 1] — so the exported checkpoints satisfy the |w| < 2 precondition the
+sign-bit-protection scheme relies on (exponent MSB of binary16 unused).
+
+Runs on the pure-jnp reference path (interpret-mode Pallas is far too slow
+to train under); python/tests/test_model.py asserts the Pallas and reference
+paths agree, and aot.py re-verifies at export time.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+WEIGHT_CLIP = 1.0
+GRAD_CLIP_NORM = 5.0
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_step(apply_fn, lr: float, momentum: float = 0.9):
+    def loss_fn(pd, x, y):
+        return cross_entropy(apply_fn(pd, x), y)
+
+    @jax.jit
+    def step(pd, vel, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(pd, x, y)
+        # Global-norm gradient clipping: deep stacks on this synthetic data
+        # see occasional large first-epoch gradients that otherwise blow the
+        # run (observed: vggmini at lr=0.05 diverged in epoch 0).
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)) + 1e-12
+        )
+        scale = jnp.minimum(1.0, GRAD_CLIP_NORM / gnorm)
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        new_vel = jax.tree.map(lambda v, g: momentum * v - lr * g, vel, grads)
+        new_pd = jax.tree.map(
+            lambda p, v: jnp.clip(p + v, -WEIGHT_CLIP, WEIGHT_CLIP), pd, new_vel
+        )
+        return new_pd, new_vel, loss
+
+    return step
+
+
+def evaluate(apply_fn, pd, x, y, batch: int = 256) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = apply_fn(pd, jnp.asarray(x[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(y[i : i + batch])))
+    return correct / len(x)
+
+
+def train_model(
+    name: str,
+    *,
+    seed: int = 7,
+    epochs: int = 14,
+    batch: int = 128,
+    lr: float = 0.05,
+    n_train: int = 4096,
+    n_test: int = 1024,
+    log=print,
+) -> tuple[list[tuple[str, np.ndarray]], dict]:
+    """Returns (ordered params, training-metadata dict)."""
+    init_fn, apply_raw = model_mod.MODELS[name]
+    apply_fn = lambda pd, x: apply_raw(pd, x, use_pallas=False)
+
+    (xtr, ytr), (xte, yte) = data_mod.train_test(n_train, n_test, seed)
+    params = init_fn(jax.random.PRNGKey(seed))
+    order = [n for n, _ in params]
+    pd = model_mod.param_dict(params)
+    vel = jax.tree.map(jnp.zeros_like, pd)
+    step = make_step(apply_fn, lr)
+
+    rng = np.random.default_rng(seed + 99)
+    t0 = time.time()
+    losses = []
+    for ep in range(epochs):
+        perm = rng.permutation(n_train)
+        ep_loss = 0.0
+        nb = 0
+        for i in range(0, n_train, batch):
+            idx = perm[i : i + batch]
+            pd, vel, loss = step(pd, vel, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+            ep_loss += float(loss)
+            nb += 1
+        losses.append(ep_loss / nb)
+        log(f"[{name}] epoch {ep:2d} loss {losses[-1]:.4f}")
+    train_acc = evaluate(apply_fn, pd, xtr[:1024], ytr[:1024])
+    test_acc = evaluate(apply_fn, pd, xte, yte)
+    elapsed = time.time() - t0
+    log(f"[{name}] train_acc={train_acc:.4f} test_acc={test_acc:.4f} ({elapsed:.1f}s)")
+
+    out_params = [(n, np.asarray(pd[n])) for n in order]
+    # Premise check: every exported weight is in [-1, 1].
+    wmax = max(float(np.abs(a).max()) for _, a in out_params)
+    assert wmax <= WEIGHT_CLIP + 1e-6, f"weight clip violated: {wmax}"
+    meta = {
+        "model": name,
+        "seed": seed,
+        "epochs": epochs,
+        "batch": batch,
+        "lr": lr,
+        "n_train": n_train,
+        "n_test": n_test,
+        "train_acc": train_acc,
+        "test_acc": test_acc,
+        "loss_curve": losses,
+        "max_abs_weight": wmax,
+        "num_params": model_mod.num_params(out_params),
+        "train_seconds": elapsed,
+    }
+    return out_params, meta

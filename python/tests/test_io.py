@@ -1,0 +1,65 @@
+"""Round-trip tests for the binary interchange formats (Rust parses these)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import io as io_mod
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    count=st.integers(1, 6),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_weights_roundtrip(tmp_path_factory, count, seed):
+    tmp = tmp_path_factory.mktemp("w")
+    rng = np.random.default_rng(seed)
+    params = []
+    for i in range(count):
+        ndim = int(rng.integers(1, 5))
+        shape = tuple(int(rng.integers(1, 6)) for _ in range(ndim))
+        params.append((f"layer{i}.w", rng.standard_normal(shape).astype(np.float32)))
+    path = str(tmp / "w.bin")
+    io_mod.write_weights(path, params)
+    back = io_mod.read_weights(path)
+    assert [n for n, _ in back] == [n for n, _ in params]
+    for (_, a), (_, b) in zip(params, back):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+
+def test_weights_unicode_names(tmp_path):
+    params = [("conv0.w/µ", np.ones((2, 2), np.float32))]
+    path = str(tmp_path / "w.bin")
+    io_mod.write_weights(path, params)
+    assert io_mod.read_weights(path)[0][0] == "conv0.w/µ"
+
+
+def test_weights_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.bin")
+    with open(path, "wb") as f:
+        f.write(b"XXXX" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        io_mod.read_weights(path)
+
+
+def test_testset_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    imgs = rng.standard_normal((5, 8, 8, 3)).astype(np.float32)
+    labels = rng.integers(0, 10, 5).astype(np.int32)
+    path = str(tmp_path / "t.bin")
+    io_mod.write_testset(path, imgs, labels)
+    i2, l2 = io_mod.read_testset(path)
+    np.testing.assert_array_equal(imgs, i2)
+    np.testing.assert_array_equal(labels, l2)
+
+
+def test_dataset_determinism():
+    from compile import data
+    a_img, a_lab = data.make_split(64, seed=5)
+    b_img, b_lab = data.make_split(64, seed=5)
+    np.testing.assert_array_equal(a_img, b_img)
+    np.testing.assert_array_equal(a_lab, b_lab)
+    c_img, _ = data.make_split(64, seed=6)
+    assert np.abs(a_img - c_img).max() > 0

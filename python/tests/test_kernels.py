@@ -1,0 +1,121 @@
+"""L1 correctness: Pallas kernels vs. pure-jnp oracles.
+
+hypothesis sweeps shapes (including non-tile-aligned, degenerate, and
+MXU-boundary cases) and value distributions; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_ws, bias_act, maxpool2x2, MXU_TILE
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matmul_ws
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matmul_ws_small_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    out = matmul_ws(jnp.asarray(x), jnp.asarray(w), bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.matmul_ref(x, w)), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (MXU_TILE, MXU_TILE, MXU_TILE),          # exactly one MXU tile
+        (MXU_TILE + 1, MXU_TILE - 1, MXU_TILE),  # off-by-one around the tile
+        (1, 1, 1),                               # degenerate
+        (257, 130, 127),                         # multi-tile, ragged
+        (3, 500, 2),                             # deep K accumulation
+    ],
+)
+def test_matmul_ws_tile_boundaries(m, k, n):
+    rng = np.random.default_rng(m * 7919 + k * 31 + n)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    out = matmul_ws(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out), x.astype(np.float64) @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_ws_zero_padding_exact():
+    # Padding must contribute exactly zero: an all-ones input keeps exact sums.
+    x = np.ones((100, 37), np.float32)
+    w = np.ones((37, 99), np.float32)
+    out = np.asarray(matmul_ws(jnp.asarray(x), jnp.asarray(w)))
+    assert (out == 37.0).all()
+
+
+def test_matmul_ws_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul_ws(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        matmul_ws(jnp.zeros((2, 3, 4)), jnp.zeros((4, 5)))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_matmul_ws_fp16_range_weights(seed):
+    # The paper's regime: weights clipped into [-1, 1] and representable in
+    # binary16. The kernel must be exact for these too.
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 33, 65)
+    w = np.clip(_rand(rng, 65, 17), -1, 1).astype(np.float16).astype(np.float32)
+    out = matmul_ws(jnp.asarray(x), jnp.asarray(w), bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.matmul_ref(x, w)), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------- bias_act
+
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 300),
+    c=st.integers(1, 48),
+    act=st.sampled_from(["relu", "linear"]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_bias_act_matches_ref(r, c, act, seed):
+    rng = np.random.default_rng(seed)
+    x, b = _rand(rng, r, c), _rand(rng, c)
+    out = bias_act(jnp.asarray(x), jnp.asarray(b), act=act, block_rows=64)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.bias_act_ref(x, b, act)))
+
+
+def test_bias_act_rejects_unknown_activation():
+    with pytest.raises(ValueError):
+        bias_act(jnp.zeros((2, 2)), jnp.zeros((2,)), act="gelu")
+
+
+# ---------------------------------------------------------------- maxpool
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 9),
+    hw=st.sampled_from([2, 4, 8, 16, 32]),
+    c=st.integers(1, 16),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_maxpool_matches_ref(n, hw, c, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, hw, hw, c)
+    out = maxpool2x2(jnp.asarray(x), block_rows=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.maxpool2x2_ref(x)))
+
+
+def test_maxpool_rejects_odd_spatial():
+    with pytest.raises(ValueError):
+        maxpool2x2(jnp.zeros((1, 3, 4, 1)))

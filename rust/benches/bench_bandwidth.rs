@@ -1,0 +1,104 @@
+//! Fig. 9 regeneration: max on-/off-chip bandwidth (top-3 layers) vs
+//! buffer size, for the real VGG16 and Inception V3 layer tables on the
+//! weight-stationary systolic model. 256 KB is the SRAM baseline; the
+//! larger sizes are the same-area MLC STT-RAM alternatives.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mlcstt::metrics::{bandwidth_table, BandwidthRow, Table};
+use mlcstt::models;
+use mlcstt::systolic::{simulate_network, top_k_by, ArrayConfig};
+
+const SIZES_KB: [usize; 4] = [256, 512, 1024, 2048];
+
+fn study(net: &str) {
+    let layers: Vec<_> = models::by_name(net)
+        .unwrap()
+        .into_iter()
+        .filter(|l| l.h > 1) // conv buffers; FCs stream without reuse
+        .collect();
+
+    for (direction, metric) in [
+        ("off-chip", true),
+        ("on-chip", false),
+    ] {
+        let mut rows = Vec::new();
+        for (i, kb) in SIZES_KB.iter().enumerate() {
+            let cfg = ArrayConfig::new(kb * 1024);
+            let reports = simulate_network(&layers, &cfg);
+            let top = if metric {
+                top_k_by(&reports, 3, |r| r.offchip_bpc())
+            } else {
+                top_k_by(&reports, 3, |r| r.onchip_bpc())
+            };
+            rows.push(BandwidthRow {
+                buffer_kb: *kb,
+                technology: if i == 0 { "SRAM" } else { "MLC STT-RAM" }.into(),
+                top_layers: top,
+            });
+        }
+        println!("{}", bandwidth_table(net, direction, &rows));
+    }
+
+    // Per-layer traffic deltas 256 KB -> 2048 KB: the mechanism table.
+    let small = simulate_network(&layers, &ArrayConfig::new(SIZES_KB[0] * 1024));
+    let big = simulate_network(&layers, &ArrayConfig::new(SIZES_KB[3] * 1024));
+    let mut t = Table::new(
+        &format!("traffic reduction 256 KB -> 2048 KB — {net}"),
+        &["layer", "off-chip MB", "->", "off Δ%", "on-chip MB", "->on", "on Δ%"],
+    );
+    for (s, b) in small.iter().zip(&big) {
+        let om = |x: u64| x as f64 / 1e6;
+        t.row(vec![
+            s.name.clone(),
+            format!("{:.2}", om(s.offchip_bytes())),
+            format!("{:.2}", om(b.offchip_bytes())),
+            format!("{:.1}", 100.0 * (1.0 - b.offchip_bytes() as f64 / s.offchip_bytes() as f64)),
+            format!("{:.2}", om(s.onchip_bytes())),
+            format!("{:.2}", om(b.onchip_bytes())),
+            format!("{:.1}", 100.0 * (1.0 - b.onchip_bytes() as f64 / s.onchip_bytes() as f64)),
+        ]);
+    }
+    println!("{t}");
+}
+
+fn dataflow_ablation(net: &str) {
+    // WS vs OS (paper §2.1 picks WS "without loss of generality" — checked
+    // here): off-chip bytes per layer at the SRAM-scale buffer.
+    use mlcstt::systolic::dataflow::simulate_network_os;
+    let layers: Vec<_> = models::by_name(net)
+        .unwrap()
+        .into_iter()
+        .filter(|l| l.h > 1)
+        .collect();
+    let cfg = ArrayConfig::new(256 * 1024);
+    let ws = simulate_network(&layers, &cfg);
+    let os = simulate_network_os(&layers, &cfg);
+    let mut t = Table::new(
+        &format!("ablation: weight-stationary vs output-stationary — {net} @256KB"),
+        &["layer", "WS off-chip MB", "OS off-chip MB", "WS wins"],
+    );
+    let mut ws_wins = 0usize;
+    for (w, o) in ws.iter().zip(&os) {
+        let win = w.offchip_bytes() <= o.offchip_bytes();
+        ws_wins += win as usize;
+        t.row(vec![
+            w.name.clone(),
+            format!("{:.2}", w.offchip_bytes() as f64 / 1e6),
+            format!("{:.2}", o.offchip_bytes() as f64 / 1e6),
+            if win { "yes" } else { "no" }.into(),
+        ]);
+    }
+    println!("{t}");
+    println!("WS wins {ws_wins}/{} layers (the weight-heavy deep layers — the paper's buffer)\n", ws.len());
+}
+
+fn main() {
+    harness::banner("bench_bandwidth", "Fig. 9 bandwidth vs buffer size");
+    for net in ["vgg16", "inceptionv3"] {
+        let (_, took) = harness::time_once(|| study(net));
+        println!("bench: {net} sweep in {}\n", harness::ms(took));
+    }
+    dataflow_ablation("vgg16");
+}

@@ -1,0 +1,69 @@
+//! Fig. 6 regeneration: stored 2-bit-pattern census for the baseline and
+//! the proposed scheme at granularity 1/2/4/8/16, per model.
+//!
+//! Runs on the trained artifact weights when available (`make artifacts`);
+//! otherwise falls back to a synthetic clipped-Gaussian weight population
+//! (N(0, 0.25²) clipped to [-1, 1], the typical trained-conv-net shape) so
+//! the bench always produces the figure.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mlcstt::encoding::{Policy, WeightCodec};
+use mlcstt::metrics::{bitcount_table, BitcountRow};
+use mlcstt::runtime::artifacts::{model_available, model_paths, WeightFile};
+use mlcstt::util::rng::Xoshiro256;
+
+fn synthetic_weights(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|_| ((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
+        .collect()
+}
+
+fn census(label: &str, weights: &[f32]) {
+    let mut rows = Vec::new();
+    let (base, took) =
+        harness::time_once(|| WeightCodec::new(Policy::Unprotected, 1).encode(weights));
+    rows.push(BitcountRow {
+        system: "baseline".into(),
+        counts: base.pattern_counts(),
+    });
+    let mut scheme_note = String::new();
+    for g in [1usize, 2, 4, 8, 16] {
+        let enc = WeightCodec::hybrid(g).encode(weights);
+        let h = enc.scheme_histogram();
+        scheme_note
+            .push_str(&format!("g={g}: nochange/rotate/round = {}/{}/{}\n", h[0], h[1], h[2]));
+        rows.push(BitcountRow {
+            system: format!("granularity_{g}"),
+            counts: enc.pattern_counts(),
+        });
+    }
+    println!("{}", bitcount_table(label, &rows));
+    print!("{scheme_note}");
+    println!(
+        "bench: baseline encode of {} weights in {} ({})\n",
+        weights.len(),
+        harness::ms(took),
+        harness::rate(weights.len() as u64, took)
+    );
+}
+
+fn main() {
+    harness::banner("bench_bitcount", "Fig. 6 stored-pattern census");
+    let dir = harness::artifacts_dir();
+    let mut any = false;
+    for model in ["vggmini", "inceptionmini"] {
+        if model_available(&dir, model) {
+            let (_, wpath, _) = model_paths(&dir, model);
+            let weights = WeightFile::read(&wpath).expect("weight file");
+            census(model, &weights.flat());
+            any = true;
+        }
+    }
+    if !any {
+        println!("(artifacts missing; using synthetic clipped-Gaussian weights)");
+        census("synthetic-1M", &synthetic_weights(1_000_000, 6));
+    }
+}

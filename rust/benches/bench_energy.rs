@@ -1,0 +1,135 @@
+//! Fig. 7 + Table 3 regeneration: buffer read/write energy per granularity,
+//! under both accounting conventions:
+//!
+//! * payload-only (the paper's Fig. 7 accounting — metadata excluded), and
+//! * full accounting including the tri-level metadata plane (our ablation:
+//!   at granularity 1 the metadata read overhead eats the read saving,
+//!   which is exactly why the paper's grouping knob exists).
+
+#[path = "harness.rs"]
+mod harness;
+
+use mlcstt::encoding::{Encoded, Policy, WeightCodec};
+use mlcstt::metrics::{energy_table, EnergyRow, Table};
+use mlcstt::runtime::artifacts::{model_available, model_paths, WeightFile};
+use mlcstt::stt::{AccessKind, CostModel, Energy};
+use mlcstt::util::rng::Xoshiro256;
+
+fn payload_energy(enc: &Encoded, cost: &CostModel, kind: AccessKind) -> Energy {
+    let mut total = Energy::ZERO;
+    for &w in &enc.words {
+        total.add(cost.word(w, kind));
+    }
+    total
+}
+
+fn energy_study(label: &str, weights: &[f32]) {
+    let cost = CostModel::default();
+    let mut payload_rows = Vec::new();
+    let mut full_rows = Vec::new();
+    let mut overhead = Table::new(
+        &format!("Table 3 metadata overhead — {label}"),
+        &["granularity", "overhead", "expected"],
+    );
+
+    let base = WeightCodec::new(Policy::Unprotected, 1).encode(weights);
+    for rows in [&mut payload_rows, &mut full_rows] {
+        rows.push(EnergyRow {
+            system: "baseline".into(),
+            read: payload_energy(&base, &cost, AccessKind::Read),
+            write: payload_energy(&base, &cost, AccessKind::Write),
+        });
+    }
+
+    for (g, expect) in [
+        (1usize, 0.125),
+        (2, 0.0625),
+        (4, 0.03125),
+        (8, 0.015625),
+        (16, 0.0078125),
+    ] {
+        let enc = WeightCodec::hybrid(g).encode(weights);
+        payload_rows.push(EnergyRow {
+            system: format!("granularity_{g}"),
+            read: payload_energy(&enc, &cost, AccessKind::Read),
+            write: payload_energy(&enc, &cost, AccessKind::Write),
+        });
+        full_rows.push(EnergyRow {
+            system: format!("granularity_{g}"),
+            read: enc.access_energy(&cost, AccessKind::Read),
+            write: enc.access_energy(&cost, AccessKind::Write),
+        });
+        overhead.row(vec![
+            g.to_string(),
+            format!("{:.7}", enc.metadata_overhead()),
+            format!("{expect:.7}"),
+        ]);
+    }
+
+    println!("{}", energy_table(&format!("{label} (payload only, paper accounting)"), &payload_rows));
+    println!("{}", energy_table(&format!("{label} (incl. tri-level metadata)"), &full_rows));
+    println!("{overhead}");
+
+    // Ablation: the SLC alternative (related work [27] sacrifices capacity
+    // for reliability) and the wear/lifetime extension (paper §1).
+    let n = weights.len() as f64;
+    let slc_read = 16.0 * cost.slc_read.nanojoules * n;
+    let slc_write = 16.0 * cost.slc_write.nanojoules * n;
+    let mut abl = Table::new(
+        &format!("ablation: SLC alternative + lifetime — {label}"),
+        &["system", "read nJ", "write nJ", "area (SRAM=1)", "stress/write", "rel lifetime"],
+    );
+    let mut base_wear = mlcstt::stt::WearTracker::new();
+    base_wear.record_stream(&base.words);
+    abl.row(vec![
+        "MLC unprotected".into(),
+        format!("{:.1}", payload_energy(&base, &cost, AccessKind::Read).nanojoules),
+        format!("{:.1}", payload_energy(&base, &cost, AccessKind::Write).nanojoules),
+        "0.25".into(),
+        format!("{:.3}", base_wear.stress_per_write()),
+        format!("{:.3}", base_wear.relative_lifetime()),
+    ]);
+    let hyb = WeightCodec::hybrid(4).encode(weights);
+    let mut hyb_wear = mlcstt::stt::WearTracker::new();
+    hyb_wear.record_stream(&hyb.words);
+    abl.row(vec![
+        "MLC hybrid g=4".into(),
+        format!("{:.1}", payload_energy(&hyb, &cost, AccessKind::Read).nanojoules),
+        format!("{:.1}", payload_energy(&hyb, &cost, AccessKind::Write).nanojoules),
+        "0.25".into(),
+        format!("{:.3}", hyb_wear.stress_per_write()),
+        format!("{:.3}", hyb_wear.relative_lifetime()),
+    ]);
+    abl.row(vec![
+        "SLC (fault-free)".into(),
+        format!("{slc_read:.1}"),
+        format!("{slc_write:.1}"),
+        "0.50".into(),
+        "1.000".into(),
+        "1.000".into(),
+    ]);
+    println!("{abl}");
+}
+
+fn main() {
+    harness::banner("bench_energy", "Fig. 7 energy + Table 3 overhead");
+    let dir = harness::artifacts_dir();
+    let mut any = false;
+    for model in ["vggmini", "inceptionmini"] {
+        if model_available(&dir, model) {
+            let (_, wpath, _) = model_paths(&dir, model);
+            let weights = WeightFile::read(&wpath).expect("weight file");
+            let (_, took) = harness::time_once(|| energy_study(model, &weights.flat()));
+            println!("bench: {model} energy study in {}\n", harness::ms(took));
+            any = true;
+        }
+    }
+    if !any {
+        let mut rng = Xoshiro256::seeded(6);
+        let ws: Vec<f32> = (0..1_000_000)
+            .map(|_| ((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
+            .collect();
+        println!("(artifacts missing; synthetic weights)");
+        energy_study("synthetic-1M", &ws);
+    }
+}

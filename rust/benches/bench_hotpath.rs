@@ -1,0 +1,145 @@
+//! Hot-path microbenches (EXPERIMENTS.md §Perf).
+//!
+//! The L3 request path is: encode -> buffer store (+fault) -> buffer load ->
+//! decode -> stage -> PJRT execute. Everything before PJRT is bit
+//! manipulation over millions of weights; these benches measure each stage
+//! in weights/second so optimization deltas are directly comparable.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mlcstt::buffer::{BufferConfig, MlcBuffer};
+use mlcstt::encoding::{Policy, WeightCodec};
+use mlcstt::fp;
+use mlcstt::runtime::artifacts::{model_available, model_paths, TestSet, WeightFile};
+use mlcstt::runtime::Executor;
+use mlcstt::stt::{AccessKind, CostModel, ErrorModel};
+use mlcstt::util::rng::Xoshiro256;
+
+const N: usize = 1 << 20; // 1M weights
+
+fn weights(n: usize) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(99);
+    (0..n)
+        .map(|_| ((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
+        .collect()
+}
+
+fn main() {
+    harness::banner("bench_hotpath", "L3 stage throughput (1M weights)");
+    let ws = weights(N);
+
+    // f16 conversion alone (the floor for everything downstream).
+    let (bits, d) = harness::time_median(5, || {
+        ws.iter().map(|&w| fp::f32_to_f16_bits(w)).collect::<Vec<u16>>()
+    });
+    println!("f32->f16 quantize        : {}", harness::rate(N as u64, d));
+    let (_, d) = harness::time_median(5, || {
+        bits.iter().map(|&b| fp::f16_bits_to_f32(b)).sum::<f32>()
+    });
+    println!("f16->f32 decode          : {}", harness::rate(N as u64, d));
+
+    // Pattern counting (Fig. 6 inner loop).
+    let (_, d) = harness::time_median(5, || {
+        bits.iter().map(|&b| fp::soft_cells(b) as u64).sum::<u64>()
+    });
+    println!("soft-cell count          : {}", harness::rate(N as u64, d));
+
+    // Encode under each policy.
+    for (label, policy, g) in [
+        ("encode unprotected      ", Policy::Unprotected, 1),
+        ("encode hybrid g=1       ", Policy::Hybrid, 1),
+        ("encode hybrid g=4       ", Policy::Hybrid, 4),
+        ("encode hybrid g=16      ", Policy::Hybrid, 16),
+    ] {
+        let codec = WeightCodec::new(policy, g);
+        let (_, d) = harness::time_median(3, || codec.encode(&ws));
+        println!("{label} : {}", harness::rate(N as u64, d));
+    }
+
+    // Decode.
+    let enc = WeightCodec::hybrid(4).encode(&ws);
+    let (_, d) = harness::time_median(3, || enc.decode());
+    println!("decode hybrid g=4        : {}", harness::rate(N as u64, d));
+
+    // Energy accounting sweep.
+    let cost = CostModel::default();
+    let (_, d) = harness::time_median(3, || enc.access_energy(&cost, AccessKind::Write));
+    println!("energy accounting        : {}", harness::rate(N as u64, d));
+
+    // Fault injection: pre-optimization per-cell path vs the binomial
+    // single-draw path (same distribution; see stt::error tests).
+    {
+        let model = ErrorModel::at_rate(0.015);
+        let enc_raw = WeightCodec::new(Policy::Unprotected, 1).encode(&ws);
+        let mut rng = Xoshiro256::seeded(5);
+        let (_, d) = harness::time_median(3, || {
+            enc_raw
+                .words
+                .iter()
+                .map(|&w| model.corrupt_word_write_naive(w, &mut rng))
+                .fold(0u64, |a, w| a ^ w as u64)
+        });
+        println!("fault inject (naive)     : {}", harness::rate(N as u64, d));
+        let (_, d) = harness::time_median(3, || {
+            enc_raw
+                .words
+                .iter()
+                .map(|&w| model.corrupt_word_write(w, &mut rng))
+                .fold(0u64, |a, w| a ^ w as u64)
+        });
+        println!("fault inject (binomial)  : {}", harness::rate(N as u64, d));
+    }
+
+    // Buffer store+load with fault injection at the published rate.
+    let cfg = BufferConfig::new(N * 2, 16).with_error_model(ErrorModel::at_rate(0.015));
+    let (_, d) = harness::time_median(3, || {
+        let mut buf = MlcBuffer::new(cfg.clone(), 1);
+        let r = buf.store(&enc).unwrap();
+        buf.load(&r).unwrap().words.len()
+    });
+    println!("buffer store+fault+load  : {}", harness::rate(N as u64, d));
+
+    // End-to-end weight path for a real model (encode -> store -> load ->
+    // decode), artifacts permitting.
+    let dir = harness::artifacts_dir();
+    if model_available(&dir, "vggmini") {
+        let (hlo, wpath, _) = model_paths(&dir, "vggmini");
+        let wf = WeightFile::read(&wpath).unwrap();
+        let flat = wf.flat();
+        let codec = WeightCodec::hybrid(4);
+        let (_, d) = harness::time_median(3, || {
+            let enc = codec.encode(&flat);
+            let mut buf =
+                MlcBuffer::new(BufferConfig::new(flat.len() * 2, 16), 1);
+            let r = buf.store(&enc).unwrap();
+            buf.load(&r).unwrap().decode().len()
+        });
+        println!(
+            "vggmini full weight path : {} ({} weights)",
+            harness::rate(flat.len() as u64, d),
+            flat.len()
+        );
+
+        // Coordinator overhead vs raw PJRT execute.
+        let test = TestSet::read(&dir.join("testset.bin")).unwrap();
+        let manifest =
+            mlcstt::runtime::artifacts::Manifest::read(&dir.join("vggmini.manifest.json"))
+                .unwrap();
+        let exec = Executor::from_hlo_file(&hlo).unwrap();
+        let engine =
+            mlcstt::coordinator::InferenceEngine::new(exec, manifest.clone(), &wf.params)
+                .unwrap();
+        let batch_elems: usize = manifest.input_shape.iter().product();
+        let images = test.images[..batch_elems].to_vec();
+        let (_, exec_d) = harness::time_median(3, || engine.classify_batch(&images).unwrap());
+        println!(
+            "PJRT classify_batch({})  : {} / batch ({})",
+            manifest.batch,
+            harness::ms(exec_d),
+            harness::rate(manifest.batch as u64, exec_d),
+        );
+    } else {
+        println!("(vggmini artifacts missing; skipping model-path benches)");
+    }
+}

@@ -1,0 +1,48 @@
+//! Fig. 4 regeneration: SSE per flipped bit position over 1M random
+//! weights in [-1, 1] — the study that licenses rounding only the last
+//! 4 mantissa bits.
+
+#[path = "harness.rs"]
+mod harness;
+
+use mlcstt::faults::bitflip_sse_study;
+use mlcstt::metrics::Table;
+
+fn main() {
+    harness::banner("bench_sse", "Fig. 4 bit-flip SSE study");
+    let n = 1_000_000usize;
+    let (sse, took) = harness::time_once(|| bitflip_sse_study(n, 4));
+
+    let mut t = Table::new(
+        &format!("Fig.4 SSE per flipped bit ({n} samples, seed 4)"),
+        &["bit", "role", "SSE/sample"],
+    );
+    for bit in (0..16).rev() {
+        let role = match bit {
+            15 => "sign",
+            14 => "exp MSB (backup)",
+            10..=13 => "exponent",
+            _ => "mantissa",
+        };
+        t.row(vec![
+            bit.to_string(),
+            role.into(),
+            format!("{:.3e}", sse[bit] / n as f64),
+        ]);
+    }
+    println!("{t}");
+
+    // The paper's conclusion in one line: how much lighter are the last 4?
+    let low4: f64 = sse[0..4].iter().sum();
+    let rest: f64 = sse[4..].iter().sum();
+    println!(
+        "last-4-bit share of total SSE: {:.2e} (rounding them is ~free)",
+        low4 / (low4 + rest)
+    );
+    println!(
+        "bench: {} flips in {} ({})",
+        16 * n,
+        harness::ms(took),
+        harness::rate(16 * n as u64, took)
+    );
+}

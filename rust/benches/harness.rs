@@ -1,0 +1,69 @@
+//! Shared bench scaffolding (criterion is not in the offline vendor set).
+//!
+//! Each `[[bench]]` target is built with `harness = false` and includes this
+//! file via `#[path = "harness.rs"] mod harness;`. Provides median-of-N
+//! wall-clock timing, throughput formatting, and artifact discovery. Bench
+//! output is plain text so `cargo bench | tee bench_output.txt` captures the
+//! paper-figure tables directly.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Resolve the artifacts directory (env override for CI layouts).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("MLCSTT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Evaluation-size knob so the full Fig. 8 run stays tractable on 1 CPU.
+pub fn eval_n(default: usize) -> usize {
+    std::env::var("MLCSTT_EVAL")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Time one invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Median-of-`n` timing for microbenches; returns (last output, median).
+pub fn time_median<T>(n: usize, mut f: impl FnMut() -> T) -> (T, Duration) {
+    assert!(n >= 1);
+    let mut times = Vec::with_capacity(n);
+    let mut out = None;
+    for _ in 0..n {
+        let t0 = Instant::now();
+        out = Some(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    (out.unwrap(), times[n / 2])
+}
+
+/// `items / seconds` with engineering units.
+pub fn rate(items: u64, d: Duration) -> String {
+    let per_s = items as f64 / d.as_secs_f64();
+    if per_s >= 1e9 {
+        format!("{:.2} G/s", per_s / 1e9)
+    } else if per_s >= 1e6 {
+        format!("{:.2} M/s", per_s / 1e6)
+    } else if per_s >= 1e3 {
+        format!("{:.2} k/s", per_s / 1e3)
+    } else {
+        format!("{per_s:.2} /s")
+    }
+}
+
+pub fn ms(d: Duration) -> String {
+    format!("{:.2} ms", d.as_secs_f64() * 1e3)
+}
+
+/// Standard bench banner.
+pub fn banner(name: &str, what: &str) {
+    println!("\n### bench {name} — {what}");
+}

@@ -1,0 +1,427 @@
+//! The on-chip MLC STT-RAM weight buffer.
+//!
+//! Models the physical resource the paper replaces SRAM with: a banked
+//! array of 2-bit MLC cells holding encoded binary16 words, plus a
+//! tri-level metadata plane holding one scheme symbol per group. Tracks
+//! content-dependent energy and banked latency for every transaction, and
+//! applies write-path fault injection exactly once per stored word (the
+//! paper's write/retention error model).
+//!
+//! Capacity semantics: MLC STT-RAM offers ~4x the capacity of SRAM at equal
+//! area (paper §1), so configs are usually constructed via
+//! [`BufferConfig::sram_equivalent`].
+
+use crate::encoding::{Encoded, Scheme};
+use crate::stt::{AccessKind, CostModel, Energy, ErrorModel};
+use crate::util::rng::Xoshiro256;
+
+/// Static buffer configuration.
+#[derive(Clone, Debug)]
+pub struct BufferConfig {
+    /// Payload capacity in bytes (each binary16 word takes 8 MLC cells =
+    /// 2 logical bytes).
+    pub capacity_bytes: usize,
+    /// Parallel banks: one word per bank per access slot; latency of a slot
+    /// is the max cell latency among its words.
+    pub banks: usize,
+    pub cost: CostModel,
+    pub error_model: ErrorModel,
+}
+
+impl BufferConfig {
+    pub fn new(capacity_bytes: usize, banks: usize) -> Self {
+        assert!(banks >= 1);
+        BufferConfig {
+            capacity_bytes,
+            banks,
+            cost: CostModel::default(),
+            error_model: ErrorModel::default(),
+        }
+    }
+
+    /// An MLC buffer occupying the same die area as `sram_bytes` of SRAM
+    /// (4x density, paper §1).
+    pub fn sram_equivalent(sram_bytes: usize, banks: usize) -> Self {
+        Self::new(sram_bytes * 4, banks)
+    }
+
+    pub fn with_error_model(mut self, m: ErrorModel) -> Self {
+        self.error_model = m;
+        self
+    }
+
+    pub fn capacity_words(&self) -> usize {
+        self.capacity_bytes / 2
+    }
+}
+
+/// Cumulative transaction statistics.
+#[derive(Clone, Debug, Default)]
+pub struct AccessStats {
+    pub writes: u64,
+    pub reads: u64,
+    pub write_energy: Energy,
+    pub read_energy: Energy,
+    pub injected_faults: u64,
+}
+
+/// A stored tensor's location + codec context.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub offset: usize,
+    pub len: usize,
+    /// Metadata context needed to decode reads from this region.
+    pub granularity: usize,
+    pub policy: crate::encoding::Policy,
+    meta_offset: usize,
+    meta_len: usize,
+}
+
+/// The buffer itself.
+pub struct MlcBuffer {
+    pub config: BufferConfig,
+    words: Vec<u16>,
+    meta: Vec<u8>, // tri-level symbols, one per group
+    used_words: usize,
+    used_meta: usize,
+    stats: AccessStats,
+    rng: Xoshiro256,
+}
+
+/// Errors surfaced to the coordinator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BufferError {
+    CapacityExceeded { requested: usize, free: usize },
+    BadRegion,
+}
+
+impl std::fmt::Display for BufferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BufferError::CapacityExceeded { requested, free } => {
+                write!(f, "capacity exceeded: requested {requested} words, {free} free")
+            }
+            BufferError::BadRegion => write!(f, "invalid region"),
+        }
+    }
+}
+
+impl std::error::Error for BufferError {}
+
+impl MlcBuffer {
+    pub fn new(config: BufferConfig, seed: u64) -> Self {
+        let cap = config.capacity_words();
+        MlcBuffer {
+            config,
+            words: vec![0; cap],
+            meta: Vec::new(),
+            used_words: 0,
+            used_meta: 0,
+            stats: AccessStats::default(),
+            rng: Xoshiro256::seeded(seed),
+        }
+    }
+
+    pub fn free_words(&self) -> usize {
+        self.words.len() - self.used_words
+    }
+
+    pub fn stats(&self) -> &AccessStats {
+        &self.stats
+    }
+
+    /// Reset contents and allocation (stats are kept; call `reset_stats`
+    /// separately so experiments can reuse a warm buffer).
+    pub fn clear(&mut self) {
+        self.used_words = 0;
+        self.used_meta = 0;
+        self.meta.clear();
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = AccessStats::default();
+    }
+
+    /// Store an encoded stream: bills content-dependent write energy,
+    /// applies write-path fault injection to the stored image, and records
+    /// the tri-level metadata (fault-free by construction).
+    pub fn store(&mut self, enc: &Encoded) -> Result<Region, BufferError> {
+        if enc.len() > self.free_words() {
+            return Err(BufferError::CapacityExceeded {
+                requested: enc.len(),
+                free: self.free_words(),
+            });
+        }
+        let offset = self.used_words;
+
+        for (i, &w) in enc.words.iter().enumerate() {
+            // Bill the energy of programming the *intended* image.
+            self.stats
+                .write_energy
+                .add(self.config.cost.word(w, AccessKind::Write));
+            // Then the write/retention error model corrupts vulnerable cells.
+            let stored = self.config.error_model.corrupt_word_write(w, &mut self.rng);
+            if stored != w {
+                self.stats.injected_faults += 1;
+            }
+            self.words[offset + i] = stored;
+        }
+        self.used_words += enc.len();
+        self.stats.writes += enc.len() as u64;
+
+        let meta_offset = self.used_meta;
+        for s in &enc.schemes {
+            self.meta.push(s.symbol());
+            self.stats
+                .write_energy
+                .add(self.config.cost.trilevel_cell(AccessKind::Write));
+        }
+        self.used_meta += enc.schemes.len();
+
+        Ok(Region {
+            offset,
+            len: enc.len(),
+            granularity: enc.granularity,
+            policy: enc.policy,
+            meta_offset,
+            meta_len: enc.schemes.len(),
+        })
+    }
+
+    /// Read a region back as an `Encoded` view (stored images + schemes),
+    /// billing content-dependent read energy with banked latency.
+    pub fn load(&mut self, region: &Region) -> Result<Encoded, BufferError> {
+        if region.offset + region.len > self.used_words
+            || region.meta_offset + region.meta_len > self.used_meta
+        {
+            return Err(BufferError::BadRegion);
+        }
+        let mut out = Vec::with_capacity(region.len);
+        let mut slot_cycles_total = 0u64;
+        let mut nj = 0.0f64;
+        for slot in self.words[region.offset..region.offset + region.len]
+            .chunks(self.config.banks)
+        {
+            let mut slot_cycles = 0u64;
+            for &w in slot {
+                // Read disturbance (off by default) mutates nothing here —
+                // the paper ignores it; ablations use `load_with_disturb`.
+                let e = self.config.cost.word(w, AccessKind::Read);
+                nj += e.nanojoules;
+                slot_cycles = slot_cycles.max(e.cycles);
+                out.push(w);
+            }
+            slot_cycles_total += slot_cycles;
+        }
+        self.stats.read_energy.add(Energy {
+            nanojoules: nj,
+            cycles: slot_cycles_total,
+        });
+        self.stats.reads += region.len as u64;
+
+        let mut schemes = Vec::with_capacity(region.meta_len);
+        for &sym in &self.meta[region.meta_offset..region.meta_offset + region.meta_len] {
+            schemes.push(Scheme::from_symbol(sym).expect("tri-level symbol"));
+            self.stats
+                .read_energy
+                .add(self.config.cost.trilevel_cell(AccessKind::Read));
+        }
+
+        Ok(Encoded {
+            words: out,
+            schemes,
+            granularity: region.granularity,
+            policy: region.policy,
+        })
+    }
+
+    /// Ablation path: a read that also applies read-disturb errors to the
+    /// stored cells (persistently, as disturbance physically flips them).
+    pub fn load_with_disturb(&mut self, region: &Region) -> Result<Encoded, BufferError> {
+        for i in region.offset..region.offset + region.len {
+            let w = self.words[i];
+            let d = self.config.error_model.corrupt_word_read(w, &mut self.rng);
+            if d != w {
+                self.stats.injected_faults += 1;
+                self.words[i] = d;
+            }
+        }
+        self.load(region)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::{Policy, WeightCodec};
+    use crate::fp;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| fp::quantize_f16((i as f32 / n as f32) * 1.8 - 0.9))
+            .collect()
+    }
+
+    fn quiet_config(words: usize) -> BufferConfig {
+        BufferConfig::new(words * 2, 4).with_error_model(ErrorModel::at_rate(0.0))
+    }
+
+    #[test]
+    fn store_load_roundtrip_fault_free() {
+        let ws = ramp(500);
+        let enc = WeightCodec::hybrid(4).encode(&ws);
+        let mut buf = MlcBuffer::new(quiet_config(1000), 1);
+        let region = buf.store(&enc).unwrap();
+        let back = buf.load(&region).unwrap();
+        assert_eq!(back.words, enc.words);
+        assert_eq!(back.schemes, enc.schemes);
+        assert_eq!(back.decode(), enc.decode());
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let ws = ramp(100);
+        let enc = WeightCodec::hybrid(1).encode(&ws);
+        let mut buf = MlcBuffer::new(quiet_config(50), 1);
+        match buf.store(&enc) {
+            Err(BufferError::CapacityExceeded { requested, free }) => {
+                assert_eq!(requested, 100);
+                assert_eq!(free, 50);
+            }
+            other => panic!("expected capacity error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sram_equivalent_density() {
+        let cfg = BufferConfig::sram_equivalent(256 * 1024, 8);
+        assert_eq!(cfg.capacity_bytes, 1024 * 1024);
+        assert_eq!(cfg.capacity_words(), 512 * 1024);
+    }
+
+    #[test]
+    fn write_energy_tracks_content() {
+        // All-zero words (8 base cells each) vs alternating (8 soft cells).
+        let mut buf = MlcBuffer::new(quiet_config(100), 1);
+        let cheap = Encoded {
+            words: vec![0x0000; 10],
+            schemes: vec![],
+            granularity: 1,
+            policy: Policy::Unprotected,
+        };
+        buf.store(&cheap).unwrap();
+        let cheap_nj = buf.stats().write_energy.nanojoules;
+
+        let mut buf2 = MlcBuffer::new(quiet_config(100), 1);
+        let dear = Encoded {
+            words: vec![0x5555; 10],
+            schemes: vec![],
+            granularity: 1,
+            policy: Policy::Unprotected,
+        };
+        buf2.store(&dear).unwrap();
+        let dear_nj = buf2.stats().write_energy.nanojoules;
+        assert!((cheap_nj - 10.0 * 8.0 * 1.084).abs() < 1e-9);
+        assert!((dear_nj - 10.0 * 8.0 * 2.653).abs() < 1e-9);
+    }
+
+    #[test]
+    fn banked_read_latency() {
+        // 8 all-base words over 4 banks = 2 slots * 14 cycles.
+        let mut buf = MlcBuffer::new(quiet_config(100), 1);
+        let enc = Encoded {
+            words: vec![0xFFFF; 8],
+            schemes: vec![],
+            granularity: 1,
+            policy: Policy::Unprotected,
+        };
+        let r = buf.store(&enc).unwrap();
+        buf.reset_stats();
+        buf.load(&r).unwrap();
+        assert_eq!(buf.stats().read_energy.cycles, 2 * 14);
+    }
+
+    #[test]
+    fn fault_injection_counts_and_biases() {
+        let ws = ramp(20_000);
+        let enc = WeightCodec::new(Policy::Unprotected, 1).encode(&ws);
+        let cfg = BufferConfig::new(50_000 * 2, 4)
+            .with_error_model(ErrorModel::at_rate(0.02));
+        let mut buf = MlcBuffer::new(cfg, 99);
+        let r = buf.store(&enc).unwrap();
+        let faults = buf.stats().injected_faults;
+        assert!(faults > 0, "expected some injected faults");
+        let back = buf.load(&r).unwrap();
+        let diff = back
+            .words
+            .iter()
+            .zip(&enc.words)
+            .filter(|(a, b)| a != b)
+            .count() as u64;
+        assert_eq!(diff, faults);
+    }
+
+    #[test]
+    fn metadata_survives_faults() {
+        // Metadata plane is tri-level: fault-free even at rate 1.
+        let ws = ramp(512);
+        let enc = WeightCodec::hybrid(2).encode(&ws);
+        let cfg = BufferConfig::new(2048, 2).with_error_model(ErrorModel::at_rate(1.0));
+        let mut buf = MlcBuffer::new(cfg, 5);
+        let r = buf.store(&enc).unwrap();
+        let back = buf.load(&r).unwrap();
+        assert_eq!(back.schemes, enc.schemes);
+    }
+
+    #[test]
+    fn multiple_regions_do_not_alias() {
+        let a = WeightCodec::hybrid(1).encode(&ramp(64));
+        let b = WeightCodec::hybrid(4).encode(&ramp(128)[64..].to_vec());
+        let mut buf = MlcBuffer::new(quiet_config(1024), 1);
+        let ra = buf.store(&a).unwrap();
+        let rb = buf.store(&b).unwrap();
+        assert_eq!(buf.load(&ra).unwrap().words, a.words);
+        assert_eq!(buf.load(&rb).unwrap().words, b.words);
+        assert_eq!(ra.offset + ra.len, rb.offset);
+    }
+
+    #[test]
+    fn bad_region_rejected() {
+        let mut buf = MlcBuffer::new(quiet_config(10), 1);
+        let bogus = Region {
+            offset: 0,
+            len: 5,
+            granularity: 1,
+            policy: Policy::Hybrid,
+            meta_offset: 0,
+            meta_len: 5,
+        };
+        assert_eq!(buf.load(&bogus).unwrap_err(), BufferError::BadRegion);
+    }
+
+    #[test]
+    fn clear_releases_capacity() {
+        let enc = WeightCodec::hybrid(1).encode(&ramp(100));
+        let mut buf = MlcBuffer::new(quiet_config(100), 1);
+        buf.store(&enc).unwrap();
+        assert_eq!(buf.free_words(), 0);
+        buf.clear();
+        assert_eq!(buf.free_words(), 100);
+        buf.store(&enc).unwrap();
+    }
+
+    #[test]
+    fn read_disturb_ablation_persists_flips() {
+        let enc = WeightCodec::new(Policy::Unprotected, 1).encode(&ramp(8192));
+        let cfg = BufferConfig::new(8192 * 2, 4)
+            .with_error_model(ErrorModel::new(0.0, 0.05));
+        let mut buf = MlcBuffer::new(cfg, 17);
+        let r = buf.store(&enc).unwrap();
+        assert_eq!(buf.stats().injected_faults, 0); // write path clean
+        let first = buf.load_with_disturb(&r).unwrap();
+        assert!(buf.stats().injected_faults > 0);
+        // The disturbance is persistent: a plain load now sees the flips.
+        let second = buf.load(&r).unwrap();
+        assert_eq!(first.words, second.words);
+    }
+}

@@ -1,0 +1,123 @@
+//! Inference engine: a materialized weight set bound to a compiled PJRT
+//! executable.
+//!
+//! Weights are staged on the device **once** per fault campaign
+//! (`execute_b` path) — the request loop only uploads the image batch. This
+//! is the hot-path optimization measured in EXPERIMENTS.md §Perf.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::artifacts::{Manifest, ParamSpec, TestSet};
+use crate::runtime::executor::{argmax_rows, Executor};
+
+/// A ready-to-serve model instance.
+pub struct InferenceEngine {
+    exec: Executor,
+    manifest: Manifest,
+    /// Device-staged weight buffers, in HLO parameter order.
+    staged: Vec<xla::PjRtBuffer>,
+}
+
+impl InferenceEngine {
+    /// Bind decoded tensors to the executable. `tensors` must match the
+    /// manifest's parameter order/shapes (the weight-store preserves both).
+    pub fn new(exec: Executor, manifest: Manifest, tensors: &[ParamSpec]) -> Result<Self> {
+        ensure!(
+            tensors.len() == manifest.params.len(),
+            "tensor count {} != manifest {}",
+            tensors.len(),
+            manifest.params.len()
+        );
+        let mut staged = Vec::with_capacity(tensors.len());
+        for (t, (name, shape, _)) in tensors.iter().zip(&manifest.params) {
+            ensure!(&t.name == name, "order mismatch: {} vs {name}", t.name);
+            ensure!(&t.shape == shape, "{name}: shape mismatch");
+            staged.push(
+                exec.stage_f32(&t.data, &t.shape)
+                    .with_context(|| format!("staging {name}"))?,
+            );
+        }
+        Ok(InferenceEngine {
+            exec,
+            manifest,
+            staged,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.batch
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.manifest.num_classes
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Replace the staged weights (same executable, same manifest): the
+    /// fault-campaign loop re-stages corrupted tensors without paying the
+    /// HLO compile again.
+    pub fn restage(&mut self, tensors: &[ParamSpec]) -> Result<()> {
+        ensure!(
+            tensors.len() == self.manifest.params.len(),
+            "tensor count {} != manifest {}",
+            tensors.len(),
+            self.manifest.params.len()
+        );
+        let mut staged = Vec::with_capacity(tensors.len());
+        for (t, (name, shape, _)) in tensors.iter().zip(&self.manifest.params) {
+            ensure!(&t.name == name, "order mismatch: {} vs {name}", t.name);
+            ensure!(&t.shape == shape, "{name}: shape mismatch");
+            staged.push(self.exec.stage_f32(&t.data, &t.shape)?);
+        }
+        self.staged = staged;
+        Ok(())
+    }
+
+    /// Classify exactly one batch of images (flattened NHWC, length =
+    /// batch * H * W * C). Returns predicted class per image.
+    pub fn classify_batch(&self, images: &[f32]) -> Result<Vec<usize>> {
+        let want: usize = self.manifest.input_shape.iter().product();
+        ensure!(
+            images.len() == want,
+            "batch wants {want} floats, got {}",
+            images.len()
+        );
+        let img = self.exec.stage_f32(images, &self.manifest.input_shape)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.staged.iter().collect();
+        args.push(&img);
+        let out = self.exec.execute_staged(&args)?;
+        let logits = out.to_vec::<f32>().context("reading logits")?;
+        Ok(argmax_rows(&logits, self.manifest.num_classes))
+    }
+
+    /// Classify `n` images from a test set (padding the final partial batch
+    /// by repetition) and return (accuracy, correct, evaluated).
+    pub fn accuracy(&self, test: &TestSet, n: usize) -> Result<(f64, usize, usize)> {
+        let n = n.min(test.n);
+        ensure!(n > 0, "empty evaluation");
+        let batch = self.manifest.batch;
+        let img_elems = test.h * test.w * test.c;
+        let mut correct = 0usize;
+        let mut buf = vec![0f32; batch * img_elems];
+        let mut i = 0usize;
+        while i < n {
+            let take = (n - i).min(batch);
+            for j in 0..batch {
+                // Pad the tail batch by repeating the last image.
+                let src = test.image(i + j.min(take - 1));
+                buf[j * img_elems..(j + 1) * img_elems].copy_from_slice(src);
+            }
+            let preds = self.classify_batch(&buf)?;
+            for j in 0..take {
+                if preds[j] == test.labels[i + j] as usize {
+                    correct += 1;
+                }
+            }
+            i += take;
+        }
+        Ok((correct as f64 / n as f64, correct, n))
+    }
+}

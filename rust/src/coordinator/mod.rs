@@ -1,0 +1,29 @@
+//! L3 coordinator: the inference service built around the MLC STT-RAM
+//! weight buffer.
+//!
+//! The paper's threat/efficiency model lives on the *weight path*:
+//!
+//! ```text
+//!   trained weights ──encode──▶ MLC buffer ──(faults)──▶ decode ──▶ PJRT
+//!                                                                    ▲
+//!   requests ──▶ queue ──▶ batcher ──▶ worker ── images ─────────────┘
+//! ```
+//!
+//! * [`store`] — [`store::WeightStore`]: owns the simulated buffer; encodes
+//!   every tensor with the configured policy/granularity, bills energy,
+//!   injects faults, and materializes the decoded (possibly corrupted)
+//!   tensors the executable will consume;
+//! * [`engine`] — [`engine::InferenceEngine`]: binds a materialized weight
+//!   set to a compiled PJRT executable, staging weights on the device once;
+//! * [`server`] — [`server::Server`]: a threaded request-queue/batcher
+//!   (vLLM-router-style, scaled to this workload) with latency metrics.
+
+pub mod engine;
+pub mod server;
+pub mod store;
+pub mod workload;
+
+pub use engine::InferenceEngine;
+pub use server::{Server, ServerConfig, ServerReport};
+pub use store::{StoreConfig, StoreReport, WeightStore};
+pub use workload::{poisson_trace, uniform_trace, Trace};

@@ -1,0 +1,250 @@
+//! Threaded request server: queue → batcher → inference worker.
+//!
+//! A deliberately small vLLM-router-shaped loop scaled to this workload:
+//! clients submit single images; the batcher coalesces up to `batch` images
+//! (the artifact's compiled batch size) or flushes on `max_wait`; a worker
+//! thread runs the PJRT executable; responses return through per-request
+//! channels. Latency/throughput percentiles feed EXPERIMENTS.md §Perf.
+//!
+//! PJRT handles are not `Send` (raw pointers under the hood), so the engine
+//! is *constructed inside* the worker thread from a `Send` factory closure —
+//! the standard pattern for thread-pinned FFI state. No tokio in the
+//! offline vendor set — std threads + mpsc are plenty for a single-executor
+//! CPU pipeline (the PJRT call dominates end-to-end time; see the
+//! coordinator-overhead measurement in `bench_hotpath`).
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::InferenceEngine;
+use crate::util::stats::Percentiles;
+
+/// One classification request.
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    respond: Sender<Response>,
+}
+
+/// The server's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub class: usize,
+    /// Time spent queued + batched + executed.
+    pub latency: Duration,
+}
+
+/// Server tuning.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Flush a partial batch after this long (fills with repeats).
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    pub served: usize,
+    pub batches: usize,
+    pub mean_batch_fill: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+}
+
+/// A running server around one engine.
+pub struct Server {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+    img_elems: usize,
+}
+
+#[derive(Default)]
+struct Metrics {
+    served: usize,
+    batches: usize,
+    fill_sum: usize,
+    latencies: Percentiles,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// Client handle returned by [`Server::submit`].
+pub struct Ticket {
+    rx: Receiver<Response>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Response> {
+        Ok(self.rx.recv()?)
+    }
+}
+
+impl Server {
+    /// Spawn the worker thread; `factory` builds the engine **inside** the
+    /// thread (PJRT state is thread-pinned). Blocks until the engine is up.
+    pub fn start<F>(factory: F, cfg: ServerConfig) -> Result<Self>
+    where
+        F: FnOnce() -> Result<InferenceEngine> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let m = Arc::clone(&metrics);
+
+        let worker = std::thread::spawn(move || {
+            let engine = match factory() {
+                Ok(e) => e,
+                Err(err) => {
+                    let _ = ready_tx.send(Err(err));
+                    return;
+                }
+            };
+            let batch = engine.batch_size();
+            let total: usize = engine.manifest().input_shape.iter().product();
+            let img_elems = total / batch;
+            let _ = ready_tx.send(Ok((batch, img_elems)));
+            worker_loop(engine, rx, m, cfg, batch, img_elems);
+        });
+
+        let (_, img_elems) = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))??;
+
+        Ok(Server {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            img_elems,
+        })
+    }
+
+    /// Submit one image; returns a ticket to wait on.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket> {
+        anyhow::ensure!(
+            image.len() == self.img_elems,
+            "image wants {} floats, got {}",
+            self.img_elems,
+            image.len()
+        );
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Request {
+                image,
+                enqueued: Instant::now(),
+                respond: rtx,
+            })
+            .map_err(|_| anyhow!("worker gone"))?;
+        Ok(Ticket { rx: rrx })
+    }
+
+    /// Stop the worker and return final metrics.
+    pub fn shutdown(mut self) -> ServerReport {
+        self.tx.take(); // close the queue
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let m = self.metrics.lock().unwrap();
+        let mut lat = m.latencies.clone();
+        let wall = match (m.started, m.finished) {
+            (Some(s), Some(f)) if f > s => (f - s).as_secs_f64(),
+            _ => f64::NAN,
+        };
+        ServerReport {
+            served: m.served,
+            batches: m.batches,
+            mean_batch_fill: if m.batches == 0 {
+                0.0
+            } else {
+                m.fill_sum as f64 / m.batches as f64
+            },
+            p50_ms: if lat.is_empty() { 0.0 } else { lat.pct(50.0) * 1e3 },
+            p99_ms: if lat.is_empty() { 0.0 } else { lat.pct(99.0) * 1e3 },
+            throughput_rps: m.served as f64 / wall,
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    engine: InferenceEngine,
+    rx: Receiver<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+    cfg: ServerConfig,
+    batch: usize,
+    img_elems: usize,
+) {
+    let mut images = vec![0f32; batch * img_elems];
+    loop {
+        // Block for the first request of the batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone
+        };
+        {
+            let mut m = metrics.lock().unwrap();
+            m.started.get_or_insert_with(Instant::now);
+        }
+        let deadline = Instant::now() + cfg.max_wait;
+        let mut pending = vec![first];
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Assemble the batch, padding with the last image.
+        for (j, slot) in images.chunks_mut(img_elems).enumerate() {
+            let r = &pending[j.min(pending.len() - 1)];
+            slot.copy_from_slice(&r.image);
+        }
+        let preds = match engine.classify_batch(&images) {
+            Ok(p) => p,
+            Err(_) => vec![0; batch], // degrade: report class 0
+        };
+        let now = Instant::now();
+
+        let mut m = metrics.lock().unwrap();
+        m.batches += 1;
+        m.fill_sum += pending.len();
+        for (j, req) in pending.iter().enumerate() {
+            let latency = now - req.enqueued;
+            m.latencies.add(latency.as_secs_f64());
+            m.served += 1;
+            let _ = req.respond.send(Response {
+                class: preds[j],
+                latency,
+            });
+        }
+        m.finished = Some(now);
+    }
+}

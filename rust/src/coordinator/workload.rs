@@ -1,0 +1,123 @@
+//! Open-loop workload generation for serving experiments.
+//!
+//! The paper's serving context (Fig. 1: DMA-fed accelerator) implies
+//! bursty, independent request arrivals; we model them as a Poisson
+//! process with exponential inter-arrival gaps — the standard open-loop
+//! serving-benchmark methodology — so the coordinator's batcher can be
+//! characterized under load (fill factor, p99 latency vs. offered rate)
+//! rather than only in closed-loop replay.
+
+use std::time::Duration;
+
+use crate::util::rng::Xoshiro256;
+
+/// A generated request trace: arrival offsets + test-set image indices.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// Arrival time of each request, relative to trace start.
+    pub arrivals: Vec<Duration>,
+    /// Index into the test set for each request.
+    pub image_idx: Vec<usize>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Total span of the trace.
+    pub fn span(&self) -> Duration {
+        self.arrivals.last().copied().unwrap_or(Duration::ZERO)
+    }
+}
+
+/// Poisson arrivals at `rate_rps` over `n` requests, drawing image indices
+/// uniformly from `[0, pool)`. Deterministic under `seed`.
+pub fn poisson_trace(n: usize, rate_rps: f64, pool: usize, seed: u64) -> Trace {
+    assert!(rate_rps > 0.0 && pool > 0);
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut t = 0.0f64;
+    let mut arrivals = Vec::with_capacity(n);
+    let mut image_idx = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Exponential gap via inverse CDF.
+        let u = (1.0 - rng.next_f64()).max(1e-12);
+        t += -u.ln() / rate_rps;
+        arrivals.push(Duration::from_secs_f64(t));
+        image_idx.push(rng.below(pool as u64) as usize);
+    }
+    Trace {
+        arrivals,
+        image_idx,
+    }
+}
+
+/// Uniform (constant-gap) arrivals — the control trace.
+pub fn uniform_trace(n: usize, rate_rps: f64, pool: usize, seed: u64) -> Trace {
+    assert!(rate_rps > 0.0 && pool > 0);
+    let mut rng = Xoshiro256::seeded(seed);
+    let gap = 1.0 / rate_rps;
+    Trace {
+        arrivals: (1..=n)
+            .map(|i| Duration::from_secs_f64(gap * i as f64))
+            .collect(),
+        image_idx: (0..n).map(|_| rng.below(pool as u64) as usize).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate_converges() {
+        let t = poisson_trace(20_000, 500.0, 16, 1);
+        let measured = t.len() as f64 / t.span().as_secs_f64();
+        assert!(
+            (measured - 500.0).abs() < 25.0,
+            "measured rate {measured}"
+        );
+    }
+
+    #[test]
+    fn poisson_gaps_are_exponential_ish() {
+        // CV (std/mean) of exponential gaps is 1; uniform trace has CV 0.
+        let t = poisson_trace(10_000, 100.0, 4, 2);
+        let gaps: Vec<f64> = t
+            .arrivals
+            .windows(2)
+            .map(|w| (w[1] - w[0]).as_secs_f64())
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.08, "cv {cv}");
+
+        let u = uniform_trace(100, 100.0, 4, 2);
+        let ugaps: Vec<f64> = u
+            .arrivals
+            .windows(2)
+            .map(|w| (w[1] - w[0]).as_secs_f64())
+            .collect();
+        let umean = ugaps.iter().sum::<f64>() / ugaps.len() as f64;
+        let uvar =
+            ugaps.iter().map(|g| (g - umean).powi(2)).sum::<f64>() / ugaps.len() as f64;
+        assert!(uvar.sqrt() / umean < 0.01);
+    }
+
+    #[test]
+    fn traces_deterministic_and_monotone() {
+        let a = poisson_trace(100, 50.0, 8, 7);
+        let b = poisson_trace(100, 50.0, 8, 7);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.image_idx, b.image_idx);
+        assert!(a.arrivals.windows(2).all(|w| w[1] > w[0]));
+        assert!(a.image_idx.iter().all(|&i| i < 8));
+        let c = poisson_trace(100, 50.0, 8, 8);
+        assert_ne!(a.arrivals, c.arrivals);
+    }
+}

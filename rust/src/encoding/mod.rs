@@ -1,0 +1,19 @@
+//! The paper's contribution: sign-bit protection + data reformation.
+//!
+//! * [`scheme`] — the three per-word reformations (NoChange / Rotate /
+//!   Round), sign-bit protection, and their exact inverses;
+//! * [`select`] — per-group best-of-N scheme selection (Table 2 semantics)
+//!   at configurable granularity (Table 3), and the system policies of
+//!   Fig. 8 (Unprotected / +Round / +Rotate / Hybrid);
+//! * [`codec`] — end-to-end weight-tensor encoder/decoder producing the
+//!   stored word stream + tri-level metadata, plus pattern statistics
+//!   (Fig. 6) and metadata overhead accounting (Table 3).
+
+pub mod codec;
+pub mod scheme;
+pub mod select;
+pub mod staterestrict;
+
+pub use codec::{Encoded, WeightCodec};
+pub use scheme::Scheme;
+pub use select::{select_scheme, Policy};

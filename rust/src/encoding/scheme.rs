@@ -1,0 +1,245 @@
+//! Per-word reformations (paper §5.1) and their inverses.
+//!
+//! All three schemes are applied **on top of sign-bit protection**: the
+//! sign (bit 15) is duplicated into the unused bit 14, so the first MLC
+//! cell always holds `00` (positive) or `11` (negative) — base states that
+//! are immune and single-pulse. The reformation then reshapes the remaining
+//! 14 bits (7 cells):
+//!
+//! * `NoChange` — store as-is;
+//! * `Rotate`   — rotate the low 14 bits right by one. Verified bit-exact
+//!   against the paper's Table 2 rows: the rotation must *exclude* the
+//!   protected sign pair (a full 16-bit rotation does not reproduce the
+//!   paper's examples);
+//! * `Round`    — round the last 4 mantissa bits to the nearest
+//!   "MLC-friendly" nibble per Table 1 (`0000|0011|1100|1111`) — lossy, but
+//!   bounded by the paper's Fig. 4 SSE study to the 4 LSBs.
+
+use crate::fp;
+
+/// The three reformation schemes. The discriminant doubles as the tri-level
+/// metadata symbol (3 states — exactly why the paper uses tri-level cells
+/// rather than a fourth scheme and 2-bit MLC metadata).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Scheme {
+    NoChange = 0,
+    Rotate = 1,
+    Round = 2,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 3] = [Scheme::NoChange, Scheme::Rotate, Scheme::Round];
+
+    pub fn from_symbol(v: u8) -> Option<Scheme> {
+        match v {
+            0 => Some(Scheme::NoChange),
+            1 => Some(Scheme::Rotate),
+            2 => Some(Scheme::Round),
+            _ => None,
+        }
+    }
+
+    pub fn symbol(self) -> u8 {
+        self as u8
+    }
+
+    /// Lossless schemes round-trip bit-exactly; `Round` does not.
+    pub fn is_lossless(self) -> bool {
+        !matches!(self, Scheme::Round)
+    }
+}
+
+/// Table 1: map each low nibble to its nearest MLC-friendly value.
+/// Index = original nibble, value = stored nibble.
+pub const ROUND_TABLE: [u8; 16] = [
+    0b0000, 0b0000, 0b0000, 0b0000, // 0000..0011 -> 0000
+    0b0011, 0b0011, 0b0011, 0b0011, // 0100..0111 -> 0011
+    0b1100, 0b1100, 0b1100, 0b1100, // 1000..1011 -> 1100
+    0b1111, 0b1111, 0b1111, 0b1111, // 1100..1111 -> 1111
+];
+
+/// Duplicate the sign bit (15) into the backup bit (14).
+///
+/// Precondition for losslessness: `fp::backup_bit_free(h)` — true for every
+/// |w| < 2, i.e. all normalized weights. For other words bit 14 is simply
+/// overwritten (the high-level codec asserts the precondition).
+#[inline]
+pub fn protect_sign(h: u16) -> u16 {
+    (h & !fp::BACKUP_MASK) | ((h & fp::SIGN_MASK) >> 1)
+}
+
+/// Drop the backup copy, restoring the canonical |w| < 2 representation.
+#[inline]
+pub fn unprotect_sign(h: u16) -> u16 {
+    h & !fp::BACKUP_MASK
+}
+
+const FIELD_MASK: u16 = 0x3FFF; // low 14 bits, below the protected pair
+
+/// Rotate the low 14 bits right by one, keeping the sign pair in place.
+#[inline]
+pub fn rotate_field_right(h: u16) -> u16 {
+    let field = h & FIELD_MASK;
+    let rotated = (field >> 1) | ((field & 1) << 13);
+    (h & !FIELD_MASK) | rotated
+}
+
+/// Inverse of [`rotate_field_right`].
+#[inline]
+pub fn rotate_field_left(h: u16) -> u16 {
+    let field = h & FIELD_MASK;
+    let rotated = ((field << 1) & FIELD_MASK) | (field >> 13);
+    (h & !FIELD_MASK) | rotated
+}
+
+/// Apply Table 1 to the low nibble.
+#[inline]
+pub fn round_low_nibble(h: u16) -> u16 {
+    (h & !0xF) | ROUND_TABLE[(h & 0xF) as usize] as u16
+}
+
+/// Apply `scheme` to a sign-protected word, producing the stored image.
+#[inline]
+pub fn apply(scheme: Scheme, protected: u16) -> u16 {
+    match scheme {
+        Scheme::NoChange => protected,
+        Scheme::Rotate => rotate_field_right(protected),
+        Scheme::Round => round_low_nibble(protected),
+    }
+}
+
+/// Invert `scheme` on a stored image, recovering the canonical word
+/// (backup bit cleared). For `Round` this recovers the *rounded* value —
+/// the scheme is lossy by design.
+#[inline]
+pub fn invert(scheme: Scheme, stored: u16) -> u16 {
+    let h = match scheme {
+        Scheme::NoChange => stored,
+        Scheme::Rotate => rotate_field_left(stored),
+        Scheme::Round => stored,
+    };
+    unprotect_sign(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::{f32_to_f16_bits, pattern_counts};
+
+    // The paper's Table 2, reproduced bit-exactly. Each case lists the
+    // binary image after each scheme (already sign-protected; all three
+    // example weights are positive so protection is a no-op on them).
+    const W1: u16 = 0b00_01_11_00_01_01_00_11; // 0.004222
+    const W2: u16 = 0b00_10_01_01_01_00_01_11; // 0.020614
+    const W3: u16 = 0b00_01_00_00_00_01_01_01; // 0.0004982
+
+    #[test]
+    fn table2_row1_nochange_best() {
+        assert_eq!(f32_to_f16_bits(0.004222), W1);
+        assert_eq!(pattern_counts(apply(Scheme::NoChange, W1)), [3, 3, 0, 2]);
+        assert_eq!(
+            apply(Scheme::Rotate, W1),
+            0b00_10_11_10_00_10_10_01,
+            "rotate image"
+        );
+        assert_eq!(pattern_counts(apply(Scheme::Rotate, W1)), [2, 1, 4, 1]);
+        assert_eq!(
+            apply(Scheme::Round, W1),
+            0b00_01_11_00_01_01_00_00,
+            "round image"
+        );
+        assert_eq!(pattern_counts(apply(Scheme::Round, W1)), [4, 3, 0, 1]);
+    }
+
+    #[test]
+    fn table2_row2_rotate_best() {
+        assert_eq!(f32_to_f16_bits(0.020614), W2);
+        assert_eq!(pattern_counts(W2), [2, 4, 1, 1]);
+        assert_eq!(apply(Scheme::Rotate, W2), 0b00_11_00_10_10_10_00_11);
+        assert_eq!(pattern_counts(apply(Scheme::Rotate, W2)), [3, 0, 3, 2]);
+        assert_eq!(apply(Scheme::Round, W2), 0b00_10_01_01_01_00_00_11);
+        assert_eq!(pattern_counts(apply(Scheme::Round, W2)), [3, 3, 1, 1]);
+    }
+
+    #[test]
+    fn table2_row3_round_best() {
+        assert_eq!(f32_to_f16_bits(0.0004982), W3);
+        assert_eq!(pattern_counts(W3), [4, 4, 0, 0]);
+        assert_eq!(apply(Scheme::Rotate, W3), 0b00_10_10_00_00_00_10_10);
+        assert_eq!(pattern_counts(apply(Scheme::Rotate, W3)), [4, 0, 4, 0]);
+        assert_eq!(apply(Scheme::Round, W3), 0b00_01_00_00_00_01_00_11);
+        assert_eq!(pattern_counts(apply(Scheme::Round, W3)), [5, 2, 0, 1]);
+    }
+
+    #[test]
+    fn round_table_is_table1_verbatim() {
+        assert_eq!(&ROUND_TABLE[0..4], &[0, 0, 0, 0]);
+        assert_eq!(&ROUND_TABLE[4..8], &[3, 3, 3, 3]);
+        assert_eq!(&ROUND_TABLE[8..12], &[12, 12, 12, 12]);
+        assert_eq!(&ROUND_TABLE[12..16], &[15, 15, 15, 15]);
+        // Every output nibble is MLC-friendly (cells 00 or 11 only).
+        for out in ROUND_TABLE {
+            assert!(matches!(out, 0b0000 | 0b0011 | 0b1100 | 0b1111));
+        }
+    }
+
+    #[test]
+    fn protect_sets_backup_to_sign() {
+        let pos = f32_to_f16_bits(0.5);
+        let neg = f32_to_f16_bits(-0.5);
+        assert_eq!(protect_sign(pos) & 0xC000, 0x0000); // cell0 = 00
+        assert_eq!(protect_sign(neg) & 0xC000, 0xC000); // cell0 = 11
+        // Idempotent, and unprotect restores the canonical word.
+        assert_eq!(protect_sign(protect_sign(neg)), protect_sign(neg));
+        assert_eq!(unprotect_sign(protect_sign(neg)), neg);
+        assert_eq!(unprotect_sign(protect_sign(pos)), pos);
+    }
+
+    #[test]
+    fn protected_sign_cell_is_base_state() {
+        use crate::stt::CellPattern;
+        for w in [-0.9f32, -0.1, 0.0, 0.1, 0.9] {
+            let p = protect_sign(f32_to_f16_bits(w));
+            let cell0 = CellPattern::from_bits((p >> 14) as u8);
+            assert!(cell0.is_base(), "w={w}");
+        }
+    }
+
+    #[test]
+    fn rotate_roundtrips_all_words() {
+        for h in 0..=u16::MAX {
+            assert_eq!(rotate_field_left(rotate_field_right(h)), h);
+            // Sign pair untouched.
+            assert_eq!(rotate_field_right(h) & 0xC000, h & 0xC000);
+        }
+    }
+
+    #[test]
+    fn lossless_schemes_invert_exactly() {
+        for h in (0..=u16::MAX).step_by(11) {
+            let p = protect_sign(h & !fp::BACKUP_MASK);
+            for s in [Scheme::NoChange, Scheme::Rotate] {
+                assert_eq!(invert(s, apply(s, p)), unprotect_sign(p), "{s:?} h={h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_error_bounded_to_nibble() {
+        // Rounding only touches the low 4 bits.
+        for h in (0..=u16::MAX).step_by(13) {
+            let r = round_low_nibble(h);
+            assert_eq!(r & !0xF, h & !0xF);
+        }
+    }
+
+    #[test]
+    fn scheme_symbols_fit_trilevel() {
+        for s in Scheme::ALL {
+            assert!(s.symbol() < 3);
+            assert_eq!(Scheme::from_symbol(s.symbol()), Some(s));
+        }
+        assert_eq!(Scheme::from_symbol(3), None);
+    }
+}

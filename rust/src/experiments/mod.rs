@@ -1,0 +1,90 @@
+//! End-to-end experiment drivers shared by the CLI, benches, and examples.
+//!
+//! Each driver corresponds to one paper artifact (DESIGN.md §5) and returns
+//! both the printable table and the raw rows so callers can post-process.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{InferenceEngine, StoreConfig, WeightStore};
+use crate::encoding::Policy;
+use crate::metrics::{accuracy_table, AccuracyRow, Table};
+use crate::runtime::artifacts::{model_paths, Manifest, TestSet, WeightFile};
+use crate::runtime::Executor;
+use crate::stt::ErrorModel;
+
+/// Result of the Fig. 8 experiment for one model.
+pub struct AccuracyExperiment {
+    pub model: String,
+    pub error_free: f64,
+    pub rows: Vec<AccuracyRow>,
+    pub table: Table,
+}
+
+/// Load manifest + weights for a model, validating consistency.
+pub fn load_model(dir: &Path, model: &str) -> Result<(Manifest, WeightFile)> {
+    let (_, wpath, mpath) = model_paths(dir, model);
+    let manifest =
+        Manifest::read(&mpath).with_context(|| format!("{model}: run `make artifacts` first"))?;
+    let weights = WeightFile::read(&wpath)?;
+    manifest.validate(&weights)?;
+    Ok((manifest, weights))
+}
+
+/// The full Fig. 8 pipeline for one model: error-free reference, then the
+/// four protection systems (unprotected / +round / +rotate / hybrid) at the
+/// given soft-error `rate` and metadata `granularity`, each evaluated on
+/// `eval` held-out images through the PJRT executable.
+pub fn run_accuracy_experiment(
+    dir: &Path,
+    model: &str,
+    rate: f64,
+    granularity: usize,
+    eval: usize,
+    seed: u64,
+) -> Result<AccuracyExperiment> {
+    let (manifest, weights) = load_model(dir, model)?;
+    let (hlo, _, _) = model_paths(dir, model);
+    let test = TestSet::read(&dir.join("testset.bin"))?;
+
+    // Error-free reference on the same evaluation slice. A single executor
+    // is reused across systems: weights are re-staged per system, the
+    // compiled executable is not rebuilt (the HLO compile dominates
+    // end-to-end time; see EXPERIMENTS.md §Perf).
+    let exec = Executor::from_hlo_file(&hlo)?;
+    let mut engine = InferenceEngine::new(exec, manifest.clone(), &weights.params)?;
+    let (error_free, _, _) = engine.accuracy(&test, eval)?;
+
+    let mut rows = Vec::new();
+    for policy in Policy::ALL {
+        let cfg = StoreConfig {
+            policy,
+            granularity,
+            error_model: ErrorModel::at_rate(rate),
+            seed,
+            ..StoreConfig::default()
+        };
+        let mut store = WeightStore::load(&cfg, &weights)?;
+        let tensors = store.materialize()?;
+        let report = store.report();
+        engine.restage(&tensors)?;
+        let (acc, _, _) = engine.accuracy(&test, eval)?;
+        rows.push(AccuracyRow {
+            system: policy.label().into(),
+            accuracy: acc,
+            flipped_cells: report.injected_faults,
+        });
+    }
+    let table = accuracy_table(
+        &format!("{model} (rate={rate}, g={granularity}, eval={eval}, seed={seed})"),
+        error_free,
+        &rows,
+    );
+    Ok(AccuracyExperiment {
+        model: model.to_string(),
+        error_free,
+        rows,
+        table,
+    })
+}

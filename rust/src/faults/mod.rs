@@ -1,0 +1,197 @@
+//! Experiment-level fault campaigns.
+//!
+//! The paper's methodology (§6): take the trained weights, push them
+//! through the encoder into the MLC buffer, inject soft errors into the
+//! *stored images* (write/retention path; `00`/`11` cells immune), then
+//! decode and run inference on the corrupted weights — no retraining, since
+//! faults happen at inference time and are undetectable.
+//!
+//! [`FaultCampaign`] packages that flow with explicit seeding so every
+//! reported accuracy number is reproducible, plus the Fig. 4 bit-position
+//! SSE study.
+
+use crate::encoding::{Encoded, WeightCodec};
+use crate::fp;
+use crate::stt::ErrorModel;
+use crate::util::rng::Xoshiro256;
+
+/// A seeded fault-injection campaign over one weight tensor set.
+#[derive(Clone, Debug)]
+pub struct FaultCampaign {
+    pub error_model: ErrorModel,
+    pub seed: u64,
+}
+
+impl FaultCampaign {
+    pub fn new(error_model: ErrorModel, seed: u64) -> Self {
+        FaultCampaign { error_model, seed }
+    }
+
+    /// Corrupt an encoded stream in place (write/retention faults), and
+    /// report how many cells actually flipped.
+    pub fn inject(&self, enc: &mut Encoded) -> u64 {
+        let mut rng = Xoshiro256::seeded(self.seed);
+        let mut flipped = 0u64;
+        for w in enc.words.iter_mut() {
+            let new = self.error_model.corrupt_word_write(*w, &mut rng);
+            if new != *w {
+                flipped += (fp::soft_cells(*w ^ new).max(1)) as u64;
+                *w = new;
+            }
+        }
+        flipped
+    }
+
+    /// The full §6 pipeline for one tensor: encode -> fault -> decode.
+    /// Returns the decoded (possibly corrupted) weights and the flip count.
+    pub fn encode_fault_decode(&self, codec: &WeightCodec, weights: &[f32]) -> (Vec<f32>, u64) {
+        let mut enc = codec.encode(weights);
+        let flips = self.inject(&mut enc);
+        (enc.decode(), flips)
+    }
+}
+
+/// Fig. 4 study: flip a single bit position across a random population of
+/// weights in [-1, 1] and measure SSE against the clean values.
+///
+/// Returns `sse[bit]` for bit = 0 (LSB) .. 15 (sign), over `n` samples.
+pub fn bitflip_sse_study(n: usize, seed: u64) -> [f64; 16] {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut sse = [0.0f64; 16];
+    for _ in 0..n {
+        let w = rng.next_f32() * 2.0 - 1.0;
+        let h = fp::f32_to_f16_bits(w);
+        let clean = fp::f16_bits_to_f32(h);
+        for bit in 0..16 {
+            let mut corrupted = fp::f16_bits_to_f32(fp::flip_bit(h, bit));
+            // Flipping the exponent MSB of a weight with exp=01111 (|w| in
+            // [1, 2)) overflows to f16 infinity; saturate to the max finite
+            // value so the SSE stays summable (the usual convention in
+            // fault-tolerance studies; documented in EXPERIMENTS.md F4).
+            if !corrupted.is_finite() {
+                corrupted = 65504.0f32.copysign(corrupted);
+            }
+            let d = (corrupted - clean) as f64;
+            sse[bit as usize] += d * d;
+        }
+    }
+    sse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::Policy;
+    use crate::stt::error::ERROR_RATE_HI;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| fp::quantize_f16((i as f32 / n as f32) * 1.8 - 0.9))
+            .collect()
+    }
+
+    #[test]
+    fn zero_rate_changes_nothing() {
+        let ws = ramp(512);
+        let campaign = FaultCampaign::new(ErrorModel::at_rate(0.0), 1);
+        let codec = WeightCodec::hybrid(4);
+        let (out, flips) = campaign.encode_fault_decode(&codec, &ws);
+        assert_eq!(flips, 0);
+        // Hybrid may round; compare against the fault-free decode.
+        assert_eq!(out, codec.encode(&ws).decode());
+    }
+
+    #[test]
+    fn campaign_is_reproducible() {
+        let ws = ramp(2048);
+        let codec = WeightCodec::new(Policy::Unprotected, 1);
+        let c1 = FaultCampaign::new(ErrorModel::at_rate(ERROR_RATE_HI), 42);
+        let c2 = FaultCampaign::new(ErrorModel::at_rate(ERROR_RATE_HI), 42);
+        assert_eq!(
+            c1.encode_fault_decode(&codec, &ws).0,
+            c2.encode_fault_decode(&codec, &ws).0
+        );
+        let c3 = FaultCampaign::new(ErrorModel::at_rate(ERROR_RATE_HI), 43);
+        assert_ne!(
+            c1.encode_fault_decode(&codec, &ws).0,
+            c3.encode_fault_decode(&codec, &ws).0
+        );
+    }
+
+    #[test]
+    fn protection_preserves_every_sign() {
+        // At an absurd 50% rate, the unprotected stream flips many signs;
+        // any sign-protected policy must flip none (cell 0 is a base state).
+        let ws = ramp(4096);
+        let campaign = FaultCampaign::new(ErrorModel::at_rate(0.5), 7);
+
+        let raw = campaign
+            .encode_fault_decode(&WeightCodec::new(Policy::Unprotected, 1), &ws)
+            .0;
+        let raw_sign_flips = ws
+            .iter()
+            .zip(&raw)
+            .filter(|(a, b)| (a.is_sign_negative() != b.is_sign_negative()) && **a != 0.0)
+            .count();
+        assert!(raw_sign_flips > 0, "expected sign flips in unprotected run");
+
+        for policy in [Policy::ProtectRound, Policy::ProtectRotate, Policy::Hybrid] {
+            let out = campaign
+                .encode_fault_decode(&WeightCodec::new(policy, 4), &ws)
+                .0;
+            let flips = ws
+                .iter()
+                .zip(&out)
+                .filter(|(a, b)| (a.is_sign_negative() != b.is_sign_negative()) && **a != 0.0)
+                .count();
+            assert_eq!(flips, 0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn hybrid_suffers_fewer_flips_than_unprotected() {
+        let ws = ramp(8192);
+        let campaign = FaultCampaign::new(ErrorModel::at_rate(ERROR_RATE_HI), 11);
+        let mut raw = WeightCodec::new(Policy::Unprotected, 1).encode(&ws);
+        let mut hyb = WeightCodec::hybrid(1).encode(&ws);
+        let raw_flips = campaign.inject(&mut raw);
+        let hyb_flips = campaign.inject(&mut hyb);
+        assert!(
+            hyb_flips < raw_flips,
+            "hybrid {hyb_flips} vs raw {raw_flips}"
+        );
+    }
+
+    #[test]
+    fn sse_study_shape_matches_fig4() {
+        let sse = bitflip_sse_study(20_000, 3);
+        // The paper's conclusion from Fig. 4: the last 4 mantissa bits have
+        // negligible impact — that is what licenses the Round scheme.
+        let low4: f64 = sse[0..4].iter().sum();
+        for high in 10..16 {
+            assert!(
+                sse[high] > 100.0 * low4,
+                "bit {high}: {} vs low4 {low4}",
+                sse[high]
+            );
+        }
+        // Bit 14 (exponent MSB / backup bit) dominates everything: flipping
+        // it scales |w| by 2^16 — exactly why it may only hold a *copy*.
+        for b in 0..14 {
+            assert!(sse[14] > sse[b], "bit {b}");
+        }
+        assert!(sse[14] > sse[15]);
+        // Mantissa bits are monotone in significance.
+        for b in 0..9 {
+            assert!(sse[b] <= sse[b + 1] * 1.01, "bit {b}");
+        }
+        // Sign-bit SSE has the closed form E[(2w)^2] = 4/3 over U[-1,1].
+        let sign_mean = sse[15] / 20_000.0;
+        assert!((sign_mean - 4.0 / 3.0).abs() < 0.05, "sign mean {sign_mean}");
+    }
+
+    #[test]
+    fn sse_study_deterministic() {
+        assert_eq!(bitflip_sse_study(1000, 9), bitflip_sse_study(1000, 9));
+    }
+}

@@ -1,0 +1,312 @@
+//! IEEE 754 binary16 (half precision) implemented from scratch.
+//!
+//! The paper stores CNN weights as half-precision words in 2-bit MLC
+//! STT-RAM cells. Layout (bit 15 = MSB):
+//!
+//! ```text
+//!   15   14..10    9..0
+//!   sign exponent  mantissa        (bias 15)
+//! ```
+//!
+//! The central observation (paper §4.1): for any |w| < 2 the exponent is at
+//! most 15 (`01111`), so **bit 14 — the exponent MSB — is always zero**.
+//! Weights are normalized into [-1, 1], so bit 14 is free to host a backup
+//! of the sign bit; see [`crate::encoding`].
+//!
+//! Conversion implements round-to-nearest-even, subnormals, infinities and
+//! NaN, and is verified against an exhaustive u16 round-trip plus reference
+//! vectors (including the paper's own Table 2 weights).
+
+/// Number of 2-bit MLC cells in one binary16 word.
+pub const CELLS_PER_WORD: usize = 8;
+
+/// Sign bit mask (bit 15).
+pub const SIGN_MASK: u16 = 0x8000;
+/// The "unused" bit for weights in [-1, 1]: exponent MSB (bit 14).
+pub const BACKUP_MASK: u16 = 0x4000;
+
+/// Convert an `f32` to binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN: preserve NaN-ness with a quiet mantissa bit.
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7E00
+        };
+    }
+
+    // Unbiased exponent, rebiased for f16 (bias 15).
+    let e16 = exp - 127 + 15;
+
+    if e16 >= 0x1F {
+        // Overflow -> infinity.
+        return sign | 0x7C00;
+    }
+
+    if e16 <= 0 {
+        // Subnormal or zero in f16.
+        if e16 < -10 {
+            return sign; // underflows to zero even after rounding
+        }
+        // Implicit leading 1, then shift into subnormal position.
+        let man = man | 0x80_0000;
+        let shift = 14 - e16; // 14..24
+        let half = 1u32 << (shift - 1);
+        let rounded = man + half - 1 + ((man >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+
+    // Normal: keep top 10 mantissa bits, round-to-nearest-even on bit 12.
+    let half = 0x0FFF + ((man >> 13) & 1);
+    let man_r = man + half;
+    if man_r & 0x80_0000 != 0 {
+        // Mantissa rounding overflowed into the exponent.
+        let e16 = e16 + 1;
+        if e16 >= 0x1F {
+            return sign | 0x7C00;
+        }
+        return sign | ((e16 as u16) << 10);
+    }
+    sign | ((e16 as u16) << 10) | (man_r >> 13) as u16
+}
+
+/// Convert binary16 bits to `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, _) => {
+            // Subnormal: value = man * 2^-24. Normalize around the leading
+            // set bit at position p (0..=9): value = 2^(p-24) * (1 + rest/2^p).
+            let p = 31 - man.leading_zeros();
+            let exp_n = 103 + p; // 127 + p - 24
+            let man_n = (man << (10 - p)) & 0x3FF;
+            sign | (exp_n << 23) | (man_n << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, _) => sign | 0x7FC0_0000 | (man << 13),
+        _ => sign | ((exp + 127 - 15) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip helper: quantize an f32 through binary16.
+pub fn quantize_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// True iff bit 14 (exponent MSB) is clear — holds for all |w| < 2,
+/// i.e. for every normalized CNN weight. This is the precondition for
+/// sign-bit protection.
+pub fn backup_bit_free(h: u16) -> bool {
+    h & BACKUP_MASK == 0
+}
+
+/// The 2-bit cell contents of a word, MSB-first: cell 0 = bits 15..14
+/// (sign + backup), cell 7 = bits 1..0.
+#[inline]
+pub fn cells(h: u16) -> [u8; CELLS_PER_WORD] {
+    let mut out = [0u8; CELLS_PER_WORD];
+    for (i, c) in out.iter_mut().enumerate() {
+        *c = ((h >> (14 - 2 * i)) & 0b11) as u8;
+    }
+    out
+}
+
+/// Rebuild a word from its 8 cells (inverse of [`cells`]).
+#[inline]
+pub fn from_cells(cs: &[u8; CELLS_PER_WORD]) -> u16 {
+    let mut h = 0u16;
+    for (i, &c) in cs.iter().enumerate() {
+        debug_assert!(c <= 0b11);
+        h |= (c as u16) << (14 - 2 * i);
+    }
+    h
+}
+
+/// Counts of the four 2-bit patterns in one word: `[n00, n01, n10, n11]`.
+/// The paper's Fig. 6 statistic; "soft" (vulnerable, 2-pulse) cells are
+/// `01`/`10`, "easy" cells are `00`/`11`.
+#[inline]
+pub fn pattern_counts(h: u16) -> [u32; 4] {
+    let mut counts = [0u32; 4];
+    let mut w = h;
+    // Cells are independent 2-bit fields; order doesn't matter for counting.
+    for _ in 0..CELLS_PER_WORD {
+        counts[(w & 0b11) as usize] += 1;
+        w >>= 2;
+    }
+    counts
+}
+
+/// Number of vulnerable/expensive cells (`01` or `10`) — branchless.
+///
+/// A cell is soft iff its two bits differ, so XOR the odd/even bit planes
+/// and popcount.
+#[inline]
+pub fn soft_cells(h: u16) -> u32 {
+    let odd = h >> 1;
+    ((h ^ odd) & 0x5555).count_ones()
+}
+
+/// Flip bit `pos` (0 = LSB .. 15 = sign).
+#[inline]
+pub fn flip_bit(h: u16, pos: u32) -> u16 {
+    debug_assert!(pos < 16);
+    h ^ (1 << pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustive: every finite f16 must round-trip bit-exactly through f32.
+    #[test]
+    fn exhaustive_f16_roundtrip() {
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1F;
+            let man = h & 0x3FF;
+            if exp == 0x1F && man != 0 {
+                // NaN: only require NaN-ness to survive.
+                assert!(f16_bits_to_f32(h).is_nan());
+                continue;
+            }
+            let back = f32_to_f16_bits(f16_bits_to_f32(h));
+            // -0.0 and 0.0 keep their signs distinctly.
+            assert_eq!(back, h, "h={h:#06x}");
+        }
+    }
+
+    #[test]
+    fn reference_values() {
+        // (bits, value) vectors from the IEEE 754 tables.
+        let cases: &[(u16, f32)] = &[
+            (0x0000, 0.0),
+            (0x8000, -0.0),
+            (0x3C00, 1.0),
+            (0xBC00, -1.0),
+            (0x4000, 2.0),
+            (0x3555, 0.333251953125),
+            (0x7BFF, 65504.0),            // max finite
+            (0x0400, 6.103515625e-5),     // min normal
+            (0x0001, 5.960464477539063e-8), // min subnormal
+            (0x7C00, f32::INFINITY),
+            (0xFC00, f32::NEG_INFINITY),
+        ];
+        for &(bits, val) in cases {
+            assert_eq!(f16_bits_to_f32(bits), val, "decode {bits:#06x}");
+            assert_eq!(f32_to_f16_bits(val), bits, "encode {val}");
+        }
+    }
+
+    #[test]
+    fn paper_table2_weights_encode_exactly() {
+        // The paper's Table 2 rows are genuine binary16 words.
+        assert_eq!(f32_to_f16_bits(0.004222), 0b00_01_11_00_01_01_00_11);
+        assert_eq!(f32_to_f16_bits(0.020614), 0b00_10_01_01_01_00_01_11);
+        assert_eq!(f32_to_f16_bits(0.0004982), 0b00_01_00_00_00_01_01_01);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10: ties-to-even
+        // must round down to 1.0 (even mantissa).
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: rounds up to even.
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2f32.powi(-11)), 0x3C02);
+    }
+
+    #[test]
+    fn overflow_and_nan() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFC00);
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // rounds up past max
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn subnormal_rounding() {
+        // Halfway into the subnormal range.
+        let x = f16_bits_to_f32(0x0001) / 2.0;
+        assert_eq!(f32_to_f16_bits(x), 0x0000); // ties-to-even -> 0
+        let y = f16_bits_to_f32(0x0003) * 0.5 + f16_bits_to_f32(0x0001) * 0.25;
+        assert!(f32_to_f16_bits(y) <= 0x0002);
+    }
+
+    #[test]
+    fn backup_bit_free_iff_below_two() {
+        for h in 0..=u16::MAX {
+            let v = f16_bits_to_f32(h);
+            if v.is_finite() && v.abs() < 2.0 {
+                assert!(backup_bit_free(h), "h={h:#06x} v={v}");
+            }
+            if backup_bit_free(h) {
+                let exp = (h >> 10) & 0x1F;
+                assert!(exp < 0x10, "bit14 clear implies exponent < 16");
+            }
+        }
+        // The paper's boundary case: +2.0 is the first value using bit 14.
+        assert!(!backup_bit_free(f32_to_f16_bits(2.0)));
+        assert!(backup_bit_free(f32_to_f16_bits(1.0)));
+        assert!(backup_bit_free(f32_to_f16_bits(-1.0)));
+        assert!(backup_bit_free(f32_to_f16_bits(1.9990234))); // largest f16 < 2
+    }
+
+    #[test]
+    fn cells_roundtrip_and_order() {
+        let h = 0b00_01_11_00_01_01_00_11u16;
+        let cs = cells(h);
+        assert_eq!(cs, [0b00, 0b01, 0b11, 0b00, 0b01, 0b01, 0b00, 0b11]);
+        assert_eq!(from_cells(&cs), h);
+        for h in [0u16, 0xFFFF, 0x8000, 0x1234, 0xBEEF] {
+            assert_eq!(from_cells(&cells(h)), h);
+        }
+    }
+
+    #[test]
+    fn pattern_counts_match_paper_examples() {
+        // Table 2, NoChange rows.
+        assert_eq!(pattern_counts(0b00_01_11_00_01_01_00_11), [3, 3, 0, 2]);
+        assert_eq!(pattern_counts(0b00_10_01_01_01_00_01_11), [2, 4, 1, 1]);
+        assert_eq!(pattern_counts(0b00_01_00_00_00_01_01_01), [4, 4, 0, 0]);
+    }
+
+    #[test]
+    fn soft_cells_matches_pattern_counts() {
+        for h in (0..=u16::MAX).step_by(7) {
+            let pc = pattern_counts(h);
+            assert_eq!(soft_cells(h), pc[1] + pc[2], "h={h:#06x}");
+        }
+        assert_eq!(soft_cells(0x0000), 0);
+        assert_eq!(soft_cells(0xFFFF), 0);
+        assert_eq!(soft_cells(0x5555), 8);
+        assert_eq!(soft_cells(0xAAAA), 8);
+    }
+
+    #[test]
+    fn flip_bit_involution() {
+        for pos in 0..16 {
+            assert_eq!(flip_bit(flip_bit(0x1234, pos), pos), 0x1234);
+        }
+    }
+
+    #[test]
+    fn quantize_error_bounded_in_unit_range() {
+        // Relative error of f16 quantization for normal values is <= 2^-11.
+        let mut x = 1.0e-4f32;
+        while x < 1.0 {
+            let q = quantize_f16(x);
+            assert!(((q - x) / x).abs() <= 2f32.powi(-11) + 1e-7, "x={x}");
+            x *= 1.37;
+        }
+    }
+}

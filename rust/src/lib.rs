@@ -1,0 +1,60 @@
+//! # mlcstt
+//!
+//! Reproduction of *"Reliable and Energy Efficient MLC STT-RAM Buffer for
+//! CNN Accelerators"* (Jasemi, Hessabi, Bagherzadeh, 2020) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution — sign-bit protection plus rotate/round data
+//! reformation for half-precision CNN weights stored in 2-bit MLC STT-RAM —
+//! lives in [`encoding`]; the substrates it depends on are built from
+//! scratch:
+//!
+//! * [`fp`] — IEEE binary16 codec and bit-pattern analysis,
+//! * [`stt`] — MLC STT-RAM cell model: content-dependent energy/latency
+//!   (paper Table 4) and the soft-error model of Wen et al. (DAC'14),
+//! * [`buffer`] — a banked MLC weight buffer with transactional accounting
+//!   and a tri-level metadata plane,
+//! * [`systolic`] — a SCALE-Sim-style weight-stationary systolic-array
+//!   bandwidth/cycle model (paper Fig. 9),
+//! * [`models`] — real VGG16 / Inception-V3 layer tables plus the trained
+//!   Mini-net descriptors,
+//! * [`faults`] — seeded fault-injection campaigns,
+//! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas artifacts,
+//! * [`coordinator`] — the inference service that owns weights behind the
+//!   simulated buffer (encode → store → fault → decode → execute),
+//! * [`metrics`] — report tables matching the paper's figures,
+//! * [`util`] — zero-dependency PRNG / JSON / CLI / stats / property-test
+//!   support (the offline vendor set carries only `xla` and `anyhow`).
+//!
+//! Experiment-to-module index: see `DESIGN.md` §5. Every paper table and
+//! figure has a bench (`rust/benches/`) that regenerates it.
+
+pub mod buffer;
+pub mod coordinator;
+pub mod encoding;
+pub mod experiments;
+pub mod faults;
+pub mod fp;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod stt;
+pub mod systolic;
+pub mod util;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default artifact directory, relative to the repository root.
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn version_is_semver_ish() {
+        let v = super::version();
+        assert_eq!(v.split('.').count(), 3);
+    }
+}

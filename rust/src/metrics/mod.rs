@@ -1,0 +1,265 @@
+//! Experiment reports: the tables/series the paper's figures plot.
+//!
+//! Benches and examples produce these structures and print them through
+//! [`Table`], so every paper artifact has a machine-greppable textual twin
+//! (EXPERIMENTS.md records the outputs verbatim).
+
+use crate::stt::Energy;
+
+/// A plain aligned-column text table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                w[i] = w[i].max(cell.len());
+            }
+        }
+        w
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let w = self.widths();
+        writeln!(f, "== {} ==", self.title)?;
+        let fmt_row = |row: &[String]| -> String {
+            row.iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        writeln!(f, "{}", fmt_row(&self.header))?;
+        writeln!(f, "{}", "-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)))?;
+        for row in &self.rows {
+            writeln!(f, "{}", fmt_row(row))?;
+        }
+        Ok(())
+    }
+}
+
+/// Fig. 6 row: stored-pattern census for one system configuration.
+#[derive(Clone, Debug)]
+pub struct BitcountRow {
+    pub system: String,
+    pub counts: [u64; 4], // [00, 01, 10, 11]
+}
+
+impl BitcountRow {
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn soft_fraction(&self) -> f64 {
+        (self.counts[1] + self.counts[2]) as f64 / self.total() as f64
+    }
+}
+
+/// Render a set of bit-count rows as the Fig. 6 table.
+pub fn bitcount_table(model: &str, rows: &[BitcountRow]) -> Table {
+    let mut t = Table::new(
+        &format!("Fig.6 bit-pattern counts — {model}"),
+        &["system", "00", "01", "10", "11", "soft%"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.system.clone(),
+            r.counts[0].to_string(),
+            r.counts[1].to_string(),
+            r.counts[2].to_string(),
+            r.counts[3].to_string(),
+            format!("{:.2}", 100.0 * r.soft_fraction()),
+        ]);
+    }
+    t
+}
+
+/// Fig. 7 row: energy for one system configuration.
+#[derive(Clone, Debug)]
+pub struct EnergyRow {
+    pub system: String,
+    pub read: Energy,
+    pub write: Energy,
+}
+
+/// Render energy rows with savings relative to the first (baseline) row.
+pub fn energy_table(model: &str, rows: &[EnergyRow]) -> Table {
+    let mut t = Table::new(
+        &format!("Fig.7 buffer energy — {model}"),
+        &[
+            "system",
+            "read nJ",
+            "write nJ",
+            "read save%",
+            "write save%",
+        ],
+    );
+    let base = rows.first().expect("needs a baseline row");
+    for r in rows {
+        t.row(vec![
+            r.system.clone(),
+            format!("{:.1}", r.read.nanojoules),
+            format!("{:.1}", r.write.nanojoules),
+            format!("{:.2}", 100.0 * (1.0 - r.read.nanojoules / base.read.nanojoules)),
+            format!("{:.2}", 100.0 * (1.0 - r.write.nanojoules / base.write.nanojoules)),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8 row: classification accuracy for one protection system.
+#[derive(Clone, Debug)]
+pub struct AccuracyRow {
+    pub system: String,
+    pub accuracy: f64,
+    pub flipped_cells: u64,
+}
+
+pub fn accuracy_table(model: &str, error_free: f64, rows: &[AccuracyRow]) -> Table {
+    let mut t = Table::new(
+        &format!("Fig.8 accuracy — {model} (error-free = {error_free:.4})"),
+        &["system", "accuracy", "delta vs error-free", "cells flipped"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.system.clone(),
+            format!("{:.4}", r.accuracy),
+            format!("{:+.4}", r.accuracy - error_free),
+            r.flipped_cells.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 9 row: bandwidth for one buffer size.
+#[derive(Clone, Debug)]
+pub struct BandwidthRow {
+    pub buffer_kb: usize,
+    pub technology: String,
+    /// (layer name, bytes/cycle) for the top-3 layers.
+    pub top_layers: Vec<(String, f64)>,
+}
+
+pub fn bandwidth_table(model: &str, direction: &str, rows: &[BandwidthRow]) -> Table {
+    let mut t = Table::new(
+        &format!("Fig.9 {direction} bandwidth — {model} (top-3 layers, bytes/cycle)"),
+        &["buffer", "tech", "layer1", "bpc1", "layer2", "bpc2", "layer3", "bpc3"],
+    );
+    for r in rows {
+        let mut cells = vec![format!("{} KB", r.buffer_kb), r.technology.clone()];
+        for i in 0..3 {
+            if let Some((name, bpc)) = r.top_layers.get(i) {
+                cells.push(name.clone());
+                cells.push(format!("{bpc:.2}"));
+            } else {
+                cells.push("-".into());
+                cells.push("-".into());
+            }
+        }
+        t.row(cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "12345".into()]);
+        let s = t.to_string();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("long-name"));
+        // Aligned: both value cells end at the same column.
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bitcount_soft_fraction() {
+        let r = BitcountRow {
+            system: "g1".into(),
+            counts: [40, 10, 10, 40],
+        };
+        assert_eq!(r.total(), 100);
+        assert!((r.soft_fraction() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_table_savings_vs_baseline() {
+        let rows = vec![
+            EnergyRow {
+                system: "baseline".into(),
+                read: Energy { nanojoules: 100.0, cycles: 0 },
+                write: Energy { nanojoules: 200.0, cycles: 0 },
+            },
+            EnergyRow {
+                system: "hybrid".into(),
+                read: Energy { nanojoules: 91.0, cycles: 0 },
+                write: Energy { nanojoules: 188.0, cycles: 0 },
+            },
+        ];
+        let s = energy_table("vgg", &rows).to_string();
+        assert!(s.contains("9.00"), "{s}");
+        assert!(s.contains("6.00"), "{s}");
+    }
+
+    #[test]
+    fn accuracy_and_bandwidth_tables_render() {
+        let a = accuracy_table(
+            "vgg",
+            0.97,
+            &[AccuracyRow {
+                system: "unprotected".into(),
+                accuracy: 0.69,
+                flipped_cells: 1234,
+            }],
+        );
+        assert!(a.to_string().contains("-0.2800"));
+
+        let b = bandwidth_table(
+            "vgg",
+            "off-chip",
+            &[BandwidthRow {
+                buffer_kb: 256,
+                technology: "SRAM".into(),
+                top_layers: vec![("Conv11".into(), 25.5)],
+            }],
+        );
+        let s = b.to_string();
+        assert!(s.contains("256 KB"));
+        assert!(s.contains("25.50"));
+        assert!(s.contains('-'));
+    }
+}

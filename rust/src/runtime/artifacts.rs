@@ -1,0 +1,435 @@
+//! Readers for the build-time artifact formats (python/compile/io.py).
+//!
+//! ```text
+//! weights.bin  : b"MLCW" u32 version=1 u32 count
+//!                { u16 name_len, name, u8 ndim, u32 dims[ndim], f32 data }*
+//! testset.bin  : b"MLCT" u32 version=1 u32 n,h,w,c  f32 images  i32 labels
+//! manifest.json: param order/shapes + training metadata (util::json)
+//! ```
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor in a weight file, in manifest order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// A parsed `*.weights.bin`.
+#[derive(Clone, Debug, Default)]
+pub struct WeightFile {
+    pub params: Vec<ParamSpec>,
+}
+
+impl WeightFile {
+    pub fn read(path: &Path) -> Result<Self> {
+        let buf = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&buf).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut r = Cursor::new(buf);
+        ensure!(r.bytes(4)? == b"MLCW", "bad weights magic");
+        let version = r.u32()?;
+        ensure!(version == 1, "unsupported weights version {version}");
+        let count = r.u32()? as usize;
+        ensure!(count < 100_000, "implausible tensor count {count}");
+        let mut params = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.bytes(name_len)?.to_vec())
+                .context("tensor name not utf-8")?;
+            let ndim = r.u8()? as usize;
+            ensure!(ndim <= 8, "implausible rank {ndim}");
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let data = r.f32s(if ndim == 0 { 1 } else { n })?;
+            params.push(ParamSpec { name, shape, data });
+        }
+        ensure!(r.at_end(), "trailing bytes in weight file");
+        Ok(WeightFile { params })
+    }
+
+    /// Total scalar count across tensors.
+    pub fn total_elems(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Flatten every tensor into one weight stream (buffer-encoding order).
+    pub fn flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.total_elems());
+        for p in &self.params {
+            out.extend_from_slice(&p.data);
+        }
+        out
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+}
+
+/// A parsed `testset.bin`.
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Row-major `[n, h, w, c]`.
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl TestSet {
+    pub fn read(path: &Path) -> Result<Self> {
+        let buf = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut r = Cursor::new(buf);
+        ensure!(r.bytes(4)? == b"MLCT", "bad testset magic");
+        ensure!(r.u32()? == 1, "unsupported testset version");
+        let (n, h, w, c) = (
+            r.u32()? as usize,
+            r.u32()? as usize,
+            r.u32()? as usize,
+            r.u32()? as usize,
+        );
+        let images = r.f32s(n * h * w * c)?;
+        let labels = r.i32s(n)?;
+        ensure!(r.at_end(), "trailing bytes in testset");
+        Ok(TestSet {
+            n,
+            h,
+            w,
+            c,
+            images,
+            labels,
+        })
+    }
+
+    /// Image `i` as a flat slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let stride = self.h * self.w * self.c;
+        &self.images[i * stride..(i + 1) * stride]
+    }
+}
+
+/// A parsed `*.manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    /// (name, shape, size) in HLO parameter order.
+    pub params: Vec<(String, Vec<usize>, usize)>,
+    pub test_acc: f64,
+    pub model: String,
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn read(path: &Path) -> Result<Self> {
+        let text =
+            fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let batch = need_usize(&j, "batch")?;
+        let num_classes = need_usize(&j, "num_classes")?;
+        let input_shape = j
+            .get("input_shape")
+            .and_then(Json::as_arr)
+            .context("manifest missing input_shape")?
+            .iter()
+            .map(|v| v.as_usize().context("bad input_shape entry"))
+            .collect::<Result<Vec<_>>>()?;
+        let mut params = Vec::new();
+        for p in j
+            .get("params")
+            .and_then(Json::as_arr)
+            .context("manifest missing params")?
+        {
+            let name = p
+                .get("name")
+                .and_then(Json::as_str)
+                .context("param missing name")?
+                .to_string();
+            let shape = p
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("param missing shape")?
+                .iter()
+                .map(|v| v.as_usize().context("bad shape entry"))
+                .collect::<Result<Vec<_>>>()?;
+            let size = p
+                .get("size")
+                .and_then(Json::as_usize)
+                .context("param missing size")?;
+            params.push((name, shape, size));
+        }
+        let test_acc = j
+            .path("training.test_acc")
+            .and_then(Json::as_f64)
+            .context("manifest missing training.test_acc")?;
+        let model = j
+            .path("training.model")
+            .and_then(Json::as_str)
+            .context("manifest missing training.model")?
+            .to_string();
+        Ok(Manifest {
+            batch,
+            input_shape,
+            num_classes,
+            params,
+            test_acc,
+            model,
+            raw: j,
+        })
+    }
+
+    /// Cross-check a weight file against this manifest (order, shapes).
+    pub fn validate(&self, w: &WeightFile) -> Result<()> {
+        ensure!(
+            w.params.len() == self.params.len(),
+            "tensor count mismatch: weights {}, manifest {}",
+            w.params.len(),
+            self.params.len()
+        );
+        for (p, (name, shape, size)) in w.params.iter().zip(&self.params) {
+            ensure!(&p.name == name, "order mismatch: {} vs {}", p.name, name);
+            ensure!(&p.shape == shape, "{name}: shape mismatch");
+            ensure!(p.len() == *size, "{name}: size mismatch");
+        }
+        Ok(())
+    }
+}
+
+/// Locate the artifact triple for a model under `dir`.
+pub fn model_paths(dir: &Path, model: &str) -> (PathBuf, PathBuf, PathBuf) {
+    (
+        dir.join(format!("{model}.hlo.txt")),
+        dir.join(format!("{model}.weights.bin")),
+        dir.join(format!("{model}.manifest.json")),
+    )
+}
+
+/// True when `make artifacts` has produced everything this model needs.
+pub fn model_available(dir: &Path, model: &str) -> bool {
+    let (h, w, m) = model_paths(dir, model);
+    h.exists() && w.exists() && m.exists()
+}
+
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated artifact (need {n} bytes at {})", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.bytes(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn i32s(&mut self, n: usize) -> Result<Vec<i32>> {
+        let b = self.bytes(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_weights_bin() -> Vec<u8> {
+        // Two tensors: "a.w" [2,3] and "a.b" [3].
+        let mut b = Vec::new();
+        b.extend(b"MLCW");
+        b.extend(1u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        // a.w
+        b.extend(3u16.to_le_bytes());
+        b.extend(b"a.w");
+        b.push(2);
+        b.extend(2u32.to_le_bytes());
+        b.extend(3u32.to_le_bytes());
+        for i in 0..6 {
+            b.extend((i as f32 * 0.5).to_le_bytes());
+        }
+        // a.b
+        b.extend(3u16.to_le_bytes());
+        b.extend(b"a.b");
+        b.push(1);
+        b.extend(3u32.to_le_bytes());
+        for i in 0..3 {
+            b.extend((-(i as f32)).to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn weights_parse_roundtrip() {
+        let w = WeightFile::parse(&sample_weights_bin()).unwrap();
+        assert_eq!(w.params.len(), 2);
+        assert_eq!(w.params[0].name, "a.w");
+        assert_eq!(w.params[0].shape, vec![2, 3]);
+        assert_eq!(w.params[0].data[3], 1.5);
+        assert_eq!(w.params[1].data, vec![0.0, -1.0, -2.0]);
+        assert_eq!(w.total_elems(), 9);
+        assert_eq!(w.flat().len(), 9);
+        assert!(w.by_name("a.b").is_some());
+        assert!(w.by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn weights_reject_corruption() {
+        let good = sample_weights_bin();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(WeightFile::parse(&bad).is_err());
+        // Truncated.
+        assert!(WeightFile::parse(&good[..good.len() - 2]).is_err());
+        // Trailing garbage.
+        let mut tail = good.clone();
+        tail.push(0);
+        assert!(WeightFile::parse(&tail).is_err());
+    }
+
+    fn sample_testset_bin() -> Vec<u8> {
+        let (n, h, w, c) = (2usize, 2usize, 2usize, 1usize);
+        let mut b = Vec::new();
+        b.extend(b"MLCT");
+        b.extend(1u32.to_le_bytes());
+        for v in [n, h, w, c] {
+            b.extend((v as u32).to_le_bytes());
+        }
+        for i in 0..(n * h * w * c) {
+            b.extend((i as f32).to_le_bytes());
+        }
+        b.extend(3i32.to_le_bytes());
+        b.extend(7i32.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn testset_parse() {
+        let t = TestSet::parse(&sample_testset_bin()).unwrap();
+        assert_eq!((t.n, t.h, t.w, t.c), (2, 2, 2, 1));
+        assert_eq!(t.labels, vec![3, 7]);
+        assert_eq!(t.image(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    const MANIFEST: &str = r#"{
+        "batch": 64,
+        "format_version": 1,
+        "input_shape": [64, 32, 32, 3],
+        "num_classes": 10,
+        "params": [
+            {"name": "a.w", "shape": [2, 3], "size": 6},
+            {"name": "a.b", "shape": [3], "size": 3}
+        ],
+        "training": {"model": "vggmini", "test_acc": 0.9716}
+    }"#;
+
+    #[test]
+    fn manifest_parse_and_validate() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.input_shape, vec![64, 32, 32, 3]);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.model, "vggmini");
+        assert!((m.test_acc - 0.9716).abs() < 1e-12);
+
+        let w = WeightFile::parse(&sample_weights_bin()).unwrap();
+        m.validate(&w).unwrap();
+    }
+
+    #[test]
+    fn manifest_validation_catches_mismatch() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        let mut w = WeightFile::parse(&sample_weights_bin()).unwrap();
+        w.params[0].name = "renamed".into();
+        assert!(m.validate(&w).is_err());
+        let mut w2 = WeightFile::parse(&sample_weights_bin()).unwrap();
+        w2.params.pop();
+        assert!(m.validate(&w2).is_err());
+    }
+
+    #[test]
+    fn model_paths_layout() {
+        let dir = Path::new("/tmp/artifacts");
+        let (h, w, m) = model_paths(dir, "vggmini");
+        assert!(h.ends_with("vggmini.hlo.txt"));
+        assert!(w.ends_with("vggmini.weights.bin"));
+        assert!(m.ends_with("vggmini.manifest.json"));
+        assert!(!model_available(Path::new("/nonexistent"), "vggmini"));
+    }
+}
+
+fn need_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("manifest missing {key}"))
+}

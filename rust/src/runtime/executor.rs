@@ -1,0 +1,153 @@
+//! PJRT executor: load HLO text, compile once, execute many.
+//!
+//! Follows the /opt/xla-example/load_hlo recipe: HLO *text* is the
+//! interchange format (jax >= 0.5 serialized protos carry 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns them), and the
+//! python side lowers with `return_tuple=True`, so results unwrap with
+//! `to_tuple1`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled model on the PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+}
+
+impl Executor {
+    /// Compile an HLO-text artifact on a fresh CPU client.
+    pub fn from_hlo_file(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executor {
+            client,
+            exe,
+            path: path.display().to_string(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Execute with literal inputs; returns the elements of the 1-tuple
+    /// result (the aot.py convention wraps outputs in a tuple).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple1().context("unwrapping 1-tuple result")
+    }
+
+    /// Execute with f32 tensors given as (data, shape) pairs; returns the
+    /// flattened f32 output.
+    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, shape)| literal_f32(data, shape))
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.execute(&literals)?;
+        out.to_vec::<f32>().context("reading f32 output")
+    }
+
+    /// Stage an f32 tensor on the device (hot-path optimization: weights are
+    /// staged once per fault campaign, not per request).
+    pub fn stage_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .context("staging device buffer")
+    }
+
+    /// Execute against pre-staged device buffers (`execute_b`): no weight
+    /// re-upload per request. Returns the elements of the 1-tuple result.
+    pub fn execute_staged(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing (staged) {}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple1().context("unwrapping 1-tuple result")
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(
+        n == data.len(),
+        "shape {shape:?} wants {n} elems, got {}",
+        data.len()
+    );
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(&dims).context("reshaping literal")
+}
+
+/// Row-wise argmax over a flattened `[rows, cols]` logits buffer.
+pub fn argmax_rows(logits: &[f32], cols: usize) -> Vec<usize> {
+    assert!(cols > 0 && logits.len() % cols == 0);
+    logits
+        .chunks_exact(cols)
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        let logits = [0.1, 0.9, 0.0, 3.0, -1.0, 2.0];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        assert_eq!(argmax_rows(&[1.0, 1.0], 2), vec![0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn argmax_rejects_ragged() {
+        argmax_rows(&[1.0, 2.0, 3.0], 2);
+    }
+
+    // PJRT-dependent paths are exercised in rust/tests/integration_runtime.rs
+    // against the artifacts; literal_f32's shape check is pure:
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

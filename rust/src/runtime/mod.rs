@@ -1,0 +1,15 @@
+//! Request-path runtime: PJRT execution of AOT artifacts + artifact I/O.
+//!
+//! * [`artifacts`] — readers for the build-time outputs of
+//!   `python/compile/aot.py`: `*.weights.bin` (MLCW), `testset.bin` (MLCT),
+//!   `*.manifest.json`, and `*.hlo.txt` paths. Pure Rust, unit-testable
+//!   without a PJRT client.
+//! * [`executor`] — the `xla` crate wrapper: HLO text ->
+//!   `HloModuleProto::from_text_file` -> `XlaComputation` -> PJRT compile ->
+//!   execute. One compiled executable per model; Python is never invoked.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{Manifest, ParamSpec, TestSet, WeightFile};
+pub use executor::Executor;

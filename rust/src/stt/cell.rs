@@ -1,0 +1,167 @@
+//! 2-bit MLC / tri-level / SLC STT-RAM cell primitives.
+//!
+//! A 2-bit MLC cell stacks two MTJs (one large "hard" junction, one small
+//! "soft" junction) creating four distinct resistance levels. Programming is
+//! two-step (paper Fig. 2b): the first pulse drives the stack to `00` or
+//! `11`; reaching `01` / `10` requires a second, smaller pulse that adjusts
+//! the soft bit without disturbing the hard bit. Hence:
+//!
+//! * `00`, `11` — one pulse, base states, thermally stable -> cheap + immune
+//! * `01`, `10` — two pulses, intermediate resistance -> expensive + fragile
+//!
+//! Tri-level cells store 3 states in the same stack with wide sense margins;
+//! reliability is close to SLC (paper §5.2 cites [12]), which is why the
+//! 3-valued scheme metadata lives in them.
+
+/// The four states of a 2-bit MLC cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum CellPattern {
+    /// `00` — parallel/parallel, lowest resistance, base state.
+    P00 = 0b00,
+    /// `01` — intermediate (soft bit flipped).
+    P01 = 0b01,
+    /// `10` — intermediate (hard bit flipped).
+    P10 = 0b10,
+    /// `11` — anti-parallel/anti-parallel, highest resistance, base state.
+    P11 = 0b11,
+}
+
+impl CellPattern {
+    #[inline]
+    pub fn from_bits(b: u8) -> Self {
+        match b & 0b11 {
+            0b00 => CellPattern::P00,
+            0b01 => CellPattern::P01,
+            0b10 => CellPattern::P10,
+            _ => CellPattern::P11,
+        }
+    }
+
+    #[inline]
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    /// Base states (`00`/`11`): single-pulse program, soft-error immune.
+    #[inline]
+    pub fn is_base(self) -> bool {
+        matches!(self, CellPattern::P00 | CellPattern::P11)
+    }
+
+    /// Intermediate states (`01`/`10`): two-pulse program, vulnerable.
+    #[inline]
+    pub fn is_soft(self) -> bool {
+        !self.is_base()
+    }
+
+    /// Programming pulses needed from an erased cell (paper Fig. 2b).
+    #[inline]
+    pub fn write_pulses(self) -> u32 {
+        if self.is_base() {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Sense comparisons needed by the 2-step binary-search read
+    /// (paper Fig. 2c): the first comparison resolves which half, the second
+    /// resolves within the half — base states terminate with a stronger
+    /// margin, modeled as the cheaper "soft" read cost in Table 4.
+    #[inline]
+    pub fn read_steps(self) -> u32 {
+        2
+    }
+
+    pub const ALL: [CellPattern; 4] = [
+        CellPattern::P00,
+        CellPattern::P01,
+        CellPattern::P10,
+        CellPattern::P11,
+    ];
+}
+
+/// Operating mode of a cell region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellMode {
+    /// 1 bit/cell — reliable baseline, used for SRAM-replacement comparisons.
+    Slc,
+    /// 2 bits/cell — the paper's target (4x density of SRAM at equal area).
+    Mlc2,
+    /// 3 states/cell — metadata plane (near-SLC reliability).
+    TriLevel,
+}
+
+impl CellMode {
+    /// Information density in bits per cell.
+    pub fn bits_per_cell(self) -> f64 {
+        match self {
+            CellMode::Slc => 1.0,
+            CellMode::Mlc2 => 2.0,
+            CellMode::TriLevel => 3f64.log2(),
+        }
+    }
+}
+
+/// A tri-level metadata cell: stores one of three values {0, 1, 2}.
+///
+/// The paper stores the per-group scheme selector (NoChange/Rotate/Round) in
+/// tri-level cells precisely because they are near-SLC reliable; the error
+/// model treats them as fault-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TriLevel(u8);
+
+impl TriLevel {
+    pub fn new(v: u8) -> Option<Self> {
+        (v < 3).then_some(TriLevel(v))
+    }
+
+    #[inline]
+    pub fn value(self) -> u8 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_roundtrip() {
+        for p in CellPattern::ALL {
+            assert_eq!(CellPattern::from_bits(p.bits()), p);
+        }
+        assert_eq!(CellPattern::from_bits(0b111), CellPattern::P11); // masked
+    }
+
+    #[test]
+    fn base_vs_soft_classification() {
+        assert!(CellPattern::P00.is_base());
+        assert!(CellPattern::P11.is_base());
+        assert!(CellPattern::P01.is_soft());
+        assert!(CellPattern::P10.is_soft());
+    }
+
+    #[test]
+    fn pulse_counts_follow_two_step_model() {
+        assert_eq!(CellPattern::P00.write_pulses(), 1);
+        assert_eq!(CellPattern::P11.write_pulses(), 1);
+        assert_eq!(CellPattern::P01.write_pulses(), 2);
+        assert_eq!(CellPattern::P10.write_pulses(), 2);
+    }
+
+    #[test]
+    fn trilevel_domain() {
+        assert!(TriLevel::new(0).is_some());
+        assert!(TriLevel::new(2).is_some());
+        assert!(TriLevel::new(3).is_none());
+        assert_eq!(TriLevel::new(1).unwrap().value(), 1);
+    }
+
+    #[test]
+    fn density_ordering() {
+        assert!(CellMode::Mlc2.bits_per_cell() > CellMode::TriLevel.bits_per_cell());
+        assert!(CellMode::TriLevel.bits_per_cell() > CellMode::Slc.bits_per_cell());
+    }
+}

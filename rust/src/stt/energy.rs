@@ -1,0 +1,207 @@
+//! Content-dependent access cost model — the paper's Table 4.
+//!
+//! | per cell            | SLC   | MLC   | Hybrid soft | Hybrid hard |
+//! |---------------------|-------|-------|-------------|-------------|
+//! | read latency (cyc)  | 13    | 19    | 14          | 20          |
+//! | write latency (cyc) | 49    | 90    | 50          | 95          |
+//! | read energy (nJ)    | 0.415 | 0.424 | 0.427       | 0.579       |
+//! | write energy (nJ)   | 0.876 | 1.859 | 1.084       | 2.653       |
+//!
+//! Interpretation used throughout (recorded in DESIGN.md §5): in the hybrid
+//! (content-aware) columns, a **base-state cell** (`00`/`11`, one programming
+//! pulse) bills the *soft* cost and an **intermediate cell** (`01`/`10`, two
+//! pulses) bills the *hard* cost. Tri-level metadata cells bill SLC cost.
+//! This is exactly the asymmetry the reformation schemes exploit: fewer
+//! `01`/`10` cells ⇒ less energy and latency, monotonically.
+
+use super::cell::CellPattern;
+use crate::fp;
+
+/// Access direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    Read,
+    Write,
+}
+
+/// Energy (nJ) + latency (cycles) pair.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Energy {
+    pub nanojoules: f64,
+    pub cycles: u64,
+}
+
+impl Energy {
+    pub const ZERO: Energy = Energy {
+        nanojoules: 0.0,
+        cycles: 0,
+    };
+
+    #[inline]
+    pub fn add(&mut self, other: Energy) {
+        self.nanojoules += other.nanojoules;
+        self.cycles += other.cycles;
+    }
+}
+
+impl std::ops::Add for Energy {
+    type Output = Energy;
+    fn add(self, rhs: Energy) -> Energy {
+        Energy {
+            nanojoules: self.nanojoules + rhs.nanojoules,
+            cycles: self.cycles + rhs.cycles,
+        }
+    }
+}
+
+/// Per-cell cost table (Table 4).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    // SLC column.
+    pub slc_read: Energy,
+    pub slc_write: Energy,
+    // Uniform (content-blind) MLC column — used for naive baselines.
+    pub mlc_read: Energy,
+    pub mlc_write: Energy,
+    // Hybrid content-aware column.
+    pub soft_read: Energy,
+    pub hard_read: Energy,
+    pub soft_write: Energy,
+    pub hard_write: Energy,
+}
+
+impl Default for CostModel {
+    /// The paper's Table 4 values, verbatim.
+    fn default() -> Self {
+        CostModel {
+            slc_read: Energy { nanojoules: 0.415, cycles: 13 },
+            slc_write: Energy { nanojoules: 0.876, cycles: 49 },
+            mlc_read: Energy { nanojoules: 0.424, cycles: 19 },
+            mlc_write: Energy { nanojoules: 1.859, cycles: 90 },
+            soft_read: Energy { nanojoules: 0.427, cycles: 14 },
+            hard_read: Energy { nanojoules: 0.579, cycles: 20 },
+            soft_write: Energy { nanojoules: 1.084, cycles: 50 },
+            hard_write: Energy { nanojoules: 2.653, cycles: 95 },
+        }
+    }
+}
+
+impl CostModel {
+    /// Content-aware cost of accessing one 2-bit MLC cell.
+    #[inline]
+    pub fn cell(&self, pattern: CellPattern, kind: AccessKind) -> Energy {
+        match (kind, pattern.is_base()) {
+            (AccessKind::Read, true) => self.soft_read,
+            (AccessKind::Read, false) => self.hard_read,
+            (AccessKind::Write, true) => self.soft_write,
+            (AccessKind::Write, false) => self.hard_write,
+        }
+    }
+
+    /// Content-aware cost of one binary16 word (8 MLC cells). Latency is the
+    /// *maximum* over cells (cells in a row are accessed in parallel);
+    /// energy is the sum.
+    pub fn word(&self, h: u16, kind: AccessKind) -> Energy {
+        let soft = fp::soft_cells(h) as f64;
+        let base = (fp::CELLS_PER_WORD as f64) - soft;
+        let (s, b) = match kind {
+            AccessKind::Read => (self.hard_read, self.soft_read),
+            AccessKind::Write => (self.hard_write, self.soft_write),
+        };
+        Energy {
+            nanojoules: soft * s.nanojoules + base * b.nanojoules,
+            cycles: if soft > 0.0 { s.cycles } else { b.cycles },
+        }
+    }
+
+    /// Content-blind MLC cost of one word (the "unprotected baseline" bill
+    /// when modeled with the uniform MLC column).
+    pub fn word_uniform(&self, kind: AccessKind) -> Energy {
+        let per = match kind {
+            AccessKind::Read => self.mlc_read,
+            AccessKind::Write => self.mlc_write,
+        };
+        Energy {
+            nanojoules: per.nanojoules * fp::CELLS_PER_WORD as f64,
+            cycles: per.cycles,
+        }
+    }
+
+    /// Cost of one tri-level metadata cell (billed at SLC cost; the paper
+    /// trades density for reliability on the metadata plane).
+    pub fn trilevel_cell(&self, kind: AccessKind) -> Energy {
+        match kind {
+            AccessKind::Read => self.slc_read,
+            AccessKind::Write => self.slc_write,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_values_verbatim() {
+        let m = CostModel::default();
+        assert_eq!(m.slc_read, Energy { nanojoules: 0.415, cycles: 13 });
+        assert_eq!(m.slc_write, Energy { nanojoules: 0.876, cycles: 49 });
+        assert_eq!(m.mlc_read, Energy { nanojoules: 0.424, cycles: 19 });
+        assert_eq!(m.mlc_write, Energy { nanojoules: 1.859, cycles: 90 });
+        assert_eq!(m.soft_read, Energy { nanojoules: 0.427, cycles: 14 });
+        assert_eq!(m.hard_read, Energy { nanojoules: 0.579, cycles: 20 });
+        assert_eq!(m.soft_write, Energy { nanojoules: 1.084, cycles: 50 });
+        assert_eq!(m.hard_write, Energy { nanojoules: 2.653, cycles: 95 });
+    }
+
+    #[test]
+    fn base_cells_cheaper_than_intermediate() {
+        let m = CostModel::default();
+        for kind in [AccessKind::Read, AccessKind::Write] {
+            let base = m.cell(CellPattern::P00, kind);
+            let soft = m.cell(CellPattern::P01, kind);
+            assert!(base.nanojoules < soft.nanojoules);
+            assert!(base.cycles < soft.cycles);
+        }
+    }
+
+    #[test]
+    fn word_cost_monotone_in_soft_cells() {
+        let m = CostModel::default();
+        // 0x0000 has 0 soft cells, 0x5555 has 8.
+        let cheap = m.word(0x0000, AccessKind::Write);
+        let mid = m.word(0x0001, AccessKind::Write); // one soft cell
+        let dear = m.word(0x5555, AccessKind::Write);
+        assert!(cheap.nanojoules < mid.nanojoules);
+        assert!(mid.nanojoules < dear.nanojoules);
+        // Closed forms.
+        assert!((cheap.nanojoules - 8.0 * 1.084).abs() < 1e-12);
+        assert!((dear.nanojoules - 8.0 * 2.653).abs() < 1e-12);
+        assert!((mid.nanojoules - (7.0 * 1.084 + 2.653)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn word_latency_is_max_over_cells() {
+        let m = CostModel::default();
+        assert_eq!(m.word(0x0000, AccessKind::Write).cycles, 50);
+        assert_eq!(m.word(0x0001, AccessKind::Write).cycles, 95);
+        assert_eq!(m.word(0xFFFF, AccessKind::Read).cycles, 14);
+        assert_eq!(m.word(0x4000, AccessKind::Read).cycles, 20);
+    }
+
+    #[test]
+    fn uniform_word_cost() {
+        let m = CostModel::default();
+        let w = m.word_uniform(AccessKind::Write);
+        assert!((w.nanojoules - 8.0 * 1.859).abs() < 1e-12);
+        assert_eq!(w.cycles, 90);
+    }
+
+    #[test]
+    fn energy_addition() {
+        let mut e = Energy::ZERO;
+        e.add(Energy { nanojoules: 1.5, cycles: 10 });
+        let f = e + Energy { nanojoules: 0.5, cycles: 5 };
+        assert_eq!(f, Energy { nanojoules: 2.0, cycles: 15 });
+    }
+}

@@ -1,0 +1,298 @@
+//! Soft-error model for 2-bit MLC STT-RAM (paper §6 "Error model").
+//!
+//! Following [40] (Liu et al., ASP-DAC'17) with rates from [12] (Wen et
+//! al., DAC'14), as the paper prescribes:
+//!
+//! * read and write error rates are separated;
+//! * cells holding `00`/`11` are base states with full thermal stability —
+//!   treated as immune;
+//! * cells holding `01`/`10` flip **one uniformly-chosen bit** of the cell
+//!   with probability `p ∈ [1.5e-2, 2e-2]` per stored word-lifetime (write
+//!   errors) and optionally per read access (read disturbance — negligible
+//!   per [12] and off by default, but implemented for ablations).
+//!
+//! Tri-level metadata cells are near-SLC reliable and modeled fault-free
+//! (paper §5.2: "it is guaranteed that our metadata is safe").
+
+use super::cell::CellPattern;
+use crate::fp;
+use crate::util::rng::Xoshiro256;
+
+/// Published MLC STT-RAM soft error rate bounds [12].
+pub const ERROR_RATE_LO: f64 = 1.5e-2;
+pub const ERROR_RATE_HI: f64 = 2.0e-2;
+
+/// Configurable error model.
+#[derive(Clone, Debug)]
+pub struct ErrorModel {
+    /// Probability that a vulnerable (intermediate-state) cell is corrupted
+    /// by the write/retention path before it is consumed.
+    pub write_error_rate: f64,
+    /// Probability of read disturbance per vulnerable cell per read.
+    /// Ignored in most analyses ([12]); default 0.
+    pub read_disturb_rate: f64,
+    /// Precomputed binomial CDFs for the write path: `write_cdf[k][j]` =
+    /// P(#flips <= j | k vulnerable cells). Lets the hot path spend one
+    /// uniform draw per word instead of one per cell (see
+    /// EXPERIMENTS.md §Perf) while sampling the *exact* same
+    /// independent-per-cell distribution.
+    write_cdf: [[f64; 9]; 9],
+}
+
+fn binomial_cdfs(p: f64) -> [[f64; 9]; 9] {
+    let mut out = [[1.0f64; 9]; 9];
+    for k in 0..=8usize {
+        let mut cum = 0.0;
+        for j in 0..=k {
+            // C(k, j) p^j (1-p)^(k-j)
+            let mut c = 1.0f64;
+            for i in 0..j {
+                c = c * (k - i) as f64 / (i + 1) as f64;
+            }
+            cum += c * p.powi(j as i32) * (1.0 - p).powi((k - j) as i32);
+            out[k][j] = cum.min(1.0);
+        }
+        for j in k + 1..=8 {
+            out[k][j] = 1.0;
+        }
+    }
+    out
+}
+
+impl Default for ErrorModel {
+    fn default() -> Self {
+        Self::new(ERROR_RATE_LO, 0.0)
+    }
+}
+
+impl ErrorModel {
+    pub fn new(write_error_rate: f64, read_disturb_rate: f64) -> Self {
+        assert!((0.0..=1.0).contains(&write_error_rate));
+        assert!((0.0..=1.0).contains(&read_disturb_rate));
+        ErrorModel {
+            write_error_rate,
+            read_disturb_rate,
+            write_cdf: binomial_cdfs(write_error_rate),
+        }
+    }
+
+    /// The paper's headline configuration at a given rate in
+    /// `[ERROR_RATE_LO, ERROR_RATE_HI]`.
+    pub fn at_rate(rate: f64) -> Self {
+        Self::new(rate, 0.0)
+    }
+
+    /// Corrupt one 2-bit cell: if vulnerable, flip one uniformly-chosen bit
+    /// with the given probability. Returns the possibly-corrupted pattern.
+    #[inline]
+    pub fn corrupt_cell(
+        &self,
+        pattern: CellPattern,
+        rate: f64,
+        rng: &mut Xoshiro256,
+    ) -> CellPattern {
+        if pattern.is_base() || !rng.chance(rate) {
+            return pattern;
+        }
+        // Uniform choice between the soft (LSB) and hard (MSB) junction.
+        let flip = if rng.chance(0.5) { 0b01 } else { 0b10 };
+        CellPattern::from_bits(pattern.bits() ^ flip)
+    }
+
+    /// Apply write/retention errors to a full binary16 word (8 cells).
+    ///
+    /// Hot path: the number of corrupted cells is sampled from the exact
+    /// Binomial(#vulnerable, rate) law with a single uniform draw (the
+    /// per-cell Bernoulli model marginalized), then that many distinct
+    /// vulnerable cells are chosen and each flips one uniformly-chosen bit
+    /// — identical distribution to the naive per-cell loop, ~6x fewer RNG
+    /// draws at the published rates.
+    pub fn corrupt_word_write(&self, h: u16, rng: &mut Xoshiro256) -> u16 {
+        if self.write_error_rate == 0.0 {
+            return h;
+        }
+        // Mask of vulnerable cells: bits differ within the 2-bit field.
+        let soft_mask = (h ^ (h >> 1)) & 0x5555; // bit 2i set <=> cell i soft
+        let k = soft_mask.count_ones() as usize;
+        if k == 0 {
+            return h;
+        }
+        // Sample flip count j ~ Binomial(k, p) by inverting the CDF.
+        let u = rng.next_f64();
+        let cdf = &self.write_cdf[k];
+        let mut j = 0usize;
+        while j < k && u >= cdf[j] {
+            j += 1;
+        }
+        if j == 0 {
+            return h; // common case: one draw, no flips
+        }
+        // Choose j distinct vulnerable cells (partial Fisher-Yates over the
+        // <= 8 set-bit positions) and flip one random bit in each.
+        let mut cells = [0u32; 8];
+        let mut m = soft_mask;
+        for slot in cells.iter_mut().take(k) {
+            let pos = m.trailing_zeros(); // even bit index = 2*cell
+            *slot = pos;
+            m &= m - 1;
+        }
+        let mut out = h;
+        for i in 0..j {
+            let pick = i + rng.below((k - i) as u64) as usize;
+            cells.swap(i, pick);
+            // cells[i] is the low-bit index of the chosen cell; flip soft
+            // (low) or hard (high) junction uniformly.
+            let bit = cells[i] + if rng.chance(0.5) { 0 } else { 1 };
+            out ^= 1 << bit;
+        }
+        out
+    }
+
+    /// The pre-optimization write path: independent per-cell Bernoulli
+    /// draws. Kept for the §Perf ablation and as the distribution oracle
+    /// the fast path is tested against.
+    pub fn corrupt_word_write_naive(&self, h: u16, rng: &mut Xoshiro256) -> u16 {
+        self.corrupt_word(h, self.write_error_rate, rng)
+    }
+
+    /// Apply read-disturb errors to a word (no-op at the default rate 0).
+    pub fn corrupt_word_read(&self, h: u16, rng: &mut Xoshiro256) -> u16 {
+        if self.read_disturb_rate == 0.0 {
+            return h;
+        }
+        self.corrupt_word(h, self.read_disturb_rate, rng)
+    }
+
+    fn corrupt_word(&self, h: u16, rate: f64, rng: &mut Xoshiro256) -> u16 {
+        if rate == 0.0 {
+            return h;
+        }
+        let mut cells = fp::cells(h);
+        for c in cells.iter_mut() {
+            *c = self
+                .corrupt_cell(CellPattern::from_bits(*c), rate, rng)
+                .bits();
+        }
+        fp::from_cells(&cells)
+    }
+
+    /// Expected number of corrupted cells in a word holding `h` (analytic;
+    /// used to cross-check the sampled campaigns).
+    pub fn expected_cell_errors(&self, h: u16) -> f64 {
+        fp::soft_cells(h) as f64 * self.write_error_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_states_are_immune() {
+        let m = ErrorModel::new(1.0, 0.0); // certain corruption of soft cells
+        let mut rng = Xoshiro256::seeded(1);
+        for _ in 0..100 {
+            assert_eq!(m.corrupt_word_write(0x0000, &mut rng), 0x0000);
+            assert_eq!(m.corrupt_word_write(0xFFFF, &mut rng), 0xFFFF);
+        }
+    }
+
+    #[test]
+    fn rate_one_corrupts_every_soft_cell() {
+        let m = ErrorModel::new(1.0, 0.0);
+        let mut rng = Xoshiro256::seeded(2);
+        // 0x5555: all 8 cells are 01 -> every cell must change.
+        for _ in 0..50 {
+            let out = m.corrupt_word_write(0x5555, &mut rng);
+            for c in fp::cells(out) {
+                assert_ne!(c, 0b01);
+                // a single-bit flip of 01 yields 00 or 11
+                assert!(c == 0b00 || c == 0b11, "cell {c:#04b}");
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_is_single_bit_per_cell() {
+        let m = ErrorModel::new(1.0, 0.0);
+        let mut rng = Xoshiro256::seeded(3);
+        for _ in 0..200 {
+            let out = m.corrupt_cell(CellPattern::P10, 1.0, &mut rng);
+            assert!(matches!(out, CellPattern::P00 | CellPattern::P11));
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_naive_distribution() {
+        // The binomial fast path must reproduce the per-cell law: compare
+        // marginal flip rates per cell position over a large sample.
+        let m = ErrorModel::at_rate(0.05);
+        let mut rng = Xoshiro256::seeded(77);
+        let h = 0x5595u16; // mixed soft/base cells
+        let n = 400_000;
+        let mut fast = [0u64; 16];
+        let mut naive = [0u64; 16];
+        for _ in 0..n {
+            let f = m.corrupt_word_write(h, &mut rng);
+            let v = m.corrupt_word_write_naive(h, &mut rng);
+            for b in 0..16 {
+                fast[b] += ((f >> b) ^ (h >> b)) as u64 & 1;
+                naive[b] += ((v >> b) ^ (h >> b)) as u64 & 1;
+            }
+        }
+        for b in 0..16 {
+            let pf = fast[b] as f64 / n as f64;
+            let pv = naive[b] as f64 / n as f64;
+            assert!(
+                (pf - pv).abs() < 0.005,
+                "bit {b}: fast {pf} vs naive {pv}"
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_rate_matches_configured() {
+        let m = ErrorModel::at_rate(0.02);
+        let mut rng = Xoshiro256::seeded(4);
+        let n = 200_000;
+        let mut flips = 0u64;
+        for _ in 0..n {
+            // one soft cell per word (pattern 0x0001 => last cell 01)
+            if m.corrupt_word_write(0x0001, &mut rng) != 0x0001 {
+                flips += 1;
+            }
+        }
+        let rate = flips as f64 / n as f64;
+        assert!((rate - 0.02).abs() < 0.002, "rate {rate}");
+    }
+
+    #[test]
+    fn read_disturb_default_off() {
+        let m = ErrorModel::default();
+        let mut rng = Xoshiro256::seeded(5);
+        assert_eq!(m.corrupt_word_read(0x5555, &mut rng), 0x5555);
+    }
+
+    #[test]
+    fn expected_errors_analytic() {
+        let m = ErrorModel::at_rate(0.015);
+        assert_eq!(m.expected_cell_errors(0x0000), 0.0);
+        assert!((m.expected_cell_errors(0x5555) - 8.0 * 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let m = ErrorModel::at_rate(0.5);
+        let mut a = Xoshiro256::seeded(99);
+        let mut b = Xoshiro256::seeded(99);
+        for h in [0x1234u16, 0x5555, 0xABCD] {
+            assert_eq!(m.corrupt_word_write(h, &mut a), m.corrupt_word_write(h, &mut b));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_invalid_rate() {
+        ErrorModel::new(1.5, 0.0);
+    }
+}

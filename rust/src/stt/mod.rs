@@ -1,0 +1,22 @@
+//! MLC STT-RAM device model.
+//!
+//! Everything the paper assumes about the memory substrate, built from the
+//! sources the paper itself cites:
+//!
+//! * [`cell`] — 2-bit MLC cell states, the two-step (soft/hard) programming
+//!   model, tri-level cells for metadata, SLC mode (paper §2.2, Fig. 2);
+//! * [`energy`] — content-dependent read/write energy + latency, i.e. the
+//!   paper's Table 4 (NVSim-derived per-cell costs);
+//! * [`error`] — the soft-error model of Wen et al. (DAC'14) [12] as used
+//!   in §6: `00`/`11` are stable base states and immune; `01`/`10` flip one
+//!   uniformly-chosen bit with probability 1.5e-2..2e-2.
+
+pub mod cell;
+pub mod endurance;
+pub mod energy;
+pub mod error;
+
+pub use cell::{CellPattern, CellMode, TriLevel};
+pub use endurance::WearTracker;
+pub use energy::{CostModel, Energy, AccessKind};
+pub use error::ErrorModel;

@@ -1,0 +1,266 @@
+//! Declarative command-line parsing for the `mlcstt` binary.
+//!
+//! `clap` is not in the offline vendor set; this covers what the launcher
+//! needs: subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, required flags, typed accessors, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_switch: bool,
+    required: bool,
+}
+
+/// One subcommand: a set of flags with help text.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_switch: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn required_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            is_switch: false,
+            required: true,
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            is_switch: true,
+            required: false,
+        });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("mlcstt {} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let kind = if f.is_switch {
+                String::new()
+            } else if let Some(d) = &f.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        s
+    }
+
+    /// Parse `args` (without the subcommand itself).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut switches: BTreeMap<String, bool> = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            let Some(stripped) = arg.strip_prefix("--") else {
+                return Err(CliError(format!(
+                    "unexpected positional argument {arg:?}\n\n{}",
+                    self.usage()
+                )));
+            };
+            let (name, inline) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = self
+                .spec(name)
+                .ok_or_else(|| CliError(format!("unknown flag --{name}\n\n{}", self.usage())))?;
+            if spec.is_switch {
+                if inline.is_some() {
+                    return Err(CliError(format!("switch --{name} takes no value")));
+                }
+                switches.insert(name.to_string(), true);
+            } else {
+                let v = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                    }
+                };
+                values.insert(name.to_string(), v);
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if f.required && !values.contains_key(f.name) {
+                return Err(CliError(format!(
+                    "missing required flag --{}\n\n{}",
+                    f.name,
+                    self.usage()
+                )));
+            }
+            if let (Some(d), false) = (&f.default, values.contains_key(f.name)) {
+                values.insert(f.name.to_string(), d.clone());
+            }
+        }
+        Ok(Matches { values, switches })
+    }
+}
+
+/// Parsed flag values with typed accessors.
+#[derive(Clone, Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+}
+
+impl Matches {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected an integer, got {:?}", self.str(name))))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected an integer, got {:?}", self.str(name))))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected a number, got {:?}", self.str(name))))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.str(name)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+fn strs(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("demo", "test command")
+            .flag("model", "vggmini", "model name")
+            .flag("rate", "0.015", "fault rate")
+            .required_flag("out", "output path")
+            .switch("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let m = cmd().parse(&strs(&["--out", "x.json"])).unwrap();
+        assert_eq!(m.str("model"), "vggmini");
+        assert_eq!(m.f64("rate").unwrap(), 0.015);
+        assert_eq!(m.str("out"), "x.json");
+        assert!(!m.switch("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_switch() {
+        let m = cmd()
+            .parse(&strs(&["--out=o", "--model=inceptionmini", "--verbose"]))
+            .unwrap();
+        assert_eq!(m.str("model"), "inceptionmini");
+        assert!(m.switch("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(cmd().parse(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert!(cmd().parse(&strs(&["--out", "o", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_fails() {
+        let m = cmd().parse(&strs(&["--out", "o", "--rate", "abc"])).unwrap();
+        assert!(m.f64("rate").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Command::new("x", "y").flag("models", "a,b", "names");
+        let m = c.parse(&[]).unwrap();
+        assert_eq!(m.list("models"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = cmd().parse(&strs(&["--help"])).unwrap_err();
+        assert!(err.0.contains("--model"));
+    }
+}

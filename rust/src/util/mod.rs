@@ -1,0 +1,18 @@
+//! Zero-dependency support utilities.
+//!
+//! The offline vendor registry carries only `xla` + `anyhow`, so everything
+//! a framework normally pulls from crates.io is implemented here:
+//!
+//! * [`rng`] — SplitMix64 seeding + xoshiro256** streams (deterministic,
+//!   splittable; every stochastic component in the crate takes a seed),
+//! * [`json`] — a small, strict JSON parser/serializer (manifests, config),
+//! * [`cli`] — declarative flag parsing for the `mlcstt` binary,
+//! * [`stats`] — streaming summaries used by benches and reports,
+//! * [`prop`] — a miniature property-testing harness (random case
+//!   generation + failure-case shrinking) standing in for `proptest`.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

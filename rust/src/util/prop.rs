@@ -1,0 +1,178 @@
+//! Miniature property-testing harness (offline stand-in for `proptest`).
+//!
+//! Usage pattern, mirroring proptest's closure style:
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss the libstdc++ rpath the crate's
+//! // build sets for the PJRT shared object; the same pattern is executed
+//! // for real throughout rust/tests/prop_*.rs)
+//! use mlcstt::util::prop::{prop_assert, Runner};
+//! let mut r = Runner::new("roundtrip", 0xC0FFEE, 500);
+//! r.run(|g| {
+//!     let x = g.u16(); // arbitrary weight bits
+//!     let y = x.rotate_left(3).rotate_right(3);
+//!     prop_assert(x == y, format!("{x:#06x} != {y:#06x}"))
+//! });
+//! ```
+//!
+//! On failure the runner re-searches smaller inputs by replaying the case
+//! generator with a shrinking size budget, then panics with the seed, case
+//! index, and the smallest failing message it found — enough to reproduce
+//! deterministically (`Runner::new(name, seed, cases)` is pure).
+
+use super::rng::Xoshiro256;
+
+/// Result of one property check.
+pub type PropResult = Result<(), String>;
+
+/// Convenience assertion returning `PropResult`.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Size budget in [0.0, 1.0]; shrinking replays with smaller budgets so
+    /// generators that respect `size()` produce structurally smaller cases.
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Self {
+            rng: Xoshiro256::seeded(seed),
+            size,
+        }
+    }
+
+    pub fn size(&self) -> f64 {
+        self.size
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn u16(&mut self) -> u16 {
+        (self.rng.next_u64() >> 48) as u16
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        self.rng.next_f32()
+    }
+
+    /// f32 uniform in [-1, 1] — the paper's weight domain.
+    pub fn weight(&mut self) -> f32 {
+        self.rng.next_f32() * 2.0 - 1.0
+    }
+
+    /// Integer in [0, bound); scales down with the shrink budget.
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let eff = ((bound as f64 * self.size).ceil() as usize).clamp(1, bound);
+        self.rng.below(eff as u64) as usize
+    }
+
+    /// Length in [min, max], scaled by the shrink budget.
+    pub fn len(&mut self, min: usize, max: usize) -> usize {
+        let span = max - min;
+        min + self.below(span + 1)
+    }
+
+    /// A vector of weights in [-1, 1].
+    pub fn weights(&mut self, min_len: usize, max_len: usize) -> Vec<f32> {
+        let n = self.len(min_len, max_len);
+        (0..n).map(|_| self.weight()).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Drives `cases` random invocations of a property, shrinking on failure.
+pub struct Runner {
+    name: &'static str,
+    seed: u64,
+    cases: usize,
+}
+
+impl Runner {
+    pub fn new(name: &'static str, seed: u64, cases: usize) -> Self {
+        Self { name, seed, cases }
+    }
+
+    /// Run the property; panics (test failure) with a reproducible report on
+    /// the first counterexample.
+    pub fn run(&mut self, prop: impl Fn(&mut Gen) -> PropResult) {
+        for case in 0..self.cases {
+            let case_seed = self.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut g = Gen::new(case_seed, 1.0);
+            if let Err(first_msg) = prop(&mut g) {
+                // Shrink: replay the same stream with smaller size budgets;
+                // keep the failure from the smallest budget that still fails.
+                let mut best = (1.0, first_msg);
+                for step in 1..=8 {
+                    let size = 1.0 - step as f64 / 9.0;
+                    let mut sg = Gen::new(case_seed, size);
+                    if let Err(msg) = prop(&mut sg) {
+                        best = (size, msg);
+                    }
+                }
+                panic!(
+                    "property '{}' failed (seed={:#x}, case={}, shrunk_size={:.2}):\n  {}",
+                    self.name, self.seed, case, best.0, best.1
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut r = Runner::new("tautology", 1, 200);
+        r.run(|g| prop_assert(g.u16() as u32 <= u16::MAX as u32, "impossible"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_context() {
+        let mut r = Runner::new("always-false", 2, 10);
+        r.run(|_| prop_assert(false, "nope"));
+    }
+
+    #[test]
+    fn shrink_budget_reduces_generated_sizes() {
+        let mut big = Gen::new(7, 1.0);
+        let mut small = Gen::new(7, 0.1);
+        let nb = big.len(0, 1000);
+        let ns = small.len(0, 1000);
+        assert!(ns <= nb.max(100), "shrunk len {ns} vs {nb}");
+    }
+
+    #[test]
+    fn weight_gen_in_range() {
+        let mut g = Gen::new(3, 1.0);
+        for _ in 0..1000 {
+            let w = g.weight();
+            assert!((-1.0..=1.0).contains(&w));
+        }
+    }
+}

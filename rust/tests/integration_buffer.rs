@@ -1,0 +1,122 @@
+//! Integration: buffer x encoding x error model — transactional accounting
+//! under realistic workloads.
+
+use mlcstt::buffer::{BufferConfig, MlcBuffer};
+use mlcstt::encoding::{Policy, WeightCodec};
+use mlcstt::stt::{AccessKind, CostModel, ErrorModel};
+use mlcstt::util::rng::Xoshiro256;
+
+fn weights(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|_| ((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
+        .collect()
+}
+
+#[test]
+fn buffer_energy_matches_codec_accounting() {
+    // Fault-free store/load must bill exactly what the codec predicts.
+    let ws = weights(4096, 1);
+    let enc = WeightCodec::hybrid(4).encode(&ws);
+    let cost = CostModel::default();
+    let cfg = BufferConfig::new(enc.len() * 2, 1).with_error_model(ErrorModel::at_rate(0.0));
+    let mut buf = MlcBuffer::new(cfg, 9);
+    let region = buf.store(&enc).unwrap();
+    let expect_w = enc.access_energy(&cost, AccessKind::Write);
+    assert!((buf.stats().write_energy.nanojoules - expect_w.nanojoules).abs() < 1e-6);
+    buf.load(&region).unwrap();
+    let expect_r = enc.access_energy(&cost, AccessKind::Read);
+    assert!((buf.stats().read_energy.nanojoules - expect_r.nanojoules).abs() < 1e-6);
+}
+
+#[test]
+fn full_model_fits_sram_equivalent_buffer() {
+    // An 814k-weight model (vggmini-sized) in fp16 = 1.6 MB; a 512 KB-SRAM-
+    // equivalent MLC buffer (2 MB) must hold it, the SRAM itself must not.
+    let ws = weights(814_122, 2);
+    let enc = WeightCodec::hybrid(4).encode(&ws);
+
+    let mlc = BufferConfig::sram_equivalent(512 * 1024, 16)
+        .with_error_model(ErrorModel::at_rate(0.0));
+    let mut buf = MlcBuffer::new(mlc, 1);
+    buf.store(&enc).expect("must fit the MLC buffer");
+
+    let sram_words = 512 * 1024 / 2;
+    assert!(enc.len() > sram_words, "model should overflow raw SRAM");
+}
+
+#[test]
+fn fault_rate_scales_with_soft_cells_not_words() {
+    // Two same-length streams with very different soft-cell counts must see
+    // proportionally different fault counts.
+    let dense_soft = vec![0x5555u16; 50_000]; // 8 soft cells/word
+    let sparse_soft = vec![0x0001u16; 50_000]; // 1 soft cell/word
+    let mk = |words: Vec<u16>| mlcstt::encoding::Encoded {
+        words,
+        schemes: vec![],
+        granularity: 1,
+        policy: Policy::Unprotected,
+    };
+    let cfg = BufferConfig::new(200_000, 4).with_error_model(ErrorModel::at_rate(0.02));
+    let mut b1 = MlcBuffer::new(cfg.clone(), 5);
+    b1.store(&mk(dense_soft)).unwrap();
+    let f_dense = b1.stats().injected_faults;
+    let mut b2 = MlcBuffer::new(cfg, 5);
+    b2.store(&mk(sparse_soft)).unwrap();
+    let f_sparse = b2.stats().injected_faults;
+    let ratio = f_dense as f64 / f_sparse as f64;
+    // A word with 8 vulnerable cells is ~8x likelier to corrupt (per-cell
+    // independence; words count once even with multiple hits, so allow a
+    // generous band).
+    assert!(ratio > 5.0 && ratio < 9.0, "ratio {ratio}");
+}
+
+#[test]
+fn many_tensors_sequential_layout_and_isolation() {
+    let cfg = BufferConfig::new(1 << 20, 8).with_error_model(ErrorModel::at_rate(0.0));
+    let mut buf = MlcBuffer::new(cfg, 3);
+    let mut regions = Vec::new();
+    let mut encs = Vec::new();
+    for t in 0..20 {
+        let ws = weights(500 + t * 37, 100 + t as u64);
+        let enc = WeightCodec::hybrid(1 + t % 16).encode(&ws);
+        regions.push(buf.store(&enc).unwrap());
+        encs.push(enc);
+    }
+    // Read back in reverse order; every region must decode to its own data.
+    for (region, enc) in regions.iter().zip(&encs).rev() {
+        let back = buf.load(region).unwrap();
+        assert_eq!(back.words, enc.words);
+        assert_eq!(back.decode(), enc.decode());
+    }
+}
+
+#[test]
+fn clear_and_reuse_cycles() {
+    let cfg = BufferConfig::new(10_000, 4).with_error_model(ErrorModel::at_rate(0.0));
+    let mut buf = MlcBuffer::new(cfg, 1);
+    for round in 0..10 {
+        let ws = weights(2000, round);
+        let enc = WeightCodec::hybrid(4).encode(&ws);
+        let r = buf.store(&enc).unwrap();
+        assert_eq!(buf.load(&r).unwrap().decode(), enc.decode());
+        buf.clear();
+    }
+    // Stats survive clears (cumulative across rounds).
+    assert_eq!(buf.stats().writes, 10 * 2000);
+    assert_eq!(buf.stats().reads, 10 * 2000);
+}
+
+#[test]
+fn deterministic_replay_across_buffers() {
+    let ws = weights(30_000, 8);
+    let enc = WeightCodec::new(Policy::Unprotected, 1).encode(&ws);
+    let cfg = BufferConfig::new(60_000, 4).with_error_model(ErrorModel::at_rate(0.02));
+    let run = |seed: u64| {
+        let mut b = MlcBuffer::new(cfg.clone(), seed);
+        let r = b.store(&enc).unwrap();
+        b.load(&r).unwrap().words
+    };
+    assert_eq!(run(42), run(42));
+    assert_ne!(run(42), run(43));
+}

@@ -1,0 +1,183 @@
+//! Integration: the full coordinator — weight store -> engine -> server —
+//! over the real artifacts (skips without them).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mlcstt::coordinator::{InferenceEngine, Server, ServerConfig, StoreConfig, WeightStore};
+use mlcstt::encoding::Policy;
+use mlcstt::runtime::artifacts::{model_available, model_paths, Manifest, TestSet, WeightFile};
+use mlcstt::runtime::Executor;
+use mlcstt::stt::ErrorModel;
+
+fn dir() -> PathBuf {
+    std::env::var("MLCSTT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+macro_rules! require {
+    ($cond:expr, $what:expr) => {
+        if !$cond {
+            eprintln!("SKIP: {} (run `make artifacts`)", $what);
+            return;
+        }
+    };
+}
+
+fn load(model: &str) -> (Manifest, WeightFile, TestSet, PathBuf) {
+    let d = dir();
+    let (hlo, wpath, mpath) = model_paths(&d, model);
+    let manifest = Manifest::read(&mpath).unwrap();
+    let weights = WeightFile::read(&wpath).unwrap();
+    let test = TestSet::read(&d.join("testset.bin")).unwrap();
+    (manifest, weights, test, hlo)
+}
+
+#[test]
+fn lossless_store_preserves_engine_accuracy() {
+    // Fault-free ProtectRotate store must reproduce the fp16-quantized
+    // model exactly, so engine accuracy matches the direct-weights run.
+    require!(model_available(&dir(), "inceptionmini"), "inceptionmini artifacts");
+    let (manifest, weights, test, hlo) = load("inceptionmini");
+
+    let exec = Executor::from_hlo_file(&hlo).unwrap();
+    let engine = InferenceEngine::new(exec, manifest.clone(), &weights.params).unwrap();
+    let (direct, _, n) = engine.accuracy(&test, 128).unwrap();
+    drop(engine);
+
+    let cfg = StoreConfig {
+        policy: Policy::ProtectRotate,
+        granularity: 4,
+        error_model: ErrorModel::at_rate(0.0),
+        ..StoreConfig::default()
+    };
+    let mut store = WeightStore::load(&cfg, &weights).unwrap();
+    let tensors = store.materialize().unwrap();
+    let exec = Executor::from_hlo_file(&hlo).unwrap();
+    let engine = InferenceEngine::new(exec, manifest, &tensors).unwrap();
+    let (through_buffer, _, _) = engine.accuracy(&test, 128).unwrap();
+
+    // fp16 quantization of an fp32-trained model can move a prediction or
+    // two at the margin; allow a 2-image band on 128.
+    assert!(
+        (direct - through_buffer).abs() <= 2.0 / n as f64,
+        "direct {direct} vs buffered {through_buffer}"
+    );
+}
+
+#[test]
+fn faulted_unprotected_store_degrades_accuracy_more_than_hybrid() {
+    require!(model_available(&dir(), "inceptionmini"), "inceptionmini artifacts");
+    let (manifest, weights, test, hlo) = load("inceptionmini");
+    let eval = 128;
+
+    let mut accs = Vec::new();
+    for policy in [Policy::Unprotected, Policy::Hybrid] {
+        let cfg = StoreConfig {
+            policy,
+            granularity: 4,
+            error_model: ErrorModel::at_rate(0.02),
+            seed: 99,
+            ..StoreConfig::default()
+        };
+        let mut store = WeightStore::load(&cfg, &weights).unwrap();
+        let tensors = store.materialize().unwrap();
+        let exec = Executor::from_hlo_file(&hlo).unwrap();
+        let engine = InferenceEngine::new(exec, manifest.clone(), &tensors).unwrap();
+        let (acc, _, _) = engine.accuracy(&test, eval).unwrap();
+        accs.push((policy.label(), acc));
+    }
+    assert!(
+        accs[1].1 >= accs[0].1,
+        "hybrid {:?} should not trail unprotected {:?}",
+        accs[1],
+        accs[0]
+    );
+}
+
+#[test]
+fn server_round_trips_requests_and_reports_metrics() {
+    require!(model_available(&dir(), "inceptionmini"), "inceptionmini artifacts");
+    let (manifest, weights, test, hlo) = load("inceptionmini");
+
+    let cfg = StoreConfig {
+        policy: Policy::Hybrid,
+        granularity: 4,
+        error_model: ErrorModel::at_rate(0.015),
+        ..StoreConfig::default()
+    };
+    let mut store = WeightStore::load(&cfg, &weights).unwrap();
+    let tensors = store.materialize().unwrap();
+
+    let manifest2 = manifest.clone();
+    let server = Server::start(
+        move || {
+            let exec = Executor::from_hlo_file(&hlo)?;
+            InferenceEngine::new(exec, manifest2, &tensors)
+        },
+        ServerConfig {
+            max_wait: Duration::from_millis(5),
+        },
+    )
+    .unwrap();
+
+    let n = 40usize;
+    let mut tickets = Vec::new();
+    for i in 0..n {
+        tickets.push(server.submit(test.image(i % test.n).to_vec()).unwrap());
+    }
+    let mut classes = Vec::new();
+    for t in tickets {
+        let resp = t.wait().unwrap();
+        assert!(resp.class < manifest.num_classes);
+        classes.push(resp.class);
+    }
+    let report = server.shutdown();
+    assert_eq!(report.served, n);
+    assert!(report.batches >= 1);
+    assert!(report.p99_ms >= report.p50_ms);
+    assert!(report.throughput_rps > 0.0);
+    // Predictions must not be a constant (the model actually ran).
+    assert!(classes.iter().any(|&c| c != classes[0]));
+}
+
+#[test]
+fn server_rejects_malformed_images() {
+    require!(model_available(&dir(), "inceptionmini"), "inceptionmini artifacts");
+    let (manifest, weights, _test, hlo) = load("inceptionmini");
+    let cfg = StoreConfig {
+        error_model: ErrorModel::at_rate(0.0),
+        ..StoreConfig::default()
+    };
+    let mut store = WeightStore::load(&cfg, &weights).unwrap();
+    let tensors = store.materialize().unwrap();
+    let manifest2 = manifest.clone();
+    let server = Server::start(
+        move || {
+            let exec = Executor::from_hlo_file(&hlo)?;
+            InferenceEngine::new(exec, manifest2, &tensors)
+        },
+        ServerConfig::default(),
+    )
+    .unwrap();
+    assert!(server.submit(vec![0.0; 7]).is_err());
+    let report = server.shutdown();
+    assert_eq!(report.served, 0);
+}
+
+#[test]
+fn store_rejects_mismatched_manifest_order() {
+    require!(model_available(&dir(), "vggmini"), "vggmini artifacts");
+    let (manifest, mut weights, _test, hlo) = load("vggmini");
+    // Swap two tensors: engine construction must refuse.
+    weights.params.swap(0, 2);
+    let cfg = StoreConfig {
+        error_model: ErrorModel::at_rate(0.0),
+        ..StoreConfig::default()
+    };
+    let mut store = WeightStore::load(&cfg, &weights).unwrap();
+    let tensors = store.materialize().unwrap();
+    let exec = Executor::from_hlo_file(&hlo).unwrap();
+    assert!(InferenceEngine::new(exec, manifest, &tensors).is_err());
+}

@@ -1,0 +1,151 @@
+//! Integration: PJRT runtime against the real AOT artifacts.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a stderr
+//! note) when artifacts are absent so `cargo test` stays green on a fresh
+//! clone.
+
+use std::path::PathBuf;
+
+use mlcstt::runtime::artifacts::{model_available, model_paths, Manifest, TestSet, WeightFile};
+use mlcstt::runtime::executor::{argmax_rows, Executor};
+
+fn dir() -> PathBuf {
+    std::env::var("MLCSTT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+macro_rules! require {
+    ($cond:expr, $what:expr) => {
+        if !$cond {
+            eprintln!("SKIP: {} (run `make artifacts`)", $what);
+            return;
+        }
+    };
+}
+
+#[test]
+fn pallas_matmul_artifact_executes_correctly() {
+    // The standalone Pallas weight-stationary GEMM artifact: fn(x[8,16],
+    // w[16,12]) -> x @ w. Verify numerics against a host matmul.
+    let path = dir().join("matmul_ws.hlo.txt");
+    require!(path.exists(), "matmul_ws.hlo.txt");
+
+    let exec = Executor::from_hlo_file(&path).expect("compile");
+    let x: Vec<f32> = (0..8 * 16).map(|i| (i as f32 * 0.37).sin()).collect();
+    let w: Vec<f32> = (0..16 * 12).map(|i| (i as f32 * 0.11).cos()).collect();
+    let out = exec
+        .execute_f32(&[(&x, &[8, 16][..]), (&w, &[16, 12][..])])
+        .expect("execute");
+    assert_eq!(out.len(), 8 * 12);
+
+    // Host reference.
+    for i in 0..8 {
+        for j in 0..12 {
+            let mut acc = 0f32;
+            for k in 0..16 {
+                acc += x[i * 16 + k] * w[k * 12 + j];
+            }
+            let got = out[i * 12 + j];
+            assert!(
+                (acc - got).abs() < 1e-4,
+                "[{i},{j}]: host {acc} vs pjrt {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn staged_execution_matches_literal_execution() {
+    let path = dir().join("matmul_ws.hlo.txt");
+    require!(path.exists(), "matmul_ws.hlo.txt");
+    let exec = Executor::from_hlo_file(&path).expect("compile");
+    let x: Vec<f32> = (0..8 * 16).map(|i| i as f32 * 0.01).collect();
+    let w: Vec<f32> = (0..16 * 12).map(|i| 1.0 - i as f32 * 0.005).collect();
+
+    let lit = exec
+        .execute_f32(&[(&x, &[8, 16][..]), (&w, &[16, 12][..])])
+        .unwrap();
+
+    let xb = exec.stage_f32(&x, &[8, 16]).unwrap();
+    let wb = exec.stage_f32(&w, &[16, 12]).unwrap();
+    let staged = exec.execute_staged(&[&xb, &wb]).unwrap();
+    let staged: Vec<f32> = staged.to_vec().unwrap();
+    assert_eq!(lit, staged);
+
+    // Staged buffers are reusable across calls.
+    let again: Vec<f32> = exec.execute_staged(&[&xb, &wb]).unwrap().to_vec().unwrap();
+    assert_eq!(lit, again);
+}
+
+#[test]
+fn model_artifacts_are_mutually_consistent() {
+    let d = dir();
+    require!(model_available(&d, "vggmini"), "vggmini artifacts");
+    let (_, wpath, mpath) = model_paths(&d, "vggmini");
+    let manifest = Manifest::read(&mpath).unwrap();
+    let weights = WeightFile::read(&wpath).unwrap();
+    manifest.validate(&weights).unwrap();
+
+    assert_eq!(manifest.input_shape, vec![manifest.batch, 32, 32, 3]);
+    assert_eq!(manifest.num_classes, 10);
+    // The trainer's premise: every weight within [-1, 1].
+    let max = weights
+        .flat()
+        .iter()
+        .fold(0f32, |m, w| m.max(w.abs()));
+    assert!(max <= 1.0 + 1e-6, "weight clip violated: {max}");
+}
+
+#[test]
+fn testset_artifact_well_formed() {
+    let path = dir().join("testset.bin");
+    require!(path.exists(), "testset.bin");
+    let t = TestSet::read(&path).unwrap();
+    assert_eq!((t.h, t.w, t.c), (32, 32, 3));
+    assert!(t.n >= 256);
+    assert_eq!(t.images.len(), t.n * 32 * 32 * 3);
+    assert!(t.labels.iter().all(|&l| (0..10).contains(&l)));
+    // Labels are roughly balanced (10 classes, multinomial).
+    let mut counts = [0usize; 10];
+    for &l in &t.labels {
+        counts[l as usize] += 1;
+    }
+    let min = *counts.iter().min().unwrap();
+    assert!(min > t.n / 30, "class balance {counts:?}");
+}
+
+#[test]
+fn model_inference_beats_chance_end_to_end() {
+    // Full path: HLO compile -> weights as parameters -> classify a batch.
+    let d = dir();
+    require!(model_available(&d, "vggmini"), "vggmini artifacts");
+    let (hlo, wpath, mpath) = model_paths(&d, "vggmini");
+    let manifest = Manifest::read(&mpath).unwrap();
+    require!(manifest.test_acc > 0.5, "vggmini trained to usable accuracy");
+    let weights = WeightFile::read(&wpath).unwrap();
+    let test = TestSet::read(&d.join("testset.bin")).unwrap();
+
+    let exec = Executor::from_hlo_file(&hlo).expect("compile model");
+    let mut inputs: Vec<(&[f32], &[usize])> = weights
+        .params
+        .iter()
+        .map(|p| (p.data.as_slice(), p.shape.as_slice()))
+        .collect();
+    let batch_elems: usize = manifest.input_shape.iter().product();
+    let images = &test.images[..batch_elems];
+    inputs.push((images, manifest.input_shape.as_slice()));
+    let logits = exec.execute_f32(&inputs).expect("execute");
+    let preds = argmax_rows(&logits, manifest.num_classes);
+    let correct = preds
+        .iter()
+        .zip(&test.labels[..manifest.batch])
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    // A trained model must crush the 10% chance floor on its own test data.
+    assert!(
+        correct * 2 > manifest.batch,
+        "only {correct}/{} correct",
+        manifest.batch
+    );
+}

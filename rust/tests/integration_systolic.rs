@@ -1,0 +1,124 @@
+//! Integration: systolic model x real layer tables — the Fig. 9 claims.
+
+use mlcstt::models;
+use mlcstt::systolic::{simulate_network, top_k_by, ArrayConfig};
+
+fn convs(net: &str) -> Vec<models::ConvLayer> {
+    models::by_name(net)
+        .unwrap()
+        .into_iter()
+        .filter(|l| l.h > 1)
+        .collect()
+}
+
+#[test]
+fn vgg16_offchip_bandwidth_drops_with_mlc_buffer() {
+    // The paper's Conv11 story: off-chip demand falls substantially from
+    // the 256 KB SRAM baseline to the same-area 1024 KB MLC buffer.
+    let layers = convs("vgg16");
+    let small = simulate_network(&layers, &ArrayConfig::new(256 * 1024));
+    let large = simulate_network(&layers, &ArrayConfig::new(1024 * 1024));
+    let conv11_s = small.iter().find(|r| r.name == "Conv11").unwrap();
+    let conv11_l = large.iter().find(|r| r.name == "Conv11").unwrap();
+    let drop = 1.0 - conv11_l.offchip_bpc() / conv11_s.offchip_bpc();
+    // Paper: 25.5 -> 17.1 bytes/cycle (-33%). Require a comparable drop.
+    assert!(drop > 0.2, "Conv11 off-chip drop {drop}");
+}
+
+#[test]
+fn inception_keeps_gaining_through_2048kb() {
+    // Paper: "Inception V3 enjoys more from larger MLC STT-RAM buffers" —
+    // in our model the stem/ofmap-bound layers are flat (physically
+    // fetch-once already), but the network-total off-chip traffic keeps
+    // falling all the way to 2048 KB, and the 1024->2048 step still helps
+    // (unlike VGG16, whose interior layers saturate at 1024 KB).
+    let layers = convs("inceptionv3");
+    let total = |kb: usize| -> u64 {
+        simulate_network(&layers, &ArrayConfig::new(kb * 1024))
+            .iter()
+            .map(|r| r.offchip_bytes())
+            .sum()
+    };
+    let t256 = total(256);
+    let t1024 = total(1024);
+    let t2048 = total(2048);
+    assert!(t1024 < t256);
+    assert!(
+        t2048 < t1024,
+        "inception should still gain at 2048 KB: {t1024} -> {t2048}"
+    );
+    // And the headline: >= 10% total reduction SRAM -> largest MLC.
+    assert!((t2048 as f64) < 0.9 * t256 as f64, "{t256} -> {t2048}");
+}
+
+#[test]
+fn deep_vgg_layers_are_weight_bound() {
+    // Conv11-13 (14x14x512): weights dominate off-chip traffic at small
+    // buffers — the precondition for the paper's focus on the weight buffer.
+    let layers = convs("vgg16");
+    let reports = simulate_network(&layers, &ArrayConfig::new(256 * 1024));
+    let conv12 = reports.iter().find(|r| r.name == "Conv12").unwrap();
+    let weight_bytes = (conv12.k * conv12.n * 2) as u64;
+    assert!(weight_bytes * 2 > conv12.offchip_bytes(),
+        "weights {weight_bytes} vs total {}", conv12.offchip_bytes());
+}
+
+#[test]
+fn total_traffic_conservation_sanity() {
+    // Off-chip reads can never be less than the unique bytes of each
+    // operand; on-chip traffic can never be less than off-chip payload.
+    for net in ["vgg16", "inceptionv3", "vggmini", "inceptionmini"] {
+        let layers = convs(net);
+        let reports = simulate_network(&layers, &ArrayConfig::new(2048 * 1024));
+        for (l, r) in layers.iter().zip(&reports) {
+            let unique_in = ((l.h * l.w * l.c + l.weight_elems()) * 2) as u64;
+            assert!(
+                r.offchip_read >= unique_in,
+                "{net}/{}: {} < {unique_in}",
+                l.name,
+                r.offchip_read
+            );
+            assert!(r.onchip_bytes() >= r.offchip_write);
+        }
+    }
+}
+
+#[test]
+fn utilization_bounded_and_plausible() {
+    for net in ["vgg16", "inceptionv3"] {
+        let layers = convs(net);
+        let cfg = ArrayConfig::new(1024 * 1024);
+        for r in simulate_network(&layers, &cfg) {
+            let u = r.utilization(&cfg);
+            assert!(u > 0.0 && u <= 1.0, "{net}/{}: {u}", r.name);
+        }
+        // The big mid-network convs should keep the array mostly busy.
+        let reports = simulate_network(&layers, &cfg);
+        let best = reports
+            .iter()
+            .map(|r| r.utilization(&cfg))
+            .fold(0.0f64, f64::max);
+        assert!(best > 0.5, "{net}: best utilization {best}");
+    }
+}
+
+#[test]
+fn mini_nets_fit_entirely_in_mlc_buffer() {
+    // The artifact models' full weight sets fit the 2048 KB buffer, so
+    // their off-chip weight traffic is fetch-once at every layer.
+    for net in ["vggmini", "inceptionmini"] {
+        let layers = convs(net);
+        let total_weight_bytes: usize = layers.iter().map(|l| l.weight_elems() * 2).sum();
+        assert!(total_weight_bytes < 2048 * 1024, "{net}");
+        let reports = simulate_network(&layers, &ArrayConfig::new(2048 * 1024));
+        for (l, r) in layers.iter().zip(&reports) {
+            let once = (l.weight_elems() + l.h * l.w * l.c) * 2;
+            assert!(
+                (r.offchip_read as usize) <= once + once / 2,
+                "{net}/{}: reads {} vs fetch-once {once}",
+                l.name,
+                r.offchip_read
+            );
+        }
+    }
+}

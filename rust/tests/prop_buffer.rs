@@ -1,0 +1,131 @@
+//! Property tests over the buffer + error model (in-tree prop harness).
+
+use mlcstt::buffer::{BufferConfig, MlcBuffer};
+use mlcstt::encoding::{Policy, WeightCodec};
+use mlcstt::fp;
+use mlcstt::stt::ErrorModel;
+use mlcstt::util::prop::{prop_assert, Runner};
+
+#[test]
+fn prop_fault_free_buffer_is_transparent() {
+    Runner::new("buffer-transparent", 0xB1, 100).run(|g| {
+        let ws = g.weights(1, 300);
+        let granularity = 1 + g.below(16);
+        let enc = WeightCodec::new(Policy::Hybrid, granularity).encode(&ws);
+        let cfg =
+            BufferConfig::new(enc.len() * 2, 1 + g.below(16)).with_error_model(ErrorModel::at_rate(0.0));
+        let mut buf = MlcBuffer::new(cfg, g.u64());
+        let r = buf.store(&enc).map_err(|e| e.to_string())?;
+        let back = buf.load(&r).map_err(|e| e.to_string())?;
+        prop_assert(
+            back.words == enc.words && back.schemes == enc.schemes,
+            "buffer mutated a fault-free stream",
+        )
+    });
+}
+
+#[test]
+fn prop_faults_only_touch_soft_cells() {
+    Runner::new("faults-respect-immunity", 0xB2, 100).run(|g| {
+        let ws = g.weights(1, 300);
+        let enc = WeightCodec::new(Policy::Unprotected, 1).encode(&ws);
+        let cfg = BufferConfig::new(enc.len() * 2, 4)
+            .with_error_model(ErrorModel::at_rate(1.0));
+        let mut buf = MlcBuffer::new(cfg, g.u64());
+        let r = buf.store(&enc).map_err(|e| e.to_string())?;
+        let back = buf.load(&r).map_err(|e| e.to_string())?;
+        for (orig, got) in enc.words.iter().zip(&back.words) {
+            let changed = orig ^ got;
+            // Every changed cell must have been a soft cell in the original.
+            for i in 0..8 {
+                let cell_mask = 0b11 << (2 * i);
+                if changed & cell_mask != 0 {
+                    let cell = (orig >> (2 * i)) & 0b11;
+                    if cell == 0b00 || cell == 0b11 {
+                        return Err(format!(
+                            "immune cell changed: {orig:#06x} -> {got:#06x}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_soft_cells() {
+    Runner::new("energy-monotone", 0xB3, 200).run(|g| {
+        use mlcstt::stt::{AccessKind, CostModel};
+        let cost = CostModel::default();
+        let a = g.u16();
+        let b = g.u16();
+        let (lo, hi) = if fp::soft_cells(a) <= fp::soft_cells(b) {
+            (a, b)
+        } else {
+            (b, a)
+        };
+        let ok = cost.word(lo, AccessKind::Write).nanojoules
+            <= cost.word(hi, AccessKind::Write).nanojoules
+            && cost.word(lo, AccessKind::Read).nanojoules
+                <= cost.word(hi, AccessKind::Read).nanojoules;
+        prop_assert(ok, format!("lo={lo:#06x} hi={hi:#06x}"))
+    });
+}
+
+#[test]
+fn prop_capacity_accounting_exact() {
+    Runner::new("capacity-exact", 0xB4, 100).run(|g| {
+        let cap_words = 64 + g.below(2000);
+        let cfg = BufferConfig::new(cap_words * 2, 4).with_error_model(ErrorModel::at_rate(0.0));
+        let mut buf = MlcBuffer::new(cfg, 1);
+        let mut stored = 0usize;
+        loop {
+            let n = 1 + g.below(256);
+            let ws = g.weights(n.max(1), n.max(1));
+            let enc = WeightCodec::hybrid(4).encode(&ws);
+            match buf.store(&enc) {
+                Ok(_) => {
+                    stored += enc.len();
+                    if stored == cap_words {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    // Rejection must be exactly because it would overflow.
+                    if stored + enc.len() <= cap_words {
+                        return Err(format!(
+                            "spurious rejection: {stored}+{} <= {cap_words}",
+                            enc.len()
+                        ));
+                    }
+                    break;
+                }
+            }
+            if stored > cap_words {
+                return Err(format!("overfilled: {stored} > {cap_words}"));
+            }
+        }
+        prop_assert(
+            buf.free_words() == cap_words - stored,
+            format!("free {} vs {}", buf.free_words(), cap_words - stored),
+        )
+    });
+}
+
+#[test]
+fn prop_seeded_injection_reproducible() {
+    Runner::new("injection-reproducible", 0xB5, 60).run(|g| {
+        let ws = g.weights(8, 500);
+        let enc = WeightCodec::new(Policy::Unprotected, 1).encode(&ws);
+        let seed = g.u64();
+        let run = |s: u64| {
+            let cfg = BufferConfig::new(enc.len() * 2, 4)
+                .with_error_model(ErrorModel::at_rate(0.02));
+            let mut buf = MlcBuffer::new(cfg, s);
+            let r = buf.store(&enc).unwrap();
+            buf.load(&r).unwrap().words
+        };
+        prop_assert(run(seed) == run(seed), "same seed diverged")
+    });
+}

@@ -1,0 +1,152 @@
+//! Property tests over the encoding stack (in-tree `util::prop` harness —
+//! proptest is not in the offline vendor set).
+
+use mlcstt::encoding::scheme::{
+    self, protect_sign, rotate_field_left, rotate_field_right, round_low_nibble, unprotect_sign,
+};
+use mlcstt::encoding::{select_scheme, Policy, Scheme, WeightCodec};
+use mlcstt::fp;
+use mlcstt::util::prop::{prop_assert, Runner};
+
+const CASES: usize = 400;
+
+#[test]
+fn prop_protect_unprotect_roundtrip() {
+    Runner::new("protect-roundtrip", 0xA1, CASES).run(|g| {
+        // Any word with a clear backup bit (the |w|<2 domain).
+        let h = g.u16() & !fp::BACKUP_MASK;
+        prop_assert(
+            unprotect_sign(protect_sign(h)) == h,
+            format!("h={h:#06x}"),
+        )
+    });
+}
+
+#[test]
+fn prop_protected_sign_cell_is_base() {
+    Runner::new("protected-cell0-base", 0xA2, CASES).run(|g| {
+        let h = g.u16() & !fp::BACKUP_MASK;
+        let cell0 = (protect_sign(h) >> 14) & 0b11;
+        prop_assert(
+            cell0 == 0b00 || cell0 == 0b11,
+            format!("h={h:#06x} cell0={cell0:02b}"),
+        )
+    });
+}
+
+#[test]
+fn prop_rotation_involution_on_any_word() {
+    Runner::new("rotate-involution", 0xA3, CASES).run(|g| {
+        let h = g.u16();
+        let ok = rotate_field_left(rotate_field_right(h)) == h
+            && rotate_field_right(rotate_field_left(h)) == h;
+        prop_assert(ok, format!("h={h:#06x}"))
+    });
+}
+
+#[test]
+fn prop_rotation_preserves_popcount_and_sign_pair() {
+    Runner::new("rotate-conserves", 0xA4, CASES).run(|g| {
+        let h = g.u16();
+        let r = rotate_field_right(h);
+        prop_assert(
+            r.count_ones() == h.count_ones() && (r & 0xC000) == (h & 0xC000),
+            format!("h={h:#06x} r={r:#06x}"),
+        )
+    });
+}
+
+#[test]
+fn prop_round_output_nibble_is_mlc_friendly() {
+    Runner::new("round-friendly", 0xA5, CASES).run(|g| {
+        let h = g.u16();
+        let nib = round_low_nibble(h) & 0xF;
+        prop_assert(
+            matches!(nib, 0b0000 | 0b0011 | 0b1100 | 0b1111),
+            format!("h={h:#06x} nib={nib:04b}"),
+        )
+    });
+}
+
+#[test]
+fn prop_round_moves_value_at_most_8_ulps() {
+    Runner::new("round-bounded", 0xA6, CASES).run(|g| {
+        let h = g.u16();
+        let delta = (round_low_nibble(h) & 0xF) as i32 - (h & 0xF) as i32;
+        prop_assert(delta.abs() <= 8, format!("h={h:#06x} delta={delta}"))
+    });
+}
+
+#[test]
+fn prop_selection_minimizes_over_candidates() {
+    Runner::new("selection-minimal", 0xA7, 200).run(|g| {
+        let ws = g.weights(1, 64);
+        let protected: Vec<u16> = ws
+            .iter()
+            .map(|&w| protect_sign(fp::f32_to_f16_bits(w)))
+            .collect();
+        let (best, cost) = select_scheme(Policy::Hybrid, &protected);
+        for s in Scheme::ALL {
+            let c: u32 = protected
+                .iter()
+                .map(|&p| fp::soft_cells(scheme::apply(s, p)))
+                .sum();
+            if c < cost {
+                return Err(format!("{s:?} has {c} < chosen {best:?} {cost}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lossless_policies_roundtrip_any_weights() {
+    Runner::new("codec-roundtrip", 0xA8, 150).run(|g| {
+        let ws: Vec<f32> = g.weights(1, 200).iter().map(|&w| fp::quantize_f16(w)).collect();
+        let granularity = 1 + g.below(16);
+        let codec = WeightCodec::new(Policy::ProtectRotate, granularity);
+        let back = codec.encode(&ws).decode();
+        prop_assert(back == ws, format!("g={granularity} n={}", ws.len()))
+    });
+}
+
+#[test]
+fn prop_hybrid_never_more_soft_cells_than_restricted_policies() {
+    Runner::new("hybrid-dominates", 0xA9, 150).run(|g| {
+        let ws = g.weights(1, 128);
+        let granularity = 1 + g.below(8);
+        let soft = |p: Policy| WeightCodec::new(p, granularity).encode(&ws).soft_cells();
+        let h = soft(Policy::Hybrid);
+        prop_assert(
+            h <= soft(Policy::ProtectRound) && h <= soft(Policy::ProtectRotate),
+            format!("g={granularity}"),
+        )
+    });
+}
+
+#[test]
+fn prop_decode_sign_always_matches_original() {
+    Runner::new("sign-preserved", 0xAA, 200).run(|g| {
+        let ws: Vec<f32> = g.weights(1, 100);
+        let codec = WeightCodec::hybrid(1 + g.below(4));
+        let dec = codec.encode(&ws).decode();
+        for (a, b) in ws.iter().zip(&dec) {
+            if *a != 0.0 && a.is_sign_negative() != b.is_sign_negative() {
+                return Err(format!("sign changed: {a} -> {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pattern_counts_invariants() {
+    Runner::new("pattern-census", 0xAB, 200).run(|g| {
+        let ws = g.weights(1, 100);
+        let enc = WeightCodec::hybrid(4).encode(&ws);
+        let pc = enc.pattern_counts();
+        let ok = pc.iter().sum::<u64>() == 8 * ws.len() as u64
+            && pc[1] + pc[2] == enc.soft_cells();
+        prop_assert(ok, format!("{pc:?}"))
+    });
+}
