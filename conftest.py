@@ -1,6 +1,44 @@
 # Makes `pytest python/tests/ -q` work from the repository root:
 # the test modules import the build-time `compile` package from python/.
+#
+# Also the suite's skip guard: the heavy L1 test modules need jax and
+# hypothesis, which CI (and the offline Rust-focused container) may not
+# carry. Modules whose dependencies are missing are excluded at collection
+# time so `pytest python/tests -q` passes everywhere; the numpy-only
+# interchange-format tests always run.
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))
+
+
+def _missing(*modules):
+    return [m for m in modules if importlib.util.find_spec(m) is None]
+
+
+# test module -> the optional dependencies it imports at module scope.
+# test_io_smoke.py is deliberately absent: it importorskips numpy itself,
+# so at least one module is always *collected* and pytest exits 0 (an
+# all-ignored run would exit 5, "no tests collected").
+_REQUIREMENTS = {
+    "test_io.py": ("numpy", "hypothesis"),
+    "test_kernels.py": ("numpy", "hypothesis", "jax"),
+    "test_model.py": ("numpy", "jax"),
+}
+
+collect_ignore = []
+_skip_notes = []
+for _name, _deps in _REQUIREMENTS.items():
+    _gone = _missing(*_deps)
+    if _gone:
+        collect_ignore.append(os.path.join("python", "tests", _name))
+        _skip_notes.append(
+            f"python/tests/{_name} not collected (missing: {', '.join(_gone)})"
+        )
+
+
+def pytest_report_header(config):
+    # stderr writes at conftest import time are swallowed by pytest's
+    # capture; the report header is the supported way to surface this.
+    return _skip_notes

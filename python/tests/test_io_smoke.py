@@ -1,0 +1,76 @@
+"""Always-runnable interchange-format tests (numpy + stdlib only).
+
+The hypothesis-driven sweep lives in test_io.py; this module pins fixed
+vectors so the binary formats stay covered — and the suite stays non-empty
+— on hosts without jax/hypothesis (see conftest.py).
+"""
+
+import struct
+
+import pytest
+
+# importorskip (not a conftest collect_ignore) so this module is always
+# *collected*: a host with no numpy then reports "skipped" and exits 0
+# instead of "no tests collected" / exit 5.
+np = pytest.importorskip("numpy")
+
+from compile import io as io_mod  # noqa: E402  (needs numpy present)
+
+
+def test_weights_header_layout(tmp_path):
+    path = str(tmp_path / "w.bin")
+    w = np.arange(6, dtype=np.float32).reshape(2, 3)
+    io_mod.write_weights(path, [("layer0.w", w)])
+    blob = open(path, "rb").read()
+    assert blob[:4] == b"MLCW"
+    version, count = struct.unpack_from("<II", blob, 4)
+    assert (version, count) == (1, 1)
+    name_len = struct.unpack_from("<H", blob, 12)[0]
+    assert blob[14 : 14 + name_len] == b"layer0.w"
+
+
+def test_weights_fixed_roundtrip(tmp_path):
+    path = str(tmp_path / "w.bin")
+    params = [
+        ("conv.w", np.linspace(-1, 1, 24, dtype=np.float32).reshape(2, 3, 4)),
+        ("conv.b", np.zeros(4, dtype=np.float32)),
+    ]
+    io_mod.write_weights(path, params)
+    back = io_mod.read_weights(path)
+    assert [n for n, _ in back] == [n for n, _ in params]
+    for (_, a), (_, b) in zip(params, back):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+
+def test_weights_scalar_stored_as_rank1(tmp_path):
+    # np.ascontiguousarray promotes 0-d arrays to shape (1,), so the format
+    # never carries rank 0 from the writer; pin that so a future "fix" on
+    # either side is a conscious format change (the Rust reader accepts
+    # ndim == 0 defensively).
+    path = str(tmp_path / "w.bin")
+    io_mod.write_weights(path, [("scalar", np.float32(0.5).reshape(()))])
+    [(name, back)] = io_mod.read_weights(path)
+    assert name == "scalar"
+    assert back.shape == (1,)
+    assert back[0] == np.float32(0.5)
+
+
+def test_testset_fixed_roundtrip(tmp_path):
+    path = str(tmp_path / "t.bin")
+    images = np.arange(2 * 2 * 2 * 1, dtype=np.float32).reshape(2, 2, 2, 1)
+    labels = np.array([3, 7], dtype=np.int32)
+    io_mod.write_testset(path, images, labels)
+    bi, bl = io_mod.read_testset(path)
+    np.testing.assert_array_equal(bi, images)
+    np.testing.assert_array_equal(bl, labels)
+
+
+def test_corrupt_magic_rejected(tmp_path):
+    path = str(tmp_path / "w.bin")
+    io_mod.write_weights(path, [("a", np.ones(3, dtype=np.float32))])
+    blob = bytearray(open(path, "rb").read())
+    blob[0] = ord("X")
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(Exception):
+        io_mod.read_weights(path)

@@ -3,8 +3,9 @@
 //! Consumes the python-side manifests (`artifacts/*.manifest.json`) and the
 //! crate's own config files; no `serde` in the offline vendor set. Supports
 //! the full JSON grammar (RFC 8259): objects, arrays, strings with escapes
-//! (incl. `\uXXXX` and surrogate pairs), numbers, booleans, null. Object key
-//! order is preserved (insertion order) so round-trips are stable.
+//! (incl. `\uXXXX` and surrogate pairs), numbers, booleans, null. Objects
+//! store keys in a `BTreeMap`, so serialization order is deterministic
+//! (sorted by key) and round-trips are stable.
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -1,13 +1,21 @@
 //! Streaming statistics used by benches and experiment reports.
 
 /// Online mean/variance/min/max (Welford).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Summary {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+impl Default for Summary {
+    // Not derived: the empty summary needs min/max at the identity
+    // elements (±infinity), not 0.0.
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Summary {

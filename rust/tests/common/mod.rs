@@ -1,0 +1,206 @@
+//! Shared fixture layer for the integration/e2e suite (registered targets
+//! include this via `mod common;` — with `autotests = false` in Cargo.toml
+//! the directory itself never becomes a test binary).
+//!
+//! Provides the three fixtures ISSUE 1 calls for:
+//!
+//! * seeded RNG streams derived from a human-readable tag, so every test's
+//!   randomness is independent yet reproducible;
+//! * canned VGG16 / Inception-V3 / Mini-net layer slices from
+//!   [`mlcstt::models`], paired with trained-shaped synthetic weights, so
+//!   weight-path tests exercise real layer geometries without artifacts;
+//! * unique temp artifact directories that clean up on drop.
+//!
+//! Plus the pure-Rust synthetic classification task the e2e pipeline uses
+//! to measure *model accuracy* end to end when no PJRT backend is linked:
+//! a linear (nearest-centroid-style) classifier over Gaussian class blobs
+//! whose weight matrix lives in the simulated MLC buffer.
+
+#![allow(dead_code)] // each test binary uses the subset it needs
+
+use std::path::PathBuf;
+
+use mlcstt::models::{self, ConvLayer};
+use mlcstt::runtime::artifacts::{ParamSpec, WeightFile};
+use mlcstt::util::rng::Xoshiro256;
+
+// ---------------------------------------------------------------- rng
+
+/// Stable 64-bit hash of a tag (FNV-1a) — lets each test derive an
+/// independent, documented seed from a string instead of a magic number.
+pub fn seed_of(tag: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in tag.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Seeded generator for a named fixture stream.
+pub fn rng(tag: &str) -> Xoshiro256 {
+    Xoshiro256::seeded(seed_of(tag))
+}
+
+/// Clipped-Gaussian weights — the shape of trained conv-net weights, and
+/// within the paper's |w| <= 1 premise.
+pub fn trained_like_weights(n: usize, tag: &str) -> Vec<f32> {
+    let mut r = rng(tag);
+    (0..n)
+        .map(|_| ((r.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
+        .collect()
+}
+
+// ---------------------------------------------------------------- models
+
+/// A canned slice of a real network's layer table: `(network, layers)`.
+/// The e2e tests size their tensors after these geometries so buffer
+/// layout/granularity interactions happen at realistic shapes.
+pub fn layer_slice(net: &str, take: usize) -> Vec<ConvLayer> {
+    let layers = models::by_name(net).expect("known model table");
+    layers.into_iter().take(take).collect()
+}
+
+/// A `WeightFile` with one synthetic trained-shaped tensor per layer of a
+/// canned model slice (weight counts capped per layer to keep tests fast).
+pub fn weight_file_for(net: &str, take: usize, cap_per_layer: usize, tag: &str) -> WeightFile {
+    let params = layer_slice(net, take)
+        .iter()
+        .map(|l| {
+            let n = l.weight_elems().min(cap_per_layer).max(1);
+            ParamSpec {
+                name: l.name.clone(),
+                shape: vec![n],
+                data: trained_like_weights(n, &format!("{tag}/{}", l.name)),
+            }
+        })
+        .collect();
+    WeightFile { params }
+}
+
+// ---------------------------------------------------------------- tmp dirs
+
+/// A unique temp directory that is removed when dropped.
+pub struct TmpDir {
+    path: PathBuf,
+}
+
+impl TmpDir {
+    /// Unique per (test-tag, process): no `Date.now`-style entropy needed.
+    pub fn new(tag: &str) -> TmpDir {
+        let path = std::env::temp_dir().join(format!(
+            "mlcstt-test-{}-{:016x}",
+            std::process::id(),
+            seed_of(tag)
+        ));
+        // A stale dir from a crashed run is fine to reuse after cleaning.
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).expect("create tmp artifact dir");
+        TmpDir { path }
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TmpDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+// ---------------------------------------------------------------- task
+
+/// A synthetic linear classification task with a known-good weight matrix.
+///
+/// `classes` unit-scale centroid rows form the weight matrix `w[c][d]`
+/// (every entry in [-1, 1], satisfying the trainer's clip premise); samples
+/// are `centroid + noise`, classified by `argmax_c x · w_c`. Clean accuracy
+/// is ~100% by construction, with margins wide enough that the bounded
+/// (|Δw| < 2) perturbations a *sign-protected* fault campaign can produce
+/// leave predictions intact, while the unbounded (±65504-scale) outliers
+/// unprotected faults produce scramble them — the paper's Fig. 8 mechanism
+/// in miniature.
+pub struct SyntheticTask {
+    pub classes: usize,
+    pub dim: usize,
+    /// Flattened class-major weight matrix, the tensor under test.
+    pub weights: Vec<f32>,
+    /// Evaluation set: flattened samples + labels.
+    pub samples: Vec<f32>,
+    pub labels: Vec<usize>,
+}
+
+impl SyntheticTask {
+    pub fn new(classes: usize, dim: usize, eval_n: usize, tag: &str) -> SyntheticTask {
+        let mut r = rng(&format!("task/{tag}"));
+        // Random ±0.5 centroid rows: far apart w.h.p. in high dimension.
+        let weights: Vec<f32> = (0..classes * dim)
+            .map(|_| if r.chance(0.5) { 0.5 } else { -0.5 })
+            .collect();
+        let mut samples = Vec::with_capacity(eval_n * dim);
+        let mut labels = Vec::with_capacity(eval_n);
+        for i in 0..eval_n {
+            let c = i % classes;
+            labels.push(c);
+            for d in 0..dim {
+                let noise = (r.next_gaussian() * 0.1) as f32;
+                samples.push(weights[c * dim + d] + noise);
+            }
+        }
+        SyntheticTask {
+            classes,
+            dim,
+            weights,
+            samples,
+            labels,
+        }
+    }
+
+    /// The weight matrix as a one-tensor `WeightFile` (the coordinator's
+    /// input format).
+    pub fn weight_file(&self) -> WeightFile {
+        WeightFile {
+            params: vec![ParamSpec {
+                name: "classifier.w".into(),
+                shape: vec![self.classes, self.dim],
+                data: self.weights.clone(),
+            }],
+        }
+    }
+
+    /// Accuracy of the classifier under a (possibly corrupted) weight
+    /// matrix. NaN scores (decodable from unprotected fault patterns) rank
+    /// below every real score.
+    pub fn accuracy(&self, weights: &[f32]) -> f64 {
+        assert_eq!(weights.len(), self.classes * self.dim);
+        let n = self.labels.len();
+        let mut correct = 0usize;
+        for (i, &label) in self.labels.iter().enumerate() {
+            let x = &self.samples[i * self.dim..(i + 1) * self.dim];
+            let mut best = 0usize;
+            let mut best_score = f64::NEG_INFINITY;
+            for c in 0..self.classes {
+                let w = &weights[c * self.dim..(c + 1) * self.dim];
+                let score: f64 = x
+                    .iter()
+                    .zip(w)
+                    .map(|(a, b)| (*a as f64) * (*b as f64))
+                    .sum();
+                if score.is_finite() && score > best_score {
+                    best_score = score;
+                    best = c;
+                }
+            }
+            if best == label {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+}

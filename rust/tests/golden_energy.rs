@@ -1,0 +1,127 @@
+//! Golden-vector pinning of the `stt::energy` cost model (ISSUE 1
+//! satellite): the per-cell read/write costs are the paper's Table 4
+//! constants, verbatim. A refactor that drifts any of them — or the
+//! pattern→cost billing convention built on them — fails here with the
+//! exact divergent number, not somewhere downstream in an aggregate.
+
+use mlcstt::stt::cell::CellPattern;
+use mlcstt::stt::{AccessKind, CostModel, Energy};
+
+/// Paper Table 4, row-major: (label, read (nJ, cyc), write (nJ, cyc)).
+const TABLE4: [(&str, (f64, u64), (f64, u64)); 4] = [
+    ("SLC", (0.415, 13), (0.876, 49)),
+    ("MLC uniform", (0.424, 19), (1.859, 90)),
+    ("Hybrid soft", (0.427, 14), (1.084, 50)),
+    ("Hybrid hard", (0.579, 20), (2.653, 95)),
+];
+
+fn e(nj: f64, cyc: u64) -> Energy {
+    Energy {
+        nanojoules: nj,
+        cycles: cyc,
+    }
+}
+
+#[test]
+fn table4_constants_pinned_verbatim() {
+    let m = CostModel::default();
+    let got = [
+        ("SLC", m.slc_read, m.slc_write),
+        ("MLC uniform", m.mlc_read, m.mlc_write),
+        ("Hybrid soft", m.soft_read, m.soft_write),
+        ("Hybrid hard", m.hard_read, m.hard_write),
+    ];
+    for ((label, read, write), (glabel, gread, gwrite)) in TABLE4.iter().zip(got) {
+        assert_eq!(*label, glabel);
+        assert_eq!(e(read.0, read.1), gread, "{label} read drifted");
+        assert_eq!(e(write.0, write.1), gwrite, "{label} write drifted");
+    }
+}
+
+#[test]
+fn per_pattern_billing_convention_pinned() {
+    // The content-aware convention (DESIGN.md §5): base states (00/11,
+    // one programming pulse) bill the hybrid-soft column, intermediate
+    // states (01/10, two pulses) bill hybrid-hard.
+    let m = CostModel::default();
+    let cases = [
+        (CellPattern::P00, 0.427, 1.084),
+        (CellPattern::P01, 0.579, 2.653),
+        (CellPattern::P10, 0.579, 2.653),
+        (CellPattern::P11, 0.427, 1.084),
+    ];
+    for (p, read_nj, write_nj) in cases {
+        assert_eq!(m.cell(p, AccessKind::Read).nanojoules, read_nj, "{p:?} read");
+        assert_eq!(m.cell(p, AccessKind::Write).nanojoules, write_nj, "{p:?} write");
+    }
+    // Tri-level metadata cells bill the SLC column.
+    assert_eq!(m.trilevel_cell(AccessKind::Read), e(0.415, 13));
+    assert_eq!(m.trilevel_cell(AccessKind::Write), e(0.876, 49));
+}
+
+#[test]
+fn word_level_golden_vectors() {
+    // Hand-computed word costs for pinned 16-bit images. Energy sums the 8
+    // cells; latency is the max over cells (parallel row access).
+    let m = CostModel::default();
+    let golden: [(u16, u32 /* soft cells */); 6] = [
+        (0x0000, 0), // all 00
+        (0xFFFF, 0), // all 11
+        (0x5555, 8), // all 01
+        (0xAAAA, 8), // all 10
+        (0x0001, 1), // one 01, seven 00
+        (0x1C53, 3), // paper Table 2 row 1 image (soft = 3)
+    ];
+    for (h, soft) in golden {
+        let base = 8 - soft;
+        let w = m.word(h, AccessKind::Write);
+        let r = m.word(h, AccessKind::Read);
+        let expect_w = soft as f64 * 2.653 + base as f64 * 1.084;
+        let expect_r = soft as f64 * 0.579 + base as f64 * 0.427;
+        assert!(
+            (w.nanojoules - expect_w).abs() < 1e-12,
+            "{h:#06x} write {} != {expect_w}",
+            w.nanojoules
+        );
+        assert!(
+            (r.nanojoules - expect_r).abs() < 1e-12,
+            "{h:#06x} read {} != {expect_r}",
+            r.nanojoules
+        );
+        assert_eq!(w.cycles, if soft > 0 { 95 } else { 50 }, "{h:#06x} write cycles");
+        assert_eq!(r.cycles, if soft > 0 { 20 } else { 14 }, "{h:#06x} read cycles");
+    }
+    // Content-blind uniform MLC billing.
+    let u = m.word_uniform(AccessKind::Write);
+    assert!((u.nanojoules - 8.0 * 1.859).abs() < 1e-12);
+    assert_eq!(u.cycles, 90);
+    let ur = m.word_uniform(AccessKind::Read);
+    assert!((ur.nanojoules - 8.0 * 0.424).abs() < 1e-12);
+    assert_eq!(ur.cycles, 19);
+}
+
+#[test]
+fn stream_level_golden_total() {
+    // A fixed 4-word stream with 0+8+1+3 = 12 soft and 20 base cells:
+    // total write energy is pinned to one closed-form number, so *any*
+    // accounting change (per-cell costs, summing, metadata) shows up as a
+    // single-number diff.
+    use mlcstt::encoding::{Encoded, Policy};
+    let enc = Encoded {
+        words: vec![0x0000, 0x5555, 0x0001, 0x1C53],
+        schemes: vec![],
+        granularity: 1,
+        policy: Policy::Unprotected,
+    };
+    let m = CostModel::default();
+    let w = enc.access_energy(&m, AccessKind::Write);
+    let expect = 12.0 * 2.653 + 20.0 * 1.084;
+    assert!(
+        (w.nanojoules - expect).abs() < 1e-12,
+        "stream write {} != {expect}",
+        w.nanojoules
+    );
+    let r = enc.access_energy(&m, AccessKind::Read);
+    let expect_r = 12.0 * 0.579 + 20.0 * 0.427;
+    assert!((r.nanojoules - expect_r).abs() < 1e-12);
+}

@@ -1,0 +1,107 @@
+//! Property tests for the binary16 codec and the sign-backup premise
+//! (ISSUE 1 satellite): fp16 round-trips bit-exactly, and for every
+//! |w| <= 1 the designated exponent MSB (bit 14) is free — which is what
+//! makes sign-backup encode/decode lossless.
+
+mod common;
+
+use mlcstt::encoding::scheme::{protect_sign, unprotect_sign};
+use mlcstt::fp;
+use mlcstt::util::prop::{prop_assert, Runner};
+
+const CASES: usize = 500;
+
+#[test]
+fn prop_f16_bits_roundtrip_exactly_through_f32() {
+    // Any non-NaN bit pattern survives f16 -> f32 -> f16 unchanged
+    // (f32 strictly contains f16; NaNs only need to stay NaNs).
+    Runner::new("f16-bit-roundtrip", common::seed_of("prop_fp/roundtrip"), CASES).run(|g| {
+        let h = g.u16();
+        let exp = (h >> 10) & 0x1F;
+        let man = h & 0x3FF;
+        if exp == 0x1F && man != 0 {
+            return prop_assert(
+                fp::f16_bits_to_f32(h).is_nan(),
+                format!("NaN pattern {h:#06x} decoded non-NaN"),
+            );
+        }
+        let back = fp::f32_to_f16_bits(fp::f16_bits_to_f32(h));
+        prop_assert(back == h, format!("{h:#06x} -> {back:#06x}"))
+    });
+}
+
+#[test]
+fn prop_quantize_is_idempotent() {
+    // Quantization is a projection: applying it twice changes nothing.
+    Runner::new("quantize-idempotent", common::seed_of("prop_fp/idem"), CASES).run(|g| {
+        let w = g.weight();
+        let q = fp::quantize_f16(w);
+        prop_assert(
+            fp::quantize_f16(q).to_bits() == q.to_bits(),
+            format!("w={w} q={q}"),
+        )
+    });
+}
+
+#[test]
+fn prop_backup_bit_free_for_all_unit_weights() {
+    // The paper's §4.1 premise, over the actual trainer domain |w| <= 1:
+    // the encoded exponent MSB is always zero, so bit 14 is free to host
+    // the sign backup.
+    Runner::new("backup-free", common::seed_of("prop_fp/free"), CASES).run(|g| {
+        let w = g.weight(); // uniform in [-1, 1]
+        let h = fp::f32_to_f16_bits(w);
+        prop_assert(
+            fp::backup_bit_free(h),
+            format!("w={w} encodes {h:#06x} with bit 14 set"),
+        )
+    });
+}
+
+#[test]
+fn prop_sign_backup_encode_decode_lossless() {
+    // protect -> unprotect is the identity on every |w| <= 1 weight, and
+    // the protected image differs from the original only in bit 14.
+    Runner::new("sign-backup-lossless", common::seed_of("prop_fp/lossless"), CASES).run(|g| {
+        let w = fp::quantize_f16(g.weight());
+        let h = fp::f32_to_f16_bits(w);
+        let p = protect_sign(h);
+        if unprotect_sign(p) != h {
+            return Err(format!("{h:#06x}: protect/unprotect not lossless"));
+        }
+        if p & !fp::BACKUP_MASK != h & !fp::BACKUP_MASK {
+            return Err(format!("{h:#06x}: protection touched bits besides 14"));
+        }
+        // The backup equals the sign, making cell 0 a base state.
+        let backup = (p >> 14) & 1;
+        let sign = (p >> 15) & 1;
+        prop_assert(backup == sign, format!("{h:#06x}: backup {backup} != sign {sign}"))
+    });
+}
+
+#[test]
+fn prop_cells_from_cells_inverse() {
+    Runner::new("cells-inverse", common::seed_of("prop_fp/cells"), CASES).run(|g| {
+        let h = g.u16();
+        let cs = fp::cells(h);
+        let ok = fp::from_cells(&cs) == h
+            && fp::pattern_counts(h).iter().sum::<u32>() == fp::CELLS_PER_WORD as u32
+            && fp::soft_cells(h) == fp::pattern_counts(h)[1] + fp::pattern_counts(h)[2];
+        prop_assert(ok, format!("h={h:#06x}"))
+    });
+}
+
+/// Exhaustive companion (fast: 64k decode/encode pairs): the |w| < 2
+/// boundary of the premise, bit-for-bit — every finite f16 below 2.0 has
+/// bit 14 clear; every one at or above 2.0 (or non-finite) has it set.
+#[test]
+fn exhaustive_premise_boundary() {
+    for h in 0..=u16::MAX {
+        let v = fp::f16_bits_to_f32(h);
+        if v.is_finite() && v.abs() < 2.0 {
+            assert!(fp::backup_bit_free(h), "h={h:#06x} v={v}");
+        } else {
+            assert!(!fp::backup_bit_free(h), "h={h:#06x} v={v}");
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The workspace builds with `--offline` and no registry access, so this
+//! vendored crate implements the (small) subset of anyhow's API the code
+//! base uses, with the same semantics:
+//!
+//! * [`Error`] — an opaque, context-carrying error value (`Send + Sync`,
+//!   deliberately **not** `std::error::Error`, exactly like the real crate,
+//!   so the blanket `From<E: std::error::Error>` impl can exist);
+//! * [`Result<T>`] — `Result<T, Error>` alias with a default type param;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both `Result`
+//!   and `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the three macros.
+//!
+//! `Display` prints the outermost message; the alternate form (`{:#}`)
+//! prints the whole cause chain separated by `": "`, matching the upstream
+//! behaviour the binary relies on for `error: {e:#}` output.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result<T>`: the ubiquitous fallible-return alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: an outermost message plus the chain of causes
+/// (most-recent context first).
+pub struct Error {
+    /// `chain[0]` is the outermost message; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Construct from a concrete error value, preserving its own source
+    /// chain as context entries.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        let mut chain = vec![error.to_string()];
+        let mut src = error.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            writeln!(f, "\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                writeln!(f, "    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion that makes `?` work on any std error. Mirrors the
+// real crate: possible only because `Error` itself is not `std::error::Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Sealed helper so `Context` covers both `Result<T, E: std::error::Error>`
+/// and `Result<T, anyhow::Error>` without overlapping impls (same structure
+/// as the real crate's `ext::StdError`).
+mod ext {
+    use super::Error;
+    use std::error::Error as StdError;
+
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::new(self)
+        }
+    }
+
+    // `Error` deliberately does not implement `std::error::Error`, so this
+    // concrete impl cannot overlap the blanket one.
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a single displayable
+/// expression).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing file");
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("looking up {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "looking up 7");
+        assert_eq!(Some(3u32).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 4;
+        let e = anyhow!("formatted {n} and {}", "args");
+        assert_eq!(e.to_string(), "formatted 4 and args");
+
+        fn bails() -> Result<()> {
+            bail!("stop {}", 9);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop 9");
+
+        fn ensures(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 5);
+            Ok(x)
+        }
+        assert_eq!(ensures(3).unwrap(), 3);
+        assert_eq!(ensures(12).unwrap_err().to_string(), "x too big: 12");
+        assert!(ensures(5).unwrap_err().to_string().contains("x != 5"));
+    }
+
+    #[test]
+    fn context_works_on_anyhow_results_too() {
+        fn inner() -> Result<()> {
+            bail!("deep failure");
+        }
+        let e = inner().context("outer step").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer step: deep failure");
+    }
+
+    #[test]
+    fn chain_is_preserved_through_nesting() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["outer", "mid", "inner"]);
+        assert_eq!(format!("{e:#}"), "outer: mid: inner");
+    }
+
+    #[test]
+    fn debug_renders_cause_section() {
+        let e = Error::msg("inner").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by"));
+        assert!(d.contains("inner"));
+    }
+}
