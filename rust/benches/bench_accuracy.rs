@@ -14,6 +14,7 @@ use mlcstt::runtime::artifacts::model_available;
 
 fn main() {
     harness::banner("bench_accuracy", "Fig. 8 fault-injection accuracy");
+    let mut report = harness::Report::new("accuracy");
     let dir = harness::artifacts_dir();
     let eval = harness::eval_n(256);
     let mut ran = false;
@@ -33,11 +34,12 @@ fn main() {
             });
             println!("{}", exp.table);
             println!("bench: {model}@{rate} in {}\n", harness::ms(took));
+            report.record_once(&format!("accuracy_{model}_at_{rate}"), eval as u64, took);
             ran = true;
         }
     }
     if !ran {
         println!("nothing ran: no artifacts present");
-        std::process::exit(0);
     }
+    harness::finish(report);
 }

@@ -96,9 +96,13 @@ fn dataflow_ablation(net: &str) {
 
 fn main() {
     harness::banner("bench_bandwidth", "Fig. 9 bandwidth vs buffer size");
+    let mut report = harness::Report::new("bandwidth");
     for net in ["vgg16", "inceptionv3"] {
         let (_, took) = harness::time_once(|| study(net));
         println!("bench: {net} sweep in {}\n", harness::ms(took));
+        report.record_once(&format!("sweep_{net}"), SIZES_KB.len() as u64, took);
     }
-    dataflow_ablation("vgg16");
+    let (_, took) = harness::time_once(|| dataflow_ablation("vgg16"));
+    report.record_once("dataflow_ablation_vgg16", 1, took);
+    harness::finish(report);
 }

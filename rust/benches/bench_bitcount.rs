@@ -52,18 +52,25 @@ fn census(label: &str, weights: &[f32]) {
 
 fn main() {
     harness::banner("bench_bitcount", "Fig. 6 stored-pattern census");
+    let mut report = harness::Report::new("bitcount");
     let dir = harness::artifacts_dir();
     let mut any = false;
     for model in ["vggmini", "inceptionmini"] {
         if model_available(&dir, model) {
             let (_, wpath, _) = model_paths(&dir, model);
             let weights = WeightFile::read(&wpath).expect("weight file");
-            census(model, &weights.flat());
+            let flat = weights.flat();
+            let (_, took) = harness::time_once(|| census(model, &flat));
+            report.record_once(&format!("census_{model}"), flat.len() as u64, took);
             any = true;
         }
     }
     if !any {
         println!("(artifacts missing; using synthetic clipped-Gaussian weights)");
-        census("synthetic-1M", &synthetic_weights(1_000_000, 6));
+        let n = harness::eval_n(1_000_000);
+        let ws = synthetic_weights(n, 6);
+        let (_, took) = harness::time_once(|| census(&format!("synthetic-{n}"), &ws));
+        report.record_once("census_synthetic", n as u64, took);
     }
+    harness::finish(report);
 }

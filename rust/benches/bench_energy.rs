@@ -113,23 +113,29 @@ fn energy_study(label: &str, weights: &[f32]) {
 
 fn main() {
     harness::banner("bench_energy", "Fig. 7 energy + Table 3 overhead");
+    let mut report = harness::Report::new("energy");
     let dir = harness::artifacts_dir();
     let mut any = false;
     for model in ["vggmini", "inceptionmini"] {
         if model_available(&dir, model) {
             let (_, wpath, _) = model_paths(&dir, model);
             let weights = WeightFile::read(&wpath).expect("weight file");
-            let (_, took) = harness::time_once(|| energy_study(model, &weights.flat()));
+            let flat = weights.flat();
+            let (_, took) = harness::time_once(|| energy_study(model, &flat));
             println!("bench: {model} energy study in {}\n", harness::ms(took));
+            report.record_once(&format!("energy_study_{model}"), flat.len() as u64, took);
             any = true;
         }
     }
     if !any {
+        let n = harness::eval_n(1_000_000);
         let mut rng = Xoshiro256::seeded(6);
-        let ws: Vec<f32> = (0..1_000_000)
+        let ws: Vec<f32> = (0..n)
             .map(|_| ((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
             .collect();
         println!("(artifacts missing; synthetic weights)");
-        energy_study("synthetic-1M", &ws);
+        let (_, took) = harness::time_once(|| energy_study(&format!("synthetic-{n}"), &ws));
+        report.record_once("energy_study_synthetic", n as u64, took);
     }
+    harness::finish(report);
 }

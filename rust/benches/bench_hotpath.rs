@@ -3,20 +3,23 @@
 //! The L3 request path is: encode -> buffer store (+fault) -> buffer load ->
 //! decode -> stage -> PJRT execute. Everything before PJRT is bit
 //! manipulation over millions of weights; these benches measure each stage
-//! in weights/second so optimization deltas are directly comparable.
+//! in weights/second so optimization deltas are directly comparable, and
+//! pit the SWAR + threaded codec against the retained scalar oracle —
+//! the headline `encode hybrid g=16` speedup the bench trajectory tracks.
+//!
+//! Emits `BENCH_hotpath.json` (see `harness::finish`); `MLCSTT_EVAL`
+//! scales the weight count (default 1M) for CI smoke runs.
 
 #[path = "harness.rs"]
 mod harness;
 
 use mlcstt::buffer::{BufferConfig, MlcBuffer};
-use mlcstt::encoding::{Policy, WeightCodec};
+use mlcstt::encoding::{Encoded, Policy, WeightCodec};
 use mlcstt::fp;
 use mlcstt::runtime::artifacts::{model_available, model_paths, TestSet, WeightFile};
 use mlcstt::runtime::Executor;
 use mlcstt::stt::{AccessKind, CostModel, ErrorModel};
 use mlcstt::util::rng::Xoshiro256;
-
-const N: usize = 1 << 20; // 1M weights
 
 fn weights(n: usize) -> Vec<f32> {
     let mut rng = Xoshiro256::seeded(99);
@@ -26,46 +29,80 @@ fn weights(n: usize) -> Vec<f32> {
 }
 
 fn main() {
-    harness::banner("bench_hotpath", "L3 stage throughput (1M weights)");
-    let ws = weights(N);
+    let n = harness::eval_n(1 << 20); // 1M weights unless MLCSTT_EVAL says less
+    harness::banner("bench_hotpath", &format!("L3 stage throughput ({n} weights)"));
+    let mut report = harness::Report::new("hotpath");
+    let ws = weights(n);
 
     // f16 conversion alone (the floor for everything downstream).
-    let (bits, d) = harness::time_median(5, || {
-        ws.iter().map(|&w| fp::f32_to_f16_bits(w)).collect::<Vec<u16>>()
-    });
-    println!("f32->f16 quantize        : {}", harness::rate(N as u64, d));
-    let (_, d) = harness::time_median(5, || {
+    let mut bits = vec![0u16; n];
+    let (_, t) = harness::time_stats(5, || fp::quantize_into(&ws, &mut bits));
+    println!("f32->f16 quantize_into   : {}", harness::rate(n as u64, t.median));
+    report.record("quantize_into", n as u64, &t);
+    let (_, t) = harness::time_stats(5, || {
         bits.iter().map(|&b| fp::f16_bits_to_f32(b)).sum::<f32>()
     });
-    println!("f16->f32 decode          : {}", harness::rate(N as u64, d));
+    println!("f16->f32 decode          : {}", harness::rate(n as u64, t.median));
+    report.record("f16_to_f32", n as u64, &t);
 
-    // Pattern counting (Fig. 6 inner loop).
-    let (_, d) = harness::time_median(5, || {
+    // Pattern counting (Fig. 6 inner loop): scalar loop vs packed SWAR.
+    let (_, t) = harness::time_stats(5, || {
         bits.iter().map(|&b| fp::soft_cells(b) as u64).sum::<u64>()
     });
-    println!("soft-cell count          : {}", harness::rate(N as u64, d));
+    println!("soft-cell count (scalar) : {}", harness::rate(n as u64, t.median));
+    report.record("soft_cells_scalar", n as u64, &t);
+    let (_, t) = harness::time_stats(5, || fp::soft_cells_batch(&bits));
+    println!("soft-cell count (packed) : {}", harness::rate(n as u64, t.median));
+    report.record("soft_cells_packed", n as u64, &t);
 
-    // Encode under each policy.
-    for (label, policy, g) in [
-        ("encode unprotected      ", Policy::Unprotected, 1),
-        ("encode hybrid g=1       ", Policy::Hybrid, 1),
-        ("encode hybrid g=4       ", Policy::Hybrid, 4),
-        ("encode hybrid g=16      ", Policy::Hybrid, 16),
+    // The headline comparison: the retained scalar oracle vs the SWAR path
+    // single-threaded vs auto-threaded, all at the paper's hybrid g=16.
+    let codec16 = WeightCodec::hybrid(16);
+    let (_, t) = harness::time_stats(3, || codec16.encode_scalar(&ws));
+    println!("encode scalar g=16       : {}", harness::rate(n as u64, t.median));
+    report.record("encode_scalar_hybrid_g16", n as u64, &t);
+
+    let mut enc16 = Encoded::with_context(Policy::Hybrid, 16);
+    let (_, t) = harness::time_stats(3, || codec16.encode_into_threaded(&ws, &mut enc16, 1));
+    println!("encode swar g=16 (1 thr) : {}", harness::rate(n as u64, t.median));
+    report.record("encode_swar_hybrid_g16_t1", n as u64, &t);
+
+    let (_, t) = harness::time_stats(3, || codec16.encode_into(&ws, &mut enc16));
+    println!("encode swar g=16 (auto)  : {}", harness::rate(n as u64, t.median));
+    report.record("encode_hybrid_g16", n as u64, &t);
+
+    if let (Some(fast), Some(scalar)) = (
+        report.per_sec("encode_hybrid_g16"),
+        report.per_sec("encode_scalar_hybrid_g16"),
+    ) {
+        println!("encode g=16 speedup vs scalar: {:.2}x", fast / scalar);
+    }
+
+    // Encode under the remaining policies (buffer-reusing SWAR path).
+    for (label, key, policy, g) in [
+        ("encode unprotected      ", "encode_unprotected", Policy::Unprotected, 1),
+        ("encode hybrid g=1       ", "encode_hybrid_g1", Policy::Hybrid, 1),
+        ("encode hybrid g=4       ", "encode_hybrid_g4", Policy::Hybrid, 4),
     ] {
         let codec = WeightCodec::new(policy, g);
-        let (_, d) = harness::time_median(3, || codec.encode(&ws));
-        println!("{label} : {}", harness::rate(N as u64, d));
+        let mut enc = Encoded::with_context(policy, g);
+        let (_, t) = harness::time_stats(3, || codec.encode_into(&ws, &mut enc));
+        println!("{label} : {}", harness::rate(n as u64, t.median));
+        report.record(key, n as u64, &t);
     }
 
     // Decode.
     let enc = WeightCodec::hybrid(4).encode(&ws);
-    let (_, d) = harness::time_median(3, || enc.decode());
-    println!("decode hybrid g=4        : {}", harness::rate(N as u64, d));
+    let mut decoded = Vec::new();
+    let (_, t) = harness::time_stats(3, || enc.decode_into(&mut decoded));
+    println!("decode hybrid g=4        : {}", harness::rate(n as u64, t.median));
+    report.record("decode_hybrid_g4", n as u64, &t);
 
     // Energy accounting sweep.
     let cost = CostModel::default();
-    let (_, d) = harness::time_median(3, || enc.access_energy(&cost, AccessKind::Write));
-    println!("energy accounting        : {}", harness::rate(N as u64, d));
+    let (_, t) = harness::time_stats(3, || enc.access_energy(&cost, AccessKind::Write));
+    println!("energy accounting        : {}", harness::rate(n as u64, t.median));
+    report.record("energy_accounting", n as u64, &t);
 
     // Fault injection: pre-optimization per-cell path vs the binomial
     // single-draw path (same distribution; see stt::error tests).
@@ -73,32 +110,35 @@ fn main() {
         let model = ErrorModel::at_rate(0.015);
         let enc_raw = WeightCodec::new(Policy::Unprotected, 1).encode(&ws);
         let mut rng = Xoshiro256::seeded(5);
-        let (_, d) = harness::time_median(3, || {
+        let (_, t) = harness::time_stats(3, || {
             enc_raw
                 .words
                 .iter()
                 .map(|&w| model.corrupt_word_write_naive(w, &mut rng))
                 .fold(0u64, |a, w| a ^ w as u64)
         });
-        println!("fault inject (naive)     : {}", harness::rate(N as u64, d));
-        let (_, d) = harness::time_median(3, || {
+        println!("fault inject (naive)     : {}", harness::rate(n as u64, t.median));
+        report.record("fault_inject_naive", n as u64, &t);
+        let (_, t) = harness::time_stats(3, || {
             enc_raw
                 .words
                 .iter()
                 .map(|&w| model.corrupt_word_write(w, &mut rng))
                 .fold(0u64, |a, w| a ^ w as u64)
         });
-        println!("fault inject (binomial)  : {}", harness::rate(N as u64, d));
+        println!("fault inject (binomial)  : {}", harness::rate(n as u64, t.median));
+        report.record("fault_inject_binomial", n as u64, &t);
     }
 
     // Buffer store+load with fault injection at the published rate.
-    let cfg = BufferConfig::new(N * 2, 16).with_error_model(ErrorModel::at_rate(0.015));
-    let (_, d) = harness::time_median(3, || {
+    let cfg = BufferConfig::new(n * 2, 16).with_error_model(ErrorModel::at_rate(0.015));
+    let (_, t) = harness::time_stats(3, || {
         let mut buf = MlcBuffer::new(cfg.clone(), 1);
         let r = buf.store(&enc).unwrap();
         buf.load(&r).unwrap().words.len()
     });
-    println!("buffer store+fault+load  : {}", harness::rate(N as u64, d));
+    println!("buffer store+fault+load  : {}", harness::rate(n as u64, t.median));
+    report.record("buffer_store_fault_load", n as u64, &t);
 
     // End-to-end weight path for a real model (encode -> store -> load ->
     // decode), artifacts permitting.
@@ -108,18 +148,18 @@ fn main() {
         let wf = WeightFile::read(&wpath).unwrap();
         let flat = wf.flat();
         let codec = WeightCodec::hybrid(4);
-        let (_, d) = harness::time_median(3, || {
+        let (_, t) = harness::time_stats(3, || {
             let enc = codec.encode(&flat);
-            let mut buf =
-                MlcBuffer::new(BufferConfig::new(flat.len() * 2, 16), 1);
+            let mut buf = MlcBuffer::new(BufferConfig::new(flat.len() * 2, 16), 1);
             let r = buf.store(&enc).unwrap();
             buf.load(&r).unwrap().decode().len()
         });
         println!(
             "vggmini full weight path : {} ({} weights)",
-            harness::rate(flat.len() as u64, d),
+            harness::rate(flat.len() as u64, t.median),
             flat.len()
         );
+        report.record("vggmini_weight_path", flat.len() as u64, &t);
 
         // Coordinator overhead vs raw PJRT execute.
         let test = TestSet::read(&dir.join("testset.bin")).unwrap();
@@ -132,14 +172,17 @@ fn main() {
                 .unwrap();
         let batch_elems: usize = manifest.input_shape.iter().product();
         let images = test.images[..batch_elems].to_vec();
-        let (_, exec_d) = harness::time_median(3, || engine.classify_batch(&images).unwrap());
+        let (_, exec_t) = harness::time_stats(3, || engine.classify_batch(&images).unwrap());
         println!(
             "PJRT classify_batch({})  : {} / batch ({})",
             manifest.batch,
-            harness::ms(exec_d),
-            harness::rate(manifest.batch as u64, exec_d),
+            harness::ms(exec_t.median),
+            harness::rate(manifest.batch as u64, exec_t.median),
         );
+        report.record("pjrt_classify_batch", manifest.batch as u64, &exec_t);
     } else {
         println!("(vggmini artifacts missing; skipping model-path benches)");
     }
+
+    harness::finish(report);
 }

@@ -10,7 +10,8 @@ use mlcstt::metrics::Table;
 
 fn main() {
     harness::banner("bench_sse", "Fig. 4 bit-flip SSE study");
-    let n = 1_000_000usize;
+    let mut report = harness::Report::new("sse");
+    let n = harness::eval_n(1_000_000);
     let (sse, took) = harness::time_once(|| bitflip_sse_study(n, 4));
 
     let mut t = Table::new(
@@ -45,4 +46,6 @@ fn main() {
         harness::ms(took),
         harness::rate(16 * n as u64, took)
     );
+    report.record_once("bitflip_sse_study", 16 * n as u64, took);
+    harness::finish(report);
 }

@@ -1,19 +1,64 @@
 //! Shared bench scaffolding (criterion is not in the offline vendor set).
 //!
 //! Each `[[bench]]` target is built with `harness = false` and includes this
-//! file via `#[path = "harness.rs"] mod harness;`. Provides median-of-N
-//! wall-clock timing, throughput formatting, and artifact discovery. Bench
-//! output is plain text so `cargo bench | tee bench_output.txt` captures the
-//! paper-figure tables directly.
+//! file via `#[path = "harness.rs"] mod harness;`. Provides:
+//!
+//! * warmed median/p95 wall-clock timing ([`time_stats`]) and throughput
+//!   formatting — the human-readable tables still go to stdout;
+//! * the **bench_report** subsystem (DESIGN.md §7): every target records
+//!   its measurements into a [`Report`] and finishes with [`finish`],
+//!   which writes machine-readable `BENCH_<name>.json` (name, n, median /
+//!   p95 ns, items-per-sec, git sha) into `MLCSTT_BENCH_DIR` (default
+//!   `bench_out/`), and — when the binary is invoked with
+//!   `--check <baseline.json> <pct>` — fails the process if any record's
+//!   throughput regressed more than `pct`% below the committed baseline.
+//!   CI's bench-smoke job is the consumer.
+
+#![allow(dead_code)] // each bench target uses the subset it needs
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use mlcstt::util::json::{self, Json};
+
+/// The workspace root. Cargo runs bench binaries with cwd set to the
+/// *package* root (`rust/`), so cwd-relative defaults would land one level
+/// too deep; anchor them at the manifest's parent instead (falling back to
+/// cwd when not run under cargo).
+pub fn workspace_root() -> PathBuf {
+    match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(manifest) => {
+            let m = PathBuf::from(manifest);
+            m.parent().map(|p| p.to_path_buf()).unwrap_or(m)
+        }
+        Err(_) => PathBuf::from("."),
+    }
+}
+
+/// Anchor a possibly-relative path at the workspace root.
+fn from_root(p: PathBuf) -> PathBuf {
+    if p.is_absolute() {
+        p
+    } else {
+        workspace_root().join(p)
+    }
+}
 
 /// Resolve the artifacts directory (env override for CI layouts).
 pub fn artifacts_dir() -> PathBuf {
     std::env::var("MLCSTT_ARTIFACTS")
         .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+        .unwrap_or_else(|_| from_root(PathBuf::from("artifacts")))
+}
+
+/// Where `BENCH_*.json` reports land (env override for CI layouts;
+/// relative values resolve against the workspace root).
+pub fn bench_out_dir() -> PathBuf {
+    from_root(
+        std::env::var("MLCSTT_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("bench_out")),
+    )
 }
 
 /// Evaluation-size knob so the full Fig. 8 run stays tractable on 1 CPU.
@@ -31,18 +76,43 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     (out, t0.elapsed())
 }
 
-/// Median-of-`n` timing for microbenches; returns (last output, median).
-pub fn time_median<T>(n: usize, mut f: impl FnMut() -> T) -> (T, Duration) {
+/// Median + p95 of `n` timed iterations, after one *discarded* warmup run
+/// (the cold first call used to skew median-of-small-N badly).
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median: Duration,
+    pub p95: Duration,
+    pub iters: usize,
+}
+
+/// Warmed timing statistics; returns the last output and the [`Timing`].
+pub fn time_stats<T>(n: usize, mut f: impl FnMut() -> T) -> (T, Timing) {
     assert!(n >= 1);
+    let mut out = f(); // warmup — timing discarded
     let mut times = Vec::with_capacity(n);
-    let mut out = None;
     for _ in 0..n {
         let t0 = Instant::now();
-        out = Some(f());
+        out = f();
         times.push(t0.elapsed());
     }
     times.sort();
-    (out.unwrap(), times[n / 2])
+    let p95_idx = ((n as f64 * 0.95).ceil() as usize).clamp(1, n) - 1;
+    (
+        out,
+        Timing {
+            median: times[n / 2],
+            p95: times[p95_idx],
+            iters: n,
+        },
+    )
+}
+
+/// Median-of-`n` timing for microbenches (warmed); returns (last output,
+/// median). Thin wrapper over [`time_stats`] for call sites that don't
+/// record a report entry.
+pub fn time_median<T>(n: usize, f: impl FnMut() -> T) -> (T, Duration) {
+    let (out, t) = time_stats(n, f);
+    (out, t.median)
 }
 
 /// `items / seconds` with engineering units.
@@ -66,4 +136,217 @@ pub fn ms(d: Duration) -> String {
 /// Standard bench banner.
 pub fn banner(name: &str, what: &str) {
     println!("\n### bench {name} — {what}");
+}
+
+// ------------------------------------------------------------ bench_report
+
+/// One measurement: `name` is the stable key baselines match on; `n` is
+/// items processed per iteration; `per_sec` is throughput at the median.
+pub struct BenchRecord {
+    pub name: String,
+    pub n: u64,
+    pub median_ns: u128,
+    pub p95_ns: u128,
+    pub per_sec: f64,
+}
+
+/// A bench target's machine-readable output, written as
+/// `BENCH_<name>.json` by [`finish`].
+pub struct Report {
+    name: String,
+    records: Vec<BenchRecord>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report {
+            name: name.to_string(),
+            records: Vec::new(),
+        }
+    }
+
+    /// Record a [`time_stats`] measurement of `items` items per iteration.
+    pub fn record(&mut self, name: &str, items: u64, t: &Timing) {
+        // Floor the denominator at 1 ns: a sub-timer-resolution median must
+        // not produce an INFINITY that would serialize as invalid JSON.
+        let median_s = t.median.max(Duration::from_nanos(1)).as_secs_f64();
+        self.records.push(BenchRecord {
+            name: name.to_string(),
+            n: items,
+            median_ns: t.median.as_nanos(),
+            p95_ns: t.p95.as_nanos(),
+            per_sec: items as f64 / median_s,
+        });
+    }
+
+    /// Record a single-shot measurement (median == p95 == the one run).
+    pub fn record_once(&mut self, name: &str, items: u64, d: Duration) {
+        self.record(
+            name,
+            items,
+            &Timing {
+                median: d,
+                p95: d,
+                iters: 1,
+            },
+        );
+    }
+
+    /// Throughput of a recorded entry (used for in-bench speedup lines).
+    pub fn per_sec(&self, name: &str) -> Option<f64> {
+        self.records.iter().find(|r| r.name == name).map(|r| r.per_sec)
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("bench", self.name.as_str().into()),
+            ("git_sha", Json::Str(git_sha())),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("name", r.name.as_str().into()),
+                                ("n", Json::Num(r.n as f64)),
+                                ("median_ns", Json::Num(r.median_ns as f64)),
+                                ("p95_ns", Json::Num(r.p95_ns as f64)),
+                                ("per_sec", Json::Num(r.per_sec)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Current commit: `GITHUB_SHA` in CI, `git rev-parse` locally.
+pub fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        return sha;
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Write the report JSON and, if `--check <baseline.json> <pct>` was
+/// passed, compare throughput against the baseline — exiting non-zero on
+/// any regression beyond `pct` percent. Every bench target's `main` ends
+/// with this call.
+pub fn finish(report: Report) {
+    // A report-write failure must never fail-open the regression gate, so
+    // the write is best-effort and the check runs unconditionally.
+    let dir = bench_out_dir();
+    match std::fs::create_dir_all(&dir) {
+        Ok(()) => {
+            let path = dir.join(format!("BENCH_{}.json", report.name));
+            let mut text = report.to_json().to_string_pretty();
+            text.push('\n');
+            match std::fs::write(&path, text) {
+                Ok(()) => println!("bench_report: wrote {}", path.display()),
+                Err(e) => eprintln!("bench_report: cannot write {}: {e}", path.display()),
+            }
+        }
+        Err(e) => eprintln!("bench_report: cannot create {}: {e}", dir.display()),
+    }
+    check_regressions(&report);
+}
+
+/// Parse `--check <baseline.json> <pct>` from the process args, if present.
+fn check_args() -> Option<(PathBuf, f64)> {
+    let args: Vec<String> = std::env::args().collect();
+    let i = args.iter().position(|a| a == "--check")?;
+    let path = args.get(i + 1).expect("--check requires <baseline.json> <pct>");
+    let pct: f64 = args
+        .get(i + 2)
+        .expect("--check requires <baseline.json> <pct>")
+        .parse()
+        .expect("--check pct must be a number");
+    Some((PathBuf::from(path), pct))
+}
+
+/// Compare this run against the committed baseline: a record regresses if
+/// its throughput drops more than `pct`% below the baseline's `per_sec`.
+/// Baseline records with no counterpart in this run are reported but not
+/// fatal (artifact-gated benches legitimately skip); regressions exit 1.
+fn check_regressions(report: &Report) {
+    let Some((path, pct)) = check_args() else {
+        return;
+    };
+    let path = from_root(path);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!(
+                "bench --check ({}): cannot read {}: {e}",
+                report.name,
+                path.display()
+            );
+            std::process::exit(1);
+        }
+    };
+    let baseline = Json::parse(&text).unwrap_or_else(|e| {
+        eprintln!(
+            "bench --check ({}): bad baseline {}: {e}",
+            report.name,
+            path.display()
+        );
+        std::process::exit(1);
+    });
+    let Some(records) = baseline.get("records").and_then(|r| r.as_arr()) else {
+        eprintln!(
+            "bench --check ({}): baseline has no records array",
+            report.name
+        );
+        std::process::exit(1);
+    };
+    // Gate only against a baseline addressed to this bench target — `cargo
+    // bench -- --check ...` hands the flag to every registered target.
+    if let Some(bench) = baseline.get("bench").and_then(|b| b.as_str()) {
+        if bench != report.name {
+            return;
+        }
+    }
+    let mut compared = 0usize;
+    let mut failures = Vec::new();
+    for b in records {
+        let (Some(name), Some(base)) = (
+            b.get("name").and_then(|v| v.as_str()),
+            b.get("per_sec").and_then(|v| v.as_f64()),
+        ) else {
+            continue;
+        };
+        match report.per_sec(name) {
+            None => println!("bench --check: '{name}' not measured this run (skipped)"),
+            Some(cur) => {
+                compared += 1;
+                let floor = base * (1.0 - pct / 100.0);
+                if cur < floor {
+                    failures.push(format!(
+                        "'{name}': {cur:.3e}/s is {:.1}% below baseline {base:.3e}/s (floor {floor:.3e}/s)",
+                        100.0 * (1.0 - cur / base)
+                    ));
+                }
+            }
+        }
+    }
+    if failures.is_empty() {
+        println!(
+            "bench --check: ok — {compared} record(s) within {pct}% of {}",
+            path.display()
+        );
+    } else {
+        for f in &failures {
+            eprintln!("bench --check: REGRESSION {f}");
+        }
+        std::process::exit(1);
+    }
 }

@@ -14,6 +14,14 @@
 use crate::encoding::{Encoded, Scheme};
 use crate::stt::{AccessKind, CostModel, Energy, ErrorModel};
 use crate::util::rng::Xoshiro256;
+use crate::util::threads;
+
+/// Fixed store-shard size in words. Shard boundaries — and therefore the
+/// per-shard RNG seed assignment — depend only on the stream length, never
+/// on the worker count, so the injected fault set is bit-identical whether
+/// a store runs inline or across any number of threads (pinned by
+/// `rust/tests/swar_equivalence.rs`).
+pub const STORE_SHARD_WORDS: usize = 1 << 15;
 
 /// Static buffer configuration.
 #[derive(Clone, Debug)]
@@ -144,8 +152,22 @@ impl MlcBuffer {
 
     /// Store an encoded stream: bills content-dependent write energy,
     /// applies write-path fault injection to the stored image, and records
-    /// the tri-level metadata (fault-free by construction).
+    /// the tri-level metadata (fault-free by construction). Large streams
+    /// shard across worker threads (see [`STORE_SHARD_WORDS`]).
     pub fn store(&mut self, enc: &Encoded) -> Result<Region, BufferError> {
+        self.store_with_threads(enc, threads::auto_workers(enc.len(), STORE_SHARD_WORDS))
+    }
+
+    /// [`Self::store`] with an explicit worker count. The stored image,
+    /// fault set, and energy accounting are bit-identical for every
+    /// `workers` value: each fixed-size shard draws its RNG seed from the
+    /// buffer stream in shard order before any worker runs, and per-shard
+    /// energy partials are reduced in shard order.
+    pub fn store_with_threads(
+        &mut self,
+        enc: &Encoded,
+        workers: usize,
+    ) -> Result<Region, BufferError> {
         if enc.len() > self.free_words() {
             return Err(BufferError::CapacityExceeded {
                 requested: enc.len(),
@@ -154,17 +176,61 @@ impl MlcBuffer {
         }
         let offset = self.used_words;
 
-        for (i, &w) in enc.words.iter().enumerate() {
-            // Bill the energy of programming the *intended* image.
-            self.stats
-                .write_energy
-                .add(self.config.cost.word(w, AccessKind::Write));
-            // Then the write/retention error model corrupts vulnerable cells.
-            let stored = self.config.error_model.corrupt_word_write(w, &mut self.rng);
-            if stored != w {
-                self.stats.injected_faults += 1;
-            }
-            self.words[offset + i] = stored;
+        let n_shards = enc.len().div_ceil(STORE_SHARD_WORDS);
+        let seeds: Vec<u64> = (0..n_shards).map(|_| self.rng.next_u64()).collect();
+        let cost = &self.config.cost;
+        let model = &self.config.error_model;
+        let dst_all = &mut self.words[offset..offset + enc.len()];
+
+        let partials: Vec<(Energy, u64)>;
+        if workers <= 1 || n_shards <= 1 {
+            partials = enc
+                .words
+                .chunks(STORE_SHARD_WORDS)
+                .zip(dst_all.chunks_mut(STORE_SHARD_WORDS))
+                .zip(&seeds)
+                .map(|((src, dst), &seed)| store_shard(cost, model, src, dst, seed))
+                .collect();
+        } else {
+            // Hand each worker a contiguous batch of (shard, dst) jobs; the
+            // shard index travels with the job so partials can be reduced
+            // in shard order afterwards.
+            let jobs: Vec<(usize, &[u16], &mut [u16])> = enc
+                .words
+                .chunks(STORE_SHARD_WORDS)
+                .zip(dst_all.chunks_mut(STORE_SHARD_WORDS))
+                .enumerate()
+                .map(|(k, (src, dst))| (k, src, dst))
+                .collect();
+            let per_worker = jobs.len().div_ceil(workers.max(1));
+            let mut indexed: Vec<(usize, Energy, u64)> = std::thread::scope(|scope| {
+                let seeds = &seeds;
+                let mut handles = Vec::new();
+                let mut it = jobs.into_iter();
+                loop {
+                    let batch: Vec<_> = it.by_ref().take(per_worker).collect();
+                    if batch.is_empty() {
+                        break;
+                    }
+                    handles.push(scope.spawn(move || {
+                        batch
+                            .into_iter()
+                            .map(|(k, src, dst)| {
+                                let (e, f) = store_shard(cost, model, src, dst, seeds[k]);
+                                (k, e, f)
+                            })
+                            .collect::<Vec<_>>()
+                    }));
+                }
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+            indexed.sort_unstable_by_key(|&(k, _, _)| k);
+            partials = indexed.into_iter().map(|(_, e, f)| (e, f)).collect();
+        }
+
+        for (energy, faults) in partials {
+            self.stats.write_energy.add(energy);
+            self.stats.injected_faults += faults;
         }
         self.used_words += enc.len();
         self.stats.writes += enc.len() as u64;
@@ -248,6 +314,30 @@ impl MlcBuffer {
         }
         self.load(region)
     }
+}
+
+/// Write one store shard: bill the energy of programming the *intended*
+/// image, then let the write/retention error model corrupt vulnerable
+/// cells in the stored copy. Returns `(energy, injected_faults)`.
+fn store_shard(
+    cost: &CostModel,
+    model: &ErrorModel,
+    src: &[u16],
+    dst: &mut [u16],
+    seed: u64,
+) -> (Energy, u64) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut energy = Energy::ZERO;
+    let mut faults = 0u64;
+    for (d, &w) in dst.iter_mut().zip(src) {
+        energy.add(cost.word(w, AccessKind::Write));
+        let stored = model.corrupt_word_write(w, &mut rng);
+        if stored != w {
+            faults += 1;
+        }
+        *d = stored;
+    }
+    (energy, faults)
 }
 
 #[cfg(test)]
@@ -359,6 +449,31 @@ mod tests {
             .filter(|(a, b)| a != b)
             .count() as u64;
         assert_eq!(diff, faults);
+    }
+
+    #[test]
+    fn store_identical_across_worker_counts() {
+        // Multi-shard stream (> STORE_SHARD_WORDS): the stored image, fault
+        // accounting, and energy must not depend on how many threads ran.
+        let ws = ramp(STORE_SHARD_WORDS + 5000);
+        let enc = WeightCodec::new(Policy::Unprotected, 1).encode(&ws);
+        let cfg = BufferConfig::new(enc.len() * 2, 4)
+            .with_error_model(ErrorModel::at_rate(0.02));
+        let run = |workers: usize| {
+            let mut buf = MlcBuffer::new(cfg.clone(), 0xD15C);
+            let r = buf.store_with_threads(&enc, workers).unwrap();
+            let words = buf.load(&r).unwrap().words;
+            let s = buf.stats();
+            (words, s.injected_faults, s.write_energy)
+        };
+        let (w1, f1, e1) = run(1);
+        for workers in [2usize, 3, 8] {
+            let (wn, fn_, en) = run(workers);
+            assert_eq!(w1, wn, "workers={workers}");
+            assert_eq!(f1, fn_, "workers={workers}");
+            assert_eq!(e1, en, "workers={workers}");
+        }
+        assert!(f1 > 0);
     }
 
     #[test]

@@ -13,9 +13,15 @@
 //! and metadata storage overhead (Table 3).
 
 use super::scheme::{self, Scheme};
-use super::select::{select_scheme, Policy};
+use super::select::{select_from_tallies, Policy};
+use super::swar;
 use crate::fp;
 use crate::stt::{AccessKind, CostModel, Energy};
+use crate::util::threads;
+
+/// Below this many weights a tensor is encoded/decoded inline — the
+/// `std::thread::scope` spawn cost would exceed the work.
+pub const MIN_WEIGHTS_PER_WORKER: usize = 1 << 16;
 
 /// Encoder configuration.
 #[derive(Clone, Copy, Debug)]
@@ -43,11 +49,114 @@ impl WeightCodec {
     /// Encode a tensor of f32 weights (all |w| <= 2 after fp16 quantization;
     /// the trainer guarantees |w| <= 1).
     pub fn encode(&self, weights: &[f32]) -> Encoded {
+        let mut out = Encoded::with_context(self.policy, self.granularity);
+        self.encode_into(weights, &mut out);
+        out
+    }
+
+    /// Encode into a caller-owned `Encoded`, reusing its buffers
+    /// (allocation-free after the first call at a given size). Shards
+    /// across worker threads when the tensor is large enough.
+    pub fn encode_into(&self, weights: &[f32], out: &mut Encoded) {
+        self.encode_into_threaded(
+            weights,
+            out,
+            threads::auto_workers(weights.len(), MIN_WEIGHTS_PER_WORKER),
+        );
+    }
+
+    /// [`Self::encode_into`] with an explicit worker count. Results are
+    /// bit-identical for every `workers` value: shard boundaries are
+    /// group-aligned and depend only on the data (see `util::threads`).
+    pub fn encode_into_threaded(&self, weights: &[f32], out: &mut Encoded, workers: usize) {
+        out.policy = self.policy;
+        out.granularity = self.granularity;
+        // Resize only on length change: every element is overwritten below,
+        // so a same-size re-encode skips the clear+resize memset entirely.
+        if out.words.len() != weights.len() {
+            out.words.resize(weights.len(), 0);
+        }
+
+        if self.policy == Policy::Unprotected {
+            out.schemes.clear();
+            // Raw binary16, one metadata-free stream.
+            let bounds = threads::chunk_bounds(weights.len(), 1, workers);
+            if bounds.len() <= 1 {
+                fp::quantize_into(weights, &mut out.words);
+            } else {
+                std::thread::scope(|scope| {
+                    let mut rest: &mut [u16] = &mut out.words;
+                    for &(start, end) in &bounds {
+                        let (dst, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                        rest = tail;
+                        let src = &weights[start..end];
+                        scope.spawn(move || fp::quantize_into(src, dst));
+                    }
+                });
+            }
+            return;
+        }
+
+        let g = self.granularity;
+        let n_groups = weights.len().div_ceil(g);
+        if out.schemes.len() != n_groups {
+            out.schemes.resize(n_groups, Scheme::NoChange);
+        }
+        let bounds = threads::chunk_bounds(weights.len(), g, workers);
+        if bounds.len() <= 1 {
+            if !weights.is_empty() {
+                self.encode_range(weights, &mut out.words, &mut out.schemes);
+            }
+        } else {
+            std::thread::scope(|scope| {
+                let mut words_rest: &mut [u16] = &mut out.words;
+                let mut schemes_rest: &mut [Scheme] = &mut out.schemes;
+                for &(start, end) in &bounds {
+                    let (w_dst, w_tail) =
+                        std::mem::take(&mut words_rest).split_at_mut(end - start);
+                    words_rest = w_tail;
+                    let (s_dst, s_tail) = std::mem::take(&mut schemes_rest)
+                        .split_at_mut((end - start).div_ceil(g));
+                    schemes_rest = s_tail;
+                    let src = &weights[start..end];
+                    let codec = *self;
+                    scope.spawn(move || codec.encode_range(src, w_dst, s_dst));
+                }
+            });
+        }
+    }
+
+    /// Encode one group-aligned shard: quantize + sign-protect each group
+    /// into a scratch buffer, pick its scheme from packed cost tallies, and
+    /// apply the winner with the SWAR kernels.
+    fn encode_range(&self, src: &[f32], words: &mut [u16], schemes: &mut [Scheme]) {
+        let g = self.granularity;
+        let mut scratch = vec![0u16; g.min(src.len())];
+        for ((w_src, w_dst), slot) in src
+            .chunks(g)
+            .zip(words.chunks_mut(g))
+            .zip(schemes.iter_mut())
+        {
+            let protected = &mut scratch[..w_src.len()];
+            fp::quantize_into(w_src, protected);
+            debug_assert!(
+                protected.iter().all(|&h| fp::backup_bit_free(h)),
+                "weight outside the |w| < 2 premise"
+            );
+            swar::protect_sign_slice(protected);
+            let (s, _) = select_from_tallies(self.policy, swar::group_cost_tallies(protected));
+            *slot = s;
+            swar::apply_into(s, protected, w_dst);
+        }
+    }
+
+    /// The pre-SWAR single-threaded per-word encoder, kept verbatim as the
+    /// oracle for equivalence tests and the bench speedup denominator.
+    pub fn encode_scalar(&self, weights: &[f32]) -> Encoded {
         let mut words = Vec::with_capacity(weights.len());
         let mut schemes = Vec::with_capacity(weights.len().div_ceil(self.granularity));
 
         if self.policy == Policy::Unprotected {
-            // Raw binary16, one metadata-free stream.
             words.extend(weights.iter().map(|&w| fp::f32_to_f16_bits(w)));
             return Encoded {
                 words,
@@ -70,7 +179,15 @@ impl WeightCodec {
             .collect();
 
         for group in protected.chunks(self.granularity) {
-            let (s, _) = select_scheme(self.policy, group);
+            // Per-word re-scoring, independent of the SWAR tally kernel.
+            let mut sums = [0u32; 3];
+            for &p in group {
+                let c = super::select::candidate_soft_cells(p);
+                for (acc, v) in sums.iter_mut().zip(c) {
+                    *acc += v;
+                }
+            }
+            let (s, _) = select_from_tallies(self.policy, sums);
             schemes.push(s);
             words.extend(group.iter().map(|&p| scheme::apply(s, p)));
         }
@@ -97,6 +214,17 @@ pub struct Encoded {
 }
 
 impl Encoded {
+    /// An empty stream carrying codec context — the reusable target for
+    /// [`WeightCodec::encode_into`].
+    pub fn with_context(policy: Policy, granularity: usize) -> Encoded {
+        Encoded {
+            words: Vec::new(),
+            schemes: Vec::new(),
+            granularity,
+            policy,
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.words.len()
     }
@@ -118,6 +246,75 @@ impl Encoded {
     /// Decode all words back to f32 (after any fault injection mutated
     /// `words` in place).
     pub fn decode(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Decode into a caller-owned buffer (resized to fit), sharding
+    /// across worker threads when the stream is large enough.
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        self.decode_into_threaded(
+            out,
+            threads::auto_workers(self.len(), MIN_WEIGHTS_PER_WORKER),
+        );
+    }
+
+    /// [`Self::decode_into`] with an explicit worker count; bit-identical
+    /// for every `workers` value.
+    pub fn decode_into_threaded(&self, out: &mut Vec<f32>, workers: usize) {
+        // Length-change-only resize: every slot is overwritten below.
+        if out.len() != self.len() {
+            out.resize(self.len(), 0.0);
+        }
+        let g = if self.policy == Policy::Unprotected {
+            1
+        } else {
+            self.granularity
+        };
+        let bounds = threads::chunk_bounds(self.len(), g, workers);
+        if bounds.len() <= 1 {
+            if !self.is_empty() {
+                self.decode_range(0, &self.words, out);
+            }
+        } else {
+            std::thread::scope(|scope| {
+                let mut rest: &mut [f32] = out;
+                for &(start, end) in &bounds {
+                    let (dst, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                    rest = tail;
+                    let src = &self.words[start..end];
+                    scope.spawn(move || self.decode_range(start, src, dst));
+                }
+            });
+        }
+    }
+
+    /// Decode one group-aligned shard starting at word index `start`:
+    /// invert each group's scheme with the SWAR kernels into a scratch
+    /// buffer, then convert to f32.
+    fn decode_range(&self, start: usize, src: &[u16], dst: &mut [f32]) {
+        if self.policy == Policy::Unprotected {
+            for (o, &w) in dst.iter_mut().zip(src) {
+                *o = fp::f16_bits_to_f32(w);
+            }
+            return;
+        }
+        let g = self.granularity;
+        debug_assert_eq!(start % g, 0);
+        let mut scratch = vec![0u16; g.min(src.len())];
+        let schemes = &self.schemes[start / g..];
+        for ((w_src, &s), o_dst) in src.chunks(g).zip(schemes).zip(dst.chunks_mut(g)) {
+            let canonical = &mut scratch[..w_src.len()];
+            swar::invert_into(s, w_src, canonical);
+            for (o, &h) in o_dst.iter_mut().zip(canonical.iter()) {
+                *o = fp::f16_bits_to_f32(h);
+            }
+        }
+    }
+
+    /// The pre-SWAR per-word decoder, kept as the equivalence oracle.
+    pub fn decode_scalar(&self) -> Vec<f32> {
         self.words
             .iter()
             .enumerate()
@@ -134,21 +331,15 @@ impl Encoded {
         fp::f16_bits_to_f32(scheme::invert(self.scheme_of(i), stored))
     }
 
-    /// Pattern census over the stored stream (Fig. 6): `[n00,n01,n10,n11]`.
+    /// Pattern census over the stored stream (Fig. 6): `[n00,n01,n10,n11]`,
+    /// via the packed SWAR kernel.
     pub fn pattern_counts(&self) -> [u64; 4] {
-        let mut acc = [0u64; 4];
-        for &w in &self.words {
-            let c = fp::pattern_counts(w);
-            for k in 0..4 {
-                acc[k] += c[k] as u64;
-            }
-        }
-        acc
+        fp::count_patterns_packed(&self.words)
     }
 
-    /// Total vulnerable cells in the stored stream.
+    /// Total vulnerable cells in the stored stream (packed kernel).
     pub fn soft_cells(&self) -> u64 {
-        self.words.iter().map(|&w| fp::soft_cells(w) as u64).sum()
+        fp::soft_cells_batch(&self.words)
     }
 
     /// Metadata storage overhead (Table 3): 2 bits per group over the
@@ -325,6 +516,64 @@ mod tests {
         let ws = ramp(256);
         let enc = WeightCodec::hybrid(4).encode(&ws);
         assert_eq!(enc.scheme_histogram().iter().sum::<u64>() as usize, enc.schemes.len());
+    }
+
+    #[test]
+    fn swar_encode_matches_scalar_oracle() {
+        let ws = ramp(3000);
+        for policy in [
+            Policy::Unprotected,
+            Policy::ProtectRound,
+            Policy::ProtectRotate,
+            Policy::Hybrid,
+        ] {
+            for g in [1usize, 2, 4, 8, 16, 7] {
+                let codec = WeightCodec::new(policy, g);
+                let fast = codec.encode(&ws);
+                let oracle = codec.encode_scalar(&ws);
+                assert_eq!(fast.words, oracle.words, "{policy:?} g={g}");
+                assert_eq!(fast.schemes, oracle.schemes, "{policy:?} g={g}");
+                assert_eq!(fast.decode(), oracle.decode_scalar(), "{policy:?} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_into_reuses_buffers_and_matches() {
+        let codec = WeightCodec::hybrid(4);
+        let mut enc = Encoded::with_context(Policy::Hybrid, 4);
+        let mut dec = Vec::new();
+        for n in [1000usize, 500, 1000] {
+            let ws = ramp(n);
+            codec.encode_into(&ws, &mut enc);
+            assert_eq!(enc.words, codec.encode_scalar(&ws).words, "n={n}");
+            enc.decode_into(&mut dec);
+            assert_eq!(dec, enc.decode_scalar(), "n={n}");
+            assert_eq!(dec.len(), n);
+        }
+    }
+
+    #[test]
+    fn threaded_encode_decode_bit_identical() {
+        // Force multi-shard work on a tensor smaller than the auto
+        // threshold by passing explicit worker counts.
+        let ws = ramp(10_240);
+        for g in [1usize, 4, 16] {
+            let codec = WeightCodec::hybrid(g);
+            let mut single = Encoded::with_context(Policy::Hybrid, g);
+            codec.encode_into_threaded(&ws, &mut single, 1);
+            for workers in [2usize, 3, 8] {
+                let mut multi = Encoded::with_context(Policy::Hybrid, g);
+                codec.encode_into_threaded(&ws, &mut multi, workers);
+                assert_eq!(single.words, multi.words, "g={g} workers={workers}");
+                assert_eq!(single.schemes, multi.schemes, "g={g} workers={workers}");
+                let mut d1 = Vec::new();
+                let mut dn = Vec::new();
+                single.decode_into_threaded(&mut d1, 1);
+                multi.decode_into_threaded(&mut dn, workers);
+                assert_eq!(d1, dn, "g={g} workers={workers}");
+            }
+        }
     }
 
     #[test]

@@ -5,15 +5,20 @@
 //! * [`select`] — per-group best-of-N scheme selection (Table 2 semantics)
 //!   at configurable granularity (Table 3), and the system policies of
 //!   Fig. 8 (Unprotected / +Round / +Rotate / Hybrid);
+//! * [`swar`] — the word-packed hot path: every reformation and cell
+//!   census as a four-lane `u64` SWAR kernel, bit-exact against the
+//!   scalar oracle (DESIGN.md §7);
 //! * [`codec`] — end-to-end weight-tensor encoder/decoder producing the
 //!   stored word stream + tri-level metadata, plus pattern statistics
-//!   (Fig. 6) and metadata overhead accounting (Table 3).
+//!   (Fig. 6) and metadata overhead accounting (Table 3). Large tensors
+//!   shard across `std::thread::scope` workers with bit-identical output.
 
 pub mod codec;
 pub mod scheme;
 pub mod select;
 pub mod staterestrict;
+pub mod swar;
 
 pub use codec::{Encoded, WeightCodec};
 pub use scheme::Scheme;
-pub use select::{select_scheme, Policy};
+pub use select::{select_from_tallies, select_scheme, Policy};

@@ -89,27 +89,30 @@ pub fn candidate_soft_cells(p: u16) -> [u32; 3] {
     ]
 }
 
-/// Pick the best scheme for a group of sign-protected words under `policy`.
-/// Returns `(scheme, soft_cells_after)`.
-pub fn select_scheme(policy: Policy, protected: &[u16]) -> (Scheme, u32) {
-    debug_assert!(!protected.is_empty());
-    let mut sums = [0u32; 3];
-    for &p in protected {
-        let c = candidate_soft_cells(p);
-        sums[0] += c[0];
-        sums[1] += c[1];
-        sums[2] += c[2];
-    }
+/// Pick the best scheme from precomputed group cost tallies (soft-cell
+/// sums in symbol order `[NoChange, Rotate, Round]` — see
+/// [`super::swar::group_cost_tallies`]). Returns `(scheme, soft_cells_after)`.
+#[inline]
+pub fn select_from_tallies(policy: Policy, tallies: [u32; 3]) -> (Scheme, u32) {
     // Strict '<' keeps the earliest candidate on ties: the candidate order
     // encodes the NoChange > Rotate > Round preference.
     let mut best = (Scheme::NoChange, u32::MAX);
     for &s in policy.candidates() {
-        let cost = sums[s.symbol() as usize];
+        let cost = tallies[s.symbol() as usize];
         if cost < best.1 {
             best = (s, cost);
         }
     }
     best
+}
+
+/// Pick the best scheme for a group of sign-protected words under `policy`.
+/// Returns `(scheme, soft_cells_after)`. Tallies come from the packed SWAR
+/// kernel; the per-word [`candidate_soft_cells`] path is the oracle it is
+/// tested against.
+pub fn select_scheme(policy: Policy, protected: &[u16]) -> (Scheme, u32) {
+    debug_assert!(!protected.is_empty());
+    select_from_tallies(policy, super::swar::group_cost_tallies(protected))
 }
 
 #[cfg(test)]
@@ -182,6 +185,29 @@ mod tests {
             .sum();
         let (_, grouped) = select_scheme(Policy::Hybrid, &ws);
         assert!(single <= grouped);
+    }
+
+    #[test]
+    fn tallies_path_agrees_with_per_word_oracle() {
+        let ws: Vec<u16> = (0..97).map(|i| protected(0.017 * i as f32 - 0.8)).collect();
+        for g in [1usize, 3, 4, 7, 16] {
+            for chunk in ws.chunks(g) {
+                let mut sums = [0u32; 3];
+                for &p in chunk {
+                    let c = candidate_soft_cells(p);
+                    for (s, v) in sums.iter_mut().zip(c) {
+                        *s += v;
+                    }
+                }
+                for policy in [Policy::ProtectRound, Policy::ProtectRotate, Policy::Hybrid] {
+                    assert_eq!(
+                        select_scheme(policy, chunk),
+                        select_from_tallies(policy, sums),
+                        "{policy:?} g={g}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Word-packed (SWAR) reformation kernels: four protected binary16 words
+//! per `u64`, one bitwise pipeline instead of four branchy per-word calls.
+//!
+//! Packing follows [`crate::fp::pack4`]: lane `i` occupies bits
+//! `16i..16i+16`, so lane boundaries sit on multiples of 16 and every mask
+//! here is lane-local. The only shifts that could leak across lanes
+//! (`>> 1`, `>> 13`, `<< 1`) are immediately masked back inside the 14-bit
+//! reformation field or the per-lane LSB, which is what makes each kernel
+//! bit-exact against its scalar counterpart in [`super::scheme`] — pinned
+//! exhaustively over all 65536 patterns by `rust/tests/swar_equivalence.rs`
+//! and the tests below.
+//!
+//! The scalar functions remain the oracle; these kernels are the hot path
+//! used by [`super::codec`] and [`super::select`].
+
+use super::scheme::{self, Scheme};
+use crate::fp::{self, pack4, soft_cells_packed, unpack4, LANES};
+
+/// Sign bit (bit 15) of each lane.
+const SIGN4: u64 = 0x8000_8000_8000_8000;
+/// Backup bit (bit 14, the free exponent MSB) of each lane.
+const BACKUP4: u64 = 0x4000_4000_4000_4000;
+/// The 14-bit reformation field (below the protected sign pair) per lane.
+const FIELD4: u64 = 0x3FFF_3FFF_3FFF_3FFF;
+/// Bit 0 of each lane.
+const ONES4: u64 = 0x0001_0001_0001_0001;
+/// Low nibble of each lane (the Round target).
+const NIB4: u64 = 0x000F_000F_000F_000F;
+
+/// [`scheme::protect_sign`] on four lanes: duplicate bit 15 into bit 14.
+#[inline]
+pub fn protect_sign4(x: u64) -> u64 {
+    (x & !BACKUP4) | ((x & SIGN4) >> 1)
+}
+
+/// [`scheme::unprotect_sign`] on four lanes: clear the backup bit.
+#[inline]
+pub fn unprotect_sign4(x: u64) -> u64 {
+    x & !BACKUP4
+}
+
+/// [`scheme::rotate_field_right`] on four lanes: rotate each lane's low 14
+/// bits right by one, sign pair untouched. The `>> 1` pushes each lane's
+/// bit 0 into the lane below's bit 15; `& FIELD4` discards it.
+#[inline]
+pub fn rotate_field_right4(x: u64) -> u64 {
+    let field = x & FIELD4;
+    (x & !FIELD4) | ((field >> 1) & FIELD4) | ((field & ONES4) << 13)
+}
+
+/// [`scheme::rotate_field_left`] on four lanes (inverse of
+/// [`rotate_field_right4`]).
+#[inline]
+pub fn rotate_field_left4(x: u64) -> u64 {
+    let field = x & FIELD4;
+    (x & !FIELD4) | ((field << 1) & FIELD4) | ((field >> 13) & ONES4)
+}
+
+/// [`scheme::round_low_nibble`] on four lanes. Table 1 is a pure function
+/// of the nibble's top two bits — output = `b3 b3 b2 b2` — so the lookup
+/// table becomes two masked shifts per bit.
+#[inline]
+pub fn round_low_nibble4(x: u64) -> u64 {
+    let b3 = (x >> 3) & ONES4;
+    let b2 = (x >> 2) & ONES4;
+    let nib = (b3 << 3) | (b3 << 2) | (b2 << 1) | b2;
+    (x & !NIB4) | nib
+}
+
+/// [`scheme::apply`] on four protected lanes.
+#[inline]
+pub fn apply4(s: Scheme, x: u64) -> u64 {
+    match s {
+        Scheme::NoChange => x,
+        Scheme::Rotate => rotate_field_right4(x),
+        Scheme::Round => round_low_nibble4(x),
+    }
+}
+
+/// [`scheme::invert`] on four stored lanes (backup bits cleared).
+#[inline]
+pub fn invert4(s: Scheme, x: u64) -> u64 {
+    unprotect_sign4(match s {
+        Scheme::Rotate => rotate_field_left4(x),
+        Scheme::NoChange | Scheme::Round => x,
+    })
+}
+
+// --------------------------------------------------------- slice kernels
+
+/// Sign-protect a word slice in place, four lanes at a time.
+pub fn protect_sign_slice(ws: &mut [u16]) {
+    let mut chunks = ws.chunks_exact_mut(LANES);
+    for c in &mut chunks {
+        let x = protect_sign4(pack4([c[0], c[1], c[2], c[3]]));
+        c.copy_from_slice(&unpack4(x));
+    }
+    for w in chunks.into_remainder() {
+        *w = scheme::protect_sign(*w);
+    }
+}
+
+/// Packed group cost tallies: the soft cells each candidate scheme would
+/// produce, summed over a group of sign-protected words, in symbol order
+/// `[NoChange, Rotate, Round]`. This is the quantity
+/// [`super::select::select_from_tallies`] minimizes — one packed traversal
+/// of the group instead of a per-word, per-candidate re-score.
+pub fn group_cost_tallies(protected: &[u16]) -> [u32; 3] {
+    let mut tallies = [0u32; 3];
+    let mut chunks = protected.chunks_exact(LANES);
+    for c in &mut chunks {
+        let x = pack4([c[0], c[1], c[2], c[3]]);
+        tallies[0] += soft_cells_packed(x);
+        tallies[1] += soft_cells_packed(rotate_field_right4(x));
+        tallies[2] += soft_cells_packed(round_low_nibble4(x));
+    }
+    for &p in chunks.remainder() {
+        tallies[0] += fp::soft_cells(p);
+        tallies[1] += fp::soft_cells(scheme::rotate_field_right(p));
+        tallies[2] += fp::soft_cells(scheme::round_low_nibble(p));
+    }
+    tallies
+}
+
+/// Apply `s` to a protected slice, writing the stored images into `dst`
+/// (same length), four lanes at a time.
+pub fn apply_into(s: Scheme, src: &[u16], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let quads = src.len() / LANES * LANES;
+    for (sc, dc) in src[..quads]
+        .chunks_exact(LANES)
+        .zip(dst[..quads].chunks_exact_mut(LANES))
+    {
+        let x = apply4(s, pack4([sc[0], sc[1], sc[2], sc[3]]));
+        dc.copy_from_slice(&unpack4(x));
+    }
+    for (&sw, dw) in src[quads..].iter().zip(&mut dst[quads..]) {
+        *dw = scheme::apply(s, sw);
+    }
+}
+
+/// Invert `s` on a stored slice, writing canonical words (backup cleared)
+/// into `dst` (same length), four lanes at a time.
+pub fn invert_into(s: Scheme, src: &[u16], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let quads = src.len() / LANES * LANES;
+    for (sc, dc) in src[..quads]
+        .chunks_exact(LANES)
+        .zip(dst[..quads].chunks_exact_mut(LANES))
+    {
+        let x = invert4(s, pack4([sc[0], sc[1], sc[2], sc[3]]));
+        dc.copy_from_slice(&unpack4(x));
+    }
+    for (&sw, dw) in src[quads..].iter().zip(&mut dst[quads..]) {
+        *dw = scheme::invert(s, sw);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Spread `h` across lanes alongside three derived words so every lane
+    /// position sees every pattern over the sweep.
+    fn lanes_of(h: u16) -> [u16; 4] {
+        [h, h.rotate_left(5), !h, h.wrapping_mul(0x9E37)]
+    }
+
+    #[test]
+    fn packed_kernels_match_scalar_sampled() {
+        // The exhaustive sweep lives in tests/swar_equivalence.rs; this is
+        // the fast in-crate smoke version.
+        for h in (0..=u16::MAX).step_by(251) {
+            let ws = lanes_of(h);
+            let x = pack4(ws);
+            assert_eq!(
+                unpack4(protect_sign4(x)),
+                ws.map(scheme::protect_sign),
+                "protect h={h:#06x}"
+            );
+            assert_eq!(unpack4(unprotect_sign4(x)), ws.map(scheme::unprotect_sign));
+            assert_eq!(
+                unpack4(rotate_field_right4(x)),
+                ws.map(scheme::rotate_field_right)
+            );
+            assert_eq!(
+                unpack4(rotate_field_left4(x)),
+                ws.map(scheme::rotate_field_left)
+            );
+            assert_eq!(
+                unpack4(round_low_nibble4(x)),
+                ws.map(scheme::round_low_nibble)
+            );
+        }
+    }
+
+    #[test]
+    fn slice_kernels_match_scalar_with_ragged_tail() {
+        // Lengths exercising the chunks_exact remainder (0..=9 words).
+        for len in 0..10usize {
+            let src: Vec<u16> = (0..len as u16).map(|i| i.wrapping_mul(0x4D2F) & !0x4000).collect();
+            let mut protected = src.clone();
+            protect_sign_slice(&mut protected);
+            let expect: Vec<u16> = src.iter().map(|&w| scheme::protect_sign(w)).collect();
+            assert_eq!(protected, expect, "len={len}");
+
+            for s in Scheme::ALL {
+                let mut stored = vec![0u16; len];
+                apply_into(s, &protected, &mut stored);
+                let expect: Vec<u16> =
+                    protected.iter().map(|&p| scheme::apply(s, p)).collect();
+                assert_eq!(stored, expect, "{s:?} len={len}");
+
+                let mut back = vec![0u16; len];
+                invert_into(s, &stored, &mut back);
+                let expect: Vec<u16> = stored.iter().map(|&w| scheme::invert(s, w)).collect();
+                assert_eq!(back, expect, "{s:?} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn tallies_match_per_word_rescoring() {
+        for g in [1usize, 2, 3, 4, 5, 8, 13, 16] {
+            let protected: Vec<u16> = (0..g as u16)
+                .map(|i| scheme::protect_sign(i.wrapping_mul(0x2AB7) & !0x4000))
+                .collect();
+            let t = group_cost_tallies(&protected);
+            for s in Scheme::ALL {
+                let expect: u32 = protected
+                    .iter()
+                    .map(|&p| fp::soft_cells(scheme::apply(s, p)))
+                    .sum();
+                assert_eq!(t[s.symbol() as usize], expect, "{s:?} g={g}");
+            }
+        }
+    }
+}

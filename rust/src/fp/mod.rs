@@ -165,6 +165,99 @@ pub fn flip_bit(h: u16, pos: u32) -> u16 {
     h ^ (1 << pos)
 }
 
+// ------------------------------------------------------------------ SWAR
+//
+// Word-packed variants of the cell statistics: four binary16 words ride in
+// one `u64` lane group (lane `i` = bits `16i..16i+16`), and the per-cell
+// counts fall out of plain 64-bit bitwise ops + one popcount instead of an
+// 8-iteration per-word loop. Lane boundaries sit on multiples of 16, and
+// every mask below is lane-local, so no shift ever leaks bits across
+// words (the `>> 1` variants are masked back to even bit positions).
+// `rust/src/encoding/swar.rs` builds the reformation kernels on the same
+// packing; `rust/tests/swar_equivalence.rs` pins all of it against the
+// scalar path over every one of the 65536 bit patterns.
+
+/// Words per `u64` lane group in the packed hot path.
+pub const LANES: usize = 4;
+
+/// Even (intra-cell low) bit positions of all four lanes.
+const EVEN4: u64 = 0x5555_5555_5555_5555;
+
+/// Pack four words, lane 0 in the low 16 bits.
+#[inline]
+pub fn pack4(ws: [u16; LANES]) -> u64 {
+    (ws[0] as u64) | ((ws[1] as u64) << 16) | ((ws[2] as u64) << 32) | ((ws[3] as u64) << 48)
+}
+
+/// Inverse of [`pack4`].
+#[inline]
+pub fn unpack4(x: u64) -> [u16; LANES] {
+    [x as u16, (x >> 16) as u16, (x >> 32) as u16, (x >> 48) as u16]
+}
+
+/// Vulnerable (`01`/`10`) cells across all four packed words: the two bits
+/// of a cell differ iff `x ^ (x >> 1)` is set at the cell's low bit.
+#[inline]
+pub fn soft_cells_packed(x: u64) -> u32 {
+    ((x ^ (x >> 1)) & EVEN4).count_ones()
+}
+
+/// Pattern census `[n00, n01, n10, n11]` across all four packed words
+/// (32 cells per lane group).
+#[inline]
+pub fn pattern_counts_packed(x: u64) -> [u32; 4] {
+    let hi = x >> 1;
+    let n11 = (x & hi & EVEN4).count_ones();
+    let n01 = (x & !hi & EVEN4).count_ones();
+    let n10 = (!x & hi & EVEN4).count_ones();
+    [32 - n11 - n01 - n10, n01, n10, n11]
+}
+
+// ------------------------------------------------------------- batch API
+
+/// Quantize a slice of f32 weights to binary16 bits into a caller buffer
+/// (same length). The slice form lets threaded callers write disjoint
+/// output shards without allocating.
+pub fn quantize_into(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "quantize_into length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_f16_bits(s);
+    }
+}
+
+/// Pattern census over a word stream via the packed kernel (Fig. 6 outer
+/// loop): `[n00, n01, n10, n11]` summed over every word.
+pub fn count_patterns_packed(words: &[u16]) -> [u64; 4] {
+    let mut acc = [0u64; 4];
+    let mut chunks = words.chunks_exact(LANES);
+    for c in &mut chunks {
+        let pc = pattern_counts_packed(pack4([c[0], c[1], c[2], c[3]]));
+        for (a, &p) in acc.iter_mut().zip(&pc) {
+            *a += p as u64;
+        }
+    }
+    for &w in chunks.remainder() {
+        let pc = pattern_counts(w);
+        for (a, &p) in acc.iter_mut().zip(&pc) {
+            *a += p as u64;
+        }
+    }
+    acc
+}
+
+/// Total vulnerable cells over a word stream via the packed kernel.
+pub fn soft_cells_batch(words: &[u16]) -> u64 {
+    let mut total = 0u64;
+    let mut chunks = words.chunks_exact(LANES);
+    for c in &mut chunks {
+        total += soft_cells_packed(pack4([c[0], c[1], c[2], c[3]])) as u64;
+    }
+    for &w in chunks.remainder() {
+        total += soft_cells(w) as u64;
+    }
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +389,56 @@ mod tests {
     fn flip_bit_involution() {
         for pos in 0..16 {
             assert_eq!(flip_bit(flip_bit(0x1234, pos), pos), 0x1234);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let ws = [0x0000u16, 0xFFFF, 0xBEEF, 0x1234];
+        assert_eq!(unpack4(pack4(ws)), ws);
+        assert_eq!(pack4([1, 0, 0, 0]), 1);
+        assert_eq!(pack4([0, 0, 0, 1]), 1u64 << 48);
+    }
+
+    #[test]
+    fn packed_counts_match_scalar_lanewise() {
+        // Deterministic word mix covering all lanes with distinct values.
+        let mut h = 0x1357u16;
+        for _ in 0..2048 {
+            let ws = [h, h.wrapping_mul(31).rotate_left(3), !h, h ^ 0x5A5A];
+            let x = pack4(ws);
+            let soft: u32 = ws.iter().map(|&w| soft_cells(w)).sum();
+            assert_eq!(soft_cells_packed(x), soft);
+            let mut pc = [0u32; 4];
+            for &w in &ws {
+                for (a, c) in pc.iter_mut().zip(pattern_counts(w)) {
+                    *a += c;
+                }
+            }
+            assert_eq!(pattern_counts_packed(x), pc);
+            h = h.wrapping_mul(0x9E37).wrapping_add(1);
+        }
+    }
+
+    #[test]
+    fn batch_apis_match_per_word_loops() {
+        let words: Vec<u16> = (0..1001u32).map(|i| (i.wrapping_mul(40503) >> 3) as u16).collect();
+        let mut acc = [0u64; 4];
+        let mut soft = 0u64;
+        for &w in &words {
+            soft += soft_cells(w) as u64;
+            for (a, c) in acc.iter_mut().zip(pattern_counts(w)) {
+                *a += c as u64;
+            }
+        }
+        assert_eq!(count_patterns_packed(&words), acc);
+        assert_eq!(soft_cells_batch(&words), soft);
+
+        let fs: Vec<f32> = (0..777).map(|i| (i as f32 / 777.0) * 1.8 - 0.9).collect();
+        let mut out = vec![0u16; fs.len()];
+        quantize_into(&fs, &mut out);
+        for (&f, &h) in fs.iter().zip(&out) {
+            assert_eq!(h, f32_to_f16_bits(f));
         }
     }
 

@@ -9,10 +9,13 @@
 //! * [`cli`] — declarative flag parsing for the `mlcstt` binary,
 //! * [`stats`] — streaming summaries used by benches and reports,
 //! * [`prop`] — a miniature property-testing harness (random case
-//!   generation + failure-case shrinking) standing in for `proptest`.
+//!   generation + failure-case shrinking) standing in for `proptest`,
+//! * [`threads`] — deterministic `std::thread::scope` work sharding for
+//!   the codec/buffer hot paths (DESIGN.md §7).
 
 pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod threads;

@@ -1,0 +1,93 @@
+//! Deterministic work sharding for the hot paths.
+//!
+//! The codec and buffer shard million-weight tensors across
+//! `std::thread::scope` workers (no thread-pool dependency — the vendor set
+//! stays offline). Two invariants keep threading invisible to results:
+//!
+//! * **Shard boundaries depend only on the data**, never on the worker
+//!   count: encode/decode split on group-aligned boundaries, the buffer
+//!   store on a fixed shard size. A shard computes the same bytes whether
+//!   it runs inline or on any of N workers.
+//! * **Reductions combine in shard order**, so floating-point accumulation
+//!   (energy nanojoules) is bit-stable across thread counts.
+//!
+//! `rust/tests/swar_equivalence.rs` pins threaded == single-thread for the
+//! whole encode → store → decode pipeline.
+
+/// Worker ceiling: `MLCSTT_THREADS` if set (>=1), else the machine's
+/// available parallelism.
+pub fn available() -> usize {
+    if let Ok(v) = std::env::var("MLCSTT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Workers worth spawning for `items` units of work, requiring at least
+/// `min_per_worker` units each (tiny tensors stay single-threaded — the
+/// spawn cost would dominate).
+pub fn auto_workers(items: usize, min_per_worker: usize) -> usize {
+    available().min(items / min_per_worker.max(1)).max(1)
+}
+
+/// Split `len` items into at most `workers` contiguous chunks whose starts
+/// are multiples of `align` (the codec's metadata-group size, so a scheme
+/// group never straddles two workers). Covers `0..len` exactly, in order.
+pub fn chunk_bounds(len: usize, align: usize, workers: usize) -> Vec<(usize, usize)> {
+    assert!(align >= 1, "align must be >= 1");
+    if len == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1);
+    let units = len.div_ceil(align);
+    let per_chunk = units.div_ceil(workers) * align;
+    let mut bounds = Vec::with_capacity(workers);
+    let mut start = 0;
+    while start < len {
+        let end = (start + per_chunk).min(len);
+        bounds.push((start, end));
+        start = end;
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_cover_exactly_and_stay_aligned() {
+        for len in [0usize, 1, 5, 16, 100, 1000, 65536, 65537] {
+            for align in [1usize, 4, 16] {
+                for workers in [1usize, 2, 3, 8] {
+                    let b = chunk_bounds(len, align, workers);
+                    let mut cursor = 0;
+                    for &(s, e) in &b {
+                        assert_eq!(s, cursor, "len={len} align={align} w={workers}");
+                        assert!(e > s);
+                        assert_eq!(s % align, 0, "start must be group-aligned");
+                        cursor = e;
+                    }
+                    assert_eq!(cursor, len);
+                    assert!(b.len() <= workers.max(1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_is_one_chunk() {
+        assert_eq!(chunk_bounds(1000, 16, 1), vec![(0, 1000)]);
+    }
+
+    #[test]
+    fn auto_workers_floors_at_one() {
+        assert_eq!(auto_workers(0, 1024), 1);
+        assert_eq!(auto_workers(10, 1024), 1);
+        assert!(auto_workers(1 << 20, 1024) >= 1);
+    }
+}

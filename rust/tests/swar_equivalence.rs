@@ -1,0 +1,199 @@
+//! SWAR ↔ scalar equivalence (ISSUE 2): the word-packed kernels must match
+//! the scalar oracle **exhaustively** — every one of the 65536 binary16 bit
+//! patterns, in every lane position — and the threaded codec/buffer paths
+//! must be bit-identical to their single-threaded runs on the e2e fixture
+//! weights. Together these pin that the hot-path rewrite changed the speed
+//! of the paper's scheme and nothing else.
+
+mod common;
+
+use mlcstt::buffer::{BufferConfig, MlcBuffer, STORE_SHARD_WORDS};
+use mlcstt::encoding::{scheme, swar, Encoded, Policy, Scheme, WeightCodec};
+use mlcstt::fp;
+use mlcstt::stt::error::ERROR_RATE_HI;
+use mlcstt::stt::ErrorModel;
+
+/// Every 16-bit pattern, in every lane, alongside varied neighbours (so a
+/// cross-lane leak against *any* neighbour content would be caught).
+fn lane_mixes(h: u16) -> [[u16; 4]; 4] {
+    let a = h.wrapping_mul(0x9E37).rotate_left(3);
+    let b = !h;
+    let c = h ^ 0x5A5A;
+    [
+        [h, a, b, c],
+        [a, h, c, b],
+        [b, c, h, a],
+        [c, b, a, h],
+    ]
+}
+
+#[test]
+fn exhaustive_protect_unprotect_all_patterns() {
+    for h in 0..=u16::MAX {
+        for ws in lane_mixes(h) {
+            let x = fp::pack4(ws);
+            assert_eq!(
+                fp::unpack4(swar::protect_sign4(x)),
+                ws.map(scheme::protect_sign),
+                "protect h={h:#06x}"
+            );
+            assert_eq!(
+                fp::unpack4(swar::unprotect_sign4(x)),
+                ws.map(scheme::unprotect_sign),
+                "unprotect h={h:#06x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn exhaustive_rotate_both_directions_all_patterns() {
+    for h in 0..=u16::MAX {
+        for ws in lane_mixes(h) {
+            let x = fp::pack4(ws);
+            let right = swar::rotate_field_right4(x);
+            assert_eq!(
+                fp::unpack4(right),
+                ws.map(scheme::rotate_field_right),
+                "rotate right h={h:#06x}"
+            );
+            assert_eq!(
+                fp::unpack4(swar::rotate_field_left4(x)),
+                ws.map(scheme::rotate_field_left),
+                "rotate left h={h:#06x}"
+            );
+            // Packed round-trip: left inverts right, lanes independent.
+            assert_eq!(swar::rotate_field_left4(right), x, "roundtrip h={h:#06x}");
+        }
+    }
+}
+
+#[test]
+fn exhaustive_round_nibble_all_patterns() {
+    for h in 0..=u16::MAX {
+        for ws in lane_mixes(h) {
+            let x = fp::pack4(ws);
+            assert_eq!(
+                fp::unpack4(swar::round_low_nibble4(x)),
+                ws.map(scheme::round_low_nibble),
+                "round h={h:#06x}"
+            );
+        }
+        // And the scalar itself is Table 1 verbatim on this word.
+        let rounded = scheme::round_low_nibble(h);
+        assert_eq!(
+            rounded & 0xF,
+            scheme::ROUND_TABLE[(h & 0xF) as usize] as u16
+        );
+        assert_eq!(rounded & !0xF, h & !0xF);
+    }
+}
+
+#[test]
+fn exhaustive_cell_census_all_patterns() {
+    for h in 0..=u16::MAX {
+        let ws = lane_mixes(h)[0];
+        let x = fp::pack4(ws);
+        let soft: u32 = ws.iter().map(|&w| fp::soft_cells(w)).sum();
+        assert_eq!(fp::soft_cells_packed(x), soft, "soft h={h:#06x}");
+        let mut pc = [0u32; 4];
+        for &w in &ws {
+            for (a, c) in pc.iter_mut().zip(fp::pattern_counts(w)) {
+                *a += c;
+            }
+        }
+        assert_eq!(fp::pattern_counts_packed(x), pc, "census h={h:#06x}");
+    }
+}
+
+#[test]
+fn exhaustive_apply_invert_roundtrip_protected_words() {
+    // For every |w| < 2 pattern (backup bit free — the codec's domain),
+    // the packed apply/invert of each lossless scheme round-trips, and
+    // Round's packed image matches the scalar one.
+    for h in 0..=u16::MAX {
+        if !fp::backup_bit_free(h) {
+            continue;
+        }
+        let p = scheme::protect_sign(h);
+        let x = fp::pack4([p; 4]);
+        for s in Scheme::ALL {
+            let stored = swar::apply4(s, x);
+            assert_eq!(
+                fp::unpack4(stored),
+                [scheme::apply(s, p); 4],
+                "{s:?} h={h:#06x}"
+            );
+            let back = fp::unpack4(swar::invert4(s, stored));
+            assert_eq!(back, [scheme::invert(s, scheme::apply(s, p)); 4]);
+            if s.is_lossless() {
+                assert_eq!(back, [h; 4], "{s:?} lossless h={h:#06x}");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- threading
+
+#[test]
+fn threaded_encode_decode_matches_single_thread_on_fixture_weights() {
+    let ws = common::trained_like_weights(150_000, "swar/threads");
+    for (policy, g) in [
+        (Policy::Unprotected, 1usize),
+        (Policy::Hybrid, 1),
+        (Policy::Hybrid, 16),
+        (Policy::ProtectRotate, 4),
+    ] {
+        let codec = WeightCodec::new(policy, g);
+        let mut single = Encoded::with_context(policy, g);
+        codec.encode_into_threaded(&ws, &mut single, 1);
+        // The scalar oracle agrees with the single-threaded SWAR path.
+        let oracle = codec.encode_scalar(&ws);
+        assert_eq!(single.words, oracle.words, "{policy:?} g={g} vs oracle");
+        assert_eq!(single.schemes, oracle.schemes);
+
+        for workers in [2usize, 5, 16] {
+            let mut multi = Encoded::with_context(policy, g);
+            codec.encode_into_threaded(&ws, &mut multi, workers);
+            assert_eq!(single.words, multi.words, "{policy:?} g={g} w={workers}");
+            assert_eq!(single.schemes, multi.schemes);
+
+            let mut d_single = Vec::new();
+            let mut d_multi = Vec::new();
+            single.decode_into_threaded(&mut d_single, 1);
+            multi.decode_into_threaded(&mut d_multi, workers);
+            assert_eq!(d_single, d_multi, "{policy:?} g={g} w={workers}");
+            assert_eq!(d_single, single.decode_scalar());
+        }
+    }
+}
+
+#[test]
+fn threaded_pipeline_deterministic_end_to_end() {
+    // encode -> banked store (seeded faults) -> load -> decode must be
+    // bit-identical for any worker count: shard seeds derive from stream
+    // position, not thread schedule.
+    let ws = common::trained_like_weights(2 * STORE_SHARD_WORDS + 777, "swar/pipeline");
+    let codec = WeightCodec::hybrid(16);
+    let enc = codec.encode(&ws);
+    let cfg = BufferConfig::new(enc.len() * 2, 8)
+        .with_error_model(ErrorModel::at_rate(ERROR_RATE_HI));
+
+    let run = |workers: usize| {
+        let mut buf = MlcBuffer::new(cfg.clone(), 0xE2E);
+        let region = buf.store_with_threads(&enc, workers).unwrap();
+        let loaded = buf.load(&region).unwrap();
+        let mut decoded = Vec::new();
+        loaded.decode_into_threaded(&mut decoded, workers);
+        (loaded.words, decoded, buf.stats().injected_faults)
+    };
+
+    let (words1, dec1, faults1) = run(1);
+    assert!(faults1 > 0, "fault path inert at the published rate");
+    for workers in [2usize, 4, 9] {
+        let (words_n, dec_n, faults_n) = run(workers);
+        assert_eq!(words1, words_n, "stored image differs at workers={workers}");
+        assert_eq!(dec1, dec_n, "decode differs at workers={workers}");
+        assert_eq!(faults1, faults_n, "fault count differs at workers={workers}");
+    }
+}
