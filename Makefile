@@ -1,0 +1,25 @@
+# Build targets the rest of the repo refers to. The only non-cargo step is
+# `make artifacts`: it runs the L1 AOT pipeline (train the Mini nets, lower
+# to HLO text, export weights/manifests/testset into artifacts/). Requires
+# jax; aot.py itself skips work whose outputs are already present (pass
+# FORCE=1 to retrain). Everything else is a thin cargo alias.
+
+ARTIFACTS ?= artifacts
+FORCE ?=
+
+.PHONY: artifacts build test bench clean-artifacts
+
+artifacts:
+	python3 python/compile/aot.py --out-dir $(ARTIFACTS) $(if $(FORCE),--force,)
+
+build:
+	cargo build --release --offline
+
+test:
+	cargo test -q --offline
+
+bench:
+	cargo bench --offline
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

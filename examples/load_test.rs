@@ -66,6 +66,7 @@ fn main() -> Result<()> {
             },
             ServerConfig {
                 max_wait: Duration::from_millis(25),
+                ..ServerConfig::default()
             },
         )?;
 

@@ -73,12 +73,20 @@ fn main() -> Result<()> {
         );
 
         // --- Serving replay through the coordinator (hybrid weights).
+        // The server config pins codec parallelism for the whole weight
+        // path (MLCSTT_THREADS-aware); the store inherits the pin so
+        // load/decode run at the deployment's worker budget.
+        let server_cfg = ServerConfig {
+            max_wait: Duration::from_millis(10),
+            ..ServerConfig::default()
+        };
         let (manifest, weights) = load_model(&dir, model)?;
         let cfg = StoreConfig {
             policy: Policy::Hybrid,
             granularity: 4,
             error_model: ErrorModel::at_rate(0.02),
             seed: 11,
+            threads: server_cfg.codec_threads,
             ..StoreConfig::default()
         };
         let mut store = WeightStore::load(&cfg, &weights)?;
@@ -92,9 +100,7 @@ fn main() -> Result<()> {
                 let exec = Executor::from_hlo_file(&hlo)?;
                 InferenceEngine::new(exec, manifest2, &tensors)
             },
-            ServerConfig {
-                max_wait: Duration::from_millis(10),
-            },
+            server_cfg,
         )?;
         let mut rng = Xoshiro256::seeded(3);
         let mut tickets = Vec::new();

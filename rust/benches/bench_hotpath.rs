@@ -42,8 +42,20 @@ fn main() {
     let (_, t) = harness::time_stats(5, || {
         bits.iter().map(|&b| fp::f16_bits_to_f32(b)).sum::<f32>()
     });
-    println!("f16->f32 decode          : {}", harness::rate(n as u64, t.median));
-    report.record("f16_to_f32", n as u64, &t);
+    println!("f16->f32 decode (scalar) : {}", harness::rate(n as u64, t.median));
+    report.record("f16_to_f32_scalar", n as u64, &t);
+    let (_, t) = harness::time_stats(5, || {
+        bits.iter().map(|&b| fp::f16_bits_to_f32_lut(b)).sum::<f32>()
+    });
+    println!("f16->f32 decode (lut)    : {}", harness::rate(n as u64, t.median));
+    report.record("f16_to_f32_lut", n as u64, &t);
+    let (_, t) = harness::time_stats(5, || {
+        bits.iter()
+            .map(|&b| fp::f16_bits_to_f32_branchless(b))
+            .sum::<f32>()
+    });
+    println!("f16->f32 (branchless)    : {}", harness::rate(n as u64, t.median));
+    report.record("f16_to_f32_branchless", n as u64, &t);
 
     // Pattern counting (Fig. 6 inner loop): scalar loop vs packed SWAR.
     let (_, t) = harness::time_stats(5, || {
@@ -91,12 +103,25 @@ fn main() {
         report.record(key, n as u64, &t);
     }
 
-    // Decode.
+    // Decode: the retained scalar oracle vs the LUT/SWAR path,
+    // single-threaded vs auto-threaded (the read-side headline).
     let enc = WeightCodec::hybrid(4).encode(&ws);
     let mut decoded = Vec::new();
+    let (_, t) = harness::time_stats(3, || enc.decode_scalar());
+    println!("decode scalar g=4        : {}", harness::rate(n as u64, t.median));
+    report.record("decode_scalar_hybrid_g4", n as u64, &t);
+    let (_, t) = harness::time_stats(3, || enc.decode_into_threaded(&mut decoded, 1));
+    println!("decode swar g=4 (1 thr)  : {}", harness::rate(n as u64, t.median));
+    report.record("decode_hybrid_g4_t1", n as u64, &t);
     let (_, t) = harness::time_stats(3, || enc.decode_into(&mut decoded));
-    println!("decode hybrid g=4        : {}", harness::rate(n as u64, t.median));
+    println!("decode swar g=4 (auto)   : {}", harness::rate(n as u64, t.median));
     report.record("decode_hybrid_g4", n as u64, &t);
+    if let (Some(fast), Some(scalar)) = (
+        report.per_sec("decode_hybrid_g4"),
+        report.per_sec("decode_scalar_hybrid_g4"),
+    ) {
+        println!("decode g=4 speedup vs scalar: {:.2}x", fast / scalar);
+    }
 
     // Energy accounting sweep.
     let cost = CostModel::default();
@@ -128,6 +153,27 @@ fn main() {
         });
         println!("fault inject (binomial)  : {}", harness::rate(n as u64, t.median));
         report.record("fault_inject_binomial", n as u64, &t);
+        // The geometric-skip slice sampler (the store-path default).
+        let mut scratch = enc_raw.words.clone();
+        let (_, t) = harness::time_stats(3, || {
+            scratch.copy_from_slice(&enc_raw.words);
+            model.corrupt_words_write(&mut scratch, &mut rng)
+        });
+        println!("fault inject (geometric) : {}", harness::rate(n as u64, t.median));
+        report.record("fault_inject_geometric", n as u64, &t);
+    }
+
+    // Buffer load alone (threaded read path): store once, time reads.
+    {
+        let cfg = BufferConfig::new(n * 2, 16).with_error_model(ErrorModel::at_rate(0.015));
+        let mut buf = MlcBuffer::new(cfg, 2);
+        let r = buf.store(&enc).unwrap();
+        let (_, t) = harness::time_stats(3, || buf.load_with_threads(&r, 1).unwrap().words.len());
+        println!("buffer load (1 thr)      : {}", harness::rate(n as u64, t.median));
+        report.record("buffer_load_t1", n as u64, &t);
+        let (_, t) = harness::time_stats(3, || buf.load(&r).unwrap().words.len());
+        println!("buffer load (auto)       : {}", harness::rate(n as u64, t.median));
+        report.record("buffer_load", n as u64, &t);
     }
 
     // Buffer store+load with fault injection at the published rate.

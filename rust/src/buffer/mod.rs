@@ -23,6 +23,14 @@ use crate::util::threads;
 /// `rust/tests/swar_equivalence.rs`).
 pub const STORE_SHARD_WORDS: usize = 1 << 15;
 
+/// Fixed load-shard size in words. Like [`STORE_SHARD_WORDS`], boundaries
+/// depend only on the region length — never on the worker count or the
+/// bank geometry — so threaded reads bill bit-identical energy and cycles
+/// for any `MLCSTT_THREADS` value. A bank slot that straddles a shard
+/// boundary is handled by the shard-carry rule in
+/// [`MlcBuffer::load_with_threads`] (DESIGN.md §8).
+pub const LOAD_SHARD_WORDS: usize = 1 << 15;
+
 /// Static buffer configuration.
 #[derive(Clone, Debug)]
 pub struct BufferConfig {
@@ -32,11 +40,15 @@ pub struct BufferConfig {
     /// Parallel banks: one word per bank per access slot; latency of a slot
     /// is the max cell latency among its words.
     pub banks: usize,
+    /// Per-cell access cost table (paper Table 4).
     pub cost: CostModel,
+    /// Write/retention + read-disturb soft-error model.
     pub error_model: ErrorModel,
 }
 
 impl BufferConfig {
+    /// A buffer of `capacity_bytes` payload across `banks` parallel banks
+    /// with the paper's default cost table and error model.
     pub fn new(capacity_bytes: usize, banks: usize) -> Self {
         assert!(banks >= 1);
         BufferConfig {
@@ -53,11 +65,13 @@ impl BufferConfig {
         Self::new(sram_bytes * 4, banks)
     }
 
+    /// Builder-style error-model override.
     pub fn with_error_model(mut self, m: ErrorModel) -> Self {
         self.error_model = m;
         self
     }
 
+    /// Payload capacity in binary16 words (2 logical bytes each).
     pub fn capacity_words(&self) -> usize {
         self.capacity_bytes / 2
     }
@@ -66,20 +80,28 @@ impl BufferConfig {
 /// Cumulative transaction statistics.
 #[derive(Clone, Debug, Default)]
 pub struct AccessStats {
+    /// Words written across all stores.
     pub writes: u64,
+    /// Words read across all loads.
     pub reads: u64,
+    /// Content-dependent energy + banked latency billed on the write path.
     pub write_energy: Energy,
+    /// Content-dependent energy + banked latency billed on the read path.
     pub read_energy: Energy,
+    /// Words corrupted by fault injection (write path and disturb reads).
     pub injected_faults: u64,
 }
 
 /// A stored tensor's location + codec context.
 #[derive(Clone, Debug)]
 pub struct Region {
+    /// First payload word of the region.
     pub offset: usize,
+    /// Region length in words.
     pub len: usize,
     /// Metadata context needed to decode reads from this region.
     pub granularity: usize,
+    /// Encoding policy the region was stored under.
     pub policy: crate::encoding::Policy,
     meta_offset: usize,
     meta_len: usize,
@@ -87,6 +109,7 @@ pub struct Region {
 
 /// The buffer itself.
 pub struct MlcBuffer {
+    /// Static geometry, cost table, and error model.
     pub config: BufferConfig,
     words: Vec<u16>,
     meta: Vec<u8>, // tri-level symbols, one per group
@@ -99,7 +122,14 @@ pub struct MlcBuffer {
 /// Errors surfaced to the coordinator.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum BufferError {
-    CapacityExceeded { requested: usize, free: usize },
+    /// A store asked for more free words than the buffer has left.
+    CapacityExceeded {
+        /// Words the store needed.
+        requested: usize,
+        /// Words actually free.
+        free: usize,
+    },
+    /// A load named a region outside the current allocation.
     BadRegion,
 }
 
@@ -117,6 +147,8 @@ impl std::fmt::Display for BufferError {
 impl std::error::Error for BufferError {}
 
 impl MlcBuffer {
+    /// An empty buffer; `seed` drives all fault-injection randomness
+    /// (per-shard stream seeds derive from it in shard order).
     pub fn new(config: BufferConfig, seed: u64) -> Self {
         let cap = config.capacity_words();
         MlcBuffer {
@@ -130,10 +162,12 @@ impl MlcBuffer {
         }
     }
 
+    /// Unallocated payload words remaining.
     pub fn free_words(&self) -> usize {
         self.words.len() - self.used_words
     }
 
+    /// Cumulative transaction statistics since the last `reset_stats`.
     pub fn stats(&self) -> &AccessStats {
         &self.stats
     }
@@ -146,6 +180,7 @@ impl MlcBuffer {
         self.meta.clear();
     }
 
+    /// Zero the cumulative statistics (contents untouched).
     pub fn reset_stats(&mut self) {
         self.stats = AccessStats::default();
     }
@@ -182,51 +217,18 @@ impl MlcBuffer {
         let model = &self.config.error_model;
         let dst_all = &mut self.words[offset..offset + enc.len()];
 
-        let partials: Vec<(Energy, u64)>;
-        if workers <= 1 || n_shards <= 1 {
-            partials = enc
-                .words
-                .chunks(STORE_SHARD_WORDS)
-                .zip(dst_all.chunks_mut(STORE_SHARD_WORDS))
-                .zip(&seeds)
-                .map(|((src, dst), &seed)| store_shard(cost, model, src, dst, seed))
-                .collect();
-        } else {
-            // Hand each worker a contiguous batch of (shard, dst) jobs; the
-            // shard index travels with the job so partials can be reduced
-            // in shard order afterwards.
-            let jobs: Vec<(usize, &[u16], &mut [u16])> = enc
-                .words
-                .chunks(STORE_SHARD_WORDS)
-                .zip(dst_all.chunks_mut(STORE_SHARD_WORDS))
-                .enumerate()
-                .map(|(k, (src, dst))| (k, src, dst))
-                .collect();
-            let per_worker = jobs.len().div_ceil(workers.max(1));
-            let mut indexed: Vec<(usize, Energy, u64)> = std::thread::scope(|scope| {
-                let seeds = &seeds;
-                let mut handles = Vec::new();
-                let mut it = jobs.into_iter();
-                loop {
-                    let batch: Vec<_> = it.by_ref().take(per_worker).collect();
-                    if batch.is_empty() {
-                        break;
-                    }
-                    handles.push(scope.spawn(move || {
-                        batch
-                            .into_iter()
-                            .map(|(k, src, dst)| {
-                                let (e, f) = store_shard(cost, model, src, dst, seeds[k]);
-                                (k, e, f)
-                            })
-                            .collect::<Vec<_>>()
-                    }));
-                }
-                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
-            });
-            indexed.sort_unstable_by_key(|&(k, _, _)| k);
-            partials = indexed.into_iter().map(|(_, e, f)| (e, f)).collect();
-        }
+        // One job per shard; run_sharded returns partials in shard order,
+        // so the reduction below is worker-count-invariant.
+        let jobs: Vec<(usize, &[u16], &mut [u16])> = enc
+            .words
+            .chunks(STORE_SHARD_WORDS)
+            .zip(dst_all.chunks_mut(STORE_SHARD_WORDS))
+            .enumerate()
+            .map(|(k, (src, dst))| (k, src, dst))
+            .collect();
+        let partials = threads::run_sharded(jobs, workers, |(k, src, dst)| {
+            store_shard(cost, model, src, dst, seeds[k])
+        });
 
         for (energy, faults) in partials {
             self.stats.write_energy.add(energy);
@@ -255,33 +257,72 @@ impl MlcBuffer {
     }
 
     /// Read a region back as an `Encoded` view (stored images + schemes),
-    /// billing content-dependent read energy with banked latency.
+    /// billing content-dependent read energy with banked latency. Large
+    /// regions shard across worker threads (see [`LOAD_SHARD_WORDS`]).
     pub fn load(&mut self, region: &Region) -> Result<Encoded, BufferError> {
-        if region.offset + region.len > self.used_words
-            || region.meta_offset + region.meta_len > self.used_meta
-        {
-            return Err(BufferError::BadRegion);
-        }
-        let mut out = Vec::with_capacity(region.len);
-        let mut slot_cycles_total = 0u64;
+        self.load_with_threads(region, threads::auto_workers(region.len, LOAD_SHARD_WORDS))
+    }
+
+    /// [`Self::load`] with an explicit worker count. The returned words,
+    /// read-energy bill, and banked cycle count are bit-identical for
+    /// every `workers` value: shard boundaries sit at fixed multiples of
+    /// [`LOAD_SHARD_WORDS`] (data-dependent only), energy partials reduce
+    /// in shard order, and a bank slot that straddles a shard boundary is
+    /// stitched back together by the shard-carry rule (the open slot's
+    /// running max travels with the reduction; DESIGN.md §8).
+    pub fn load_with_threads(
+        &mut self,
+        region: &Region,
+        workers: usize,
+    ) -> Result<Encoded, BufferError> {
+        self.check_region(region)?;
+        let banks = self.config.banks;
+        let cost = &self.config.cost;
+        let src_all = &self.words[region.offset..region.offset + region.len];
+        let mut out = vec![0u16; region.len];
+
+        // One job per fixed-size shard; run_sharded returns partials in
+        // shard order, which the carry-rule reduction below requires.
+        let jobs: Vec<(usize, &[u16], &mut [u16])> = src_all
+            .chunks(LOAD_SHARD_WORDS)
+            .zip(out.chunks_mut(LOAD_SHARD_WORDS))
+            .enumerate()
+            .map(|(k, (src, dst))| (k, src, dst))
+            .collect();
+        let partials = threads::run_sharded(jobs, workers, |(k, src, dst)| {
+            load_shard(cost, src, dst, k * LOAD_SHARD_WORDS, banks)
+        });
+
+        // Shard-order reduction with the carry rule: `open` is the bank
+        // slot still accumulating its max across a shard boundary.
         let mut nj = 0.0f64;
-        for slot in self.words[region.offset..region.offset + region.len]
-            .chunks(self.config.banks)
-        {
-            let mut slot_cycles = 0u64;
-            for &w in slot {
-                // Read disturbance (off by default) mutates nothing here —
-                // the paper ignores it; ablations use `load_with_disturb`.
-                let e = self.config.cost.word(w, AccessKind::Read);
-                nj += e.nanojoules;
-                slot_cycles = slot_cycles.max(e.cycles);
-                out.push(w);
+        let mut cycles = 0u64;
+        let mut open: Option<(usize, u64)> = None;
+        for p in &partials {
+            nj += p.nj;
+            let head = match open.take() {
+                Some((slot, max)) if slot == p.head_slot => (slot, max.max(p.head_max)),
+                Some((_, max)) => {
+                    // The carried slot closed exactly at the boundary.
+                    cycles += max;
+                    (p.head_slot, p.head_max)
+                }
+                None => (p.head_slot, p.head_max),
+            };
+            match p.tail {
+                Some(tail) => {
+                    cycles += head.1 + p.interior_cycles;
+                    open = Some(tail);
+                }
+                None => open = Some(head),
             }
-            slot_cycles_total += slot_cycles;
+        }
+        if let Some((_, max)) = open {
+            cycles += max;
         }
         self.stats.read_energy.add(Energy {
             nanojoules: nj,
-            cycles: slot_cycles_total,
+            cycles,
         });
         self.stats.reads += region.len as u64;
 
@@ -304,21 +345,60 @@ impl MlcBuffer {
     /// Ablation path: a read that also applies read-disturb errors to the
     /// stored cells (persistently, as disturbance physically flips them).
     pub fn load_with_disturb(&mut self, region: &Region) -> Result<Encoded, BufferError> {
-        for i in region.offset..region.offset + region.len {
-            let w = self.words[i];
-            let d = self.config.error_model.corrupt_word_read(w, &mut self.rng);
-            if d != w {
-                self.stats.injected_faults += 1;
-                self.words[i] = d;
-            }
+        self.load_with_disturb_threads(
+            region,
+            threads::auto_workers(region.len, LOAD_SHARD_WORDS),
+        )
+    }
+
+    /// [`Self::load_with_disturb`] with an explicit worker count. Like the
+    /// store path, each fixed-size shard draws its RNG seed from the buffer
+    /// stream *in shard order before any worker runs*, so the disturbed
+    /// image and fault count are bit-identical for every `workers` value.
+    /// At the default `read_disturb_rate` of 0 this is exactly a plain
+    /// load: no RNG state is consumed, so a later stochastic store sees
+    /// the same seed stream either way.
+    pub fn load_with_disturb_threads(
+        &mut self,
+        region: &Region,
+        workers: usize,
+    ) -> Result<Encoded, BufferError> {
+        self.check_region(region)?;
+        if self.config.error_model.read_disturb_rate == 0.0 {
+            return self.load_with_threads(region, workers);
         }
-        self.load(region)
+        let n_shards = region.len.div_ceil(LOAD_SHARD_WORDS);
+        let seeds: Vec<u64> = (0..n_shards).map(|_| self.rng.next_u64()).collect();
+        let model = &self.config.error_model;
+        let words = &mut self.words[region.offset..region.offset + region.len];
+
+        let jobs: Vec<(usize, &mut [u16])> =
+            words.chunks_mut(LOAD_SHARD_WORDS).enumerate().collect();
+        let faults: u64 = threads::run_sharded(jobs, workers, |(k, shard)| {
+            disturb_shard(model, shard, seeds[k])
+        })
+        .into_iter()
+        .sum();
+        self.stats.injected_faults += faults;
+        self.load_with_threads(region, workers)
+    }
+
+    /// Bounds-check a region against the current allocation.
+    fn check_region(&self, region: &Region) -> Result<(), BufferError> {
+        if region.offset + region.len > self.used_words
+            || region.meta_offset + region.meta_len > self.used_meta
+        {
+            return Err(BufferError::BadRegion);
+        }
+        Ok(())
     }
 }
 
 /// Write one store shard: bill the energy of programming the *intended*
 /// image, then let the write/retention error model corrupt vulnerable
-/// cells in the stored copy. Returns `(energy, injected_faults)`.
+/// cells in the stored copy via the packed geometric-skip sampler
+/// (DESIGN.md §8). Returns `(energy, injected_faults)` where faults count
+/// changed words.
 fn store_shard(
     cost: &CostModel,
     model: &ErrorModel,
@@ -328,16 +408,94 @@ fn store_shard(
 ) -> (Energy, u64) {
     let mut rng = Xoshiro256::seeded(seed);
     let mut energy = Energy::ZERO;
-    let mut faults = 0u64;
-    for (d, &w) in dst.iter_mut().zip(src) {
+    for &w in src {
         energy.add(cost.word(w, AccessKind::Write));
-        let stored = model.corrupt_word_write(w, &mut rng);
-        if stored != w {
-            faults += 1;
-        }
-        *d = stored;
     }
-    (energy, faults)
+    dst.copy_from_slice(src);
+    let (words_changed, _) = model.corrupt_words_write(dst, &mut rng);
+    (energy, words_changed)
+}
+
+/// Per-shard read accounting, shaped for the carry-rule reduction in
+/// [`MlcBuffer::load_with_threads`]. Bank slots are global (region-relative
+/// index / banks); a shard reports the possibly-partial slot it starts in
+/// (`head`), the summed maxes of slots fully inside it (`interior`), and —
+/// when it touches more than one slot — the possibly-partial slot it ends
+/// in (`tail`), which the next shard may continue.
+struct LoadPartial {
+    /// Read energy of this shard's words (nanojoules sum, in word order).
+    nj: f64,
+    /// Global index of the first bank slot this shard touches.
+    head_slot: usize,
+    /// Max cell latency observed in `head_slot` within this shard.
+    head_max: u64,
+    /// Total cycles of slots that begin *and* end inside this shard.
+    interior_cycles: u64,
+    /// `(slot, max)` of the last slot touched, when it differs from the
+    /// head slot (it may continue into the next shard).
+    tail: Option<(usize, u64)>,
+}
+
+/// Read one load shard: copy the stored words out and fold per-word read
+/// costs into a [`LoadPartial`]. `start` is the shard's region-relative
+/// word offset (always a multiple of [`LOAD_SHARD_WORDS`]).
+fn load_shard(
+    cost: &CostModel,
+    src: &[u16],
+    dst: &mut [u16],
+    start: usize,
+    banks: usize,
+) -> LoadPartial {
+    dst.copy_from_slice(src);
+    let head_slot = start / banks;
+    let mut nj = 0.0f64;
+    let mut cur_slot = head_slot;
+    let mut cur_max = 0u64;
+    let mut head_max = 0u64;
+    let mut interior = 0u64;
+    let mut head_done = false;
+    for (i, &w) in src.iter().enumerate() {
+        let slot = (start + i) / banks;
+        if slot != cur_slot {
+            if head_done {
+                interior += cur_max;
+            } else {
+                head_max = cur_max;
+                head_done = true;
+            }
+            cur_slot = slot;
+            cur_max = 0;
+        }
+        let e = cost.word(w, AccessKind::Read);
+        nj += e.nanojoules;
+        cur_max = cur_max.max(e.cycles);
+    }
+    if head_done {
+        LoadPartial {
+            nj,
+            head_slot,
+            head_max,
+            interior_cycles: interior,
+            tail: Some((cur_slot, cur_max)),
+        }
+    } else {
+        // The whole shard sits inside a single bank slot.
+        LoadPartial {
+            nj,
+            head_slot,
+            head_max: cur_max,
+            interior_cycles: 0,
+            tail: None,
+        }
+    }
+}
+
+/// Apply read-disturb errors to one shard of stored words with its own
+/// seeded RNG stream (geometric-skip sampler); returns changed words.
+fn disturb_shard(model: &ErrorModel, shard: &mut [u16], seed: u64) -> u64 {
+    let mut rng = Xoshiro256::seeded(seed);
+    let (words_changed, _) = model.corrupt_words_read(shard, &mut rng);
+    words_changed
 }
 
 #[cfg(test)]
@@ -523,6 +681,31 @@ mod tests {
         buf.clear();
         assert_eq!(buf.free_words(), 100);
         buf.store(&enc).unwrap();
+    }
+
+    #[test]
+    fn disturb_load_at_rate_zero_is_exactly_a_plain_load() {
+        // With read disturb off (the default), load_with_disturb must not
+        // consume RNG state: a stochastic store issued afterwards has to
+        // produce the same flip set as if only plain loads had run.
+        let enc = WeightCodec::new(Policy::Unprotected, 1).encode(&ramp(4096));
+        let cfg = BufferConfig::new(enc.len() * 4, 4)
+            .with_error_model(ErrorModel::new(0.02, 0.0));
+        let run = |disturb_first: bool| {
+            let mut buf = MlcBuffer::new(cfg.clone(), 0xFEED);
+            let r = buf.store(&enc).unwrap();
+            let loaded = if disturb_first {
+                buf.load_with_disturb(&r).unwrap()
+            } else {
+                buf.load(&r).unwrap()
+            };
+            let r2 = buf.store(&enc).unwrap();
+            (loaded.words, buf.load(&r2).unwrap().words)
+        };
+        let (l1, s1) = run(false);
+        let (l2, s2) = run(true);
+        assert_eq!(l1, l2, "rate-0 disturb load changed the read image");
+        assert_eq!(s1, s2, "rate-0 disturb load consumed RNG state");
     }
 
     #[test]

@@ -33,6 +33,7 @@ struct Request {
 /// The server's answer.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Predicted class index.
     pub class: usize,
     /// Time spent queued + batched + executed.
     pub latency: Duration,
@@ -43,12 +44,27 @@ pub struct Response {
 pub struct ServerConfig {
     /// Flush a partial batch after this long (fills with repeats).
     pub max_wait: Duration,
+    /// Worker-thread cap for codec work on the serve path. The server
+    /// loop itself runs no codec work — weight materialization happens
+    /// before [`Server::start`] — so serving entry points (`mlcstt
+    /// serve`, `examples/serve_e2e.rs`) copy this value into
+    /// [`crate::coordinator::StoreConfig::threads`], which drives
+    /// `load_with_threads` +
+    /// [`crate::encoding::Encoded::decode_into_threaded`] during
+    /// materialization. The default resolves
+    /// [`crate::util::threads::available`], so deployments pin codec
+    /// parallelism per worker by exporting `MLCSTT_THREADS` instead of
+    /// inheriting the machine's full `available_parallelism`. Results are
+    /// bit-identical for every value (DESIGN.md §7/§8); only latency
+    /// changes.
+    pub codec_threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             max_wait: Duration::from_millis(20),
+            codec_threads: crate::util::threads::available(),
         }
     }
 }
@@ -56,11 +72,17 @@ impl Default for ServerConfig {
 /// Aggregate serving metrics.
 #[derive(Clone, Debug)]
 pub struct ServerReport {
+    /// Requests answered.
     pub served: usize,
+    /// Batches executed.
     pub batches: usize,
+    /// Mean real requests per batch (the rest is padding).
     pub mean_batch_fill: f64,
+    /// Median end-to-end request latency, milliseconds.
     pub p50_ms: f64,
+    /// 99th-percentile end-to-end request latency, milliseconds.
     pub p99_ms: f64,
+    /// Requests per second over the serving wall-clock window.
     pub throughput_rps: f64,
 }
 
@@ -88,6 +110,7 @@ pub struct Ticket {
 }
 
 impl Ticket {
+    /// Block until the server answers this request.
     pub fn wait(self) -> Result<Response> {
         Ok(self.rx.recv()?)
     }

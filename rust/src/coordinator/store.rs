@@ -3,10 +3,25 @@
 
 use anyhow::{ensure, Context, Result};
 
-use crate::buffer::{BufferConfig, MlcBuffer, Region};
+use crate::buffer::{BufferConfig, LOAD_SHARD_WORDS, MlcBuffer, Region};
+use crate::encoding::codec::MIN_WEIGHTS_PER_WORKER;
 use crate::encoding::{Policy, WeightCodec};
 use crate::runtime::artifacts::{ParamSpec, WeightFile};
 use crate::stt::{Energy, ErrorModel};
+use crate::util::threads;
+
+/// Resolve a pinned worker count against the actual work: `pin == 0`
+/// defers to the auto policy; a nonzero pin is a **cap**, still floored by
+/// the per-worker minimum so tiny tensors stay single-threaded (spawning
+/// the full pinned fan-out for a 1k-word bias tensor would cost more than
+/// the work).
+fn workers_for(pin: usize, items: usize, min_per_worker: usize) -> usize {
+    if pin == 0 {
+        threads::auto_workers(items, min_per_worker)
+    } else {
+        pin.min(items / min_per_worker.max(1)).max(1)
+    }
+}
 
 /// Store configuration: protection policy + buffer sizing.
 #[derive(Clone, Debug)]
@@ -17,8 +32,18 @@ pub struct StoreConfig {
     /// Buffer capacity in bytes; `None` sizes the buffer to fit the model
     /// exactly (the common experiment configuration).
     pub capacity_bytes: Option<usize>,
+    /// Parallel buffer banks (read/write slot width).
     pub banks: usize,
+    /// Fault-injection RNG seed for the underlying buffer.
     pub seed: u64,
+    /// Codec worker-thread **cap** for encode/decode on this store's
+    /// tensors; `0` auto-sizes per tensor (respecting `MLCSTT_THREADS`,
+    /// see [`crate::util::threads::available`]). A nonzero cap is still
+    /// floored by per-worker minimum work, so tiny tensors run inline.
+    /// Serving deployments pin this from
+    /// [`crate::coordinator::ServerConfig::codec_threads`]. Results are
+    /// bit-identical for every value.
+    pub threads: usize,
 }
 
 impl Default for StoreConfig {
@@ -30,6 +55,7 @@ impl Default for StoreConfig {
             capacity_bytes: None,
             banks: 16,
             seed: 0xD1CE,
+            threads: 0,
         }
     }
 }
@@ -55,6 +81,8 @@ pub struct WeightStore {
     entries: Vec<(ParamSpec, Region)>,
     metadata_overhead: f64,
     soft_cells: u64,
+    /// Pinned codec worker count (0 = auto per tensor).
+    threads: usize,
 }
 
 impl WeightStore {
@@ -71,8 +99,10 @@ impl WeightStore {
         let mut entries = Vec::with_capacity(weights.params.len());
         let mut overhead_num = 0.0;
         let mut soft = 0u64;
+        let mut enc = crate::encoding::Encoded::with_context(cfg.policy, cfg.granularity);
         for p in &weights.params {
-            let enc = codec.encode(&p.data);
+            let w = workers_for(cfg.threads, p.data.len(), MIN_WEIGHTS_PER_WORKER);
+            codec.encode_into_threaded(&p.data, &mut enc, w);
             soft += enc.soft_cells();
             overhead_num += enc.metadata_overhead() * enc.len() as f64;
             let region = buffer
@@ -86,6 +116,7 @@ impl WeightStore {
             entries,
             metadata_overhead: overhead_num / total as f64,
             soft_cells: soft,
+            threads: cfg.threads,
         })
     }
 
@@ -94,18 +125,26 @@ impl WeightStore {
     }
 
     /// Read every tensor back through the buffer (bills read energy) and
-    /// decode to the f32 tensors fed to the executable.
+    /// decode to the f32 tensors fed to the executable. This is the serve
+    /// path: loads and decodes run threaded under the pinned worker count
+    /// ([`StoreConfig::threads`], `MLCSTT_THREADS`-aware when 0/auto), via
+    /// [`crate::buffer::MlcBuffer::load_with_threads`] and
+    /// [`crate::encoding::Encoded::decode_into_threaded`].
     pub fn materialize(&mut self) -> Result<Vec<ParamSpec>> {
         let mut out = Vec::with_capacity(self.entries.len());
         for (meta, region) in &self.entries {
+            let wl = workers_for(self.threads, region.len, LOAD_SHARD_WORDS);
             let enc = self
                 .buffer
-                .load(region)
+                .load_with_threads(region, wl)
                 .with_context(|| format!("loading tensor {}", meta.name))?;
+            let mut data = Vec::new();
+            let wd = workers_for(self.threads, enc.len(), MIN_WEIGHTS_PER_WORKER);
+            enc.decode_into_threaded(&mut data, wd);
             out.push(ParamSpec {
                 name: meta.name.clone(),
                 shape: meta.shape.clone(),
-                data: enc.decode(),
+                data,
             });
         }
         Ok(out)
@@ -221,6 +260,41 @@ mod tests {
             ..StoreConfig::default()
         };
         assert!(WeightStore::load(&cfg, &wf).is_err());
+    }
+
+    #[test]
+    fn workers_for_caps_by_pin_and_floors_by_work() {
+        // pin 0 defers to auto (always >= 1); nonzero pins cap but never
+        // force threading onto tiny tensors.
+        assert_eq!(workers_for(7, 1000, 65536), 1, "tiny tensor stays inline");
+        assert_eq!(workers_for(7, 140_000, 65536), 2, "cap floored by work");
+        assert_eq!(workers_for(1, 1 << 20, 65536), 1, "pin 1 is inline");
+        assert!(workers_for(0, 1 << 20, 65536) >= 1);
+    }
+
+    #[test]
+    fn pinned_threads_materialize_identically() {
+        // The serve path must produce bit-identical tensors whatever the
+        // pinned codec worker count (0 = auto included). Tensors exceed
+        // 2 * MIN_WEIGHTS_PER_WORKER words so pinned runs really thread.
+        let wf = weight_file(300_000);
+        let run = |threads: usize| {
+            let cfg = StoreConfig {
+                threads,
+                error_model: ErrorModel::at_rate(0.02),
+                seed: 9,
+                ..StoreConfig::default()
+            };
+            let mut store = WeightStore::load(&cfg, &wf).unwrap();
+            store.materialize().unwrap()
+        };
+        let base = run(1);
+        for t in [0usize, 2, 7] {
+            let got = run(t);
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.data, b.data, "threads={t} tensor={}", a.name);
+            }
+        }
     }
 
     #[test]

@@ -33,6 +33,8 @@ pub struct WeightCodec {
 }
 
 impl WeightCodec {
+    /// A codec with an explicit policy and metadata granularity
+    /// (granularity must be >= 1).
     pub fn new(policy: Policy, granularity: usize) -> Self {
         assert!(granularity >= 1, "granularity must be >= 1");
         WeightCodec {
@@ -209,7 +211,9 @@ pub struct Encoded {
     /// Per-group scheme symbols (empty for `Unprotected`), stored in the
     /// tri-level metadata plane.
     pub schemes: Vec<Scheme>,
+    /// Weights per metadata group this stream was encoded at.
     pub granularity: usize,
+    /// Policy this stream was encoded under (decides decode semantics).
     pub policy: Policy,
 }
 
@@ -225,10 +229,12 @@ impl Encoded {
         }
     }
 
+    /// Number of stored words (== number of weights).
     pub fn len(&self) -> usize {
         self.words.len()
     }
 
+    /// True iff the stream holds no words.
     pub fn is_empty(&self) -> bool {
         self.words.is_empty()
     }
@@ -292,12 +298,11 @@ impl Encoded {
 
     /// Decode one group-aligned shard starting at word index `start`:
     /// invert each group's scheme with the SWAR kernels into a scratch
-    /// buffer, then convert to f32.
+    /// buffer, then convert to f32 through the converter selected by
+    /// [`fp::f16_mode`] (LUT by default — the decode-floor lift).
     fn decode_range(&self, start: usize, src: &[u16], dst: &mut [f32]) {
         if self.policy == Policy::Unprotected {
-            for (o, &w) in dst.iter_mut().zip(src) {
-                *o = fp::f16_bits_to_f32(w);
-            }
+            fp::decode_f16_slice(src, dst);
             return;
         }
         let g = self.granularity;
@@ -307,9 +312,7 @@ impl Encoded {
         for ((w_src, &s), o_dst) in src.chunks(g).zip(schemes).zip(dst.chunks_mut(g)) {
             let canonical = &mut scratch[..w_src.len()];
             swar::invert_into(s, w_src, canonical);
-            for (o, &h) in o_dst.iter_mut().zip(canonical.iter()) {
-                *o = fp::f16_bits_to_f32(h);
-            }
+            fp::decode_f16_slice(canonical, o_dst);
         }
     }
 

@@ -27,19 +27,13 @@ impl FaultCampaign {
         FaultCampaign { error_model, seed }
     }
 
-    /// Corrupt an encoded stream in place (write/retention faults), and
-    /// report how many cells actually flipped.
+    /// Corrupt an encoded stream in place (write/retention faults) via the
+    /// packed geometric-skip sampler (DESIGN.md §8), and report how many
+    /// cells actually flipped.
     pub fn inject(&self, enc: &mut Encoded) -> u64 {
         let mut rng = Xoshiro256::seeded(self.seed);
-        let mut flipped = 0u64;
-        for w in enc.words.iter_mut() {
-            let new = self.error_model.corrupt_word_write(*w, &mut rng);
-            if new != *w {
-                flipped += (fp::soft_cells(*w ^ new).max(1)) as u64;
-                *w = new;
-            }
-        }
-        flipped
+        let (_, cells_flipped) = self.error_model.corrupt_words_write(&mut enc.words, &mut rng);
+        cells_flipped
     }
 
     /// The full §6 pipeline for one tensor: encode -> fault -> decode.

@@ -165,6 +165,160 @@ pub fn flip_bit(h: u16, pos: u32) -> u16 {
     h ^ (1 << pos)
 }
 
+// ------------------------------------------------------- fast converters
+//
+// `f32↔f16` conversion is the decode floor (ROADMAP): every stage
+// downstream of the codec moves u16 words around, but the first and last
+// touch of every weight is a conversion. Two accelerated implementations
+// live here, both bit-exact against the scalar reference above (pinned
+// exhaustively over all 65536 patterns by `rust/tests/read_path.rs`):
+//
+// * a 16-bit-indexed **lookup table** — 32768 magnitude entries (128 KB,
+//   built once via `OnceLock`); the sign transfers with one shift-OR, so
+//   the table only needs `h & 0x7FFF`;
+// * a **branchless converter** — all three input classes (normal,
+//   subnormal/zero, Inf/NaN) computed unconditionally and merged with
+//   mask arithmetic, no data-dependent branches.
+//
+// The batch entry points ([`decode_f16_slice`], [`quantize_into`]) pick an
+// implementation once per process via [`f16_mode`]; the scalar functions
+// remain the oracle and the `MLCSTT_F16=scalar` escape hatch.
+
+use std::sync::OnceLock;
+
+/// Which `f16↔f32` converter the batch paths use. Resolved once from the
+/// `MLCSTT_F16` environment variable (`lut` | `branchless` | `scalar`);
+/// the default is [`F16Mode::Lut`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum F16Mode {
+    /// 128 KB magnitude-indexed decode table (default — fastest on every
+    /// target with a sane L2).
+    Lut,
+    /// Branch-free bit manipulation; no table, no cache footprint.
+    Branchless,
+    /// The reference converters, kept as oracle and escape hatch.
+    Scalar,
+}
+
+/// The converter selection for this process (see [`F16Mode`]).
+pub fn f16_mode() -> F16Mode {
+    static MODE: OnceLock<F16Mode> = OnceLock::new();
+    *MODE.get_or_init(|| match std::env::var("MLCSTT_F16").as_deref() {
+        Ok("branchless") => F16Mode::Branchless,
+        Ok("scalar") => F16Mode::Scalar,
+        _ => F16Mode::Lut,
+    })
+}
+
+/// Magnitude half of the decode LUT: entry `m` holds the f32 bit pattern
+/// of the f16 word `m` (`m < 0x8000`); negative words OR the sign into
+/// bit 31. 32768 × 4 bytes = 128 KB, built once on first use.
+fn f16_mag_lut() -> &'static [u32] {
+    static LUT: OnceLock<Box<[u32]>> = OnceLock::new();
+    LUT.get_or_init(|| {
+        (0..0x8000u32)
+            .map(|m| f16_bits_to_f32(m as u16).to_bits())
+            .collect()
+    })
+}
+
+/// [`f16_bits_to_f32`] via the 128 KB magnitude LUT (exact).
+#[inline]
+pub fn f16_bits_to_f32_lut(h: u16) -> f32 {
+    let mag = f16_mag_lut()[(h & 0x7FFF) as usize];
+    f32::from_bits(mag | (((h & 0x8000) as u32) << 16))
+}
+
+/// [`f16_bits_to_f32`] without branches: the normal, subnormal/zero, and
+/// Inf/NaN images are all computed, then merged with comparison masks.
+/// Exact for every one of the 65536 patterns (NaNs quieted exactly as the
+/// scalar path quiets them).
+#[inline]
+pub fn f16_bits_to_f32_branchless(h: u16) -> f32 {
+    let mag = (h & 0x7FFF) as u32;
+    let sign = ((h & 0x8000) as u32) << 16;
+    // Normal: shift exponent+mantissa into place, rebias 15 -> 127.
+    let norm = (mag << 13) + (112u32 << 23);
+    // Subnormal/zero: value = mag * 2^-24, exact in f32 (mag < 2^11).
+    let sub = (mag as f32 * f32::from_bits(0x3380_0000)).to_bits();
+    // All-ones / all-zero class masks.
+    let is_sub = 0u32.wrapping_sub((mag < 0x0400) as u32);
+    let is_inf_nan = 0u32.wrapping_sub((mag >= 0x7C00) as u32);
+    let is_nan = 0u32.wrapping_sub((mag > 0x7C00) as u32);
+    // Inf/NaN: push the rebiased exponent (143) up to 255; quiet NaNs the
+    // way the scalar converter does (OR the quiet bit).
+    let special = norm + (112u32 << 23);
+    let bits = (norm & !is_sub & !is_inf_nan)
+        | (sub & is_sub)
+        | (special & is_inf_nan)
+        | (is_nan & 0x0040_0000);
+    f32::from_bits(bits | sign)
+}
+
+/// [`f32_to_f16_bits`] via the magic-addend method (Giesen's
+/// `float_to_half_fast3_rtne`): round-to-nearest-even happens inside one
+/// FPU add for the subnormal range and one integer add for normals, so the
+/// only branches are the two class selects (compiled to cmovs). Bit-exact
+/// against the scalar converter, including overflow-to-infinity at the
+/// rounding boundary and NaN quieting.
+#[inline]
+pub fn f32_to_f16_bits_fast(x: f32) -> u16 {
+    const F32_INFTY: u32 = 255 << 23;
+    // Smallest magnitude that overflows f16 even before rounding (2^16).
+    const F16_MAX: u32 = (127 + 16) << 23;
+    // 0.5f32: adding it to a would-be-subnormal aligns the mantissa so the
+    // FPU's own round-to-nearest-even produces the f16 subnormal bits.
+    const DENORM_MAGIC: u32 = ((127 - 15) + (23 - 10) + 1) << 23;
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let f = bits ^ sign;
+    let o: u16 = if f >= F16_MAX {
+        if f > F32_INFTY {
+            0x7E00 // NaN -> quiet NaN
+        } else {
+            0x7C00 // overflow / Inf -> Inf
+        }
+    } else if f < (113 << 23) {
+        // Subnormal-or-zero result: the magic addend performs the shift
+        // and the tie-to-even rounding in one float add.
+        let v = f32::from_bits(f) + f32::from_bits(DENORM_MAGIC);
+        (v.to_bits() - DENORM_MAGIC) as u16
+    } else {
+        // Normal: rebias and round in integer space; a mantissa carry
+        // propagates into the exponent exactly as IEEE requires.
+        let mant_odd = (f >> 13) & 1;
+        let adj = f.wrapping_add(0xC800_0FFF).wrapping_add(mant_odd);
+        (adj >> 13) as u16
+    };
+    o | ((sign >> 16) as u16)
+}
+
+/// Convert a stored-word slice to f32 through the converter selected by
+/// [`f16_mode`] (the codec's decode inner loop).
+pub fn decode_f16_slice(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "decode_f16_slice length mismatch");
+    match f16_mode() {
+        F16Mode::Lut => {
+            let lut = f16_mag_lut();
+            for (d, &h) in dst.iter_mut().zip(src) {
+                *d = f32::from_bits(
+                    lut[(h & 0x7FFF) as usize] | (((h & 0x8000) as u32) << 16),
+                );
+            }
+        }
+        F16Mode::Branchless => {
+            for (d, &h) in dst.iter_mut().zip(src) {
+                *d = f16_bits_to_f32_branchless(h);
+            }
+        }
+        F16Mode::Scalar => {
+            for (d, &h) in dst.iter_mut().zip(src) {
+                *d = f16_bits_to_f32(h);
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------------------ SWAR
 //
 // Word-packed variants of the cell statistics: four binary16 words ride in
@@ -217,11 +371,18 @@ pub fn pattern_counts_packed(x: u64) -> [u32; 4] {
 
 /// Quantize a slice of f32 weights to binary16 bits into a caller buffer
 /// (same length). The slice form lets threaded callers write disjoint
-/// output shards without allocating.
+/// output shards without allocating. Uses the fast converter unless
+/// `MLCSTT_F16=scalar` (see [`f16_mode`]); both are bit-exact.
 pub fn quantize_into(src: &[f32], dst: &mut [u16]) {
     assert_eq!(src.len(), dst.len(), "quantize_into length mismatch");
-    for (d, &s) in dst.iter_mut().zip(src) {
-        *d = f32_to_f16_bits(s);
+    if f16_mode() == F16Mode::Scalar {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f32_to_f16_bits(s);
+        }
+    } else {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = f32_to_f16_bits_fast(s);
+        }
     }
 }
 
@@ -439,6 +600,82 @@ mod tests {
         quantize_into(&fs, &mut out);
         for (&f, &h) in fs.iter().zip(&out) {
             assert_eq!(h, f32_to_f16_bits(f));
+        }
+    }
+
+    #[test]
+    fn fast_decoders_match_scalar_exhaustively() {
+        // The full lane-position sweep lives in tests/read_path.rs; this is
+        // the in-crate exhaustive check of both accelerated decoders.
+        for h in 0..=u16::MAX {
+            let want = f16_bits_to_f32(h).to_bits();
+            assert_eq!(f16_bits_to_f32_lut(h).to_bits(), want, "lut h={h:#06x}");
+            assert_eq!(
+                f16_bits_to_f32_branchless(h).to_bits(),
+                want,
+                "branchless h={h:#06x}"
+            );
+        }
+    }
+
+    #[test]
+    fn fast_encoder_matches_scalar_on_f16_values_and_boundaries() {
+        // Every exact f16 value round-trips identically through both
+        // encoders, as do the rounding/overflow boundary cases.
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            assert_eq!(
+                f32_to_f16_bits_fast(x),
+                f32_to_f16_bits(x),
+                "h={h:#06x} x={x}"
+            );
+        }
+        for x in [
+            0.0f32,
+            -0.0,
+            1.0 + 2f32.powi(-11),       // tie, rounds to even (down)
+            1.0 + 3.0 * 2f32.powi(-11), // tie, rounds to even (up)
+            65504.0,
+            65519.9,                    // just below the round-to-inf boundary
+            65520.0,                    // rounds up past max finite -> Inf
+            1e6,
+            -1e6,
+            6.103515625e-5,             // min normal
+            6.0e-5,                     // subnormal range
+            5.960464477539063e-8,       // min subnormal
+            2.9802322e-8,               // half the min subnormal (tie -> 0)
+            1e-40,                      // f32 subnormal input
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+        ] {
+            assert_eq!(f32_to_f16_bits_fast(x), f32_to_f16_bits(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn fast_encoder_matches_scalar_on_stepped_u32_sweep() {
+        // Deterministic sweep across the whole f32 bit space (including
+        // NaN payloads and subnormals): ~65k patterns at a large odd step.
+        let mut bits = 0x9E37_79B9u32;
+        for _ in 0..65536 {
+            let x = f32::from_bits(bits);
+            assert_eq!(
+                f32_to_f16_bits_fast(x),
+                f32_to_f16_bits(x),
+                "bits={bits:#010x}"
+            );
+            bits = bits.wrapping_add(0x0001_0865); // odd step, full-period
+        }
+    }
+
+    #[test]
+    fn decode_slice_matches_scalar_under_selected_mode() {
+        let words: Vec<u16> = (0..4099u32).map(|i| (i.wrapping_mul(40503)) as u16).collect();
+        let mut out = vec![0f32; words.len()];
+        decode_f16_slice(&words, &mut out);
+        for (&h, &v) in words.iter().zip(&out) {
+            assert_eq!(v.to_bits(), f16_bits_to_f32(h).to_bits(), "h={h:#06x}");
         }
     }
 

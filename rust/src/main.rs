@@ -330,11 +330,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let (hlo, _, _) = model_paths(&dir, &model);
 
     // Weight path: encode -> buffer -> faults -> decode, with accounting.
+    // The server config owns the codec-parallelism pin (MLCSTT_THREADS);
+    // the store inherits it so load/decode run at the serving budget.
+    let server_cfg = ServerConfig {
+        max_wait,
+        ..ServerConfig::default()
+    };
     let cfg = StoreConfig {
         policy,
         granularity,
         error_model: ErrorModel::at_rate(rate),
         seed,
+        threads: server_cfg.codec_threads,
         ..StoreConfig::default()
     };
     let mut store = WeightStore::load(&cfg, &weights)?;
@@ -358,7 +365,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             let exec = Executor::from_hlo_file(&hlo)?;
             InferenceEngine::new(exec, manifest2, &tensors)
         },
-        ServerConfig { max_wait },
+        server_cfg,
     )?;
 
     // Replay test images as requests (open loop).

@@ -155,6 +155,33 @@ impl ErrorModel {
         self.corrupt_word(h, self.write_error_rate, rng)
     }
 
+    /// Corrupt a word slice in place with the packed **geometric-skip
+    /// sampler** (write/retention path). Returns `(words_changed,
+    /// cells_flipped)`.
+    ///
+    /// Instead of one binomial draw per word, the sampler walks the
+    /// stream of vulnerable cells and draws the *gap to the next flip*
+    /// from the geometric law `P(gap = g) = (1-p)^g p` — exactly the
+    /// inter-arrival distribution of the independent-per-cell Bernoulli
+    /// model, so the flip-set distribution is identical to
+    /// [`Self::corrupt_word_write`] / the naive per-cell oracle (pinned by
+    /// the compat tests in `rust/tests/read_path.rs`). At the published
+    /// rates the mean gap is ~66 cells ≈ 8 words, so most four-word lane
+    /// groups are skipped with one packed popcount and **zero** RNG draws;
+    /// only landings pay for randomness (one junction draw + one gap
+    /// draw). Callers own seed-order semantics: the buffer derives one
+    /// seeded RNG per fixed-size shard in shard order (DESIGN.md §8).
+    pub fn corrupt_words_write(&self, ws: &mut [u16], rng: &mut Xoshiro256) -> (u64, u64) {
+        corrupt_slice(self.write_error_rate, ws, rng)
+    }
+
+    /// Slice form of the read-disturb path (same geometric-skip sampler at
+    /// [`Self::read_disturb_rate`]); no-op at the default rate 0. Returns
+    /// `(words_changed, cells_flipped)`.
+    pub fn corrupt_words_read(&self, ws: &mut [u16], rng: &mut Xoshiro256) -> (u64, u64) {
+        corrupt_slice(self.read_disturb_rate, ws, rng)
+    }
+
     /// Apply read-disturb errors to a word (no-op at the default rate 0).
     pub fn corrupt_word_read(&self, h: u16, rng: &mut Xoshiro256) -> u16 {
         if self.read_disturb_rate == 0.0 {
@@ -181,6 +208,91 @@ impl ErrorModel {
     pub fn expected_cell_errors(&self, h: u16) -> f64 {
         fp::soft_cells(h) as f64 * self.write_error_rate
     }
+}
+
+/// One geometric gap draw: `floor(ln U / ln(1-p))` with `U ∈ (0, 1]` is
+/// distributed as the number of surviving cells before the next flip in an
+/// independent-per-cell Bernoulli(`p`) stream. `ln(1-p)` is precomputed by
+/// the caller; at `p = 1` it is `-inf` and the gap is always 0 (every
+/// vulnerable cell flips), so the hot loop needs no rate special-casing.
+#[inline]
+fn geometric_gap(ln_q: f64, rng: &mut Xoshiro256) -> u64 {
+    // 1 - next_f64() ∈ (0, 1]: never ln(0).
+    ((1.0 - rng.next_f64()).ln() / ln_q) as u64
+}
+
+/// Walk one word's *original* vulnerable cells (LSB-first), consuming
+/// `skip` cells; every landing flips one uniformly-chosen junction of the
+/// hit cell and draws the next gap. A single-bit flip always turns an
+/// intermediate state into a base state, so each original cell can flip at
+/// most once — the same "distinct cells" property the binomial path
+/// enforces by partial Fisher–Yates. Returns the skip left over after the
+/// word's remaining cells are consumed.
+#[inline]
+fn geometric_word(
+    w: &mut u16,
+    mut skip: u64,
+    ln_q: f64,
+    rng: &mut Xoshiro256,
+    cells_flipped: &mut u64,
+) -> u64 {
+    let mut mask = (*w ^ (*w >> 1)) & 0x5555;
+    let mut k = u64::from(mask.count_ones());
+    while skip < k {
+        // Advance to the skip-th remaining vulnerable cell.
+        for _ in 0..skip {
+            mask &= mask - 1;
+        }
+        let pos = mask.trailing_zeros();
+        // Uniform choice between the soft (LSB) and hard (MSB) junction —
+        // same convention as the per-word paths.
+        let bit = pos + u32::from(!rng.chance(0.5));
+        *w ^= 1 << bit;
+        *cells_flipped += 1;
+        k -= skip + 1;
+        mask &= mask - 1; // consume the hit cell
+        skip = geometric_gap(ln_q, rng);
+    }
+    skip - k
+}
+
+/// The packed geometric-skip engine shared by the write and read-disturb
+/// slice paths: four-word lane groups whose packed soft-cell count fits
+/// inside the current gap are skipped with one subtraction.
+fn corrupt_slice(rate: f64, ws: &mut [u16], rng: &mut Xoshiro256) -> (u64, u64) {
+    if rate == 0.0 || ws.is_empty() {
+        return (0, 0);
+    }
+    // ln_1p keeps ln(1-p) accurate for tiny p: computing `(1.0 - p).ln()`
+    // would round to ln(1.0) = 0 below p ~ 1e-16 and make every gap
+    // collapse to 0 (flipping everything instead of nothing). At p = 1 it
+    // is -inf, which the gap formula handles (gap always 0).
+    let ln_q = (-rate).ln_1p();
+    let mut skip = geometric_gap(ln_q, rng);
+    let mut words_changed = 0u64;
+    let mut cells_flipped = 0u64;
+    let mut corrupt_word = |w: &mut u16, skip: u64| -> u64 {
+        let before = *w;
+        let left = geometric_word(w, skip, ln_q, rng, &mut cells_flipped);
+        words_changed += u64::from(*w != before);
+        left
+    };
+    let mut chunks = ws.chunks_exact_mut(fp::LANES);
+    for c in &mut chunks {
+        let group = fp::pack4([c[0], c[1], c[2], c[3]]);
+        let group_soft = u64::from(fp::soft_cells_packed(group));
+        if skip >= group_soft {
+            skip -= group_soft; // common case: no flip lands in this group
+            continue;
+        }
+        for w in c.iter_mut() {
+            skip = corrupt_word(w, skip);
+        }
+    }
+    for w in chunks.into_remainder() {
+        skip = corrupt_word(w, skip);
+    }
+    (words_changed, cells_flipped)
 }
 
 #[cfg(test)]
@@ -294,5 +406,110 @@ mod tests {
     #[should_panic]
     fn rejects_invalid_rate() {
         ErrorModel::new(1.5, 0.0);
+    }
+
+    fn word_mix(n: usize) -> Vec<u16> {
+        (0..n as u32).map(|i| (i.wrapping_mul(40503) >> 2) as u16).collect()
+    }
+
+    #[test]
+    fn geometric_slice_rate_zero_is_identity() {
+        let m = ErrorModel::at_rate(0.0);
+        let mut ws = word_mix(1000);
+        let orig = ws.clone();
+        let mut rng = Xoshiro256::seeded(1);
+        assert_eq!(m.corrupt_words_write(&mut ws, &mut rng), (0, 0));
+        assert_eq!(ws, orig);
+    }
+
+    #[test]
+    fn geometric_slice_rate_one_flips_every_soft_cell_once() {
+        let m = ErrorModel::at_rate(1.0);
+        let mut ws = word_mix(4097); // exercises the lane-group remainder
+        let orig = ws.clone();
+        let mut rng = Xoshiro256::seeded(2);
+        let (words, cells) = m.corrupt_words_write(&mut ws, &mut rng);
+        let mut want_cells = 0u64;
+        let mut want_words = 0u64;
+        for (&o, &n) in orig.iter().zip(&ws) {
+            let soft = (o ^ (o >> 1)) & 0x5555;
+            want_cells += u64::from(soft.count_ones());
+            want_words += u64::from(soft != 0);
+            // Exactly one junction of every originally-soft cell flipped;
+            // base cells untouched.
+            let diff = o ^ n;
+            for cell in 0..8u32 {
+                let cell_soft = (soft >> (2 * cell)) & 1 != 0;
+                let d = (diff >> (2 * cell)) & 0b11;
+                if cell_soft {
+                    assert!(d == 0b01 || d == 0b10, "o={o:#06x} n={n:#06x}");
+                } else {
+                    assert_eq!(d, 0, "base cell changed: o={o:#06x} n={n:#06x}");
+                }
+            }
+        }
+        assert_eq!(cells, want_cells);
+        assert_eq!(words, want_words);
+    }
+
+    #[test]
+    fn geometric_slice_survives_subepsilon_rates() {
+        // Below ~1e-16, (1.0 - rate) rounds to 1.0; ln_1p keeps the gap
+        // distribution sane (mean gap 1/rate >> stream) instead of
+        // collapsing to 0 and flipping every cell.
+        let m = ErrorModel::new(1e-20, 0.0);
+        let mut ws = vec![0x5555u16; 10_000]; // 80k vulnerable cells
+        let orig = ws.clone();
+        let mut rng = Xoshiro256::seeded(6);
+        let (words, _) = m.corrupt_words_write(&mut ws, &mut rng);
+        assert_eq!(words, 0, "sub-epsilon rate must flip ~nothing");
+        assert_eq!(ws, orig);
+    }
+
+    #[test]
+    fn geometric_slice_deterministic_per_seed() {
+        let m = ErrorModel::at_rate(ERROR_RATE_LO);
+        let run = |seed: u64| {
+            let mut ws = word_mix(20_000);
+            let mut rng = Xoshiro256::seeded(seed);
+            let counts = m.corrupt_words_write(&mut ws, &mut rng);
+            (ws, counts)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7).0, run(8).0);
+    }
+
+    #[test]
+    fn geometric_slice_matches_bernoulli_marginals() {
+        // Per-bit marginal flip rates of the slice sampler vs the naive
+        // per-cell oracle, over many passes of a mixed word.
+        let m = ErrorModel::at_rate(0.05);
+        let mut rng = Xoshiro256::seeded(99);
+        let h = 0x5595u16;
+        let n = 200_000usize;
+        let mut geo = [0u64; 16];
+        let mut naive = [0u64; 16];
+        let mut buf = vec![h; 64];
+        for _ in 0..n / 64 {
+            buf.fill(h);
+            m.corrupt_words_write(&mut buf, &mut rng);
+            for &w in &buf {
+                for b in 0..16 {
+                    geo[b] += u64::from((w >> b) ^ (h >> b)) & 1;
+                }
+            }
+            for _ in 0..64 {
+                let v = m.corrupt_word_write_naive(h, &mut rng);
+                for b in 0..16 {
+                    naive[b] += u64::from((v >> b) ^ (h >> b)) & 1;
+                }
+            }
+        }
+        let total = (n / 64 * 64) as f64;
+        for b in 0..16 {
+            let pg = geo[b] as f64 / total;
+            let pv = naive[b] as f64 / total;
+            assert!((pg - pv).abs() < 0.005, "bit {b}: geo {pg} vs naive {pv}");
+        }
     }
 }

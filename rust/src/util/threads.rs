@@ -9,10 +9,19 @@
 //!   store on a fixed shard size. A shard computes the same bytes whether
 //!   it runs inline or on any of N workers.
 //! * **Reductions combine in shard order**, so floating-point accumulation
-//!   (energy nanojoules) is bit-stable across thread counts.
+//!   (energy nanojoules) is bit-stable across thread counts. Quantities
+//!   that are not plain sums reduce with an order-preserving carry: the
+//!   buffer's banked read latency carries the open slot's running max
+//!   across shard boundaries (the load-shard carry rule, DESIGN.md §8).
+//!
+//! Seed-order contract: stochastic shards (store fault injection, read
+//! disturb) draw one RNG seed per fixed-size shard *in shard order before
+//! any worker runs*, so the flip set is a function of (buffer seed, stream
+//! position) alone — never of the thread schedule.
 //!
 //! `rust/tests/swar_equivalence.rs` pins threaded == single-thread for the
-//! whole encode → store → decode pipeline.
+//! whole encode → store → decode pipeline; `rust/tests/read_path.rs` pins
+//! the load/disturb side across 1/2/7 workers.
 
 /// Worker ceiling: `MLCSTT_THREADS` if set (>=1), else the machine's
 /// available parallelism.
@@ -32,6 +41,36 @@ pub fn available() -> usize {
 /// spawn cost would dominate).
 pub fn auto_workers(items: usize, min_per_worker: usize) -> usize {
     available().min(items / min_per_worker.max(1)).max(1)
+}
+
+/// Run `f` once per job across at most `workers` scoped threads, handing
+/// each worker one **contiguous batch** of jobs. Results come back in job
+/// order — batches are contiguous and joined in spawn order — which is
+/// exactly the shard-order guarantee the buffer's reductions (energy
+/// partial sums, the load carry rule, per-shard seed assignment) rely on.
+/// With `workers <= 1` or a single job the closure runs inline.
+pub fn run_sharded<J: Send, T: Send>(
+    jobs: Vec<J>,
+    workers: usize,
+    f: impl Fn(J) -> T + Sync,
+) -> Vec<T> {
+    if workers <= 1 || jobs.len() <= 1 {
+        return jobs.into_iter().map(f).collect();
+    }
+    let per_worker = jobs.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut handles = Vec::new();
+        let mut it = jobs.into_iter();
+        loop {
+            let batch: Vec<J> = it.by_ref().take(per_worker).collect();
+            if batch.is_empty() {
+                break;
+            }
+            handles.push(scope.spawn(move || batch.into_iter().map(f).collect::<Vec<T>>()));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    })
 }
 
 /// Split `len` items into at most `workers` contiguous chunks whose starts
@@ -89,5 +128,17 @@ mod tests {
         assert_eq!(auto_workers(0, 1024), 1);
         assert_eq!(auto_workers(10, 1024), 1);
         assert!(auto_workers(1 << 20, 1024) >= 1);
+    }
+
+    #[test]
+    fn run_sharded_preserves_job_order_for_any_worker_count() {
+        for n in [0usize, 1, 2, 7, 100, 1001] {
+            let want: Vec<usize> = (0..n).map(|j| j * 3 + 1).collect();
+            for workers in [1usize, 2, 3, 8, 64] {
+                let jobs: Vec<usize> = (0..n).collect();
+                let got = run_sharded(jobs, workers, |j| j * 3 + 1);
+                assert_eq!(got, want, "n={n} workers={workers}");
+            }
+        }
     }
 }

@@ -1,0 +1,23 @@
+//! `MLCSTT_THREADS` plumbing (ISSUE 3 satellite), isolated in its own
+//! test binary: the single test below mutates the process environment,
+//! and glibc's setenv is undefined behavior against concurrent getenv —
+//! sibling tests in a shared binary read the environment through
+//! `threads::available()` and `fp::f16_mode()` on parallel harness
+//! threads. Cargo runs test binaries sequentially, so a dedicated binary
+//! with one test is race-free by construction.
+
+use mlcstt::coordinator::ServerConfig;
+use mlcstt::util::threads;
+
+#[test]
+fn mlcstt_threads_pins_server_codec_parallelism() {
+    std::env::set_var("MLCSTT_THREADS", "3");
+    assert_eq!(threads::available(), 3);
+    assert_eq!(ServerConfig::default().codec_threads, 3);
+    std::env::set_var("MLCSTT_THREADS", "0"); // floors at 1
+    assert_eq!(threads::available(), 1);
+    assert_eq!(ServerConfig::default().codec_threads, 1);
+    std::env::remove_var("MLCSTT_THREADS");
+    assert!(threads::available() >= 1);
+    assert!(ServerConfig::default().codec_threads >= 1);
+}

@@ -118,6 +118,7 @@ fn server_round_trips_requests_and_reports_metrics() {
         },
         ServerConfig {
             max_wait: Duration::from_millis(5),
+            ..ServerConfig::default()
         },
     )
     .unwrap();

@@ -1,0 +1,257 @@
+//! Read-path parity (ISSUE 3): the threaded load/decode overhaul must
+//! change speed and nothing else.
+//!
+//! * threaded-vs-single `load` / `load_with_disturb` determinism across
+//!   1/2/7 workers (including the shard-carry rule at bank boundaries that
+//!   are *not* aligned with [`LOAD_SHARD_WORDS`]);
+//! * exhaustive 65536-pattern equivalence of the LUT and branchless f16
+//!   converters against the scalar oracle, in every lane position;
+//! * fault-sampler compatibility: the geometric-skip slice sampler vs the
+//!   retained binomial/naive paths at rates {0, 1.5e-2, 2e-2, 1.0}.
+//!
+//! The `MLCSTT_THREADS` plumbing satellite lives in `tests/env_plumbing.rs`
+//! (its own binary — it mutates the environment).
+
+mod common;
+
+use mlcstt::buffer::{BufferConfig, LOAD_SHARD_WORDS, MlcBuffer, Region};
+use mlcstt::encoding::{Policy, WeightCodec};
+use mlcstt::fp;
+use mlcstt::stt::error::{ERROR_RATE_HI, ERROR_RATE_LO};
+use mlcstt::stt::ErrorModel;
+use mlcstt::util::rng::Xoshiro256;
+
+// ------------------------------------------------------------- threading
+
+/// A stored multi-shard region whose bank width (7) does not divide
+/// [`LOAD_SHARD_WORDS`]: every interior shard boundary lands mid-slot, so
+/// the carry rule is exercised on each one.
+fn stored_buffer(banks: usize, write_rate: f64, disturb: f64) -> (MlcBuffer, Region) {
+    let ws = common::trained_like_weights(2 * LOAD_SHARD_WORDS + 4321, "read_path/load");
+    let enc = WeightCodec::hybrid(16).encode(&ws);
+    let cfg = BufferConfig::new(enc.len() * 2, banks)
+        .with_error_model(ErrorModel::new(write_rate, disturb));
+    let mut buf = MlcBuffer::new(cfg, 0x10AD);
+    let region = buf.store(&enc).unwrap();
+    (buf, region)
+}
+
+#[test]
+fn threaded_load_bit_identical_across_worker_counts() {
+    for banks in [1usize, 7, 16] {
+        let run = |workers: usize| {
+            let (mut buf, region) = stored_buffer(banks, ERROR_RATE_LO, 0.0);
+            buf.reset_stats();
+            let enc = buf.load_with_threads(&region, workers).unwrap();
+            let stats = buf.stats().clone();
+            (enc.words, enc.schemes, stats.read_energy, stats.reads)
+        };
+        let (w1, s1, e1, r1) = run(1);
+        for workers in [2usize, 7] {
+            let (wn, sn, en, rn) = run(workers);
+            assert_eq!(w1, wn, "banks={banks} workers={workers}");
+            assert_eq!(s1, sn, "banks={banks} workers={workers}");
+            assert_eq!(e1, en, "banks={banks} workers={workers}: read bill differs");
+            assert_eq!(r1, rn, "banks={banks} workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn threaded_load_cycles_match_serial_slot_walk() {
+    // The carry-rule reduction must equal a straightforward serial walk of
+    // the banked slots (the pre-threading definition of read latency).
+    for banks in [1usize, 4, 7] {
+        let (mut buf, region) = stored_buffer(banks, ERROR_RATE_HI, 0.0);
+        buf.reset_stats();
+        let enc = buf.load_with_threads(&region, 5).unwrap();
+        let cost = buf.config.cost.clone();
+        let mut want_cycles = 0u64;
+        let mut want_nj = 0.0f64;
+        for slot in enc.words.chunks(banks) {
+            let mut slot_max = 0u64;
+            for &w in slot {
+                let e = cost.word(w, mlcstt::stt::AccessKind::Read);
+                want_nj += e.nanojoules;
+                slot_max = slot_max.max(e.cycles);
+            }
+            want_cycles += slot_max;
+        }
+        // Metadata reads billed on top of the payload walk. Cycles are
+        // integer-exact; nanojoules allow for the shard-partial summation
+        // order differing from this flat serial walk.
+        let meta = cost.trilevel_cell(mlcstt::stt::AccessKind::Read);
+        let groups = enc.schemes.len() as u64;
+        let got = buf.stats().read_energy;
+        assert_eq!(got.cycles, want_cycles + meta.cycles * groups, "banks={banks}");
+        let want_nj = want_nj + meta.nanojoules * groups as f64;
+        assert!(
+            (got.nanojoules - want_nj).abs() < 1e-9 * want_nj.max(1.0),
+            "banks={banks}: {} vs {want_nj}",
+            got.nanojoules
+        );
+    }
+}
+
+#[test]
+fn threaded_disturb_load_bit_identical_across_worker_counts() {
+    let run = |workers: usize| {
+        let (mut buf, region) = stored_buffer(7, 0.0, 0.05);
+        assert_eq!(buf.stats().injected_faults, 0, "write path must be clean");
+        let enc = buf.load_with_disturb_threads(&region, workers).unwrap();
+        let stats = buf.stats().clone();
+        // Disturbance is persistent: a second plain load sees the flips.
+        let again = buf.load_with_threads(&region, workers).unwrap();
+        assert_eq!(enc.words, again.words);
+        (enc.words, stats.injected_faults, stats.read_energy)
+    };
+    let (w1, f1, e1) = run(1);
+    assert!(f1 > 0, "disturb path inert at rate 0.05");
+    for workers in [2usize, 7] {
+        let (wn, fn_, en) = run(workers);
+        assert_eq!(w1, wn, "workers={workers}");
+        assert_eq!(f1, fn_, "workers={workers}");
+        assert_eq!(e1, en, "workers={workers}");
+    }
+}
+
+// ------------------------------------------------------------ converters
+//
+// The per-function exhaustive LUT/branchless-vs-scalar sweep lives in
+// `fp`'s unit tests; these cover the *batch* entry points the codec uses.
+
+#[test]
+fn exhaustive_decode_slice_every_lane_position() {
+    // Every pattern rides through the batch decode in all four positions
+    // of a mixed-neighbour word group (a lane-position regression would
+    // only show against varied neighbours).
+    let mut dst = [0f32; 4];
+    for h in 0..=u16::MAX {
+        let a = h.wrapping_mul(0x9E37).rotate_left(3);
+        let src = [h, a, !h, h ^ 0x5A5A];
+        fp::decode_f16_slice(&src, &mut dst);
+        for (i, (&s, &d)) in src.iter().zip(&dst).enumerate() {
+            assert_eq!(
+                d.to_bits(),
+                fp::f16_bits_to_f32(s).to_bits(),
+                "h={h:#06x} lane={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn exhaustive_fast_encoder_roundtrip_and_quantize_slice() {
+    // Every f16 value, encoded back from its exact f32 image, through both
+    // the fast scalar call and the batch quantize path.
+    let mut xs = Vec::with_capacity(1 << 16);
+    let mut want = Vec::with_capacity(1 << 16);
+    for h in 0..=u16::MAX {
+        let x = fp::f16_bits_to_f32(h);
+        let w = fp::f32_to_f16_bits(x);
+        assert_eq!(fp::f32_to_f16_bits_fast(x), w, "h={h:#06x}");
+        xs.push(x);
+        want.push(w);
+    }
+    let mut out = vec![0u16; xs.len()];
+    fp::quantize_into(&xs, &mut out);
+    assert_eq!(out, want);
+}
+
+// ---------------------------------------------------- fault-sampler compat
+
+fn mixed_words(n: usize, tag: &str) -> Vec<u16> {
+    let ws = common::trained_like_weights(n, tag);
+    WeightCodec::new(Policy::Unprotected, 1).encode(&ws).words
+}
+
+#[test]
+fn sampler_compat_rate_zero_is_identity_for_all_paths() {
+    let model = ErrorModel::at_rate(0.0);
+    let orig = mixed_words(4096, "compat/zero");
+    let mut geo = orig.clone();
+    let mut rng = Xoshiro256::seeded(1);
+    assert_eq!(model.corrupt_words_write(&mut geo, &mut rng), (0, 0));
+    assert_eq!(geo, orig);
+    let mut rng = Xoshiro256::seeded(1);
+    for &w in &orig {
+        assert_eq!(model.corrupt_word_write(w, &mut rng), w);
+        assert_eq!(model.corrupt_word_write_naive(w, &mut rng), w);
+    }
+}
+
+#[test]
+fn sampler_compat_rate_one_flips_the_same_cell_sets() {
+    // At rate 1 the flipped-cell set is deterministic (every vulnerable
+    // cell, exactly one junction) — old binomial and new geometric paths
+    // must corrupt identical cell sets, junction choice aside.
+    let model = ErrorModel::at_rate(1.0);
+    let orig = mixed_words(4099, "compat/one");
+    let mut geo = orig.clone();
+    let mut rng = Xoshiro256::seeded(2);
+    model.corrupt_words_write(&mut geo, &mut rng);
+    let mut rng = Xoshiro256::seeded(3);
+    for (&o, &g) in orig.iter().zip(&geo) {
+        let b = model.corrupt_word_write(o, &mut rng);
+        let soft = (o ^ (o >> 1)) & 0x5555;
+        for cell in 0..8u32 {
+            let is_soft = (soft >> (2 * cell)) & 1 != 0;
+            let dg = ((o ^ g) >> (2 * cell)) & 0b11;
+            let db = ((o ^ b) >> (2 * cell)) & 0b11;
+            if is_soft {
+                assert!(dg == 0b01 || dg == 0b10, "geo missed a soft cell, o={o:#06x}");
+                assert!(db == 0b01 || db == 0b10, "binomial missed a soft cell");
+            } else {
+                assert_eq!(dg, 0, "geo touched a base cell, o={o:#06x}");
+                assert_eq!(db, 0, "binomial touched a base cell");
+            }
+        }
+    }
+}
+
+#[test]
+fn sampler_compat_published_rates_match_binomial_statistics() {
+    // At the paper's rates the three samplers draw from the same per-cell
+    // Bernoulli law: compare total-flip means over repeated passes.
+    for rate in [ERROR_RATE_LO, ERROR_RATE_HI] {
+        let model = ErrorModel::at_rate(rate);
+        let orig = mixed_words(8192, "compat/rates");
+        let soft_total: u64 = orig.iter().map(|&w| fp::soft_cells(w) as u64).sum();
+        let expect = soft_total as f64 * rate;
+        let passes = 60;
+
+        let mut rng = Xoshiro256::seeded(11);
+        let mut geo_flips = 0u64;
+        for _ in 0..passes {
+            let mut buf = orig.clone();
+            let (_, cells) = model.corrupt_words_write(&mut buf, &mut rng);
+            geo_flips += cells;
+        }
+        let mut rng = Xoshiro256::seeded(12);
+        let mut bin_flips = 0u64;
+        for _ in 0..passes {
+            for &w in &orig {
+                let c = model.corrupt_word_write(w, &mut rng);
+                bin_flips += u64::from(fp::soft_cells(w ^ c).max(1)) * u64::from(c != w);
+            }
+        }
+        let geo_mean = geo_flips as f64 / passes as f64;
+        let bin_mean = bin_flips as f64 / passes as f64;
+        // Mean flips per pass within 5% of the analytic expectation for
+        // both samplers (tight enough to catch an off-by-one in the skip
+        // bookkeeping, loose enough to never flake at these sample sizes).
+        assert!(
+            (geo_mean - expect).abs() / expect < 0.05,
+            "rate={rate}: geometric mean {geo_mean} vs expected {expect}"
+        );
+        assert!(
+            (bin_mean - expect).abs() / expect < 0.05,
+            "rate={rate}: binomial mean {bin_mean} vs expected {expect}"
+        );
+    }
+}
+
+// The `MLCSTT_THREADS` plumbing test lives in its own binary
+// (`tests/env_plumbing.rs`): it mutates the process environment, and
+// glibc setenv racing the getenv calls sibling tests make (via
+// `threads::available` / `fp::f16_mode`) would be undefined behavior.
