@@ -7,10 +7,16 @@
 ARTIFACTS ?= artifacts
 FORCE ?=
 
-.PHONY: artifacts build test bench clean-artifacts
+.PHONY: artifacts build test bench sweep clean-artifacts
 
 artifacts:
 	python3 python/compile/aot.py --out-dir $(ARTIFACTS) $(if $(FORCE),--force,)
+
+# Fig. 8-style error-rate sweep via the snapshot-reuse campaign API
+# (DESIGN.md §9). Uses trained artifacts when present, otherwise falls
+# back to a synthetic tensor — runs anywhere.
+sweep:
+	cargo run --release --offline --example rate_sweep
 
 build:
 	cargo build --release --offline

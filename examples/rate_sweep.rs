@@ -1,0 +1,89 @@
+//! Fig. 8-style accuracy-vs-error-rate sweep through the snapshot-reuse
+//! campaign API (`experiments::run_rate_sweep_with`, DESIGN.md §9): each
+//! policy's image is encoded and stored **once**; every rate point only
+//! rewinds the stored words and re-injects faults before materializing
+//! through the pipelined serve path.
+//!
+//! ```bash
+//! make sweep                 # == cargo run --release --offline --example rate_sweep
+//! ```
+//!
+//! Runs anywhere: with trained artifacts present it sweeps the real model
+//! through PJRT (`experiments::run_rate_sweep`); without them it falls
+//! back to a synthetic trained-shaped tensor and scores weight fidelity
+//! (fraction of weights decoded bit-identically to clean) instead of
+//! model accuracy — same sweep machinery, same one-encode contract.
+
+use mlcstt::coordinator::StoreConfig;
+use mlcstt::experiments::{rate_sweep_table, run_rate_sweep, run_rate_sweep_with};
+use mlcstt::fp;
+use mlcstt::runtime::artifacts::{model_available, ParamSpec, WeightFile};
+use mlcstt::util::rng::Xoshiro256;
+
+const RATES: [f64; 5] = [0.0, 0.005, 0.01, 0.015, 0.02];
+const SEED: u64 = 7;
+
+fn eval_n(default: usize) -> usize {
+    std::env::var("MLCSTT_EVAL")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("MLCSTT_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from(mlcstt::ARTIFACT_DIR));
+
+    if model_available(&dir, "vggmini") {
+        let sweep = run_rate_sweep(&dir, "vggmini", &RATES, 4, eval_n(512), SEED)?;
+        println!("{}", sweep.table);
+        println!(
+            "(encode+store passes: {} — one per policy for all {} rate points)",
+            sweep.encode_passes,
+            RATES.len()
+        );
+        return Ok(());
+    }
+
+    println!("(vggmini artifacts missing — sweeping a synthetic tensor, fidelity metric)\n");
+    let n = eval_n(1 << 18);
+    let mut rng = Xoshiro256::seeded(SEED);
+    let weights = WeightFile {
+        params: vec![ParamSpec {
+            name: "synthetic.w".into(),
+            shape: vec![n],
+            data: (0..n)
+                .map(|_| ((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
+                .collect(),
+        }],
+    };
+    let base = StoreConfig {
+        granularity: 4,
+        seed: SEED,
+        ..StoreConfig::default()
+    };
+    let clean = &weights.params[0].data;
+    let (points, encode_passes) =
+        run_rate_sweep_with(&weights, &base, &RATES, |_, _, tensors, _| {
+            let same = clean
+                .iter()
+                .zip(&tensors[0].data)
+                .filter(|(a, b)| fp::quantize_f16(**a).to_bits() == b.to_bits())
+                .count();
+            Ok(same as f64 / clean.len() as f64)
+        })?;
+    println!(
+        "{}",
+        rate_sweep_table(
+            &format!("synthetic ({n} weights, g=4, seed={SEED}) — weight fidelity"),
+            1.0,
+            &points,
+        )
+    );
+    println!(
+        "(encode+store passes: {encode_passes} — one per policy for all {} rate points)",
+        RATES.len()
+    );
+    Ok(())
+}

@@ -14,9 +14,10 @@
 mod harness;
 
 use mlcstt::buffer::{BufferConfig, MlcBuffer};
+use mlcstt::coordinator::{StoreConfig, WeightStore};
 use mlcstt::encoding::{Encoded, Policy, WeightCodec};
 use mlcstt::fp;
-use mlcstt::runtime::artifacts::{model_available, model_paths, TestSet, WeightFile};
+use mlcstt::runtime::artifacts::{model_available, model_paths, ParamSpec, TestSet, WeightFile};
 use mlcstt::runtime::Executor;
 use mlcstt::stt::{AccessKind, CostModel, ErrorModel};
 use mlcstt::util::rng::Xoshiro256;
@@ -123,11 +124,21 @@ fn main() {
         println!("decode g=4 speedup vs scalar: {:.2}x", fast / scalar);
     }
 
-    // Energy accounting sweep.
+    // Energy accounting: the packed tally census + dot product vs the
+    // retained per-word scalar oracle (the ISSUE 4 headline).
     let cost = CostModel::default();
+    let (_, t) = harness::time_stats(3, || enc.access_energy_scalar(&cost, AccessKind::Write));
+    println!("energy (scalar oracle)   : {}", harness::rate(n as u64, t.median));
+    report.record("access_energy_scalar", n as u64, &t);
     let (_, t) = harness::time_stats(3, || enc.access_energy(&cost, AccessKind::Write));
-    println!("energy accounting        : {}", harness::rate(n as u64, t.median));
-    report.record("energy_accounting", n as u64, &t);
+    println!("energy (tally census)    : {}", harness::rate(n as u64, t.median));
+    report.record("access_energy_tally", n as u64, &t);
+    if let (Some(fast), Some(scalar)) = (
+        report.per_sec("access_energy_tally"),
+        report.per_sec("access_energy_scalar"),
+    ) {
+        println!("energy tally speedup vs scalar: {:.2}x", fast / scalar);
+    }
 
     // Fault injection: pre-optimization per-cell path vs the binomial
     // single-draw path (same distribution; see stt::error tests).
@@ -185,6 +196,58 @@ fn main() {
     });
     println!("buffer store+fault+load  : {}", harness::rate(n as u64, t.median));
     report.record("buffer_store_fault_load", n as u64, &t);
+
+    // Serve path: the pipelined materialize vs the serial oracle, and one
+    // snapshot-reuse sweep point (reinject + materialize) vs the full
+    // restage-per-point reload it replaces.
+    {
+        let wf = WeightFile {
+            params: vec![ParamSpec {
+                name: "bench.w".into(),
+                shape: vec![n],
+                data: ws.clone(),
+            }],
+        };
+        let cfg = StoreConfig {
+            error_model: ErrorModel::at_rate(0.015),
+            seed: 3,
+            ..StoreConfig::default()
+        };
+        // Snapshot contract: capture a *fault-free* store (what
+        // run_rate_sweep_with does), then reinject at the swept rate.
+        let clean_cfg = StoreConfig {
+            error_model: ErrorModel::at_rate(0.0),
+            ..cfg.clone()
+        };
+        let mut store = WeightStore::load(&clean_cfg, &wf).unwrap();
+        let (_, t) = harness::time_stats(3, || store.materialize_serial().unwrap().len());
+        println!("materialize (serial)     : {}", harness::rate(n as u64, t.median));
+        report.record("materialize_serial", n as u64, &t);
+        let (_, t) = harness::time_stats(3, || store.materialize().unwrap().len());
+        println!("materialize (pipelined)  : {}", harness::rate(n as u64, t.median));
+        report.record("materialize_pipelined", n as u64, &t);
+
+        let snap = store.snapshot();
+        let model = ErrorModel::at_rate(0.015);
+        let (_, t) = harness::time_stats(3, || {
+            store.reinject(&snap, &model, 3).unwrap();
+            store.materialize().unwrap().len()
+        });
+        println!("sweep point (reinject)   : {}", harness::rate(n as u64, t.median));
+        report.record("rate_sweep_point", n as u64, &t);
+        let (_, t) = harness::time_stats(3, || {
+            let mut s = WeightStore::load(&cfg, &wf).unwrap();
+            s.materialize().unwrap().len()
+        });
+        println!("sweep point (restage)    : {}", harness::rate(n as u64, t.median));
+        report.record("rate_sweep_point_restage", n as u64, &t);
+        if let (Some(fast), Some(slow)) = (
+            report.per_sec("rate_sweep_point"),
+            report.per_sec("rate_sweep_point_restage"),
+        ) {
+            println!("sweep point speedup vs restage: {:.2}x", fast / slow);
+        }
+    }
 
     // End-to-end weight path for a real model (encode -> store -> load ->
     // decode), artifacts permitting.

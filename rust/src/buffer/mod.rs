@@ -11,7 +11,9 @@
 //! area (paper §1), so configs are usually constructed via
 //! [`BufferConfig::sram_equivalent`].
 
-use crate::encoding::{Encoded, Scheme};
+use std::sync::mpsc;
+
+use crate::encoding::{codec, Encoded, Policy, Scheme};
 use crate::stt::{AccessKind, CostModel, Energy, ErrorModel};
 use crate::util::rng::Xoshiro256;
 use crate::util::threads;
@@ -90,6 +92,15 @@ pub struct AccessStats {
     pub read_energy: Energy,
     /// Words corrupted by fault injection (write path and disturb reads).
     pub injected_faults: u64,
+}
+
+/// Point-in-time image of the buffer's stored payload + accounting, for
+/// sweep-scale snapshot/re-inject fault campaigns (DESIGN.md §9). Taken
+/// by [`MlcBuffer::snapshot`], rewound by [`MlcBuffer::restore`].
+#[derive(Clone, Debug)]
+pub struct BufferSnapshot {
+    words: Vec<u16>,
+    stats: AccessStats,
 }
 
 /// A stored tensor's location + codec context.
@@ -293,37 +304,7 @@ impl MlcBuffer {
             load_shard(cost, src, dst, k * LOAD_SHARD_WORDS, banks)
         });
 
-        // Shard-order reduction with the carry rule: `open` is the bank
-        // slot still accumulating its max across a shard boundary.
-        let mut nj = 0.0f64;
-        let mut cycles = 0u64;
-        let mut open: Option<(usize, u64)> = None;
-        for p in &partials {
-            nj += p.nj;
-            let head = match open.take() {
-                Some((slot, max)) if slot == p.head_slot => (slot, max.max(p.head_max)),
-                Some((_, max)) => {
-                    // The carried slot closed exactly at the boundary.
-                    cycles += max;
-                    (p.head_slot, p.head_max)
-                }
-                None => (p.head_slot, p.head_max),
-            };
-            match p.tail {
-                Some(tail) => {
-                    cycles += head.1 + p.interior_cycles;
-                    open = Some(tail);
-                }
-                None => open = Some(head),
-            }
-        }
-        if let Some((_, max)) = open {
-            cycles += max;
-        }
-        self.stats.read_energy.add(Energy {
-            nanojoules: nj,
-            cycles,
-        });
+        self.stats.read_energy.add(reduce_load_partials(&partials));
         self.stats.reads += region.len as u64;
 
         let mut schemes = Vec::with_capacity(region.meta_len);
@@ -383,6 +364,162 @@ impl MlcBuffer {
         self.load_with_threads(region, workers)
     }
 
+    /// Snapshot the allocated payload words and cumulative statistics —
+    /// the sweep-campaign capture point (DESIGN.md §9). Allocation state
+    /// (regions, the fault-free metadata plane) is *not* captured:
+    /// [`Self::restore`] only rewinds contents and accounting, so every
+    /// existing [`Region`] handle stays valid across restore cycles.
+    pub fn snapshot(&self) -> BufferSnapshot {
+        BufferSnapshot {
+            words: self.words[..self.used_words].to_vec(),
+            stats: self.stats.clone(),
+        }
+    }
+
+    /// Restore payload contents and statistics from a snapshot taken on
+    /// this buffer (the allocation must be unchanged) and reseed the
+    /// fault RNG. Afterwards the buffer is bit-identical — contents,
+    /// accounting, and future fault randomness — to a fresh buffer
+    /// seeded with `seed` that just performed the snapshot's stores.
+    pub fn restore(&mut self, snap: &BufferSnapshot, seed: u64) {
+        assert_eq!(
+            snap.words.len(),
+            self.used_words,
+            "snapshot does not match the current allocation"
+        );
+        self.words[..self.used_words].copy_from_slice(&snap.words);
+        self.stats = snap.stats.clone();
+        self.rng = Xoshiro256::seeded(seed);
+    }
+
+    /// Re-inject write-path faults into a stored region in place, exactly
+    /// as [`Self::store`] would have: one RNG seed per fixed
+    /// [`STORE_SHARD_WORDS`] shard, drawn from the buffer stream in shard
+    /// order before any worker runs, then the packed geometric-skip
+    /// sampler per shard. After [`Self::restore`] with the same seed, a
+    /// region-ordered sequence of these calls reproduces a fresh
+    /// store-at-rate run's flip sets bit-for-bit (pinned by
+    /// `rust/tests/sweep_equivalence.rs`). Returns words changed.
+    pub fn corrupt_region_write(
+        &mut self,
+        region: &Region,
+        model: &ErrorModel,
+        workers: usize,
+    ) -> Result<u64, BufferError> {
+        self.check_region(region)?;
+        let n_shards = region.len.div_ceil(STORE_SHARD_WORDS);
+        let seeds: Vec<u64> = (0..n_shards).map(|_| self.rng.next_u64()).collect();
+        let words = &mut self.words[region.offset..region.offset + region.len];
+
+        let jobs: Vec<(usize, &mut [u16])> =
+            words.chunks_mut(STORE_SHARD_WORDS).enumerate().collect();
+        let faults: u64 = threads::run_sharded(jobs, workers, |(k, shard)| {
+            let mut rng = Xoshiro256::seeded(seeds[k]);
+            let (words_changed, _) = model.corrupt_words_write(shard, &mut rng);
+            words_changed
+        })
+        .into_iter()
+        .sum();
+        self.stats.injected_faults += faults;
+        Ok(faults)
+    }
+
+    /// Read a region and decode it straight to f32 — the serve path's
+    /// fused load→decode (DESIGN.md §9). Bills read energy and banked
+    /// latency bit-identically to [`Self::load_with_threads`] (same
+    /// fixed-shard partials, same shard-order carry-rule reduction, same
+    /// metadata billing order) and produces bit-identical floats to
+    /// [`Encoded::decode_into_threaded`].
+    ///
+    /// With `workers >= 2` and a multi-shard region the two stages
+    /// overlap in a double-buffered pipeline: a scoped decoder thread
+    /// decodes shard `k` while this thread copies and bills shard `k+1`;
+    /// two recycled shard buffers bound the pipeline depth. Otherwise
+    /// both stages run serially inline.
+    pub fn load_decoded(
+        &mut self,
+        region: &Region,
+        out: &mut Vec<f32>,
+        workers: usize,
+    ) -> Result<(), BufferError> {
+        self.check_region(region)?;
+        // Length-change-only resize: every slot is overwritten below.
+        if out.len() != region.len {
+            out.resize(region.len, 0.0);
+        }
+        // The decode stage needs the scheme table up front; its read is
+        // *billed* after the word energy, in load order, exactly like
+        // `load_with_threads`.
+        let meta = &self.meta[region.meta_offset..region.meta_offset + region.meta_len];
+        let schemes: Vec<Scheme> = meta
+            .iter()
+            .map(|&sym| Scheme::from_symbol(sym).expect("tri-level symbol"))
+            .collect();
+        let n_shards = region.len.div_ceil(LOAD_SHARD_WORDS);
+        let banks = self.config.banks;
+        let cost = &self.config.cost;
+        let src_all = &self.words[region.offset..region.offset + region.len];
+
+        let energy = if workers >= 2 && n_shards >= 2 {
+            let mut partials = Vec::with_capacity(n_shards);
+            let policy = region.policy;
+            let granularity = region.granularity;
+            let region_len = region.len;
+            let dst: &mut [f32] = out;
+            std::thread::scope(|scope| {
+                // Depth-1 forward channel + two pre-seeded recycle buffers
+                // = the double-buffer rule: one shard decoding, one being
+                // copied/billed, never more.
+                let (tx, rx) = mpsc::sync_channel::<(usize, Vec<u16>)>(1);
+                let (recycle_tx, recycle_rx) = mpsc::channel::<Vec<u16>>();
+                for _ in 0..2 {
+                    recycle_tx.send(Vec::new()).expect("receiver alive");
+                }
+                let decoder = scope.spawn(move || {
+                    decode_pipeline_stage(
+                        policy,
+                        granularity,
+                        region_len,
+                        &schemes,
+                        rx,
+                        recycle_tx,
+                        dst,
+                    );
+                });
+                for (k, src) in src_all.chunks(LOAD_SHARD_WORDS).enumerate() {
+                    let mut buf = recycle_rx.recv().expect("decoder alive");
+                    buf.resize(src.len(), 0);
+                    partials.push(load_shard(cost, src, &mut buf, k * LOAD_SHARD_WORDS, banks));
+                    tx.send((k * LOAD_SHARD_WORDS, buf)).expect("decoder alive");
+                }
+                drop(tx);
+                decoder.join().expect("decoder thread");
+            });
+            reduce_load_partials(&partials)
+        } else {
+            // Serial fallback: bill-and-copy every shard, then decode the
+            // whole region in one group-aligned pass.
+            let mut words = vec![0u16; region.len];
+            let partials: Vec<LoadPartial> = src_all
+                .chunks(LOAD_SHARD_WORDS)
+                .zip(words.chunks_mut(LOAD_SHARD_WORDS))
+                .enumerate()
+                .map(|(k, (src, dst))| load_shard(cost, src, dst, k * LOAD_SHARD_WORDS, banks))
+                .collect();
+            codec::decode_slice(region.policy, region.granularity, &schemes, 0, &words, out);
+            reduce_load_partials(&partials)
+        };
+
+        self.stats.read_energy.add(energy);
+        self.stats.reads += region.len as u64;
+        for _ in 0..region.meta_len {
+            self.stats
+                .read_energy
+                .add(self.config.cost.trilevel_cell(AccessKind::Read));
+        }
+        Ok(())
+    }
+
     /// Bounds-check a region against the current allocation.
     fn check_region(&self, region: &Region) -> Result<(), BufferError> {
         if region.offset + region.len > self.used_words
@@ -434,6 +571,44 @@ struct LoadPartial {
     /// `(slot, max)` of the last slot touched, when it differs from the
     /// head slot (it may continue into the next shard).
     tail: Option<(usize, u64)>,
+}
+
+/// Shard-order reduction of per-shard read partials with the carry rule
+/// (DESIGN.md §8): energy partials sum in shard order; `open` is the bank
+/// slot still accumulating its latency max across a shard boundary.
+/// Shared by [`MlcBuffer::load_with_threads`] and the pipelined
+/// [`MlcBuffer::load_decoded`], which is what makes their bills
+/// bit-identical.
+fn reduce_load_partials(partials: &[LoadPartial]) -> Energy {
+    let mut nj = 0.0f64;
+    let mut cycles = 0u64;
+    let mut open: Option<(usize, u64)> = None;
+    for p in partials {
+        nj += p.nj;
+        let head = match open.take() {
+            Some((slot, max)) if slot == p.head_slot => (slot, max.max(p.head_max)),
+            Some((_, max)) => {
+                // The carried slot closed exactly at the boundary.
+                cycles += max;
+                (p.head_slot, p.head_max)
+            }
+            None => (p.head_slot, p.head_max),
+        };
+        match p.tail {
+            Some(tail) => {
+                cycles += head.1 + p.interior_cycles;
+                open = Some(tail);
+            }
+            None => open = Some(head),
+        }
+    }
+    if let Some((_, max)) = open {
+        cycles += max;
+    }
+    Energy {
+        nanojoules: nj,
+        cycles,
+    }
 }
 
 /// Read one load shard: copy the stored words out and fold per-word read
@@ -488,6 +663,79 @@ fn load_shard(
             tail: None,
         }
     }
+}
+
+/// Decode-stage consumer of the [`MlcBuffer::load_decoded`] pipeline:
+/// receives billed shards in shard order, decodes every group-aligned run
+/// the moment it arrives, and **carries** the words of a metadata group
+/// that straddles a shard boundary (at most `granularity - 1` of them)
+/// until the next shard completes it — the pipelined twin of the load
+/// path's latency carry rule. Buffers return through `recycle` for reuse.
+/// Group boundaries, not shard boundaries, drive the decode kernels, so
+/// the output is bit-identical to [`Encoded::decode_into_threaded`] for
+/// any shard size.
+fn decode_pipeline_stage(
+    policy: Policy,
+    granularity: usize,
+    region_len: usize,
+    schemes: &[Scheme],
+    rx: mpsc::Receiver<(usize, Vec<u16>)>,
+    recycle: mpsc::Sender<Vec<u16>>,
+    out: &mut [f32],
+) {
+    let g = if policy == Policy::Unprotected {
+        1
+    } else {
+        granularity
+    };
+    // Next undecoded word; always group-aligned when a decode is issued.
+    let mut pos = 0usize;
+    let mut carry: Vec<u16> = Vec::new();
+    while let Ok((start, buf)) = rx.recv() {
+        debug_assert_eq!(start, pos + carry.len());
+        let end = start + buf.len();
+        let mut words: &[u16] = &buf;
+        if !carry.is_empty() {
+            let take = (g - carry.len()).min(words.len());
+            carry.extend_from_slice(&words[..take]);
+            words = &words[take..];
+            if carry.len() == g || end == region_len {
+                codec::decode_slice(
+                    policy,
+                    granularity,
+                    schemes,
+                    pos,
+                    &carry,
+                    &mut out[pos..pos + carry.len()],
+                );
+                pos += carry.len();
+                carry.clear();
+            }
+        }
+        // The final shard's ragged tail group decodes immediately; an
+        // interior remainder waits in the carry for the next shard.
+        let aligned = if end == region_len {
+            words.len()
+        } else {
+            words.len() / g * g
+        };
+        if aligned > 0 {
+            codec::decode_slice(
+                policy,
+                granularity,
+                schemes,
+                pos,
+                &words[..aligned],
+                &mut out[pos..pos + aligned],
+            );
+            pos += aligned;
+        }
+        carry.extend_from_slice(&words[aligned..]);
+        // Ignore a closed recycle lane: the producer may already be done.
+        let _ = recycle.send(buf);
+    }
+    debug_assert!(carry.is_empty(), "pipeline left undecoded words");
+    debug_assert_eq!(pos, region_len, "pipeline decoded a partial region");
 }
 
 /// Apply read-disturb errors to one shard of stored words with its own
@@ -681,6 +929,86 @@ mod tests {
         buf.clear();
         assert_eq!(buf.free_words(), 100);
         buf.store(&enc).unwrap();
+    }
+
+    #[test]
+    fn load_decoded_matches_load_then_decode() {
+        // The fused pipeline must return the same floats AND bill the
+        // same read energy/cycles as load_with_threads + decode — across
+        // worker counts, granularities (incl. g=7, which straddles the
+        // 32768-word shard boundary), and a multi-shard region.
+        let n = LOAD_SHARD_WORDS * 2 + 4321;
+        let ws = ramp(n);
+        for (policy, g) in [
+            (Policy::Unprotected, 1usize),
+            (Policy::Hybrid, 4),
+            (Policy::Hybrid, 7),
+            (Policy::ProtectRotate, 16),
+        ] {
+            let enc = WeightCodec::new(policy, g).encode(&ws);
+            let cfg = BufferConfig::new(enc.len() * 2, 12)
+                .with_error_model(ErrorModel::at_rate(0.015));
+            let mut buf = MlcBuffer::new(cfg.clone(), 77);
+            let r = buf.store(&enc).unwrap();
+            buf.reset_stats();
+            let oracle = buf.load_with_threads(&r, 3).unwrap();
+            let mut want = Vec::new();
+            oracle.decode_into_threaded(&mut want, 3);
+            let want_bill = buf.stats().read_energy;
+
+            for workers in [1usize, 2, 7] {
+                let mut buf2 = MlcBuffer::new(cfg.clone(), 77);
+                let r2 = buf2.store(&enc).unwrap();
+                buf2.reset_stats();
+                let mut got = Vec::new();
+                buf2.load_decoded(&r2, &mut got, workers).unwrap();
+                assert_eq!(got, want, "{policy:?} g={g} workers={workers}");
+                assert_eq!(
+                    buf2.stats().read_energy,
+                    want_bill,
+                    "{policy:?} g={g} workers={workers}"
+                );
+                assert_eq!(buf2.stats().reads, n as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_reinject_matches_fresh_store() {
+        // restore + corrupt_region_write after a clean store must
+        // reproduce a fresh at-rate store bit-for-bit: same words, same
+        // fault count, same write accounting.
+        let ws = ramp(STORE_SHARD_WORDS + 9000);
+        let enc = WeightCodec::new(Policy::Unprotected, 1).encode(&ws);
+        let seed = 0xBEEF;
+        let rate = ErrorModel::at_rate(0.02);
+
+        let mut fresh = MlcBuffer::new(
+            BufferConfig::new(enc.len() * 2, 4).with_error_model(rate.clone()),
+            seed,
+        );
+        let rf = fresh.store(&enc).unwrap();
+        let want = fresh.load(&rf).unwrap().words;
+
+        let mut buf = MlcBuffer::new(
+            BufferConfig::new(enc.len() * 2, 4).with_error_model(ErrorModel::at_rate(0.0)),
+            123, // clean-store seed is irrelevant: restore reseeds
+        );
+        let r = buf.store(&enc).unwrap();
+        let snap = buf.snapshot();
+        for workers in [1usize, 3] {
+            buf.restore(&snap, seed);
+            let faults = buf.corrupt_region_write(&r, &rate, workers).unwrap();
+            assert_eq!(faults, fresh.stats().injected_faults, "workers={workers}");
+            assert_eq!(buf.stats().injected_faults, faults);
+            let got = buf.load(&r).unwrap().words;
+            assert_eq!(got, want, "workers={workers}");
+            assert_eq!(
+                buf.stats().write_energy,
+                fresh.stats().write_energy,
+                "workers={workers}"
+            );
+        }
     }
 
     #[test]

@@ -25,5 +25,5 @@ pub mod workload;
 
 pub use engine::InferenceEngine;
 pub use server::{Server, ServerConfig, ServerReport};
-pub use store::{StoreConfig, StoreReport, WeightStore};
+pub use store::{StoreConfig, StoreReport, StoreSnapshot, WeightStore};
 pub use workload::{poisson_trace, uniform_trace, Trace};

@@ -3,7 +3,9 @@
 
 use anyhow::{ensure, Context, Result};
 
-use crate::buffer::{BufferConfig, LOAD_SHARD_WORDS, MlcBuffer, Region};
+use crate::buffer::{
+    BufferConfig, BufferSnapshot, LOAD_SHARD_WORDS, MlcBuffer, Region, STORE_SHARD_WORDS,
+};
 use crate::encoding::codec::MIN_WEIGHTS_PER_WORKER;
 use crate::encoding::{Policy, WeightCodec};
 use crate::runtime::artifacts::{ParamSpec, WeightFile};
@@ -72,6 +74,16 @@ pub struct StoreReport {
     pub soft_cells_stored: u64,
 }
 
+/// A reusable capture of a fully-loaded store: the stored payload image
+/// plus its accounting, taken once per policy so an N-point error-rate
+/// sweep re-injects faults instead of re-encoding and re-storing
+/// (DESIGN.md §9). Create with [`WeightStore::snapshot`], rewind with
+/// [`WeightStore::reinject`].
+#[derive(Clone, Debug)]
+pub struct StoreSnapshot {
+    buffer: BufferSnapshot,
+}
+
 /// The store itself.
 pub struct WeightStore {
     codec: WeightCodec,
@@ -126,11 +138,36 @@ impl WeightStore {
 
     /// Read every tensor back through the buffer (bills read energy) and
     /// decode to the f32 tensors fed to the executable. This is the serve
-    /// path: loads and decodes run threaded under the pinned worker count
-    /// ([`StoreConfig::threads`], `MLCSTT_THREADS`-aware when 0/auto), via
-    /// [`crate::buffer::MlcBuffer::load_with_threads`] and
-    /// [`crate::encoding::Encoded::decode_into_threaded`].
+    /// path: each tensor goes through the fused, double-buffered
+    /// load→decode pipeline of [`crate::buffer::MlcBuffer::load_decoded`]
+    /// (decode shard `k` overlaps the copy+bill of shard `k+1`;
+    /// DESIGN.md §9), under the pinned worker count
+    /// ([`StoreConfig::threads`], `MLCSTT_THREADS`-aware when 0/auto).
+    /// Tensors and accounting are bit-identical to
+    /// [`Self::materialize_serial`] for every worker count.
     pub fn materialize(&mut self) -> Result<Vec<ParamSpec>> {
+        let mut out = Vec::with_capacity(self.entries.len());
+        for (meta, region) in &self.entries {
+            let w = workers_for(self.threads, region.len, LOAD_SHARD_WORDS);
+            let mut data = Vec::new();
+            self.buffer
+                .load_decoded(region, &mut data, w)
+                .with_context(|| format!("loading tensor {}", meta.name))?;
+            out.push(ParamSpec {
+                name: meta.name.clone(),
+                shape: meta.shape.clone(),
+                data,
+            });
+        }
+        Ok(out)
+    }
+
+    /// The pre-pipeline serve path — a full threaded load, then a full
+    /// threaded decode per tensor, via
+    /// [`crate::buffer::MlcBuffer::load_with_threads`] and
+    /// [`crate::encoding::Encoded::decode_into_threaded`]. Kept as the
+    /// pipeline's equivalence oracle and bench denominator.
+    pub fn materialize_serial(&mut self) -> Result<Vec<ParamSpec>> {
         let mut out = Vec::with_capacity(self.entries.len());
         for (meta, region) in &self.entries {
             let wl = workers_for(self.threads, region.len, LOAD_SHARD_WORDS);
@@ -148,6 +185,36 @@ impl WeightStore {
             });
         }
         Ok(out)
+    }
+
+    /// Capture the stored image + accounting for sweep reuse — typically
+    /// right after a fault-free [`Self::load`], so the snapshot holds each
+    /// tensor's *clean* encoded words (DESIGN.md §9).
+    pub fn snapshot(&self) -> StoreSnapshot {
+        StoreSnapshot {
+            buffer: self.buffer.snapshot(),
+        }
+    }
+
+    /// Rewind stored payloads + accounting to `snap`, reseed the fault
+    /// RNG with `seed`, and re-inject write-path faults at `model`'s rate
+    /// into every tensor, in store order. The resulting stored image,
+    /// flip set, and accounting are **bit-identical** to a fresh
+    /// [`Self::load`] whose config carried (`model`, `seed`) — the
+    /// per-shard seed draws replay in exactly the order the original
+    /// stores drew them — at none of the re-quantize/re-encode/re-store
+    /// cost. Returns total words corrupted.
+    pub fn reinject(&mut self, snap: &StoreSnapshot, model: &ErrorModel, seed: u64) -> Result<u64> {
+        self.buffer.restore(&snap.buffer, seed);
+        let mut corrupted = 0u64;
+        for (meta, region) in &self.entries {
+            let w = workers_for(self.threads, region.len, STORE_SHARD_WORDS);
+            corrupted += self
+                .buffer
+                .corrupt_region_write(region, model, w)
+                .with_context(|| format!("re-injecting tensor {}", meta.name))?;
+        }
+        Ok(corrupted)
     }
 
     /// Report current accounting.
@@ -294,6 +361,65 @@ mod tests {
             for (a, b) in base.iter().zip(&got) {
                 assert_eq!(a.data, b.data, "threads={t} tensor={}", a.name);
             }
+        }
+    }
+
+    #[test]
+    fn pipelined_materialize_matches_serial_oracle() {
+        // Tensors big enough for the multi-shard pipeline (plus a tiny
+        // one for the serial fallback), with faults, across thread pins.
+        let wf = weight_file(150_000);
+        for threads in [0usize, 1, 2, 7] {
+            let cfg = StoreConfig {
+                threads,
+                granularity: 7, // shard-straddling groups
+                error_model: ErrorModel::at_rate(0.02),
+                seed: 42,
+                ..StoreConfig::default()
+            };
+            let mut a = WeightStore::load(&cfg, &wf).unwrap();
+            let mut b = WeightStore::load(&cfg, &wf).unwrap();
+            let serial = a.materialize_serial().unwrap();
+            let pipelined = b.materialize().unwrap();
+            for (x, y) in serial.iter().zip(&pipelined) {
+                assert_eq!(x.data, y.data, "threads={threads} tensor={}", x.name);
+            }
+            let (ra, rb) = (a.report(), b.report());
+            assert_eq!(ra.read_energy, rb.read_energy, "threads={threads}");
+            assert_eq!(ra.injected_faults, rb.injected_faults);
+        }
+    }
+
+    #[test]
+    fn snapshot_reinject_matches_fresh_load() {
+        // reinject at (model, seed) must reproduce a fresh load whose
+        // config carried the same rate and seed: tensors and accounting
+        // bit-identical (the sweep contract, DESIGN.md §9).
+        let wf = weight_file(90_000);
+        let seed = 7u64;
+        for rate in [0.0f64, 0.015, 0.02] {
+            let mut fresh = WeightStore::load(
+                &StoreConfig {
+                    error_model: ErrorModel::at_rate(rate),
+                    seed,
+                    ..StoreConfig::default()
+                },
+                &wf,
+            )
+            .unwrap();
+            let want = fresh.materialize().unwrap();
+
+            let mut reused = WeightStore::load(&quiet(Policy::Hybrid, 4), &wf).unwrap();
+            let snap = reused.snapshot();
+            reused.reinject(&snap, &ErrorModel::at_rate(rate), seed).unwrap();
+            let got = reused.materialize().unwrap();
+            for (x, y) in want.iter().zip(&got) {
+                assert_eq!(x.data, y.data, "rate={rate} tensor={}", x.name);
+            }
+            let (rf, rr) = (fresh.report(), reused.report());
+            assert_eq!(rf.write_energy, rr.write_energy, "rate={rate}");
+            assert_eq!(rf.read_energy, rr.read_energy, "rate={rate}");
+            assert_eq!(rf.injected_faults, rr.injected_faults, "rate={rate}");
         }
     }
 

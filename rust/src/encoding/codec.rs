@@ -296,24 +296,10 @@ impl Encoded {
         }
     }
 
-    /// Decode one group-aligned shard starting at word index `start`:
-    /// invert each group's scheme with the SWAR kernels into a scratch
-    /// buffer, then convert to f32 through the converter selected by
-    /// [`fp::f16_mode`] (LUT by default — the decode-floor lift).
+    /// Decode one group-aligned shard starting at word index `start` via
+    /// the shared [`decode_slice`] inner loop.
     fn decode_range(&self, start: usize, src: &[u16], dst: &mut [f32]) {
-        if self.policy == Policy::Unprotected {
-            fp::decode_f16_slice(src, dst);
-            return;
-        }
-        let g = self.granularity;
-        debug_assert_eq!(start % g, 0);
-        let mut scratch = vec![0u16; g.min(src.len())];
-        let schemes = &self.schemes[start / g..];
-        for ((w_src, &s), o_dst) in src.chunks(g).zip(schemes).zip(dst.chunks_mut(g)) {
-            let canonical = &mut scratch[..w_src.len()];
-            swar::invert_into(s, w_src, canonical);
-            fp::decode_f16_slice(canonical, o_dst);
-        }
+        decode_slice(self.policy, self.granularity, &self.schemes, start, src, dst);
     }
 
     /// The pre-SWAR per-word decoder, kept as the equivalence oracle.
@@ -359,11 +345,41 @@ impl Encoded {
     /// once (payload words + one tri-level metadata cell per group).
     /// Latency counts each word access serially (a buffer-wide sweep);
     /// [`crate::buffer`] models banked parallelism on top of this.
+    ///
+    /// Default path (DESIGN.md §9): one packed SWAR census
+    /// ([`swar::energy_tally_threaded`], sharded over
+    /// [`threads::run_sharded`]) reduced through the
+    /// [`CostModel::stream`] dot product — no per-word `CostModel::word`
+    /// call. Cycles are integer-exact against the retained per-word
+    /// oracle ([`Self::access_energy_scalar`]); nanojoules agree to f64
+    /// rounding (the tally path rounds once per pattern instead of twice
+    /// per word). The census is worker-count-invariant, so threading is
+    /// invisible to the result.
     pub fn access_energy(&self, cost: &CostModel, kind: AccessKind) -> Energy {
+        let tally = swar::energy_tally_threaded(
+            &self.words,
+            threads::auto_workers(self.len(), MIN_WEIGHTS_PER_WORKER),
+        );
+        let mut total = cost.stream(tally.patterns, tally.hard_words, tally.words, kind);
+        self.add_metadata_cost(cost, kind, &mut total);
+        total
+    }
+
+    /// The pre-tally per-word accounting loop, kept verbatim as the
+    /// equivalence oracle and the bench speedup denominator.
+    pub fn access_energy_scalar(&self, cost: &CostModel, kind: AccessKind) -> Energy {
         let mut total = Energy::ZERO;
         for &w in &self.words {
             total.add(cost.word(w, kind));
         }
+        self.add_metadata_cost(cost, kind, &mut total);
+        total
+    }
+
+    /// The tri-level metadata share of a stream access: one cell per
+    /// scheme group, billed at SLC cost (identical on both accounting
+    /// paths by construction).
+    fn add_metadata_cost(&self, cost: &CostModel, kind: AccessKind, total: &mut Energy) {
         if self.policy != Policy::Unprotected {
             let meta = cost.trilevel_cell(kind);
             let groups = self.schemes.len() as f64;
@@ -372,7 +388,6 @@ impl Encoded {
                 cycles: meta.cycles * self.schemes.len() as u64,
             });
         }
-        total
     }
 
     /// Scheme usage histogram `[nochange, rotate, round]` — the ablation
@@ -383,6 +398,39 @@ impl Encoded {
             h[s.symbol() as usize] += 1;
         }
         h
+    }
+}
+
+/// Decode a group-aligned run of stored words to f32: invert each group's
+/// scheme with the SWAR kernels into a scratch buffer, then convert
+/// through the converter selected by [`fp::f16_mode`] (LUT by default —
+/// the decode-floor lift). `start` is the stream index of `src[0]` and
+/// must sit on a group boundary; `schemes` is the stream's full per-group
+/// table. This is the shared inner loop of [`Encoded::decode_into_threaded`]
+/// and the pipelined [`crate::buffer::MlcBuffer::load_decoded`] — both
+/// produce identical bits because group boundaries, not caller chunk
+/// boundaries, drive the kernels.
+pub fn decode_slice(
+    policy: Policy,
+    granularity: usize,
+    schemes: &[Scheme],
+    start: usize,
+    src: &[u16],
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(src.len(), dst.len());
+    if policy == Policy::Unprotected {
+        fp::decode_f16_slice(src, dst);
+        return;
+    }
+    let g = granularity;
+    debug_assert_eq!(start % g, 0);
+    let mut scratch = vec![0u16; g.min(src.len())];
+    let schemes = &schemes[start / g..];
+    for ((w_src, &s), o_dst) in src.chunks(g).zip(schemes).zip(dst.chunks_mut(g)) {
+        let canonical = &mut scratch[..w_src.len()];
+        swar::invert_into(s, w_src, canonical);
+        fp::decode_f16_slice(canonical, o_dst);
     }
 }
 
@@ -512,6 +560,24 @@ mod tests {
             hyb_e.nanojoules < raw_e.nanojoules,
             "hybrid {hyb_e:?} vs raw {raw_e:?}"
         );
+    }
+
+    #[test]
+    fn access_energy_tally_matches_scalar_oracle() {
+        // The broad sweep lives in tests/sweep_equivalence.rs; this is the
+        // fast in-crate check: cycles exact, nanojoules to f64 rounding.
+        let cost = CostModel::default();
+        let ws = ramp(3001);
+        for policy in [Policy::Unprotected, Policy::Hybrid] {
+            let enc = WeightCodec::new(policy, 4).encode(&ws);
+            for kind in [AccessKind::Read, AccessKind::Write] {
+                let fast = enc.access_energy(&cost, kind);
+                let oracle = enc.access_energy_scalar(&cost, kind);
+                assert_eq!(fast.cycles, oracle.cycles, "{policy:?} {kind:?}");
+                let rel = (fast.nanojoules - oracle.nanojoules).abs() / oracle.nanojoules;
+                assert!(rel < 1e-12, "{policy:?} {kind:?}: {rel}");
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use super::scheme::{self, Scheme};
 use crate::fp::{self, pack4, soft_cells_packed, unpack4, LANES};
+use crate::util::threads;
 
 /// Sign bit (bit 15) of each lane.
 const SIGN4: u64 = 0x8000_8000_8000_8000;
@@ -26,6 +27,8 @@ const FIELD4: u64 = 0x3FFF_3FFF_3FFF_3FFF;
 const ONES4: u64 = 0x0001_0001_0001_0001;
 /// Low nibble of each lane (the Round target).
 const NIB4: u64 = 0x000F_000F_000F_000F;
+/// Even (intra-cell low) bit positions of each lane.
+const EVEN4: u64 = 0x5555_5555_5555_5555;
 
 /// [`scheme::protect_sign`] on four lanes: duplicate bit 15 into bit 14.
 #[inline]
@@ -122,6 +125,94 @@ pub fn group_cost_tallies(protected: &[u16]) -> [u32; 3] {
     tallies
 }
 
+// ------------------------------------------------------- energy census
+
+/// Stream census for tally-based energy accounting (DESIGN.md §9):
+/// everything [`crate::stt::CostModel::stream`] needs to bill a whole
+/// stored stream without calling `CostModel::word` per word.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EnergyTally {
+    /// Cell-pattern histogram `[n00, n01, n10, n11]` over every stored
+    /// cell — the dot-product side of the Table 4 energy bill.
+    pub patterns: [u64; 4],
+    /// Words whose worst pattern is intermediate (at least one `01`/`10`
+    /// cell): these bill the hard word latency, the rest bill soft.
+    pub hard_words: u64,
+    /// Total words censused.
+    pub words: u64,
+}
+
+impl EnergyTally {
+    /// Fold another shard's tally into this one. Every field is an
+    /// integer sum, so the reduction is order-independent — threading
+    /// cannot change the result by construction.
+    pub fn merge(&mut self, other: &EnergyTally) {
+        for (a, b) in self.patterns.iter_mut().zip(other.patterns) {
+            *a += b;
+        }
+        self.hard_words += other.hard_words;
+        self.words += other.words;
+    }
+}
+
+/// Bit 0 of each lane set iff that lane holds at least one vulnerable
+/// (`01`/`10`) cell — the packed worst-pattern test behind
+/// [`EnergyTally::hard_words`]. XOR the intra-cell bit planes, then
+/// OR-fold each lane's even bit positions down to its bit 0. Every fold
+/// shifts downward and the largest fold distance (8 + 4 + 2 = 14) is
+/// smaller than the 16-bit lane pitch, so no lane's bits can reach
+/// another lane's bit 0.
+#[inline]
+pub fn hard_word_lanes4(x: u64) -> u64 {
+    let m = (x ^ (x >> 1)) & EVEN4;
+    let m = m | (m >> 8);
+    let m = m | (m >> 4);
+    let m = m | (m >> 2);
+    m & ONES4
+}
+
+/// Census one word slice with the packed kernels: pattern histogram via
+/// [`fp::pattern_counts_packed`], hard-word count via
+/// [`hard_word_lanes4`], scalar remainder for the ragged tail.
+pub fn energy_tally(words: &[u16]) -> EnergyTally {
+    let mut t = EnergyTally {
+        words: words.len() as u64,
+        ..EnergyTally::default()
+    };
+    let mut chunks = words.chunks_exact(LANES);
+    for c in &mut chunks {
+        let x = pack4([c[0], c[1], c[2], c[3]]);
+        for (a, p) in t.patterns.iter_mut().zip(fp::pattern_counts_packed(x)) {
+            *a += p as u64;
+        }
+        t.hard_words += hard_word_lanes4(x).count_ones() as u64;
+    }
+    for &w in chunks.remainder() {
+        for (a, p) in t.patterns.iter_mut().zip(fp::pattern_counts(w)) {
+            *a += p as u64;
+        }
+        t.hard_words += (fp::soft_cells(w) > 0) as u64;
+    }
+    t
+}
+
+/// [`energy_tally`] sharded across at most `workers` threads via
+/// [`threads::run_sharded`]. Shard boundaries cannot affect the result —
+/// the census is a per-word integer sum — so every worker count returns
+/// the identical tally (not merely an equivalent one).
+pub fn energy_tally_threaded(words: &[u16], workers: usize) -> EnergyTally {
+    let bounds = threads::chunk_bounds(words.len(), 1, workers);
+    if bounds.len() <= 1 {
+        return energy_tally(words);
+    }
+    let jobs: Vec<&[u16]> = bounds.iter().map(|&(s, e)| &words[s..e]).collect();
+    let mut total = EnergyTally::default();
+    for partial in threads::run_sharded(jobs, workers, energy_tally) {
+        total.merge(&partial);
+    }
+    total
+}
+
 /// Apply `s` to a protected slice, writing the stored images into `dst`
 /// (same length), four lanes at a time.
 pub fn apply_into(s: Scheme, src: &[u16], dst: &mut [u16]) {
@@ -215,6 +306,50 @@ mod tests {
                 invert_into(s, &stored, &mut back);
                 let expect: Vec<u16> = stored.iter().map(|&w| scheme::invert(s, w)).collect();
                 assert_eq!(back, expect, "{s:?} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn hard_word_lanes_match_scalar_sampled() {
+        for h in (0..=u16::MAX).step_by(97) {
+            let ws = lanes_of(h);
+            let got = hard_word_lanes4(pack4(ws));
+            for (i, &w) in ws.iter().enumerate() {
+                let want = (fp::soft_cells(w) > 0) as u64;
+                assert_eq!((got >> (16 * i)) & 1, want, "h={h:#06x} lane {i}");
+            }
+            assert_eq!(got & !ONES4, 0, "stray bits outside lane LSBs");
+        }
+    }
+
+    #[test]
+    fn energy_tally_matches_per_word_census() {
+        // Lengths exercising the ragged tail, plus boundary streams.
+        let mut streams: Vec<Vec<u16>> = (0..10usize)
+            .map(|len| (0..len as u16).map(|i| i.wrapping_mul(0x4D2F)).collect())
+            .collect();
+        streams.push(vec![0x0000; 257]);
+        streams.push(vec![0x5555; 257]);
+        streams.push((0..1001u32).map(|i| (i.wrapping_mul(40503) >> 3) as u16).collect());
+        for words in &streams {
+            let t = energy_tally(words);
+            let mut want = EnergyTally::default();
+            for &w in words {
+                for (a, p) in want.patterns.iter_mut().zip(fp::pattern_counts(w)) {
+                    *a += p as u64;
+                }
+                want.hard_words += (fp::soft_cells(w) > 0) as u64;
+                want.words += 1;
+            }
+            assert_eq!(t, want, "len={}", words.len());
+            for workers in [1usize, 2, 3, 8] {
+                assert_eq!(
+                    energy_tally_threaded(words, workers),
+                    want,
+                    "len={} workers={workers}",
+                    words.len()
+                );
             }
         }
     }

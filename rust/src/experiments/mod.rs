@@ -7,10 +7,10 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{InferenceEngine, StoreConfig, WeightStore};
+use crate::coordinator::{InferenceEngine, StoreConfig, StoreReport, WeightStore};
 use crate::encoding::Policy;
 use crate::metrics::{accuracy_table, AccuracyRow, Table};
-use crate::runtime::artifacts::{model_paths, Manifest, TestSet, WeightFile};
+use crate::runtime::artifacts::{model_paths, Manifest, ParamSpec, TestSet, WeightFile};
 use crate::runtime::Executor;
 use crate::stt::ErrorModel;
 
@@ -85,6 +85,154 @@ pub fn run_accuracy_experiment(
         model: model.to_string(),
         error_free,
         rows,
+        table,
+    })
+}
+
+// -------------------------------------------------------------- rate sweep
+
+/// One error-rate point of a sweep: per-policy accuracy rows (in
+/// [`Policy::ALL`] order) plus the matching store reports.
+pub struct RatePoint {
+    pub rate: f64,
+    pub rows: Vec<AccuracyRow>,
+    pub reports: Vec<StoreReport>,
+}
+
+/// Result of a Fig. 8-style error-rate sweep ([`run_rate_sweep`]).
+pub struct RateSweep {
+    pub model: String,
+    pub error_free: f64,
+    pub points: Vec<RatePoint>,
+    /// Encode+store passes actually performed. The sweep's perf contract
+    /// — asserted by `rust/tests/sweep_equivalence.rs` — is exactly one
+    /// per policy, independent of the number of rate points.
+    pub encode_passes: usize,
+    pub table: Table,
+}
+
+/// Engine-agnostic core of the snapshot-reuse sweep (DESIGN.md §9):
+/// encode and store each policy's image **once** (fault-free), snapshot
+/// the stored words, and per rate point only rewind + re-inject
+/// ([`WeightStore::reinject`]) before materializing and handing the
+/// decoded tensors to `eval` for scoring. Flip sets, accuracies, and
+/// accounting are bit-identical to building a fresh store per
+/// (policy, rate) — at one encode/store instead of `rates.len()` per
+/// policy, the restage-per-point cost ROADMAP flagged.
+///
+/// `eval` receives `(policy, rate, tensors, report)` and returns the
+/// accuracy to record; `base.seed` seeds every point's fault injection
+/// (one seed, rate-indexed flip sets stay comparable across policies).
+/// Returns the points (indexed like `rates`) and the number of
+/// encode+store passes performed.
+pub fn run_rate_sweep_with<E>(
+    weights: &WeightFile,
+    base: &StoreConfig,
+    rates: &[f64],
+    mut eval: E,
+) -> Result<(Vec<RatePoint>, usize)>
+where
+    E: FnMut(Policy, f64, &[ParamSpec], &StoreReport) -> Result<f64>,
+{
+    let mut points: Vec<RatePoint> = rates
+        .iter()
+        .map(|&rate| RatePoint {
+            rate,
+            rows: Vec::new(),
+            reports: Vec::new(),
+        })
+        .collect();
+    let mut encode_passes = 0usize;
+    for policy in Policy::ALL {
+        let cfg = StoreConfig {
+            policy,
+            error_model: ErrorModel::at_rate(0.0),
+            ..base.clone()
+        };
+        let mut store = WeightStore::load(&cfg, weights)
+            .with_context(|| format!("storing {} image", policy.label()))?;
+        encode_passes += 1;
+        let snap = store.snapshot();
+        for (point, &rate) in points.iter_mut().zip(rates) {
+            store.reinject(&snap, &ErrorModel::at_rate(rate), base.seed)?;
+            let tensors = store.materialize()?;
+            let report = store.report();
+            let accuracy = eval(policy, rate, &tensors, &report)?;
+            point.rows.push(AccuracyRow {
+                system: policy.label().into(),
+                accuracy,
+                flipped_cells: report.injected_faults,
+            });
+            point.reports.push(report);
+        }
+    }
+    Ok((points, encode_passes))
+}
+
+/// Render sweep points as one table: a row per (rate, policy) with
+/// accuracy, delta vs the error-free reference, flips, and the energy
+/// bill at that point.
+pub fn rate_sweep_table(title: &str, error_free: f64, points: &[RatePoint]) -> Table {
+    let mut t = Table::new(
+        &format!("Fig.8 sweep — {title} (error-free = {error_free:.4})"),
+        &["rate", "system", "accuracy", "delta", "flips", "read nJ", "write nJ"],
+    );
+    for p in points {
+        for (row, report) in p.rows.iter().zip(&p.reports) {
+            t.row(vec![
+                format!("{:.4}", p.rate),
+                row.system.clone(),
+                format!("{:.4}", row.accuracy),
+                format!("{:+.4}", row.accuracy - error_free),
+                row.flipped_cells.to_string(),
+                format!("{:.1}", report.read_energy.nanojoules),
+                format!("{:.1}", report.write_energy.nanojoules),
+            ]);
+        }
+    }
+    t
+}
+
+/// The full Fig. 8 accuracy-vs-error-rate sweep for one model through the
+/// PJRT executable: error-free reference once, then [`run_rate_sweep_with`]
+/// over `rates`, restaging each point's corrupted tensors into a single
+/// compiled engine. One encode+store per policy for the whole sweep.
+pub fn run_rate_sweep(
+    dir: &Path,
+    model: &str,
+    rates: &[f64],
+    granularity: usize,
+    eval: usize,
+    seed: u64,
+) -> Result<RateSweep> {
+    let (manifest, weights) = load_model(dir, model)?;
+    let (hlo, _, _) = model_paths(dir, model);
+    let test = TestSet::read(&dir.join("testset.bin"))?;
+
+    let exec = Executor::from_hlo_file(&hlo)?;
+    let mut engine = InferenceEngine::new(exec, manifest.clone(), &weights.params)?;
+    let (error_free, _, _) = engine.accuracy(&test, eval)?;
+
+    let base = StoreConfig {
+        granularity,
+        seed,
+        ..StoreConfig::default()
+    };
+    let (points, encode_passes) = run_rate_sweep_with(&weights, &base, rates, |_, _, tensors, _| {
+        engine.restage(tensors)?;
+        let (acc, _, _) = engine.accuracy(&test, eval)?;
+        Ok(acc)
+    })?;
+    let table = rate_sweep_table(
+        &format!("{model} (g={granularity}, eval={eval}, seed={seed})"),
+        error_free,
+        &points,
+    );
+    Ok(RateSweep {
+        model: model.to_string(),
+        error_free,
+        points,
+        encode_passes,
         table,
     })
 }

@@ -51,6 +51,7 @@ fn main() {
         "bitcount" => cmd_bitcount(&rest),
         "energy" => cmd_energy(&rest),
         "accuracy" => cmd_accuracy(&rest),
+        "sweep" => cmd_sweep(&rest),
         "bandwidth" => cmd_bandwidth(&rest),
         "serve" => cmd_serve(&rest),
         other => {
@@ -73,6 +74,7 @@ fn print_usage() {
          \x20 bitcount   Fig. 6 stored-pattern census\n\
          \x20 energy     Fig. 7 read/write energy by granularity\n\
          \x20 accuracy   Fig. 8 fault-injection accuracy (needs artifacts)\n\
+         \x20 sweep      Fig. 8 accuracy-vs-error-rate sweep (snapshot reuse)\n\
          \x20 bandwidth  Fig. 9 systolic-array bandwidth vs buffer size\n\
          \x20 serve      end-to-end serving demo with latency metrics\n\
          \x20 version    print version\n\n\
@@ -264,6 +266,40 @@ fn cmd_accuracy(args: &[String]) -> Result<()> {
         seed,
     )?;
     println!("{}", exp.table);
+    Ok(())
+}
+
+// ---------------------------------------------------------------- sweep
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let cmd = Command::new("sweep", "Fig. 8: accuracy vs error rate (snapshot-reuse campaign)")
+        .flag("model", "vggmini", "artifact model name")
+        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("rates", "0.0,0.005,0.01,0.015,0.02", "soft-error rates to sweep")
+        .flag("granularity", "4", "metadata granularity")
+        .flag("eval", "512", "test images to evaluate per point")
+        .flag("seed", "7", "fault-injection seed");
+    let m = cmd.parse(args).map_err(usage_err)?;
+    let rates: Vec<f64> = m
+        .list("rates")
+        .iter()
+        .map(|r| r.parse().with_context(|| format!("bad --rates entry {r:?}")))
+        .collect::<Result<_>>()?;
+
+    let exp = mlcstt::experiments::run_rate_sweep(
+        &artifacts_dir(&m),
+        m.str("model"),
+        &rates,
+        m.usize("granularity")?,
+        m.usize("eval")?,
+        m.u64("seed")?,
+    )?;
+    println!("{}", exp.table);
+    println!(
+        "(encode+store passes: {} — one per policy for all {} rate points)",
+        exp.encode_passes,
+        rates.len()
+    );
     Ok(())
 }
 

@@ -114,6 +114,51 @@ impl CostModel {
         }
     }
 
+    /// Per-pattern access cost `[c00, c01, c10, c11]` under the
+    /// content-aware billing convention (base states bill the soft
+    /// column, intermediates the hard column) — the dot-product vector
+    /// for tally-based stream accounting (DESIGN.md §9).
+    #[inline]
+    pub fn pattern_costs(&self, kind: AccessKind) -> [Energy; 4] {
+        let (base, hard) = match kind {
+            AccessKind::Read => (self.soft_read, self.hard_read),
+            AccessKind::Write => (self.soft_write, self.hard_write),
+        };
+        [base, hard, hard, base]
+    }
+
+    /// Bill a whole word stream from its census instead of per word
+    /// (DESIGN.md §9): energy is the dot product of the cell-pattern
+    /// histogram `[n00, n01, n10, n11]` with [`Self::pattern_costs`];
+    /// latency bills the hard word cycles for each of the `hard_words`
+    /// words containing an intermediate cell and the soft cycles for the
+    /// rest (word latency is the max over its parallel cells, summed
+    /// serially over words — the same convention as [`Self::word`]).
+    ///
+    /// Cycle totals are **integer-exact** against a per-word
+    /// [`Self::word`] loop. Nanojoules agree to f64 rounding: the tally
+    /// path commits one rounding per pattern instead of two per word, so
+    /// it is at least as accurate but not bit-for-bit associative with
+    /// the sequential sum.
+    pub fn stream(
+        &self,
+        patterns: [u64; 4],
+        hard_words: u64,
+        words: u64,
+        kind: AccessKind,
+    ) -> Energy {
+        debug_assert!(hard_words <= words);
+        let costs = self.pattern_costs(kind);
+        let nanojoules = patterns
+            .iter()
+            .zip(&costs)
+            .map(|(&n, c)| n as f64 * c.nanojoules)
+            .sum();
+        // costs[0] is the base (soft-column) cell; costs[1] the hard one.
+        let cycles = hard_words * costs[1].cycles + (words - hard_words) * costs[0].cycles;
+        Energy { nanojoules, cycles }
+    }
+
     /// Content-blind MLC cost of one word (the "unprotected baseline" bill
     /// when modeled with the uniform MLC column).
     pub fn word_uniform(&self, kind: AccessKind) -> Energy {
@@ -195,6 +240,49 @@ mod tests {
         let w = m.word_uniform(AccessKind::Write);
         assert!((w.nanojoules - 8.0 * 1.859).abs() < 1e-12);
         assert_eq!(w.cycles, 90);
+    }
+
+    #[test]
+    fn pattern_costs_follow_billing_convention() {
+        let m = CostModel::default();
+        for kind in [AccessKind::Read, AccessKind::Write] {
+            let c = m.pattern_costs(kind);
+            assert_eq!(c[0], c[3], "00 and 11 are both base states");
+            assert_eq!(c[1], c[2], "01 and 10 are both intermediates");
+            assert_eq!(c[0], m.cell(CellPattern::P00, kind));
+            assert_eq!(c[1], m.cell(CellPattern::P01, kind));
+        }
+    }
+
+    #[test]
+    fn stream_matches_per_word_loop() {
+        // A mixed stream: the dot product must agree with the per-word
+        // oracle — cycles exactly, nanojoules to f64 rounding.
+        let m = CostModel::default();
+        let words: Vec<u16> = (0..999u32).map(|i| (i.wrapping_mul(40503) >> 2) as u16).collect();
+        for kind in [AccessKind::Read, AccessKind::Write] {
+            let mut oracle = Energy::ZERO;
+            let mut patterns = [0u64; 4];
+            let mut hard = 0u64;
+            for &w in &words {
+                oracle.add(m.word(w, kind));
+                for (a, p) in patterns.iter_mut().zip(fp::pattern_counts(w)) {
+                    *a += p as u64;
+                }
+                hard += (fp::soft_cells(w) > 0) as u64;
+            }
+            let fast = m.stream(patterns, hard, words.len() as u64, kind);
+            assert_eq!(fast.cycles, oracle.cycles, "{kind:?}");
+            let rel = (fast.nanojoules - oracle.nanojoules).abs() / oracle.nanojoules;
+            assert!(rel < 1e-12, "{kind:?}: {} vs {}", fast.nanojoules, oracle.nanojoules);
+        }
+        // Closed forms on uniform streams are exact.
+        let all_base = m.stream([800, 0, 0, 0], 0, 100, AccessKind::Write);
+        assert!((all_base.nanojoules - 800.0 * 1.084).abs() < 1e-12);
+        assert_eq!(all_base.cycles, 100 * 50);
+        let all_hard = m.stream([0, 400, 400, 0], 100, 100, AccessKind::Write);
+        assert!((all_hard.nanojoules - 800.0 * 2.653).abs() < 1e-12);
+        assert_eq!(all_hard.cycles, 100 * 95);
     }
 
     #[test]

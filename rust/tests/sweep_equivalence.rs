@@ -1,0 +1,285 @@
+//! ISSUE 4 equivalence suite: every fast path of the sweep-scale
+//! measurement stack pinned against its retained oracle.
+//!
+//! * **Tally energy** ([`Encoded::access_energy`]) vs the per-word
+//!   [`Encoded::access_energy_scalar`] loop: cycles integer-exact, census
+//!   integer-exact, nanojoules to f64 rounding — over random and boundary
+//!   streams at every policy and granularity, for every worker count.
+//! * **Snapshot-reuse sweeps** ([`run_rate_sweep_with`]) vs the
+//!   restage-per-point baseline (a fresh [`WeightStore::load`] per
+//!   (policy, rate)): flip sets, accuracies, and energy reports
+//!   bit-identical at a fixed seed, with exactly one encode+store per
+//!   policy asserted.
+//! * **Pipelined materialize** vs the serial oracle is pinned in
+//!   `coordinator::store` unit tests; the sweep tests here exercise it on
+//!   every point as well (the sweep materializes through the pipeline).
+
+mod common;
+
+use std::collections::HashMap;
+
+use mlcstt::coordinator::{StoreConfig, WeightStore};
+use mlcstt::encoding::swar::{energy_tally, energy_tally_threaded, EnergyTally};
+use mlcstt::encoding::{Encoded, Policy, WeightCodec};
+use mlcstt::experiments::run_rate_sweep_with;
+use mlcstt::fp;
+use mlcstt::runtime::artifacts::{ParamSpec, WeightFile};
+use mlcstt::stt::{AccessKind, CostModel, ErrorModel};
+
+const KINDS: [AccessKind; 2] = [AccessKind::Read, AccessKind::Write];
+
+/// Word streams hitting the census boundaries: empty, sub-lane-group
+/// ragged lengths, uniform all-base / all-soft, and a long mixed stream.
+fn boundary_streams() -> Vec<Vec<u16>> {
+    let mut streams: Vec<Vec<u16>> = (0..10usize)
+        .map(|len| (0..len as u16).map(|i| i.wrapping_mul(0x4D2F)).collect())
+        .collect();
+    streams.push(vec![0x0000; 333]);
+    streams.push(vec![0xFFFF; 333]);
+    streams.push(vec![0x5555; 333]);
+    streams.push(vec![0xAAAA; 333]);
+    streams.push(
+        (0..100_003u32)
+            .map(|i| (i.wrapping_mul(40503) >> 2) as u16)
+            .collect(),
+    );
+    streams
+}
+
+fn per_word_tally(words: &[u16]) -> EnergyTally {
+    let mut want = EnergyTally::default();
+    for &w in words {
+        for (a, p) in want.patterns.iter_mut().zip(fp::pattern_counts(w)) {
+            *a += p as u64;
+        }
+        want.hard_words += (fp::soft_cells(w) > 0) as u64;
+        want.words += 1;
+    }
+    want
+}
+
+#[test]
+fn census_is_exact_and_worker_invariant() {
+    for words in &boundary_streams() {
+        let want = per_word_tally(words);
+        assert_eq!(energy_tally(words), want, "len={}", words.len());
+        for workers in [1usize, 2, 3, 7, 16] {
+            assert_eq!(
+                energy_tally_threaded(words, workers),
+                want,
+                "len={} workers={workers}",
+                words.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn tally_energy_matches_scalar_oracle_on_raw_streams() {
+    let cost = CostModel::default();
+    for words in &boundary_streams() {
+        let enc = Encoded {
+            words: words.clone(),
+            schemes: vec![],
+            granularity: 1,
+            policy: Policy::Unprotected,
+        };
+        for kind in KINDS {
+            let fast = enc.access_energy(&cost, kind);
+            let oracle = enc.access_energy_scalar(&cost, kind);
+            assert_eq!(fast.cycles, oracle.cycles, "len={} {kind:?}", words.len());
+            let diff = (fast.nanojoules - oracle.nanojoules).abs();
+            let tol = 1e-12 * oracle.nanojoules.max(1.0);
+            assert!(
+                diff <= tol,
+                "len={} {kind:?}: {} vs {}",
+                words.len(),
+                fast.nanojoules,
+                oracle.nanojoules
+            );
+        }
+    }
+}
+
+#[test]
+fn tally_energy_matches_scalar_oracle_all_policies_granularities() {
+    let cost = CostModel::default();
+    let ws = common::trained_like_weights(80_000, "sweep/tally");
+    for policy in Policy::ALL {
+        for g in [1usize, 2, 4, 7, 8, 16] {
+            let enc = WeightCodec::new(policy, g).encode(&ws);
+            for kind in KINDS {
+                let fast = enc.access_energy(&cost, kind);
+                let oracle = enc.access_energy_scalar(&cost, kind);
+                assert_eq!(fast.cycles, oracle.cycles, "{policy:?} g={g} {kind:?}");
+                let rel = (fast.nanojoules - oracle.nanojoules).abs() / oracle.nanojoules;
+                assert!(rel < 1e-12, "{policy:?} g={g} {kind:?}: rel={rel}");
+            }
+        }
+    }
+}
+
+/// Multi-tensor weight file with a multi-shard tensor, so the sweep
+/// exercises the per-shard seed replay across store-shard boundaries.
+fn sweep_weight_file() -> WeightFile {
+    WeightFile {
+        params: vec![
+            ParamSpec {
+                name: "conv.w".into(),
+                shape: vec![40_000],
+                data: common::trained_like_weights(40_000, "sweep/conv"),
+            },
+            ParamSpec {
+                name: "fc.w".into(),
+                shape: vec![9_001],
+                data: common::trained_like_weights(9_001, "sweep/fc"),
+            },
+        ],
+    }
+}
+
+#[test]
+fn snapshot_sweep_matches_restage_per_point_baseline() {
+    let wf = sweep_weight_file();
+    let seed = 0xF1685EEDu64;
+    let rates = [0.0f64, 0.005, 0.015, 0.02];
+    let base = StoreConfig {
+        granularity: 4,
+        seed,
+        ..StoreConfig::default()
+    };
+
+    // Sweep path: one encode+store per policy, reinject per point. The
+    // eval closure records the materialized tensors for comparison and
+    // scores the fraction of weights still bit-identical to clean.
+    let mut sweep_tensors: HashMap<(String, u64), Vec<ParamSpec>> = HashMap::new();
+    let (points, encode_passes) =
+        run_rate_sweep_with(&wf, &base, &rates, |policy, rate, tensors, _| {
+            sweep_tensors.insert((policy.label().into(), rate.to_bits()), tensors.to_vec());
+            Ok(fidelity(&wf, tensors))
+        })
+        .unwrap();
+    assert_eq!(
+        encode_passes,
+        Policy::ALL.len(),
+        "sweep must encode+store exactly once per policy"
+    );
+    assert_eq!(points.len(), rates.len());
+
+    // Baseline: a fresh re-quantize/re-encode/re-store per (policy, rate).
+    for (pi, &rate) in rates.iter().enumerate() {
+        for (si, policy) in Policy::ALL.into_iter().enumerate() {
+            let cfg = StoreConfig {
+                policy,
+                error_model: ErrorModel::at_rate(rate),
+                ..base.clone()
+            };
+            let mut store = WeightStore::load(&cfg, &wf).unwrap();
+            let want = store.materialize().unwrap();
+            let want_report = store.report();
+
+            let got = &sweep_tensors[&(policy.label().to_string(), rate.to_bits())];
+            for (a, b) in want.iter().zip(got) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(
+                    a.data, b.data,
+                    "flip set diverged: {policy:?} rate={rate} tensor={}",
+                    a.name
+                );
+            }
+            let row = &points[pi].rows[si];
+            assert_eq!(row.system, policy.label());
+            assert_eq!(row.accuracy, fidelity(&wf, &want), "{policy:?} rate={rate}");
+            let report = &points[pi].reports[si];
+            assert_eq!(report.write_energy, want_report.write_energy, "{policy:?} rate={rate}");
+            assert_eq!(report.read_energy, want_report.read_energy, "{policy:?} rate={rate}");
+            assert_eq!(
+                report.injected_faults, want_report.injected_faults,
+                "{policy:?} rate={rate}"
+            );
+            assert_eq!(row.flipped_cells, want_report.injected_faults);
+        }
+    }
+}
+
+/// Fraction of weights decoded bit-identically to their f16-quantized
+/// originals — a deterministic accuracy stand-in for artifact-free runs.
+fn fidelity(clean: &WeightFile, tensors: &[ParamSpec]) -> f64 {
+    let mut same = 0usize;
+    let mut total = 0usize;
+    for (c, t) in clean.params.iter().zip(tensors) {
+        for (a, b) in c.data.iter().zip(&t.data) {
+            same += (fp::quantize_f16(*a).to_bits() == b.to_bits()) as usize;
+            total += 1;
+        }
+    }
+    same as f64 / total as f64
+}
+
+#[test]
+fn sweep_accuracy_matches_baseline_on_synthetic_task() {
+    // The Fig. 8 mechanism end to end, artifact-free: a linear classifier
+    // whose weight matrix lives in the buffer. The sweep's accuracy per
+    // (policy, rate) must equal the restage-per-point baseline's.
+    let task = common::SyntheticTask::new(8, 256, 64, "sweep/task");
+    let wf = task.weight_file();
+    let seed = 99u64;
+    let rates = [0.0f64, 0.02];
+    let base = StoreConfig {
+        granularity: 4,
+        seed,
+        ..StoreConfig::default()
+    };
+    let (points, _) = run_rate_sweep_with(&wf, &base, &rates, |_, _, tensors, _| {
+        Ok(task.accuracy(&tensors[0].data))
+    })
+    .unwrap();
+
+    for (pi, &rate) in rates.iter().enumerate() {
+        for (si, policy) in Policy::ALL.into_iter().enumerate() {
+            let cfg = StoreConfig {
+                policy,
+                error_model: ErrorModel::at_rate(rate),
+                ..base.clone()
+            };
+            let mut store = WeightStore::load(&cfg, &wf).unwrap();
+            let tensors = store.materialize().unwrap();
+            let want = task.accuracy(&tensors[0].data);
+            assert_eq!(points[pi].rows[si].accuracy, want, "{policy:?} rate={rate}");
+        }
+    }
+    // Sanity: at rate 0 every system scores clean-task accuracy.
+    for row in &points[0].rows {
+        assert_eq!(row.flipped_cells, 0, "{}", row.system);
+    }
+}
+
+#[test]
+fn reinject_is_seed_deterministic() {
+    let wf = sweep_weight_file();
+    let mut store = WeightStore::load(
+        &StoreConfig {
+            error_model: ErrorModel::at_rate(0.0),
+            ..StoreConfig::default()
+        },
+        &wf,
+    )
+    .unwrap();
+    let snap = store.snapshot();
+    let model = ErrorModel::at_rate(0.02);
+
+    store.reinject(&snap, &model, 1).unwrap();
+    let a = store.materialize().unwrap();
+    store.reinject(&snap, &model, 1).unwrap();
+    let b = store.materialize().unwrap();
+    store.reinject(&snap, &model, 2).unwrap();
+    let c = store.materialize().unwrap();
+
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.data, y.data, "same seed must replay the same flips");
+    }
+    assert!(
+        a.iter().zip(&c).any(|(x, y)| x.data != y.data),
+        "different seeds should produce different flip sets"
+    );
+}
