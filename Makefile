@@ -7,7 +7,7 @@
 ARTIFACTS ?= artifacts
 FORCE ?=
 
-.PHONY: artifacts build test bench sweep clean-artifacts
+.PHONY: artifacts build test bench sweep serve-demo clean-artifacts
 
 artifacts:
 	python3 python/compile/aot.py --out-dir $(ARTIFACTS) $(if $(FORCE),--force,)
@@ -17,6 +17,12 @@ artifacts:
 # back to a synthetic tensor — runs anywhere.
 sweep:
 	cargo run --release --offline --example rate_sweep
+
+# Multi-model serving demo through api::ModelRegistry (DESIGN.md §10).
+# Uses trained artifacts when present, otherwise serves two buffer-backed
+# linear classifiers — runs anywhere, no PJRT needed.
+serve-demo:
+	cargo run --release --offline --example registry_serve
 
 build:
 	cargo build --release --offline

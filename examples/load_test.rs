@@ -14,61 +14,40 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use mlcstt::coordinator::{
-    poisson_trace, InferenceEngine, Server, ServerConfig, StoreConfig, WeightStore,
-};
+use mlcstt::api::{Config, Deployment};
+use mlcstt::coordinator::{poisson_trace, Server};
 use mlcstt::encoding::Policy;
-use mlcstt::experiments::load_model;
-use mlcstt::runtime::artifacts::{model_available, model_paths, TestSet};
-use mlcstt::runtime::Executor;
+use mlcstt::runtime::artifacts::{model_available, TestSet};
 use mlcstt::stt::ErrorModel;
 
 fn main() -> Result<()> {
-    let dir = std::path::PathBuf::from(
-        std::env::var("MLCSTT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
+    // MLCSTT_ARTIFACTS / MLCSTT_REQUESTS / MLCSTT_RATES resolve through
+    // the layered config in one place.
+    let config = Config::builder().max_wait(Duration::from_millis(25)).build();
+    let dir = config.artifacts_dir().to_path_buf();
     let model = "inceptionmini";
     anyhow::ensure!(
         model_available(&dir, model),
         "{model}: run `make artifacts` first"
     );
-    let requests: usize = std::env::var("MLCSTT_REQUESTS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(96);
-    let rates: Vec<f64> = std::env::var("MLCSTT_RATES")
-        .unwrap_or_else(|_| "50,200".into())
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .collect();
+    let requests = config.requests_or(96);
+    let rates = config.rates_or(&[50.0, 200.0]);
 
-    let (manifest, weights) = load_model(&dir, model)?;
+    // The deployment owns encode -> store -> faults -> materialize; its
+    // engine factory is re-used to pin a fresh worker per offered rate.
+    let dep = Deployment::builder()
+        .config(config.clone())
+        .model(model)
+        .policy(Policy::Hybrid)
+        .granularity(4)
+        .error_model(ErrorModel::at_rate(0.015))
+        .build()?;
     let test = TestSet::read(&dir.join("testset.bin"))?;
-    let cfg = StoreConfig {
-        policy: Policy::Hybrid,
-        granularity: 4,
-        error_model: ErrorModel::at_rate(0.015),
-        ..StoreConfig::default()
-    };
-    let mut store = WeightStore::load(&cfg, &weights)?;
-    let tensors = store.materialize()?;
 
     println!("open-loop Poisson load test — {model}, {requests} requests per rate");
     for rate in rates {
         let trace = poisson_trace(requests, rate, test.n, 0xBEEF);
-        let tensors = tensors.clone();
-        let manifest2 = manifest.clone();
-        let (hlo, _, _) = model_paths(&dir, model);
-        let server = Server::start(
-            move || {
-                let exec = Executor::from_hlo_file(&hlo)?;
-                InferenceEngine::new(exec, manifest2, &tensors)
-            },
-            ServerConfig {
-                max_wait: Duration::from_millis(25),
-                ..ServerConfig::default()
-            },
-        )?;
+        let server = Server::start(dep.engine_factory()?, config.server())?;
 
         let start = Instant::now();
         let mut tickets = Vec::with_capacity(trace.len());

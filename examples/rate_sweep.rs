@@ -14,6 +14,7 @@
 //! (fraction of weights decoded bit-identically to clean) instead of
 //! model accuracy — same sweep machinery, same one-encode contract.
 
+use mlcstt::api::Config;
 use mlcstt::coordinator::StoreConfig;
 use mlcstt::experiments::{rate_sweep_table, run_rate_sweep, run_rate_sweep_with};
 use mlcstt::fp;
@@ -23,20 +24,13 @@ use mlcstt::util::rng::Xoshiro256;
 const RATES: [f64; 5] = [0.0, 0.005, 0.01, 0.015, 0.02];
 const SEED: u64 = 7;
 
-fn eval_n(default: usize) -> usize {
-    std::env::var("MLCSTT_EVAL")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(default)
-}
-
 fn main() -> anyhow::Result<()> {
-    let dir = std::env::var("MLCSTT_ARTIFACTS")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(|_| std::path::PathBuf::from(mlcstt::ARTIFACT_DIR));
+    // MLCSTT_ARTIFACTS / MLCSTT_EVAL resolve through the layered config.
+    let config = Config::from_env();
+    let dir = config.artifacts_dir().to_path_buf();
 
     if model_available(&dir, "vggmini") {
-        let sweep = run_rate_sweep(&dir, "vggmini", &RATES, 4, eval_n(512), SEED)?;
+        let sweep = run_rate_sweep(&dir, "vggmini", &RATES, 4, config.eval_or(512), SEED)?;
         println!("{}", sweep.table);
         println!(
             "(encode+store passes: {} — one per policy for all {} rate points)",
@@ -47,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("(vggmini artifacts missing — sweeping a synthetic tensor, fidelity metric)\n");
-    let n = eval_n(1 << 18);
+    let n = config.eval_or(1 << 18);
     let mut rng = Xoshiro256::seeded(SEED);
     let weights = WeightFile {
         params: vec![ParamSpec {

@@ -1,5 +1,5 @@
 //! End-to-end driver (DESIGN.md §5 "E2E"): the full three-layer system on a
-//! real workload.
+//! real workload, built entirely on the `api` facade.
 //!
 //! ```bash
 //! make artifacts && cargo run --offline --release --example serve_e2e
@@ -10,36 +10,32 @@
 //!  2. measures error-free accuracy through PJRT,
 //!  3. pushes the weights through the simulated MLC STT-RAM buffer under
 //!     each protection system at the published 2e-2 soft-error rate,
-//!  4. serves a request replay through the threaded coordinator (queue ->
-//!     batcher -> PJRT) and reports latency/throughput,
+//!  4. serves a request replay through the registry (queue -> batcher ->
+//!     PJRT, one thread-pinned worker per model) and reports latency,
 //!  5. prints the paper's headline comparison: hybrid accuracy == error-free
 //!     while read/write energy drops vs the unprotected baseline.
 //!
-//! Environment: MLCSTT_EVAL (test images per accuracy point, default 256),
-//! MLCSTT_REQUESTS (serving replay length, default 128).
+//! Environment (resolved once through `api::Config`): MLCSTT_EVAL (test
+//! images per accuracy point, default 256), MLCSTT_REQUESTS (serving
+//! replay length, default 128), MLCSTT_ARTIFACTS, MLCSTT_THREADS.
 
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use mlcstt::coordinator::{InferenceEngine, Server, ServerConfig, StoreConfig, WeightStore};
+use mlcstt::api::{Config, Deployment, ModelRegistry};
 use mlcstt::encoding::Policy;
 use mlcstt::experiments::{load_model, run_accuracy_experiment};
-use mlcstt::runtime::artifacts::{model_available, model_paths, TestSet};
-use mlcstt::runtime::Executor;
+use mlcstt::runtime::artifacts::{model_available, TestSet};
 use mlcstt::stt::{AccessKind, CostModel, ErrorModel};
 use mlcstt::util::rng::Xoshiro256;
 
-fn env_n(key: &str, default: usize) -> usize {
-    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
-}
-
 fn main() -> Result<()> {
-    let dir = std::path::PathBuf::from(
-        std::env::var("MLCSTT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
-    let eval = env_n("MLCSTT_EVAL", 256);
-    let requests = env_n("MLCSTT_REQUESTS", 128);
+    // Layered resolution (builder -> MLCSTT_* -> defaults) in one place.
+    let config = Config::builder().max_wait(Duration::from_millis(10)).build();
+    let dir = config.artifacts_dir().to_path_buf();
+    let eval = config.eval_or(256);
+    let requests = config.requests_or(128);
 
     let mut ran = false;
     for model in ["vggmini", "inceptionmini"] {
@@ -72,43 +68,28 @@ fn main() -> Result<()> {
             100.0 * (1.0 - pe(&hyb, AccessKind::Write) / pe(&base, AccessKind::Write)),
         );
 
-        // --- Serving replay through the coordinator (hybrid weights).
-        // The server config pins codec parallelism for the whole weight
-        // path (MLCSTT_THREADS-aware); the store inherits the pin so
-        // load/decode run at the deployment's worker budget.
-        let server_cfg = ServerConfig {
-            max_wait: Duration::from_millis(10),
-            ..ServerConfig::default()
-        };
-        let (manifest, weights) = load_model(&dir, model)?;
-        let cfg = StoreConfig {
-            policy: Policy::Hybrid,
-            granularity: 4,
-            error_model: ErrorModel::at_rate(0.02),
-            seed: 11,
-            threads: server_cfg.codec_threads,
-            ..StoreConfig::default()
-        };
-        let mut store = WeightStore::load(&cfg, &weights)?;
-        let tensors = store.materialize()?;
-        let (hlo, _, _) = model_paths(&dir, model);
-        let test = TestSet::read(&dir.join("testset.bin"))?;
+        // --- Serving replay through the registry (hybrid weights). The
+        // deployment owns the whole weight path; the registry pins its
+        // engine to a worker and routes by the model tag.
+        let dep = Deployment::builder()
+            .config(config.clone())
+            .model(model)
+            .policy(Policy::Hybrid)
+            .granularity(4)
+            .error_model(ErrorModel::at_rate(0.02))
+            .seed(11)
+            .build()?;
+        let mut registry = ModelRegistry::new();
+        registry.register_deployment(&dep, config.server())?;
 
-        let manifest2 = manifest.clone();
-        let server = Server::start(
-            move || {
-                let exec = Executor::from_hlo_file(&hlo)?;
-                InferenceEngine::new(exec, manifest2, &tensors)
-            },
-            server_cfg,
-        )?;
+        let test = TestSet::read(&dir.join("testset.bin"))?;
         let mut rng = Xoshiro256::seeded(3);
         let mut tickets = Vec::new();
         let mut expected = Vec::new();
         for _ in 0..requests {
             let i = rng.below(test.n as u64) as usize;
             expected.push(test.labels[i] as usize);
-            tickets.push(server.submit(test.image(i).to_vec())?);
+            tickets.push(registry.submit(model, test.image(i).to_vec())?);
         }
         let mut correct = 0usize;
         for (t, want) in tickets.into_iter().zip(expected) {
@@ -116,7 +97,8 @@ fn main() -> Result<()> {
                 correct += 1;
             }
         }
-        let rep = server.shutdown();
+        let report = registry.shutdown();
+        let rep = &report.sections[0].1;
         println!(
             "serving: {} req, {} batches (fill {:.1}), acc {:.4}, p50 {:.1} ms, p99 {:.1} ms, {:.1} req/s",
             rep.served,

@@ -13,8 +13,11 @@
 #[path = "harness.rs"]
 mod harness;
 
+use std::time::Duration;
+
+use mlcstt::api::{Config, Deployment, ModelRegistry};
 use mlcstt::buffer::{BufferConfig, MlcBuffer};
-use mlcstt::coordinator::{StoreConfig, WeightStore};
+use mlcstt::coordinator::{LinearEngine, ServerConfig, StoreConfig, WeightStore};
 use mlcstt::encoding::{Encoded, Policy, WeightCodec};
 use mlcstt::fp;
 use mlcstt::runtime::artifacts::{model_available, model_paths, ParamSpec, TestSet, WeightFile};
@@ -247,6 +250,67 @@ fn main() {
         ) {
             println!("sweep point speedup vs restage: {:.2}x", fast / slow);
         }
+    }
+
+    // Facade overhead: the full deployment build (encode -> store ->
+    // fault -> materialize) for a synthetic one-tensor model, and the
+    // registry's submit -> dispatch -> respond path with PJRT-free linear
+    // engines (ISSUE 5 satellite).
+    {
+        let wf = WeightFile {
+            params: vec![ParamSpec {
+                name: "bench.w".into(),
+                shape: vec![n],
+                data: ws.clone(),
+            }],
+        };
+        let config = Config::from_env();
+        let (_, t) = harness::time_stats(3, || {
+            Deployment::builder()
+                .config(config.clone())
+                .weights_ref(&wf)
+                .policy(Policy::Hybrid)
+                .granularity(4)
+                .error_model(ErrorModel::at_rate(0.015))
+                .seed(3)
+                .build()
+                .unwrap()
+                .tensors()
+                .len()
+        });
+        println!("deployment build (synth)  : {}", harness::rate(n as u64, t.median));
+        report.record("deployment_build_synthetic", n as u64, &t);
+
+        const CLASSES: usize = 8;
+        const DIM: usize = 64;
+        const BATCH: usize = 8;
+        let lw = weights(CLASSES * DIM);
+        let scfg = ServerConfig {
+            max_wait: Duration::from_millis(1),
+            codec_threads: 1,
+        };
+        let mut registry = ModelRegistry::new();
+        for name in ["route-a", "route-b"] {
+            let w = lw.clone();
+            registry
+                .register(name, move || LinearEngine::new(CLASSES, DIM, BATCH, w), scfg.clone())
+                .unwrap();
+        }
+        let img = vec![0.1f32; DIM];
+        let m = 1024usize;
+        let (_, t) = harness::time_stats(3, || {
+            let mut tickets = Vec::with_capacity(m);
+            for i in 0..m {
+                let tag = if i % 2 == 0 { "route-a" } else { "route-b" };
+                tickets.push(registry.submit(tag, img.clone()).unwrap());
+            }
+            tickets
+                .into_iter()
+                .map(|t| t.wait().unwrap().class)
+                .sum::<usize>()
+        });
+        println!("registry route (2 models) : {}", harness::rate(m as u64, t.median));
+        report.record("registry_route", m as u64, &t);
     }
 
     // End-to-end weight path for a real model (encode -> store -> load ->

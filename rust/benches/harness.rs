@@ -44,29 +44,21 @@ fn from_root(p: PathBuf) -> PathBuf {
     }
 }
 
-/// Resolve the artifacts directory (env override for CI layouts).
+/// Resolve the artifacts directory (env override for CI layouts), through
+/// the crate's single env layer (`mlcstt::api::env`).
 pub fn artifacts_dir() -> PathBuf {
-    std::env::var("MLCSTT_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| from_root(PathBuf::from("artifacts")))
+    mlcstt::api::env::artifacts().unwrap_or_else(|| from_root(PathBuf::from("artifacts")))
 }
 
 /// Where `BENCH_*.json` reports land (env override for CI layouts;
 /// relative values resolve against the workspace root).
 pub fn bench_out_dir() -> PathBuf {
-    from_root(
-        std::env::var("MLCSTT_BENCH_DIR")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("bench_out")),
-    )
+    from_root(mlcstt::api::env::bench_dir().unwrap_or_else(|| PathBuf::from("bench_out")))
 }
 
 /// Evaluation-size knob so the full Fig. 8 run stays tractable on 1 CPU.
 pub fn eval_n(default: usize) -> usize {
-    std::env::var("MLCSTT_EVAL")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(default)
+    mlcstt::api::env::eval().unwrap_or(default)
 }
 
 /// Time one invocation.

@@ -1,0 +1,257 @@
+//! One layered configuration for every entry point.
+//!
+//! [`Config`] resolves each knob in exactly one place —
+//! [`ConfigBuilder::build`] — with the precedence **builder override →
+//! `MLCSTT_*` environment ([`crate::api::env`]) → built-in default**. The
+//! legacy per-subsystem structs remain as *views*:
+//! [`Config::server`] produces a [`ServerConfig`] and [`Config::store`] a
+//! [`StoreConfig`], both carrying the resolved worker ceiling, so code
+//! that predates the facade keeps compiling against the same types.
+//!
+//! ```no_run
+//! use mlcstt::api::Config;
+//!
+//! let cfg = Config::builder().threads(4).eval(512).build();
+//! assert_eq!(cfg.server().codec_threads, 4);
+//! assert_eq!(cfg.store().threads, 4);
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::coordinator::{ServerConfig, StoreConfig};
+use crate::fp::{self, F16Mode};
+use crate::util::threads;
+
+/// Default batcher flush timeout (the historical `ServerConfig` default).
+const DEFAULT_MAX_WAIT: Duration = Duration::from_millis(20);
+
+/// Resolved cross-cutting configuration. Construct via [`Config::builder`]
+/// (explicit overrides) or [`Config::from_env`] (environment + defaults
+/// only); all layering happens inside [`ConfigBuilder::build`].
+#[derive(Clone, Debug)]
+pub struct Config {
+    threads: usize,
+    f16: F16Mode,
+    artifacts: PathBuf,
+    eval: Option<usize>,
+    requests: Option<usize>,
+    rates: Option<Vec<f64>>,
+    max_wait: Duration,
+}
+
+impl Config {
+    /// Start a builder whose unset fields resolve from the environment and
+    /// then the built-in defaults.
+    pub fn builder() -> ConfigBuilder {
+        ConfigBuilder::default()
+    }
+
+    /// Environment + defaults, no overrides (`Config::builder().build()`).
+    pub fn from_env() -> Config {
+        Self::builder().build()
+    }
+
+    /// Resolved worker-thread ceiling (>= 1): builder override, else
+    /// `MLCSTT_THREADS`, else the machine's available parallelism. Results
+    /// are bit-identical for every value — only latency changes.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Effective f16 converter for this process (see [`fp::f16_mode`]; the
+    /// selection latches on first use, so a builder override only wins if
+    /// it is applied before any conversion runs).
+    pub fn f16(&self) -> F16Mode {
+        self.f16
+    }
+
+    /// Trained-artifact directory: builder override, else
+    /// `MLCSTT_ARTIFACTS`, else [`crate::ARTIFACT_DIR`].
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts
+    }
+
+    /// Evaluation size (builder, else `MLCSTT_EVAL`), or the caller's
+    /// `default` — entry points keep their historical defaults (256 for
+    /// `serve_e2e`, 512 for sweeps, 1M for benches).
+    pub fn eval_or(&self, default: usize) -> usize {
+        self.eval.unwrap_or(default)
+    }
+
+    /// Serving replay length (builder, else `MLCSTT_REQUESTS`), or the
+    /// caller's `default`.
+    pub fn requests_or(&self, default: usize) -> usize {
+        self.requests.unwrap_or(default)
+    }
+
+    /// Offered-rate sweep (builder, else `MLCSTT_RATES`), or the caller's
+    /// `default` list.
+    pub fn rates_or(&self, default: &[f64]) -> Vec<f64> {
+        self.rates.clone().unwrap_or_else(|| default.to_vec())
+    }
+
+    /// Batcher flush timeout for serving (builder, else 20 ms).
+    pub fn max_wait(&self) -> Duration {
+        self.max_wait
+    }
+
+    /// The serving view: a [`ServerConfig`] carrying this config's flush
+    /// timeout and worker ceiling.
+    pub fn server(&self) -> ServerConfig {
+        ServerConfig {
+            max_wait: self.max_wait,
+            codec_threads: self.threads,
+        }
+    }
+
+    /// The weight-store view: a default-policy [`StoreConfig`] whose codec
+    /// worker cap is pinned to this config's ceiling. Pinning is
+    /// equivalent to the historical auto path (`threads: 0`): both floor
+    /// by per-worker minimum work and cap at
+    /// [`threads::available`], and results are worker-count-invariant by
+    /// construction.
+    pub fn store(&self) -> StoreConfig {
+        StoreConfig {
+            threads: self.threads,
+            ..StoreConfig::default()
+        }
+    }
+}
+
+/// Builder for [`Config`]; every setter is an explicit override that beats
+/// the environment layer.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigBuilder {
+    threads: Option<usize>,
+    f16: Option<F16Mode>,
+    artifacts: Option<PathBuf>,
+    eval: Option<usize>,
+    requests: Option<usize>,
+    rates: Option<Vec<f64>>,
+    max_wait: Option<Duration>,
+}
+
+impl ConfigBuilder {
+    /// Override the worker-thread ceiling (clamped to >= 1, matching the
+    /// `MLCSTT_THREADS` clamp).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Override the f16 converter. Applied via [`fp::pin_f16_mode`] at
+    /// [`Self::build`]: it wins only if no conversion has latched the
+    /// process mode yet (the resolved [`Config::f16`] reports the winner).
+    pub fn f16(mut self, mode: F16Mode) -> Self {
+        self.f16 = Some(mode);
+        self
+    }
+
+    /// Override the artifact directory.
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Override the evaluation size.
+    pub fn eval(mut self, n: usize) -> Self {
+        self.eval = Some(n);
+        self
+    }
+
+    /// Override the serving replay length.
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = Some(n);
+        self
+    }
+
+    /// Override the offered-rate sweep list.
+    pub fn rates(mut self, rates: Vec<f64>) -> Self {
+        self.rates = Some(rates);
+        self
+    }
+
+    /// Override the batcher flush timeout.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.max_wait = Some(d);
+        self
+    }
+
+    /// Resolve every layer — builder override, then `MLCSTT_*`
+    /// environment, then default — in this one place.
+    pub fn build(self) -> Config {
+        let f16 = match self.f16 {
+            // threads::available() already layers env over the machine
+            // default, so the builder override is the only layer added
+            // here; f16 pins the process mode (first resolution wins).
+            Some(mode) => fp::pin_f16_mode(mode),
+            None => fp::f16_mode(),
+        };
+        Config {
+            threads: self.threads.unwrap_or_else(threads::available),
+            f16,
+            artifacts: self
+                .artifacts
+                .or_else(super::env::artifacts)
+                .unwrap_or_else(|| PathBuf::from(crate::ARTIFACT_DIR)),
+            eval: self.eval.or_else(super::env::eval),
+            requests: self.requests.or_else(super::env::requests),
+            rates: self.rates.or_else(super::env::rates),
+            max_wait: self.max_wait.unwrap_or(DEFAULT_MAX_WAIT),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::Policy;
+
+    // Environment-layer precedence lives in `rust/tests/env_plumbing.rs`
+    // (its own binary: glibc setenv is UB against concurrent getenv).
+    // These tests only exercise the builder-beats-default layer.
+
+    #[test]
+    fn builder_overrides_beat_defaults() {
+        let cfg = Config::builder()
+            .threads(3)
+            .eval(77)
+            .requests(11)
+            .rates(vec![1.0, 2.0])
+            .artifacts("somewhere")
+            .max_wait(Duration::from_millis(5))
+            .build();
+        assert_eq!(cfg.threads(), 3);
+        assert_eq!(cfg.eval_or(512), 77);
+        assert_eq!(cfg.requests_or(128), 11);
+        assert_eq!(cfg.rates_or(&[9.0]), vec![1.0, 2.0]);
+        assert_eq!(cfg.artifacts_dir(), Path::new("somewhere"));
+        assert_eq!(cfg.max_wait(), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn views_carry_the_resolved_ceiling() {
+        let cfg = Config::builder().threads(2).build();
+        assert_eq!(cfg.server().codec_threads, 2);
+        assert_eq!(cfg.server().max_wait, DEFAULT_MAX_WAIT);
+        let sc = cfg.store();
+        assert_eq!(sc.threads, 2);
+        assert_eq!(sc.policy, Policy::Hybrid);
+        assert_eq!(sc.banks, 16);
+    }
+
+    #[test]
+    fn threads_zero_clamps_to_one() {
+        assert_eq!(Config::builder().threads(0).build().threads(), 1);
+    }
+
+    #[test]
+    fn caller_defaults_apply_when_unset() {
+        // eval/requests/rates may still be set in the ambient environment
+        // of a dev shell; only assert the no-env common case loosely.
+        let cfg = Config::builder().eval(5).build();
+        assert_eq!(cfg.eval_or(99), 5);
+        assert!(cfg.threads() >= 1);
+    }
+}

@@ -1,0 +1,437 @@
+//! The deployment lifecycle — encode → MLC store → (faults) →
+//! materialize → engine — behind one builder.
+//!
+//! Before the facade every entry point hand-rolled this sequence:
+//! `mlcstt serve`, `serve_e2e`, `load_test`, and both experiment drivers
+//! each wired `StoreConfig` → [`WeightStore::load`] → `materialize` →
+//! engine factory by hand. [`Deployment::builder`] owns it now; the old
+//! paths are rebuilt on it and `rust/tests/api_facade.rs` pins the
+//! rebuilt paths bit-identical to the hand-rolled ones (flip sets,
+//! energy reports, accuracies).
+//!
+//! ```no_run
+//! use mlcstt::api::{Config, Deployment};
+//! use mlcstt::stt::ErrorModel;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let dep = Deployment::builder()
+//!     .config(Config::from_env())
+//!     .model("vggmini")
+//!     .error_model(ErrorModel::at_rate(0.015))
+//!     .build()?;
+//! println!("{} faulted cells", dep.store_report().injected_faults);
+//! let factory = dep.engine_factory()?; // feed to Server / ModelRegistry
+//! # let _ = factory;
+//! # Ok(())
+//! # }
+//! ```
+
+use std::borrow::Cow;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::{
+    CleanMaterialize, InferenceEngine, StoreConfig, StoreReport, StoreSnapshot, WeightStore,
+};
+use crate::encoding::Policy;
+use crate::experiments::load_model;
+use crate::runtime::artifacts::{model_paths, Manifest, ParamSpec, WeightFile};
+use crate::runtime::Executor;
+use crate::stt::ErrorModel;
+
+use super::Config;
+
+/// A model deployed behind the simulated MLC STT-RAM buffer: the loaded
+/// [`WeightStore`], the materialized (possibly fault-corrupted) tensors,
+/// and — when built from trained artifacts — the manifest + HLO needed to
+/// bind a PJRT engine. Build with [`Deployment::builder`].
+pub struct Deployment {
+    name: String,
+    manifest: Option<Manifest>,
+    hlo: Option<PathBuf>,
+    store: WeightStore,
+    tensors: Vec<ParamSpec>,
+    report: StoreReport,
+}
+
+impl Deployment {
+    /// Start building a deployment.
+    pub fn builder<'w>() -> DeploymentBuilder<'w> {
+        DeploymentBuilder::default()
+    }
+
+    /// Deployment name: the artifact model name, or the builder override.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The materialized tensors (empty until the first materialize when
+    /// built with [`DeploymentBuilder::staged`]).
+    pub fn tensors(&self) -> &[ParamSpec] {
+        &self.tensors
+    }
+
+    /// Store accounting as of the last (re)materialize.
+    pub fn store_report(&self) -> &StoreReport {
+        &self.report
+    }
+
+    /// The protection policy the weights are stored under.
+    pub fn policy(&self) -> Policy {
+        self.store.policy()
+    }
+
+    /// The artifact manifest, when built from trained artifacts.
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Capture the stored image + accounting for a sweep campaign
+    /// (delegates to [`WeightStore::snapshot`]; DESIGN.md §9).
+    pub fn snapshot(&self) -> StoreSnapshot {
+        self.store.snapshot()
+    }
+
+    /// Rewind to `snap` and re-inject faults at `model`'s rate under
+    /// `seed` (delegates to [`WeightStore::reinject`]). The in-memory
+    /// tensors go stale until the next materialize. Returns words
+    /// corrupted.
+    pub fn reinject(&mut self, snap: &StoreSnapshot, model: &ErrorModel, seed: u64) -> Result<u64> {
+        self.store.reinject(snap, model, seed)
+    }
+
+    /// Read every tensor back through the buffer (bills read energy) and
+    /// refresh [`Self::tensors`] / [`Self::store_report`].
+    pub fn materialize(&mut self) -> Result<&[ParamSpec]> {
+        self.tensors = self.store.materialize()?;
+        self.report = self.store.report();
+        Ok(&self.tensors)
+    }
+
+    /// Capture a clean-materialize cache for the flip-set-aware sweep
+    /// (delegates to [`WeightStore::materialize_clean_cache`]; call on the
+    /// clean store right after [`Self::snapshot`]). Does not refresh
+    /// [`Self::tensors`] — the capture belongs to the sweep, not to this
+    /// deployment's serving state.
+    pub fn materialize_clean_cache(&mut self) -> Result<CleanMaterialize> {
+        self.store.materialize_clean_cache()
+    }
+
+    /// Flip-set-aware materialize (delegates to
+    /// [`WeightStore::materialize_reusing`]): zero-flip regions reuse the
+    /// cached clean decode + replayed bill, bit-identical to
+    /// [`Self::materialize`]. Refreshes tensors and report.
+    pub fn materialize_reusing(&mut self, cache: &CleanMaterialize) -> Result<&[ParamSpec]> {
+        self.tensors = self.store.materialize_reusing(cache)?;
+        self.report = self.store.report();
+        Ok(&self.tensors)
+    }
+
+    /// A `Send` factory that builds this deployment's PJRT
+    /// [`InferenceEngine`] **inside** the serving worker thread (the
+    /// thread-pinned-FFI pattern [`crate::coordinator::Server::start`]
+    /// requires). Needs trained artifacts (manifest + HLO) and a
+    /// materialized tensor set.
+    pub fn engine_factory(
+        &self,
+    ) -> Result<impl FnOnce() -> Result<InferenceEngine> + Send + 'static> {
+        let manifest = self
+            .manifest
+            .clone()
+            .ok_or_else(|| anyhow!("deployment {:?} has no artifact manifest", self.name))?;
+        let hlo = self
+            .hlo
+            .clone()
+            .ok_or_else(|| anyhow!("deployment {:?} has no HLO artifact", self.name))?;
+        ensure!(
+            !self.tensors.is_empty(),
+            "deployment {:?} is staged: call materialize() before serving",
+            self.name
+        );
+        let tensors = self.tensors.clone();
+        Ok(move || {
+            let exec = Executor::from_hlo_file(&hlo)?;
+            InferenceEngine::new(exec, manifest, &tensors)
+        })
+    }
+
+    /// Build the PJRT engine on the **current** thread (experiment loops
+    /// that restage tensors into one pinned executor use
+    /// [`Self::engine_factory`] + [`InferenceEngine::restage`] instead).
+    pub fn engine(&self) -> Result<InferenceEngine> {
+        self.engine_factory()?()
+    }
+}
+
+/// Builder for [`Deployment`]. Field defaults mirror
+/// [`StoreConfig::default`] (hybrid policy, granularity 4, paper error
+/// rate, 16 banks, fit-the-model capacity), with the codec worker cap
+/// taken from the resolved [`Config`] unless a base [`StoreConfig`] or an
+/// explicit [`Self::threads`] override says otherwise. The lifetime `'w`
+/// is that of a borrowed weight file ([`Self::weights_ref`]) and only
+/// constrains the builder, never the built [`Deployment`].
+#[derive(Default)]
+pub struct DeploymentBuilder<'w> {
+    config: Option<Config>,
+    name: Option<String>,
+    model: Option<String>,
+    weights: Option<Cow<'w, WeightFile>>,
+    manifest: Option<Manifest>,
+    hlo: Option<PathBuf>,
+    base_store: Option<StoreConfig>,
+    policy: Option<Policy>,
+    granularity: Option<usize>,
+    error_model: Option<ErrorModel>,
+    seed: Option<u64>,
+    banks: Option<usize>,
+    capacity_bytes: Option<usize>,
+    threads: Option<usize>,
+    staged: bool,
+}
+
+impl<'w> DeploymentBuilder<'w> {
+    /// Use this layered configuration (defaults to [`Config::from_env`]).
+    pub fn config(mut self, cfg: Config) -> Self {
+        self.config = Some(cfg);
+        self
+    }
+
+    /// Override the deployment name (defaults to the model name, or
+    /// `"in-memory"` for weight-file sources).
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = Some(name.into());
+        self
+    }
+
+    /// Source the weights (and manifest + HLO) from the trained artifact
+    /// `model` under the config's artifact directory.
+    pub fn model(mut self, model: impl Into<String>) -> Self {
+        self.model = Some(model.into());
+        self
+    }
+
+    /// Source the weights from an in-memory [`WeightFile`] (no engine
+    /// unless [`Self::manifest`] and [`Self::hlo`] are also provided —
+    /// store-only deployments are fine for sweeps and analyses).
+    pub fn weights(mut self, weights: WeightFile) -> Self {
+        self.weights = Some(Cow::Owned(weights));
+        self
+    }
+
+    /// Like [`Self::weights`], but borrowing the weight file for the
+    /// builder's lifetime — the experiment drivers build one deployment
+    /// per policy over the same weights, and this keeps that loop free of
+    /// per-policy deep copies (the store encodes from a borrow anyway).
+    pub fn weights_ref(mut self, weights: &'w WeightFile) -> Self {
+        self.weights = Some(Cow::Borrowed(weights));
+        self
+    }
+
+    /// Manifest for an in-memory weight source (enables the engine path
+    /// without re-reading artifacts from disk).
+    pub fn manifest(mut self, manifest: Manifest) -> Self {
+        self.manifest = Some(manifest);
+        self
+    }
+
+    /// HLO artifact path for an in-memory weight source.
+    pub fn hlo(mut self, hlo: impl Into<PathBuf>) -> Self {
+        self.hlo = Some(hlo.into());
+        self
+    }
+
+    /// Seed every store field from an existing [`StoreConfig`] (the
+    /// migration path for pre-facade call sites; individual setters below
+    /// still override on top).
+    pub fn store(mut self, base: StoreConfig) -> Self {
+        self.base_store = Some(base);
+        self
+    }
+
+    /// Protection policy (default [`Policy::Hybrid`]).
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Metadata granularity (default 4).
+    pub fn granularity(mut self, granularity: usize) -> Self {
+        self.granularity = Some(granularity);
+        self
+    }
+
+    /// Fault model (default: the paper's 1.5e-2 write rate).
+    pub fn error_model(mut self, model: ErrorModel) -> Self {
+        self.error_model = Some(model);
+        self
+    }
+
+    /// Shorthand for [`Self::error_model`] at a write rate.
+    pub fn error_rate(self, rate: f64) -> Self {
+        self.error_model(ErrorModel::at_rate(rate))
+    }
+
+    /// Fault-injection seed (default `0xD1CE`).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Buffer banks (default 16).
+    pub fn banks(mut self, banks: usize) -> Self {
+        self.banks = Some(banks);
+        self
+    }
+
+    /// Buffer capacity in bytes (default: sized to fit the model).
+    pub fn capacity_bytes(mut self, bytes: usize) -> Self {
+        self.capacity_bytes = Some(bytes);
+        self
+    }
+
+    /// Codec worker cap for this deployment's store (default: the
+    /// config's resolved ceiling, or the base store's cap when
+    /// [`Self::store`] was used).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Defer materialization: [`DeploymentBuilder::build`] stops after
+    /// encode + store (no read billed), leaving [`Deployment::tensors`]
+    /// empty until an explicit materialize. Sweep campaigns need this so
+    /// the snapshot captures a read-free accounting baseline.
+    pub fn staged(mut self) -> Self {
+        self.staged = true;
+        self
+    }
+
+    /// Load weights, encode + store them under the resolved
+    /// [`StoreConfig`], and (unless [`Self::staged`]) materialize the
+    /// decoded tensors — the whole pre-serving lifecycle in one place.
+    pub fn build(self) -> Result<Deployment> {
+        let config = self.config.unwrap_or_else(Config::from_env);
+        let (default_name, weights, manifest, hlo) = match (self.model, self.weights) {
+            (Some(model), None) => {
+                let dir = config.artifacts_dir();
+                let (manifest, weights) = load_model(dir, &model)?;
+                let (hlo, _, _) = model_paths(dir, &model);
+                (model, Cow::Owned(weights), Some(manifest), Some(hlo))
+            }
+            (None, Some(weights)) => ("in-memory".to_string(), weights, self.manifest, self.hlo),
+            (Some(_), Some(_)) => bail!("set either .model() or .weights(), not both"),
+            (None, None) => bail!("deployment needs a source: .model(name) or .weights(file)"),
+        };
+        let name = self.name.unwrap_or(default_name);
+
+        let mut sc = self.base_store.unwrap_or_else(|| StoreConfig {
+            threads: config.threads(),
+            ..StoreConfig::default()
+        });
+        if let Some(policy) = self.policy {
+            sc.policy = policy;
+        }
+        if let Some(granularity) = self.granularity {
+            sc.granularity = granularity;
+        }
+        if let Some(model) = self.error_model {
+            sc.error_model = model;
+        }
+        if let Some(seed) = self.seed {
+            sc.seed = seed;
+        }
+        if let Some(banks) = self.banks {
+            sc.banks = banks;
+        }
+        if let Some(bytes) = self.capacity_bytes {
+            sc.capacity_bytes = Some(bytes);
+        }
+        if let Some(threads) = self.threads {
+            sc.threads = threads;
+        }
+
+        let mut store = WeightStore::load(&sc, weights.as_ref())?;
+        let (tensors, report) = if self.staged {
+            (Vec::new(), store.report())
+        } else {
+            let tensors = store.materialize()?;
+            let report = store.report();
+            (tensors, report)
+        };
+        Ok(Deployment {
+            name,
+            manifest,
+            hlo,
+            store,
+            tensors,
+            report,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp;
+
+    fn weight_file(n: usize) -> WeightFile {
+        let data: Vec<f32> = (0..n)
+            .map(|i| fp::quantize_f16((i as f32 / n as f32) * 1.6 - 0.8))
+            .collect();
+        WeightFile {
+            params: vec![ParamSpec {
+                name: "w".into(),
+                shape: vec![n],
+                data,
+            }],
+        }
+    }
+
+    #[test]
+    fn build_matches_hand_rolled_store_path() {
+        // The broader sweep lives in tests/api_facade.rs; this pins the
+        // in-crate basics: same config -> same tensors + accounting.
+        let wf = weight_file(4096);
+        let sc = StoreConfig {
+            error_model: ErrorModel::at_rate(0.02),
+            seed: 9,
+            ..StoreConfig::default()
+        };
+        let mut store = WeightStore::load(&sc, &wf).unwrap();
+        let want = store.materialize().unwrap();
+        let want_report = store.report();
+
+        let dep = Deployment::builder().weights(wf).store(sc).build().unwrap();
+        assert_eq!(dep.name(), "in-memory");
+        for (a, b) in want.iter().zip(dep.tensors()) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(dep.store_report().read_energy, want_report.read_energy);
+        assert_eq!(dep.store_report().write_energy, want_report.write_energy);
+        assert_eq!(dep.store_report().injected_faults, want_report.injected_faults);
+    }
+
+    #[test]
+    fn staged_build_bills_no_read_and_refuses_to_serve() {
+        let dep = Deployment::builder()
+            .weights(weight_file(512))
+            .error_rate(0.0)
+            .staged()
+            .build()
+            .unwrap();
+        assert!(dep.tensors().is_empty());
+        assert_eq!(dep.store_report().read_energy.nanojoules, 0.0);
+        assert!(dep.engine_factory().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_conflicting_and_missing_sources() {
+        assert!(Deployment::builder().build().is_err());
+        let err = Deployment::builder()
+            .weights(weight_file(8))
+            .model("vggmini")
+            .build();
+        assert!(err.is_err());
+    }
+}

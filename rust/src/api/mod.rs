@@ -1,0 +1,27 @@
+//! The public facade: one layered configuration, one deployment
+//! lifecycle, one multi-model serving registry (DESIGN.md §10).
+//!
+//! * [`env`] — the single place `MLCSTT_*` environment variables are
+//!   read and parsed (re-exported from `util::env`, which sits below the
+//!   foundation modules that consume it);
+//! * [`Config`] — layered resolution (builder → env → default) with the
+//!   legacy [`crate::coordinator::ServerConfig`] /
+//!   [`crate::coordinator::StoreConfig`] structs as views;
+//! * [`Deployment`] — a builder owning the encode → MLC store → fault →
+//!   materialize → engine lifecycle every entry point used to hand-roll;
+//! * [`ModelRegistry`] — N named deployments served from N thread-pinned
+//!   workers with per-model request routing and report sections.
+//!
+//! Every rebuilt path is pinned bit-identical to its pre-facade
+//! hand-rolled equivalent (flip sets, energy reports, accuracies) by
+//! `rust/tests/api_facade.rs`.
+
+pub use crate::util::env;
+
+mod config;
+mod deployment;
+mod registry;
+
+pub use config::{Config, ConfigBuilder};
+pub use deployment::{Deployment, DeploymentBuilder};
+pub use registry::{ModelRegistry, RegistryReport};

@@ -1,0 +1,175 @@
+//! Multi-model serving: N named deployments behind one routing facade.
+//!
+//! [`crate::coordinator::Server`] pins one engine to one worker thread
+//! (PJRT handles are not `Send`, so the engine is constructed *inside*
+//! its thread from a `Send` factory). [`ModelRegistry`] extends that from
+//! one pinned engine to N: each registered model gets its own pinned
+//! worker + batcher, requests are routed by model tag at
+//! [`ModelRegistry::submit`], and [`ModelRegistry::shutdown`] returns one
+//! [`ServerReport`] section per model, in registration order.
+//!
+//! Routing contract (pinned by `rust/tests/api_facade.rs`):
+//!
+//! * a tag addresses exactly the engine registered under it — per-model
+//!   queues share nothing, so one model's backlog never delays another's
+//!   batcher;
+//! * routing adds no randomness: for a deterministic engine the response
+//!   to (tag, image) is independent of interleaving with other models'
+//!   traffic;
+//! * unknown tags and duplicate registrations are errors, not silent
+//!   fallbacks.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{BatchClassifier, Server, ServerConfig, ServerReport, Ticket};
+
+use super::Deployment;
+
+/// A set of named, independently thread-pinned model servers with
+/// tag-routed submission.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: Vec<(String, Server)>,
+}
+
+/// Final per-model serving metrics, in registration order — the
+/// multi-model counterpart of [`ServerReport`].
+#[derive(Clone, Debug)]
+pub struct RegistryReport {
+    /// `(model name, that model's serving report)` per registered model.
+    pub sections: Vec<(String, ServerReport)>,
+}
+
+impl ModelRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `name` with an engine `factory` (run **inside** the new
+    /// worker thread — the thread-pinned-FFI pattern of
+    /// [`Server::start`]). Blocks until the engine is up; errors on a
+    /// duplicate name or a factory failure.
+    pub fn register<C, F>(&mut self, name: &str, factory: F, cfg: ServerConfig) -> Result<()>
+    where
+        C: BatchClassifier,
+        F: FnOnce() -> Result<C> + Send + 'static,
+    {
+        if self.entries.iter().any(|(n, _)| n == name) {
+            bail!("model {name:?} is already registered");
+        }
+        let server = Server::start(factory, cfg)?;
+        self.entries.push((name.to_string(), server));
+        Ok(())
+    }
+
+    /// Register a materialized [`Deployment`] under its own name, using
+    /// its PJRT engine factory.
+    pub fn register_deployment(&mut self, dep: &Deployment, cfg: ServerConfig) -> Result<()> {
+        let name = dep.name().to_string();
+        self.register(&name, dep.engine_factory()?, cfg)
+    }
+
+    /// Registered model names, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True iff no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Route one image to the model registered under `model`; returns the
+    /// per-request [`Ticket`] exactly like [`Server::submit`].
+    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<Ticket> {
+        match self.entries.iter().find(|(n, _)| n == model) {
+            Some((_, server)) => server.submit(image),
+            None => bail!("unknown model {model:?} (registered: {:?})", self.models()),
+        }
+    }
+
+    /// Stop every model's worker and collect the per-model report
+    /// sections, in registration order.
+    pub fn shutdown(self) -> RegistryReport {
+        RegistryReport {
+            sections: self
+                .entries
+                .into_iter()
+                .map(|(name, server)| (name, server.shutdown()))
+                .collect(),
+        }
+    }
+}
+
+impl std::fmt::Display for RegistryReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (name, r) in &self.sections {
+            writeln!(
+                f,
+                "{name}: {} req in {} batches (fill {:.1}) | p50 {:.1} ms p99 {:.1} ms | {:.1} req/s",
+                r.served, r.batches, r.mean_batch_fill, r.p50_ms, r.p99_ms, r.throughput_rps
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::LinearEngine;
+    use std::time::Duration;
+
+    fn cfg() -> ServerConfig {
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            codec_threads: 1,
+        }
+    }
+
+    fn engine_a() -> Result<LinearEngine> {
+        // Class 0 likes +x, class 1 likes -x.
+        LinearEngine::new(2, 2, 2, vec![1.0, 0.0, -1.0, 0.0])
+    }
+
+    fn engine_b() -> Result<LinearEngine> {
+        // Swapped: class 0 likes -x.
+        LinearEngine::new(2, 2, 2, vec![-1.0, 0.0, 1.0, 0.0])
+    }
+
+    #[test]
+    fn routes_by_tag_and_reports_per_model() {
+        let mut reg = ModelRegistry::new();
+        reg.register("a", engine_a, cfg()).unwrap();
+        reg.register("b", engine_b, cfg()).unwrap();
+        assert_eq!(reg.models(), vec!["a", "b"]);
+        assert_eq!(reg.len(), 2);
+
+        let img = vec![1.0f32, 0.0];
+        let ta = reg.submit("a", img.clone()).unwrap();
+        let tb = reg.submit("b", img.clone()).unwrap();
+        assert_eq!(ta.wait().unwrap().class, 0, "model a: +x is class 0");
+        assert_eq!(tb.wait().unwrap().class, 1, "model b: +x is class 1");
+        assert!(reg.submit("nope", img).is_err());
+
+        let report = reg.shutdown();
+        assert_eq!(report.sections.len(), 2);
+        assert_eq!(report.sections[0].0, "a");
+        assert_eq!(report.sections[0].1.served, 1);
+        assert_eq!(report.sections[1].1.served, 1);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut reg = ModelRegistry::new();
+        reg.register("m", engine_a, cfg()).unwrap();
+        assert!(reg.register("m", engine_b, cfg()).is_err());
+        assert_eq!(reg.len(), 1);
+    }
+}

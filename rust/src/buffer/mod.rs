@@ -436,12 +436,19 @@ impl MlcBuffer {
     /// decodes shard `k` while this thread copies and bills shard `k+1`;
     /// two recycled shard buffers bound the pipeline depth. Otherwise
     /// both stages run serially inline.
+    ///
+    /// Returns the **payload-word** energy partial that was billed (the
+    /// single [`Energy`] added to the read stats before the per-group
+    /// metadata charges). Because stored content alone determines it, a
+    /// caller that knows a region's bytes are unchanged can replay the
+    /// identical bill through [`Self::replay_region_read`] without
+    /// re-reading — the flip-set-aware sweep materialize (DESIGN.md §10).
     pub fn load_decoded(
         &mut self,
         region: &Region,
         out: &mut Vec<f32>,
         workers: usize,
-    ) -> Result<(), BufferError> {
+    ) -> Result<Energy, BufferError> {
         self.check_region(region)?;
         // Length-change-only resize: every slot is overwritten below.
         if out.len() != region.len {
@@ -511,6 +518,33 @@ impl MlcBuffer {
         };
 
         self.stats.read_energy.add(energy);
+        self.stats.reads += region.len as u64;
+        for _ in 0..region.meta_len {
+            self.stats
+                .read_energy
+                .add(self.config.cost.trilevel_cell(AccessKind::Read));
+        }
+        Ok(energy)
+    }
+
+    /// Bill a region read **without touching the words** — the fast half
+    /// of the flip-set-aware sweep materialize (DESIGN.md §10).
+    /// `words_energy` must be the payload partial a previous
+    /// [`Self::load_decoded`] of this region returned *while the region
+    /// held bit-identical content*; this method then replays the exact
+    /// accounting sequence of a real load (one payload add, then one
+    /// tri-level metadata add per group, in order), so cumulative stats —
+    /// including f64 nanojoule association — are bit-identical to having
+    /// re-read the region. Soundness rests on the caller's
+    /// content-unchanged guarantee; `WeightStore::materialize_reusing`
+    /// establishes it from per-region flip counts.
+    pub fn replay_region_read(
+        &mut self,
+        region: &Region,
+        words_energy: Energy,
+    ) -> Result<(), BufferError> {
+        self.check_region(region)?;
+        self.stats.read_energy.add(words_energy);
         self.stats.reads += region.len as u64;
         for _ in 0..region.meta_len {
             self.stats
@@ -971,6 +1005,29 @@ mod tests {
                 assert_eq!(buf2.stats().reads, n as u64);
             }
         }
+    }
+
+    #[test]
+    fn replay_region_read_matches_a_real_read() {
+        // Billing a cached read must leave stats bit-identical to
+        // actually re-reading the (unchanged) region.
+        let ws = ramp(LOAD_SHARD_WORDS + 777);
+        let enc = WeightCodec::hybrid(4).encode(&ws);
+        let cfg = BufferConfig::new(enc.len() * 2, 8).with_error_model(ErrorModel::at_rate(0.0));
+
+        let mut real = MlcBuffer::new(cfg.clone(), 1);
+        let r1 = real.store(&enc).unwrap();
+        let mut out = Vec::new();
+        real.load_decoded(&r1, &mut out, 2).unwrap();
+        real.load_decoded(&r1, &mut out, 2).unwrap();
+
+        let mut replayed = MlcBuffer::new(cfg, 1);
+        let r2 = replayed.store(&enc).unwrap();
+        let bill = replayed.load_decoded(&r2, &mut out, 2).unwrap();
+        replayed.replay_region_read(&r2, bill).unwrap();
+
+        assert_eq!(real.stats().read_energy, replayed.stats().read_energy);
+        assert_eq!(real.stats().reads, replayed.stats().reads);
     }
 
     #[test]

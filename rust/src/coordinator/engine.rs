@@ -10,6 +10,25 @@ use anyhow::{ensure, Context, Result};
 use crate::runtime::artifacts::{Manifest, ParamSpec, TestSet};
 use crate::runtime::executor::{argmax_rows, Executor};
 
+/// What the serving loop needs from a model: batch geometry plus one
+/// classify call. [`crate::coordinator::Server`] (and the
+/// [`crate::api::ModelRegistry`] built on it) is generic over this trait,
+/// keeping the thread-pinned-FFI factory pattern: the instance is
+/// constructed *inside* the worker thread and never crosses it, so
+/// implementors need not be `Send` ([`InferenceEngine`] holds raw PJRT
+/// pointers and is not).
+pub trait BatchClassifier {
+    /// Images per compiled batch.
+    fn batch_size(&self) -> usize;
+
+    /// Flattened floats per image.
+    fn image_elems(&self) -> usize;
+
+    /// Classify exactly one batch (`batch_size() * image_elems()` floats);
+    /// returns the predicted class per image.
+    fn classify_batch(&self, images: &[f32]) -> Result<Vec<usize>>;
+}
+
 /// A ready-to-serve model instance.
 pub struct InferenceEngine {
     exec: Executor,
@@ -46,6 +65,12 @@ impl InferenceEngine {
 
     pub fn batch_size(&self) -> usize {
         self.manifest.batch
+    }
+
+    /// Flattened floats per image (input shape product over the batch).
+    pub fn image_elems(&self) -> usize {
+        let total: usize = self.manifest.input_shape.iter().product();
+        total / self.manifest.batch
     }
 
     pub fn num_classes(&self) -> usize {
@@ -96,28 +121,171 @@ impl InferenceEngine {
     /// Classify `n` images from a test set (padding the final partial batch
     /// by repetition) and return (accuracy, correct, evaluated).
     pub fn accuracy(&self, test: &TestSet, n: usize) -> Result<(f64, usize, usize)> {
-        let n = n.min(test.n);
-        ensure!(n > 0, "empty evaluation");
-        let batch = self.manifest.batch;
-        let img_elems = test.h * test.w * test.c;
-        let mut correct = 0usize;
-        let mut buf = vec![0f32; batch * img_elems];
-        let mut i = 0usize;
-        while i < n {
-            let take = (n - i).min(batch);
-            for j in 0..batch {
-                // Pad the tail batch by repeating the last image.
-                let src = test.image(i + j.min(take - 1));
-                buf[j * img_elems..(j + 1) * img_elems].copy_from_slice(src);
-            }
-            let preds = self.classify_batch(&buf)?;
-            for j in 0..take {
-                if preds[j] == test.labels[i + j] as usize {
-                    correct += 1;
-                }
-            }
-            i += take;
+        accuracy_of(self, test, n)
+    }
+}
+
+impl BatchClassifier for InferenceEngine {
+    fn batch_size(&self) -> usize {
+        InferenceEngine::batch_size(self)
+    }
+
+    fn image_elems(&self) -> usize {
+        InferenceEngine::image_elems(self)
+    }
+
+    fn classify_batch(&self, images: &[f32]) -> Result<Vec<usize>> {
+        InferenceEngine::classify_batch(self, images)
+    }
+}
+
+/// Test-set accuracy of any [`BatchClassifier`] (padding the final partial
+/// batch by repetition): (accuracy, correct, evaluated).
+pub fn accuracy_of<C: BatchClassifier>(
+    engine: &C,
+    test: &TestSet,
+    n: usize,
+) -> Result<(f64, usize, usize)> {
+    let n = n.min(test.n);
+    ensure!(n > 0, "empty evaluation");
+    let batch = engine.batch_size();
+    let img_elems = test.h * test.w * test.c;
+    let mut correct = 0usize;
+    let mut buf = vec![0f32; batch * img_elems];
+    let mut i = 0usize;
+    while i < n {
+        let take = (n - i).min(batch);
+        for j in 0..batch {
+            // Pad the tail batch by repeating the last image.
+            let src = test.image(i + j.min(take - 1));
+            buf[j * img_elems..(j + 1) * img_elems].copy_from_slice(src);
         }
-        Ok((correct as f64 / n as f64, correct, n))
+        let preds = engine.classify_batch(&buf)?;
+        for j in 0..take {
+            if preds[j] == test.labels[i + j] as usize {
+                correct += 1;
+            }
+        }
+        i += take;
+    }
+    Ok((correct as f64 / n as f64, correct, n))
+}
+
+/// A pure-host linear (nearest-centroid-style) classifier: `argmax_c x ·
+/// w_c` over a class-major weight matrix. The PJRT-free
+/// [`BatchClassifier`]: it serves the registry demo, the
+/// `registry_route` bench, and the facade equivalence tests on machines
+/// where the `xla` vendor stub has no backend — and since its weight
+/// matrix is an ordinary tensor, it can be materialized through the MLC
+/// buffer like any model (the `rust/tests/common` synthetic task in
+/// library form).
+#[derive(Clone, Debug)]
+pub struct LinearEngine {
+    classes: usize,
+    dim: usize,
+    batch: usize,
+    /// Flattened class-major weight matrix `w[c][d]`.
+    weights: Vec<f32>,
+}
+
+impl LinearEngine {
+    /// A classifier over `classes` rows of `dim` weights, serving
+    /// `batch`-image batches. `weights` is the flattened class-major
+    /// matrix (length `classes * dim`).
+    pub fn new(classes: usize, dim: usize, batch: usize, weights: Vec<f32>) -> Result<Self> {
+        ensure!(classes >= 1 && dim >= 1 && batch >= 1, "degenerate geometry");
+        ensure!(
+            weights.len() == classes * dim,
+            "weight matrix wants {} floats, got {}",
+            classes * dim,
+            weights.len()
+        );
+        Ok(LinearEngine {
+            classes,
+            dim,
+            batch,
+            weights,
+        })
+    }
+
+    /// Classify one image (`dim` floats). NaN scores — decodable from
+    /// unprotected fault patterns — rank below every other score
+    /// (infinities keep their usual argmax order), and ties keep the
+    /// lowest class index (deterministic routing contract).
+    pub fn classify_one(&self, image: &[f32]) -> usize {
+        debug_assert_eq!(image.len(), self.dim);
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for c in 0..self.classes {
+            let w = &self.weights[c * self.dim..(c + 1) * self.dim];
+            let score: f64 = image
+                .iter()
+                .zip(w)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            if !score.is_nan() && score > best_score {
+                best_score = score;
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+impl BatchClassifier for LinearEngine {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn image_elems(&self) -> usize {
+        self.dim
+    }
+
+    fn classify_batch(&self, images: &[f32]) -> Result<Vec<usize>> {
+        ensure!(
+            images.len() == self.batch * self.dim,
+            "batch wants {} floats, got {}",
+            self.batch * self.dim,
+            images.len()
+        );
+        Ok(images
+            .chunks_exact(self.dim)
+            .map(|x| self.classify_one(x))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_engine_classifies_centroids() {
+        // Two orthogonal centroids; each classifies to itself.
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let eng = LinearEngine::new(2, 2, 2, w).unwrap();
+        let batch = vec![0.9, 0.1, -0.2, 0.8];
+        assert_eq!(eng.classify_batch(&batch).unwrap(), vec![0, 1]);
+        assert_eq!(eng.batch_size(), 2);
+        assert_eq!(eng.image_elems(), 2);
+    }
+
+    #[test]
+    fn linear_engine_nan_ranks_last_and_ties_take_first() {
+        let eng = LinearEngine::new(2, 1, 1, vec![f32::NAN, 0.0]).unwrap();
+        // Class 0 scores NaN, class 1 scores 0.0 -> class 1 wins.
+        assert_eq!(eng.classify_one(&[1.0]), 1);
+        let tie = LinearEngine::new(2, 1, 1, vec![0.5, 0.5]).unwrap();
+        assert_eq!(tie.classify_one(&[1.0]), 0);
+        // +inf is a real argmax winner, not a NaN-like reject.
+        let inf = LinearEngine::new(2, 1, 1, vec![f32::INFINITY, 1.0]).unwrap();
+        assert_eq!(inf.classify_one(&[1.0]), 0);
+    }
+
+    #[test]
+    fn linear_engine_rejects_bad_geometry() {
+        assert!(LinearEngine::new(2, 3, 1, vec![0.0; 5]).is_err());
+        let eng = LinearEngine::new(2, 3, 2, vec![0.0; 6]).unwrap();
+        assert!(eng.classify_batch(&[0.0; 5]).is_err());
     }
 }

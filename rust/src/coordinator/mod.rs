@@ -23,7 +23,7 @@ pub mod server;
 pub mod store;
 pub mod workload;
 
-pub use engine::InferenceEngine;
-pub use server::{Server, ServerConfig, ServerReport};
-pub use store::{StoreConfig, StoreReport, StoreSnapshot, WeightStore};
+pub use engine::{accuracy_of, BatchClassifier, InferenceEngine, LinearEngine};
+pub use server::{Server, ServerConfig, ServerReport, Ticket};
+pub use store::{CleanMaterialize, StoreConfig, StoreReport, StoreSnapshot, WeightStore};
 pub use workload::{poisson_trace, uniform_trace, Trace};

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::engine::InferenceEngine;
+use crate::coordinator::engine::BatchClassifier;
 use crate::util::stats::Percentiles;
 
 /// One classification request.
@@ -46,15 +46,15 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     /// Worker-thread cap for codec work on the serve path. The server
     /// loop itself runs no codec work — weight materialization happens
-    /// before [`Server::start`] — so serving entry points (`mlcstt
-    /// serve`, `examples/serve_e2e.rs`) copy this value into
+    /// before [`Server::start`] — so this value flows into
     /// [`crate::coordinator::StoreConfig::threads`], which drives
     /// `load_with_threads` +
     /// [`crate::encoding::Encoded::decode_into_threaded`] during
-    /// materialization. The default resolves
-    /// [`crate::util::threads::available`], so deployments pin codec
-    /// parallelism per worker by exporting `MLCSTT_THREADS` instead of
-    /// inheriting the machine's full `available_parallelism`. Results are
+    /// materialization. Since the facade, [`crate::api::Config::server`]
+    /// is the one place this struct is built for serving: it carries the
+    /// layered resolution (builder → `MLCSTT_THREADS` →
+    /// `available_parallelism`; DESIGN.md §10). The `Default` here keeps
+    /// the env → machine layers for direct construction. Results are
     /// bit-identical for every value (DESIGN.md §7/§8); only latency
     /// changes.
     pub codec_threads: usize,
@@ -118,10 +118,16 @@ impl Ticket {
 
 impl Server {
     /// Spawn the worker thread; `factory` builds the engine **inside** the
-    /// thread (PJRT state is thread-pinned). Blocks until the engine is up.
-    pub fn start<F>(factory: F, cfg: ServerConfig) -> Result<Self>
+    /// thread (PJRT state is thread-pinned, which is why the engine type
+    /// `C` needs no `Send` bound — only the factory crosses the thread).
+    /// Blocks until the engine is up. Any [`BatchClassifier`] serves:
+    /// the PJRT [`crate::coordinator::InferenceEngine`] in production,
+    /// [`crate::coordinator::LinearEngine`] for backend-free demos and the
+    /// routing benches.
+    pub fn start<F, C>(factory: F, cfg: ServerConfig) -> Result<Self>
     where
-        F: FnOnce() -> Result<InferenceEngine> + Send + 'static,
+        C: BatchClassifier,
+        F: FnOnce() -> Result<C> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
@@ -137,8 +143,7 @@ impl Server {
                 }
             };
             let batch = engine.batch_size();
-            let total: usize = engine.manifest().input_shape.iter().product();
-            let img_elems = total / batch;
+            let img_elems = engine.image_elems();
             let _ = ready_tx.send(Ok((batch, img_elems)));
             worker_loop(engine, rx, m, cfg, batch, img_elems);
         });
@@ -212,8 +217,8 @@ impl Drop for Server {
     }
 }
 
-fn worker_loop(
-    engine: InferenceEngine,
+fn worker_loop<C: BatchClassifier>(
+    engine: C,
     rx: Receiver<Request>,
     metrics: Arc<Mutex<Metrics>>,
     cfg: ServerConfig,

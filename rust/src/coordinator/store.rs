@@ -1,7 +1,7 @@
 //! Weight store: every model tensor lives (encoded) in the simulated MLC
 //! STT-RAM buffer; reads decode through the per-group scheme metadata.
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::buffer::{
     BufferConfig, BufferSnapshot, LOAD_SHARD_WORDS, MlcBuffer, Region, STORE_SHARD_WORDS,
@@ -84,6 +84,30 @@ pub struct StoreSnapshot {
     buffer: BufferSnapshot,
 }
 
+/// A clean (fault-free) materialize captured for sweep reuse: the decoded
+/// tensors plus, per tensor, the payload-word read bill the buffer
+/// charged. [`WeightStore::materialize_reusing`] hands back the cached
+/// tensor — and replays the cached bill — for every region whose last
+/// re-injection took **zero** flips, since such a region still holds the
+/// snapshot's clean bytes and would decode (and bill) identically
+/// (DESIGN.md §10). Capture with [`WeightStore::materialize_clean_cache`]
+/// on the same clean store the [`StoreSnapshot`] was taken from.
+#[derive(Clone, Debug)]
+pub struct CleanMaterialize {
+    /// Policy of the store the cache was captured from — part of the
+    /// mismatch guard in [`WeightStore::materialize_reusing`].
+    policy: Policy,
+    tensors: Vec<ParamSpec>,
+    bills: Vec<Energy>,
+}
+
+impl CleanMaterialize {
+    /// The clean decoded tensors, in store order.
+    pub fn tensors(&self) -> &[ParamSpec] {
+        &self.tensors
+    }
+}
+
 /// The store itself.
 pub struct WeightStore {
     codec: WeightCodec,
@@ -95,6 +119,10 @@ pub struct WeightStore {
     soft_cells: u64,
     /// Pinned codec worker count (0 = auto per tensor).
     threads: usize,
+    /// Per-region words-corrupted counts from the most recent
+    /// [`Self::reinject`] (`None` until one runs) — the validity signal
+    /// for [`Self::materialize_reusing`].
+    last_flips: Option<Vec<u64>>,
 }
 
 impl WeightStore {
@@ -129,6 +157,7 @@ impl WeightStore {
             metadata_overhead: overhead_num / total as f64,
             soft_cells: soft,
             threads: cfg.threads,
+            last_flips: None,
         })
     }
 
@@ -147,19 +176,34 @@ impl WeightStore {
     /// [`Self::materialize_serial`] for every worker count.
     pub fn materialize(&mut self) -> Result<Vec<ParamSpec>> {
         let mut out = Vec::with_capacity(self.entries.len());
-        for (meta, region) in &self.entries {
-            let w = workers_for(self.threads, region.len, LOAD_SHARD_WORDS);
-            let mut data = Vec::new();
-            self.buffer
-                .load_decoded(region, &mut data, w)
-                .with_context(|| format!("loading tensor {}", meta.name))?;
-            out.push(ParamSpec {
-                name: meta.name.clone(),
-                shape: meta.shape.clone(),
-                data,
-            });
+        for i in 0..self.entries.len() {
+            let (spec, _) = self.load_entry(i)?;
+            out.push(spec);
         }
         Ok(out)
+    }
+
+    /// Fused load→decode of entry `i` under this store's worker pin;
+    /// returns the decoded tensor and the payload read bill
+    /// ([`MlcBuffer::load_decoded`]'s return). This is the **single**
+    /// code path behind [`Self::materialize`],
+    /// [`Self::materialize_clean_cache`], and the dirty-region branch of
+    /// [`Self::materialize_reusing`] — their bit-identical-accounting
+    /// contract depends on all three sharing it.
+    fn load_entry(&mut self, i: usize) -> Result<(ParamSpec, Energy)> {
+        let (meta, region) = &self.entries[i];
+        let w = workers_for(self.threads, region.len, LOAD_SHARD_WORDS);
+        let mut data = Vec::new();
+        let bill = self
+            .buffer
+            .load_decoded(region, &mut data, w)
+            .with_context(|| format!("loading tensor {}", meta.name))?;
+        let spec = ParamSpec {
+            name: meta.name.clone(),
+            shape: meta.shape.clone(),
+            data,
+        };
+        Ok((spec, bill))
     }
 
     /// The pre-pipeline serve path — a full threaded load, then a full
@@ -206,15 +250,99 @@ impl WeightStore {
     /// cost. Returns total words corrupted.
     pub fn reinject(&mut self, snap: &StoreSnapshot, model: &ErrorModel, seed: u64) -> Result<u64> {
         self.buffer.restore(&snap.buffer, seed);
+        let mut per_region = Vec::with_capacity(self.entries.len());
         let mut corrupted = 0u64;
         for (meta, region) in &self.entries {
             let w = workers_for(self.threads, region.len, STORE_SHARD_WORDS);
-            corrupted += self
+            let n = self
                 .buffer
                 .corrupt_region_write(region, model, w)
                 .with_context(|| format!("re-injecting tensor {}", meta.name))?;
+            per_region.push(n);
+            corrupted += n;
         }
+        self.last_flips = Some(per_region);
         Ok(corrupted)
+    }
+
+    /// A [`Self::materialize`] that also captures, per tensor, the
+    /// payload read bill the buffer charged — the cache side of the
+    /// flip-set-aware sweep (DESIGN.md §10). Call it on the **clean**
+    /// store right after [`Self::snapshot`]: the read energy it bills is
+    /// rewound by the next [`Self::reinject`] (restore replays the
+    /// snapshot's accounting), so the capture itself never shows up in a
+    /// sweep point's report.
+    pub fn materialize_clean_cache(&mut self) -> Result<CleanMaterialize> {
+        let mut tensors = Vec::with_capacity(self.entries.len());
+        let mut bills = Vec::with_capacity(self.entries.len());
+        for i in 0..self.entries.len() {
+            let (spec, bill) = self.load_entry(i)?;
+            tensors.push(spec);
+            bills.push(bill);
+        }
+        Ok(CleanMaterialize {
+            policy: self.policy(),
+            tensors,
+            bills,
+        })
+    }
+
+    /// Flip-set-aware materialize: tensors whose regions took **zero**
+    /// flips in the preceding [`Self::reinject`] still hold the clean
+    /// snapshot bytes, so their decode is taken from `cache` and their
+    /// read bill replayed ([`MlcBuffer::replay_region_read`]) instead of
+    /// re-reading the buffer; every other tensor goes through the normal
+    /// fused load→decode. Output tensors and cumulative accounting are
+    /// **bit-identical** to a plain [`Self::materialize`] — the
+    /// always-rematerialize oracle retained precisely to pin this
+    /// (`experiments::run_rate_sweep_with_rematerialize`,
+    /// `rust/tests/api_facade.rs`).
+    ///
+    /// Errors if no re-injection has run, or if `cache` mismatches this
+    /// store's policy or tensor layout (count, names, shapes). The guard
+    /// cannot detect a cache captured from *different weight contents*
+    /// with an identical layout — capturing the cache from this store's
+    /// own clean snapshot (as `experiments::run_rate_sweep_with` does)
+    /// remains the caller's contract.
+    pub fn materialize_reusing(&mut self, cache: &CleanMaterialize) -> Result<Vec<ParamSpec>> {
+        let flips = self
+            .last_flips
+            .clone()
+            .ok_or_else(|| anyhow!("materialize_reusing requires a preceding reinject"))?;
+        ensure!(
+            flips.len() == self.entries.len() && cache.tensors.len() == self.entries.len(),
+            "clean cache ({} tensors) does not match store ({} tensors)",
+            cache.tensors.len(),
+            self.entries.len()
+        );
+        ensure!(
+            cache.policy == self.policy(),
+            "clean cache was captured under policy {:?}, store runs {:?}",
+            cache.policy,
+            self.policy()
+        );
+        for ((meta, _), cached) in self.entries.iter().zip(&cache.tensors) {
+            ensure!(
+                cached.name == meta.name && cached.shape == meta.shape,
+                "clean cache tensor {:?} does not match store entry {:?}",
+                cached.name,
+                meta.name
+            );
+        }
+        let mut out = Vec::with_capacity(self.entries.len());
+        for i in 0..self.entries.len() {
+            if flips[i] == 0 {
+                let (meta, region) = &self.entries[i];
+                self.buffer
+                    .replay_region_read(region, cache.bills[i])
+                    .with_context(|| format!("replaying read bill for {}", meta.name))?;
+                out.push(cache.tensors[i].clone());
+            } else {
+                let (spec, _) = self.load_entry(i)?;
+                out.push(spec);
+            }
+        }
+        Ok(out)
     }
 
     /// Report current accounting.
@@ -421,6 +549,43 @@ mod tests {
             assert_eq!(rf.read_energy, rr.read_energy, "rate={rate}");
             assert_eq!(rf.injected_faults, rr.injected_faults, "rate={rate}");
         }
+    }
+
+    #[test]
+    fn flip_aware_materialize_matches_always_rematerialize_oracle() {
+        // Zero-flip regions take the cached-decode + replayed-bill path;
+        // tensors and cumulative accounting must stay bit-identical to
+        // the plain materialize for every rate (incl. 0.0, where every
+        // region reuses the cache).
+        let wf = weight_file(90_001);
+        let seed = 5u64;
+        let mut reuse = WeightStore::load(&quiet(Policy::Hybrid, 4), &wf).unwrap();
+        let snap = reuse.snapshot();
+        let cache = reuse.materialize_clean_cache().unwrap();
+        let mut oracle = WeightStore::load(&quiet(Policy::Hybrid, 4), &wf).unwrap();
+        let osnap = oracle.snapshot();
+        for rate in [0.0f64, 0.02] {
+            reuse.reinject(&snap, &ErrorModel::at_rate(rate), seed).unwrap();
+            let got = reuse.materialize_reusing(&cache).unwrap();
+            oracle.reinject(&osnap, &ErrorModel::at_rate(rate), seed).unwrap();
+            let want = oracle.materialize().unwrap();
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.data, b.data, "rate={rate} tensor={}", a.name);
+            }
+            let (ro, rr) = (oracle.report(), reuse.report());
+            assert_eq!(ro.read_energy, rr.read_energy, "rate={rate}");
+            assert_eq!(ro.write_energy, rr.write_energy, "rate={rate}");
+            assert_eq!(ro.injected_faults, rr.injected_faults, "rate={rate}");
+        }
+        // Without a preceding reinject the fast path must refuse.
+        let mut fresh = WeightStore::load(&quiet(Policy::Hybrid, 4), &wf).unwrap();
+        assert!(fresh.materialize_reusing(&cache).is_err());
+        // And a cache captured under a different policy must be rejected
+        // even though the tensor layout matches.
+        let mut other = WeightStore::load(&quiet(Policy::ProtectRotate, 4), &wf).unwrap();
+        let other_snap = other.snapshot();
+        other.reinject(&other_snap, &ErrorModel::at_rate(0.0), seed).unwrap();
+        assert!(other.materialize_reusing(&cache).is_err());
     }
 
     #[test]

@@ -321,14 +321,23 @@ impl Encoded {
     }
 
     /// Pattern census over the stored stream (Fig. 6): `[n00,n01,n10,n11]`,
-    /// via the packed SWAR kernel.
+    /// via the packed SWAR kernel, sharded over
+    /// [`threads::run_sharded`] like the energy census. Integer-exact and
+    /// worker-count-invariant (pinned by `rust/tests/api_facade.rs`).
     pub fn pattern_counts(&self) -> [u64; 4] {
-        fp::count_patterns_packed(&self.words)
+        fp::count_patterns_threaded(
+            &self.words,
+            threads::auto_workers(self.len(), MIN_WEIGHTS_PER_WORKER),
+        )
     }
 
-    /// Total vulnerable cells in the stored stream (packed kernel).
+    /// Total vulnerable cells in the stored stream (packed kernel, sharded
+    /// like [`Self::pattern_counts`]; integer-exact for any worker count).
     pub fn soft_cells(&self) -> u64 {
-        fp::soft_cells_batch(&self.words)
+        fp::soft_cells_threaded(
+            &self.words,
+            threads::auto_workers(self.len(), MIN_WEIGHTS_PER_WORKER),
+        )
     }
 
     /// Metadata storage overhead (Table 3): 2 bits per group over the

@@ -2,12 +2,17 @@
 //!
 //! Each driver corresponds to one paper artifact (DESIGN.md §5) and returns
 //! both the printable table and the raw rows so callers can post-process.
+//! Since the facade (DESIGN.md §10) every driver stages its weights
+//! through [`Deployment`] — the lifecycle they used to hand-roll — and
+//! `rust/tests/api_facade.rs` pins the rebuilt paths bit-identical to the
+//! pre-facade ones.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{InferenceEngine, StoreConfig, StoreReport, WeightStore};
+use crate::api::Deployment;
+use crate::coordinator::{InferenceEngine, StoreConfig, StoreReport};
 use crate::encoding::Policy;
 use crate::metrics::{accuracy_table, AccuracyRow, Table};
 use crate::runtime::artifacts::{model_paths, Manifest, ParamSpec, TestSet, WeightFile};
@@ -35,7 +40,10 @@ pub fn load_model(dir: &Path, model: &str) -> Result<(Manifest, WeightFile)> {
 /// The full Fig. 8 pipeline for one model: error-free reference, then the
 /// four protection systems (unprotected / +round / +rotate / hybrid) at the
 /// given soft-error `rate` and metadata `granularity`, each evaluated on
-/// `eval` held-out images through the PJRT executable.
+/// `eval` held-out images through the PJRT executable. Each system's
+/// weight path is one [`Deployment`] build; a single compiled executor is
+/// reused across systems via [`InferenceEngine::restage`] (the HLO
+/// compile dominates end-to-end time; see EXPERIMENTS.md §Perf).
 pub fn run_accuracy_experiment(
     dir: &Path,
     model: &str,
@@ -48,32 +56,29 @@ pub fn run_accuracy_experiment(
     let (hlo, _, _) = model_paths(dir, model);
     let test = TestSet::read(&dir.join("testset.bin"))?;
 
-    // Error-free reference on the same evaluation slice. A single executor
-    // is reused across systems: weights are re-staged per system, the
-    // compiled executable is not rebuilt (the HLO compile dominates
-    // end-to-end time; see EXPERIMENTS.md §Perf).
     let exec = Executor::from_hlo_file(&hlo)?;
     let mut engine = InferenceEngine::new(exec, manifest.clone(), &weights.params)?;
     let (error_free, _, _) = engine.accuracy(&test, eval)?;
 
     let mut rows = Vec::new();
     for policy in Policy::ALL {
-        let cfg = StoreConfig {
-            policy,
-            granularity,
-            error_model: ErrorModel::at_rate(rate),
-            seed,
-            ..StoreConfig::default()
-        };
-        let mut store = WeightStore::load(&cfg, &weights)?;
-        let tensors = store.materialize()?;
-        let report = store.report();
-        engine.restage(&tensors)?;
+        let dep = Deployment::builder()
+            .weights_ref(&weights)
+            .name(model)
+            .store(StoreConfig {
+                policy,
+                granularity,
+                error_model: ErrorModel::at_rate(rate),
+                seed,
+                ..StoreConfig::default()
+            })
+            .build()?;
+        engine.restage(dep.tensors())?;
         let (acc, _, _) = engine.accuracy(&test, eval)?;
         rows.push(AccuracyRow {
             system: policy.label().into(),
             accuracy: acc,
-            flipped_cells: report.injected_faults,
+            flipped_cells: dep.store_report().injected_faults,
         });
     }
     let table = accuracy_table(
@@ -111,24 +116,19 @@ pub struct RateSweep {
     pub table: Table,
 }
 
-/// Engine-agnostic core of the snapshot-reuse sweep (DESIGN.md §9):
-/// encode and store each policy's image **once** (fault-free), snapshot
-/// the stored words, and per rate point only rewind + re-inject
-/// ([`WeightStore::reinject`]) before materializing and handing the
-/// decoded tensors to `eval` for scoring. Flip sets, accuracies, and
-/// accounting are bit-identical to building a fresh store per
-/// (policy, rate) — at one encode/store instead of `rates.len()` per
-/// policy, the restage-per-point cost ROADMAP flagged.
-///
-/// `eval` receives `(policy, rate, tensors, report)` and returns the
-/// accuracy to record; `base.seed` seeds every point's fault injection
-/// (one seed, rate-indexed flip sets stay comparable across policies).
-/// Returns the points (indexed like `rates`) and the number of
-/// encode+store passes performed.
-pub fn run_rate_sweep_with<E>(
+/// Engine-agnostic core of the snapshot-reuse sweep (DESIGN.md §9/§10):
+/// one staged [`Deployment`] per policy (encode + store the clean image
+/// **once**), snapshot, then per rate point rewind + re-inject before
+/// materializing for `eval`. With `reuse_clean` the materialize is
+/// flip-set-aware: tensors whose regions took zero flips at a point reuse
+/// the cached clean decode and replay its read bill
+/// ([`crate::coordinator::WeightStore::materialize_reusing`]) — output
+/// and accounting stay bit-identical to re-decoding everything.
+fn rate_sweep_core<E>(
     weights: &WeightFile,
     base: &StoreConfig,
     rates: &[f64],
+    reuse_clean: bool,
     mut eval: E,
 ) -> Result<(Vec<RatePoint>, usize)>
 where
@@ -144,20 +144,33 @@ where
         .collect();
     let mut encode_passes = 0usize;
     for policy in Policy::ALL {
-        let cfg = StoreConfig {
-            policy,
-            error_model: ErrorModel::at_rate(0.0),
-            ..base.clone()
-        };
-        let mut store = WeightStore::load(&cfg, weights)
+        let mut dep = Deployment::builder()
+            .weights_ref(weights)
+            .store(StoreConfig {
+                policy,
+                error_model: ErrorModel::at_rate(0.0),
+                ..base.clone()
+            })
+            .staged()
+            .build()
             .with_context(|| format!("storing {} image", policy.label()))?;
         encode_passes += 1;
-        let snap = store.snapshot();
+        let snap = dep.snapshot();
+        let cache = if reuse_clean {
+            // Billed reads are rewound by the first reinject's restore,
+            // so the capture never surfaces in a point's report.
+            Some(dep.materialize_clean_cache()?)
+        } else {
+            None
+        };
         for (point, &rate) in points.iter_mut().zip(rates) {
-            store.reinject(&snap, &ErrorModel::at_rate(rate), base.seed)?;
-            let tensors = store.materialize()?;
-            let report = store.report();
-            let accuracy = eval(policy, rate, &tensors, &report)?;
+            dep.reinject(&snap, &ErrorModel::at_rate(rate), base.seed)?;
+            match &cache {
+                Some(cache) => dep.materialize_reusing(cache)?,
+                None => dep.materialize()?,
+            };
+            let report = dep.store_report().clone();
+            let accuracy = eval(policy, rate, dep.tensors(), &report)?;
             point.rows.push(AccuracyRow {
                 system: policy.label().into(),
                 accuracy,
@@ -167,6 +180,47 @@ where
         }
     }
     Ok((points, encode_passes))
+}
+
+/// The snapshot-reuse sweep with the flip-set-aware materialize
+/// (DESIGN.md §9/§10): encode and store each policy's image **once**
+/// (fault-free), snapshot the stored words, and per rate point only
+/// rewind + re-inject before materializing — where tensors untouched by
+/// that point's flips reuse the cached clean decode. Flip sets,
+/// accuracies, and accounting are bit-identical to building a fresh
+/// store per (policy, rate) — at one encode/store instead of
+/// `rates.len()` per policy.
+///
+/// `eval` receives `(policy, rate, tensors, report)` and returns the
+/// accuracy to record; `base.seed` seeds every point's fault injection
+/// (one seed, rate-indexed flip sets stay comparable across policies).
+/// Returns the points (indexed like `rates`) and the number of
+/// encode+store passes performed.
+pub fn run_rate_sweep_with<E>(
+    weights: &WeightFile,
+    base: &StoreConfig,
+    rates: &[f64],
+    eval: E,
+) -> Result<(Vec<RatePoint>, usize)>
+where
+    E: FnMut(Policy, f64, &[ParamSpec], &StoreReport) -> Result<f64>,
+{
+    rate_sweep_core(weights, base, rates, true, eval)
+}
+
+/// [`run_rate_sweep_with`] minus the flip-set-aware shortcut: every point
+/// re-decodes every tensor. Kept as the always-rematerialize **oracle**
+/// the fast path is pinned against (`rust/tests/api_facade.rs`).
+pub fn run_rate_sweep_with_rematerialize<E>(
+    weights: &WeightFile,
+    base: &StoreConfig,
+    rates: &[f64],
+    eval: E,
+) -> Result<(Vec<RatePoint>, usize)>
+where
+    E: FnMut(Policy, f64, &[ParamSpec], &StoreReport) -> Result<f64>,
+{
+    rate_sweep_core(weights, base, rates, false, eval)
 }
 
 /// Render sweep points as one table: a row per (rate, policy) with

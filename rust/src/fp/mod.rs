@@ -200,14 +200,23 @@ pub enum F16Mode {
     Scalar,
 }
 
-/// The converter selection for this process (see [`F16Mode`]).
+/// Process-wide converter selection, latched on first resolution.
+static MODE: OnceLock<F16Mode> = OnceLock::new();
+
+/// The converter selection for this process (see [`F16Mode`]). Resolved on
+/// first use from the environment layer ([`crate::util::env::f16_mode`],
+/// default [`F16Mode::Lut`]) unless [`pin_f16_mode`] resolved it first.
 pub fn f16_mode() -> F16Mode {
-    static MODE: OnceLock<F16Mode> = OnceLock::new();
-    *MODE.get_or_init(|| match std::env::var("MLCSTT_F16").as_deref() {
-        Ok("branchless") => F16Mode::Branchless,
-        Ok("scalar") => F16Mode::Scalar,
-        _ => F16Mode::Lut,
-    })
+    *MODE.get_or_init(|| crate::util::env::f16_mode().unwrap_or(F16Mode::Lut))
+}
+
+/// Pin the process converter to `mode` — the builder layer of
+/// [`crate::api::Config`]. First resolution wins: if a conversion (or an
+/// earlier pin) already latched the mode, the existing selection is kept.
+/// Returns the effective mode either way. All modes are bit-exact, so a
+/// lost pin changes speed, never results.
+pub fn pin_f16_mode(mode: F16Mode) -> F16Mode {
+    *MODE.get_or_init(|| mode)
 }
 
 /// Magnitude half of the decode LUT: entry `m` holds the f32 bit pattern
@@ -419,6 +428,40 @@ pub fn soft_cells_batch(words: &[u16]) -> u64 {
     total
 }
 
+/// [`count_patterns_packed`] sharded across at most `workers` threads via
+/// [`crate::util::threads::run_sharded`] (the same template as
+/// `swar::energy_tally_threaded`). The census is a per-word integer sum,
+/// so shard boundaries cannot affect it: every worker count returns the
+/// identical histogram, not merely an equivalent one.
+pub fn count_patterns_threaded(words: &[u16], workers: usize) -> [u64; 4] {
+    let bounds = crate::util::threads::chunk_bounds(words.len(), 1, workers);
+    if bounds.len() <= 1 {
+        return count_patterns_packed(words);
+    }
+    let jobs: Vec<&[u16]> = bounds.iter().map(|&(s, e)| &words[s..e]).collect();
+    let mut acc = [0u64; 4];
+    for partial in crate::util::threads::run_sharded(jobs, workers, count_patterns_packed) {
+        for (a, p) in acc.iter_mut().zip(partial) {
+            *a += p;
+        }
+    }
+    acc
+}
+
+/// [`soft_cells_batch`] sharded across at most `workers` threads; like
+/// [`count_patterns_threaded`], worker-count-invariant by construction
+/// (integer-exact partial sums).
+pub fn soft_cells_threaded(words: &[u16], workers: usize) -> u64 {
+    let bounds = crate::util::threads::chunk_bounds(words.len(), 1, workers);
+    if bounds.len() <= 1 {
+        return soft_cells_batch(words);
+    }
+    let jobs: Vec<&[u16]> = bounds.iter().map(|&(s, e)| &words[s..e]).collect();
+    crate::util::threads::run_sharded(jobs, workers, soft_cells_batch)
+        .into_iter()
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -594,6 +637,10 @@ mod tests {
         }
         assert_eq!(count_patterns_packed(&words), acc);
         assert_eq!(soft_cells_batch(&words), soft);
+        for workers in [1usize, 2, 3, 7, 16] {
+            assert_eq!(count_patterns_threaded(&words, workers), acc, "workers={workers}");
+            assert_eq!(soft_cells_threaded(&words, workers), soft, "workers={workers}");
+        }
 
         let fs: Vec<f32> = (0..777).map(|i| (i as f32 / 777.0) * 1.8 - 0.9).collect();
         let mut out = vec![0u16; fs.len()];

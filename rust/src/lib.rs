@@ -26,9 +26,17 @@
 //! * [`util`] — zero-dependency PRNG / JSON / CLI / stats / property-test
 //!   support (the offline vendor set carries only `xla` and `anyhow`).
 //!
+//! The public surface over all of it is [`api`]: a layered
+//! [`api::Config`] (builder → `MLCSTT_*` env → defaults, resolved in one
+//! place), the [`api::Deployment`] builder owning the encode → store →
+//! materialize → engine lifecycle, and the multi-model
+//! [`api::ModelRegistry`] router (DESIGN.md §10). Every binary, example,
+//! and experiment driver goes through it.
+//!
 //! Experiment-to-module index: see `DESIGN.md` §5. Every paper table and
 //! figure has a bench (`rust/benches/`) that regenerates it.
 
+pub mod api;
 pub mod buffer;
 pub mod coordinator;
 pub mod encoding;

@@ -19,7 +19,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use mlcstt::coordinator::{InferenceEngine, Server, ServerConfig, StoreConfig, WeightStore};
+use mlcstt::api::{Config, Deployment, ModelRegistry};
 use mlcstt::encoding::{Policy, WeightCodec};
 use mlcstt::faults::bitflip_sse_study;
 use mlcstt::metrics::{
@@ -27,7 +27,6 @@ use mlcstt::metrics::{
 };
 use mlcstt::models;
 use mlcstt::runtime::artifacts::{model_paths, Manifest, TestSet, WeightFile};
-use mlcstt::runtime::Executor;
 use mlcstt::stt::{AccessKind, CostModel, ErrorModel};
 use mlcstt::systolic::{simulate_network, top_k_by, ArrayConfig};
 use mlcstt::util::cli::Command;
@@ -83,9 +82,19 @@ fn print_usage() {
     );
 }
 
+/// Resolve the artifact directory: an explicit `--artifacts` flag wins,
+/// otherwise the layered config (`MLCSTT_ARTIFACTS`, then `artifacts/`).
 fn artifacts_dir(m: &mlcstt::util::cli::Matches) -> PathBuf {
-    PathBuf::from(m.str("artifacts"))
+    let flag = m.str("artifacts");
+    if flag.is_empty() {
+        Config::from_env().artifacts_dir().to_path_buf()
+    } else {
+        PathBuf::from(flag)
+    }
 }
+
+/// Shared `--artifacts` flag help (empty default = config-layer lookup).
+const ARTIFACTS_HELP: &str = "artifact directory (default: $MLCSTT_ARTIFACTS, then artifacts/)";
 
 fn load_weights(dir: &PathBuf, model: &str) -> Result<(Manifest, WeightFile)> {
     let (_, wpath, mpath) = model_paths(dir, model);
@@ -100,7 +109,7 @@ fn load_weights(dir: &PathBuf, model: &str) -> Result<(Manifest, WeightFile)> {
 
 fn cmd_info(args: &[String]) -> Result<()> {
     let cmd = Command::new("info", "artifact + model inventory")
-        .flag("artifacts", "artifacts", "artifact directory");
+        .flag("artifacts", "", ARTIFACTS_HELP);
     let m = cmd.parse(args).map_err(usage_err)?;
     let dir = artifacts_dir(&m);
 
@@ -187,7 +196,7 @@ fn granularities() -> [usize; 5] {
 fn cmd_bitcount(args: &[String]) -> Result<()> {
     let cmd = Command::new("bitcount", "Fig. 6: stored bit-pattern census")
         .flag("model", "vggmini", "artifact model name")
-        .flag("artifacts", "artifacts", "artifact directory");
+        .flag("artifacts", "", ARTIFACTS_HELP);
     let m = cmd.parse(args).map_err(usage_err)?;
     let (_, weights) = load_weights(&artifacts_dir(&m), m.str("model"))?;
     let flat = weights.flat();
@@ -214,7 +223,7 @@ fn cmd_bitcount(args: &[String]) -> Result<()> {
 fn cmd_energy(args: &[String]) -> Result<()> {
     let cmd = Command::new("energy", "Fig. 7: buffer read/write energy")
         .flag("model", "vggmini", "artifact model name")
-        .flag("artifacts", "artifacts", "artifact directory");
+        .flag("artifacts", "", ARTIFACTS_HELP);
     let m = cmd.parse(args).map_err(usage_err)?;
     let (_, weights) = load_weights(&artifacts_dir(&m), m.str("model"))?;
     let flat = weights.flat();
@@ -244,7 +253,7 @@ fn cmd_energy(args: &[String]) -> Result<()> {
 fn cmd_accuracy(args: &[String]) -> Result<()> {
     let cmd = Command::new("accuracy", "Fig. 8: accuracy under fault injection")
         .flag("model", "vggmini", "artifact model name")
-        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("artifacts", "", ARTIFACTS_HELP)
         .flag("rate", "0.02", "soft-error rate for vulnerable cells")
         .flag("granularity", "4", "metadata granularity")
         .flag("eval", "512", "test images to evaluate")
@@ -274,7 +283,7 @@ fn cmd_accuracy(args: &[String]) -> Result<()> {
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let cmd = Command::new("sweep", "Fig. 8: accuracy vs error rate (snapshot-reuse campaign)")
         .flag("model", "vggmini", "artifact model name")
-        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("artifacts", "", ARTIFACTS_HELP)
         .flag("rates", "0.0,0.005,0.01,0.015,0.02", "soft-error rates to sweep")
         .flag("granularity", "4", "metadata granularity")
         .flag("eval", "512", "test images to evaluate per point")
@@ -343,7 +352,7 @@ fn cmd_bandwidth(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "end-to-end serving demo")
         .flag("model", "vggmini", "artifact model name")
-        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("artifacts", "", ARTIFACTS_HELP)
         .flag("requests", "256", "number of requests to replay")
         .flag("rate", "0.015", "soft-error rate")
         .flag("policy", "hybrid", "unprotected | round | rotate | hybrid")
@@ -351,7 +360,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("max-wait-ms", "20", "batcher flush timeout")
         .flag("seed", "11", "campaign seed");
     let m = cmd.parse(args).map_err(usage_err)?;
-    let dir = artifacts_dir(&m);
     let model = m.str("model").to_string();
     let policy = Policy::from_label(m.str("policy"))
         .with_context(|| format!("bad --policy {:?}", m.str("policy")))?;
@@ -361,28 +369,25 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let seed = m.u64("seed")?;
     let max_wait = Duration::from_millis(m.u64("max-wait-ms")?);
 
-    let (manifest, weights) = load_weights(&dir, &model)?;
-    let test = TestSet::read(&dir.join("testset.bin"))?;
-    let (hlo, _, _) = model_paths(&dir, &model);
+    // One layered config drives the whole entry point: artifact directory,
+    // codec worker ceiling (MLCSTT_THREADS), batcher timeout (DESIGN §10).
+    let config = Config::builder()
+        .artifacts(artifacts_dir(&m))
+        .max_wait(max_wait)
+        .build();
 
-    // Weight path: encode -> buffer -> faults -> decode, with accounting.
-    // The server config owns the codec-parallelism pin (MLCSTT_THREADS);
-    // the store inherits it so load/decode run at the serving budget.
-    let server_cfg = ServerConfig {
-        max_wait,
-        ..ServerConfig::default()
-    };
-    let cfg = StoreConfig {
-        policy,
-        granularity,
-        error_model: ErrorModel::at_rate(rate),
-        seed,
-        threads: server_cfg.codec_threads,
-        ..StoreConfig::default()
-    };
-    let mut store = WeightStore::load(&cfg, &weights)?;
-    let tensors = store.materialize()?;
-    let sr = store.report();
+    // Weight path: encode -> buffer -> faults -> decode, with accounting,
+    // owned end to end by the deployment builder (store threads inherit
+    // the config ceiling, the old ServerConfig -> StoreConfig hand-wire).
+    let dep = Deployment::builder()
+        .config(config.clone())
+        .model(model.as_str())
+        .policy(policy)
+        .granularity(granularity)
+        .error_model(ErrorModel::at_rate(rate))
+        .seed(seed)
+        .build()?;
+    let sr = dep.store_report();
     println!(
         "weight path: {} tensors / {} weights, policy={}, g={granularity}\n\
          \x20 write {:.1} uJ, read {:.1} uJ, {} faulted cells, metadata overhead {:.4}%",
@@ -395,23 +400,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         100.0 * sr.metadata_overhead,
     );
 
-    let manifest2 = manifest.clone();
-    let server = Server::start(
-        move || {
-            let exec = Executor::from_hlo_file(&hlo)?;
-            InferenceEngine::new(exec, manifest2, &tensors)
-        },
-        server_cfg,
-    )?;
+    // Serve through the registry: one named deployment, tag-routed
+    // submits — the same path `registry_serve` scales to N models.
+    let test = TestSet::read(&config.artifacts_dir().join("testset.bin"))?;
+    let mut registry = ModelRegistry::new();
+    registry.register_deployment(&dep, config.server())?;
 
-    // Replay test images as requests (open loop).
+    // Replay test images as tagged requests (open loop).
     let mut rng = Xoshiro256::seeded(seed);
     let mut tickets = Vec::with_capacity(requests);
     let mut expected = Vec::with_capacity(requests);
     for _ in 0..requests {
         let i = rng.below(test.n as u64) as usize;
         expected.push(test.labels[i] as usize);
-        tickets.push(server.submit(test.image(i).to_vec())?);
+        tickets.push(registry.submit(&model, test.image(i).to_vec())?);
     }
     let mut correct = 0usize;
     for (t, want) in tickets.into_iter().zip(expected) {
@@ -419,17 +421,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             correct += 1;
         }
     }
-    let report = server.shutdown();
+    let report = registry.shutdown();
+    let section = &report.sections[0].1;
     println!(
         "served {} requests in {} batches (mean fill {:.1})\n\
          \x20 accuracy {:.4} | p50 {:.1} ms | p99 {:.1} ms | {:.1} req/s",
-        report.served,
-        report.batches,
-        report.mean_batch_fill,
+        section.served,
+        section.batches,
+        section.mean_batch_fill,
         correct as f64 / requests as f64,
-        report.p50_ms,
-        report.p99_ms,
-        report.throughput_rps,
+        section.p50_ms,
+        section.p99_ms,
+        section.throughput_rps,
     );
     Ok(())
 }

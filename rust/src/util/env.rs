@@ -1,0 +1,79 @@
+//! The **only** place the crate reads `MLCSTT_*` environment variables.
+//!
+//! Before the facade, `MLCSTT_EVAL` / `MLCSTT_THREADS` / `MLCSTT_F16` /
+//! `MLCSTT_ARTIFACTS` were parsed independently in `main.rs`, the
+//! examples, the bench harness, and two library modules — with subtly
+//! different fallback behavior at each site. Every read now funnels
+//! through the typed accessors below, and [`crate::api::Config`] layers
+//! builder overrides on top (builder beats env beats default).
+//!
+//! This module sits in `util` — below [`crate::util::threads`] and
+//! [`crate::fp`], which consume it — and is re-exported as
+//! [`crate::api::env`], the facade-level name entry points use
+//! (DESIGN.md §10).
+//!
+//! Fallback semantics are part of the contract and pinned by
+//! `rust/tests/env_plumbing.rs`:
+//!
+//! * an **unset** variable returns `None` (the caller's default applies);
+//! * an **unparsable** value also returns `None` — a typo degrades to the
+//!   default instead of crashing a long campaign at startup;
+//! * `MLCSTT_THREADS=0` clamps to 1 (a worker ceiling of zero is
+//!   meaningless, and historical callers relied on the clamp).
+
+use std::path::PathBuf;
+
+use crate::fp::F16Mode;
+
+/// Raw read of one environment variable (non-UTF-8 values read as unset).
+fn raw(key: &str) -> Option<String> {
+    std::env::var(key).ok()
+}
+
+/// `MLCSTT_THREADS` — worker-thread ceiling for codec/buffer sharding.
+/// Parsed values clamp to at least 1; unset/unparsable is `None` (callers
+/// fall back to the machine's available parallelism).
+pub fn threads() -> Option<usize> {
+    raw("MLCSTT_THREADS")?.parse::<usize>().ok().map(|n| n.max(1))
+}
+
+/// `MLCSTT_F16` — f16 converter selection: `lut`, `branchless`, or
+/// `scalar`. Unset or unrecognized is `None` (callers default to
+/// [`F16Mode::Lut`]). Note the converter is process-latched on first use
+/// (see [`crate::fp::f16_mode`]).
+pub fn f16_mode() -> Option<F16Mode> {
+    match raw("MLCSTT_F16")?.as_str() {
+        "lut" => Some(F16Mode::Lut),
+        "branchless" => Some(F16Mode::Branchless),
+        "scalar" => Some(F16Mode::Scalar),
+        _ => None,
+    }
+}
+
+/// `MLCSTT_EVAL` — evaluation-size knob (test images per accuracy point,
+/// weights per bench iteration). Callers supply their own default.
+pub fn eval() -> Option<usize> {
+    raw("MLCSTT_EVAL")?.parse().ok()
+}
+
+/// `MLCSTT_REQUESTS` — serving replay length for the demo entry points.
+pub fn requests() -> Option<usize> {
+    raw("MLCSTT_REQUESTS")?.parse().ok()
+}
+
+/// `MLCSTT_ARTIFACTS` — trained-artifact directory override.
+pub fn artifacts() -> Option<PathBuf> {
+    raw("MLCSTT_ARTIFACTS").map(PathBuf::from)
+}
+
+/// `MLCSTT_RATES` — comma-separated rate list for the load-test sweep;
+/// unparsable entries are skipped (historical `load_test` behavior).
+pub fn rates() -> Option<Vec<f64>> {
+    raw("MLCSTT_RATES").map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+}
+
+/// `MLCSTT_BENCH_DIR` — where `BENCH_*.json` reports land (the bench
+/// harness anchors relative values at the workspace root).
+pub fn bench_dir() -> Option<PathBuf> {
+    raw("MLCSTT_BENCH_DIR").map(PathBuf::from)
+}

@@ -11,9 +11,14 @@
 //! * [`prop`] — a miniature property-testing harness (random case
 //!   generation + failure-case shrinking) standing in for `proptest`,
 //! * [`threads`] — deterministic `std::thread::scope` work sharding for
-//!   the codec/buffer hot paths (DESIGN.md §7).
+//!   the codec/buffer hot paths (DESIGN.md §7),
+//! * [`env`] — the single `MLCSTT_*` read/parse site, re-exported as
+//!   [`crate::api::env`] (it lives down here so foundation modules like
+//!   [`threads`] and [`crate::fp`] can use it without depending on the
+//!   facade layer; DESIGN.md §10).
 
 pub mod cli;
+pub mod env;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -23,17 +23,16 @@
 //! whole encode → store → decode pipeline; `rust/tests/read_path.rs` pins
 //! the load/disturb side across 1/2/7 workers.
 
-/// Worker ceiling: `MLCSTT_THREADS` if set (>=1), else the machine's
-/// available parallelism.
+/// Worker ceiling: `MLCSTT_THREADS` if set (>=1, read through the single
+/// env layer [`crate::util::env::threads`]), else the machine's available
+/// parallelism. [`crate::api::Config`] adds the builder-override layer on
+/// top of this resolution.
 pub fn available() -> usize {
-    if let Ok(v) = std::env::var("MLCSTT_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    crate::util::env::threads().unwrap_or_else(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
 }
 
 /// Workers worth spawning for `items` units of work, requiring at least

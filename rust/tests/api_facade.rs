@@ -1,0 +1,276 @@
+//! ISSUE 5 facade equivalence suite: every entry-point path rebuilt on
+//! `api::{Config, Deployment, ModelRegistry}` pinned **bit-identical** to
+//! the pre-facade hand-rolled sequence it replaced.
+//!
+//! * **Store path** (the `mlcstt serve` / `serve_e2e` weight path): a
+//!   hand-rolled `StoreConfig` → `WeightStore::load` → `materialize` →
+//!   `report` vs `Deployment::builder()...build()` — tensors, flip sets,
+//!   and energy reports equal across policies × rates × granularities.
+//! * **Accuracy experiment shape**: the per-policy restage loop scored on
+//!   the synthetic linear task, old vs `Deployment`, equal accuracies.
+//! * **Sweep**: the flip-set-aware `run_rate_sweep_with` vs the retained
+//!   always-rematerialize oracle vs a restage-per-point baseline.
+//! * **Serving**: registry-routed submission vs a directly started
+//!   `Server` (same engine), plus multi-model routing determinism under
+//!   interleaving.
+//! * **Censuses**: the newly threaded `pattern_counts` / `soft_cells`
+//!   vs their packed serial kernels, integer-exact at every worker count.
+
+mod common;
+
+use std::time::Duration;
+
+use mlcstt::api::{Config, Deployment, ModelRegistry};
+use mlcstt::coordinator::{LinearEngine, Server, ServerConfig, StoreConfig, WeightStore};
+use mlcstt::encoding::{Policy, WeightCodec};
+use mlcstt::experiments::{run_rate_sweep_with, run_rate_sweep_with_rematerialize};
+use mlcstt::fp;
+use mlcstt::stt::ErrorModel;
+
+fn serve_cfg() -> ServerConfig {
+    ServerConfig {
+        max_wait: Duration::from_millis(1),
+        codec_threads: 1,
+    }
+}
+
+#[test]
+fn deployment_build_matches_hand_rolled_store_path() {
+    let wf = common::weight_file_for("vggmini", 5, 20_000, "facade/store");
+    for policy in Policy::ALL {
+        for (rate, g) in [(0.0f64, 4usize), (0.02, 4), (0.015, 7)] {
+            let sc = StoreConfig {
+                policy,
+                granularity: g,
+                error_model: ErrorModel::at_rate(rate),
+                seed: 7,
+                ..StoreConfig::default()
+            };
+            // Old path: hand-rolled lifecycle.
+            let mut store = WeightStore::load(&sc, &wf).unwrap();
+            let want = store.materialize().unwrap();
+            let want_report = store.report();
+            // New path: the deployment builder.
+            let dep = Deployment::builder()
+                .weights(wf.clone())
+                .store(sc.clone())
+                .build()
+                .unwrap();
+            for (a, b) in want.iter().zip(dep.tensors()) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.data, b.data, "{policy:?} rate={rate} g={g} {}", a.name);
+            }
+            let got = dep.store_report();
+            assert_eq!(got.write_energy, want_report.write_energy, "{policy:?} rate={rate}");
+            assert_eq!(got.read_energy, want_report.read_energy, "{policy:?} rate={rate}");
+            assert_eq!(got.injected_faults, want_report.injected_faults);
+            assert_eq!(got.soft_cells_stored, want_report.soft_cells_stored);
+            assert_eq!(got.metadata_overhead, want_report.metadata_overhead);
+            assert_eq!(got.tensors, want_report.tensors);
+            assert_eq!(got.weights, want_report.weights);
+        }
+    }
+}
+
+#[test]
+fn accuracy_experiment_loop_matches_old_path_on_synthetic_task() {
+    // The Fig. 8 per-policy loop scored without PJRT: restaging into the
+    // synthetic linear task, accuracies and flip counts must match the
+    // pre-facade hand-rolled sequence exactly.
+    let task = common::SyntheticTask::new(8, 256, 64, "facade/acc");
+    let wf = task.weight_file();
+    for policy in Policy::ALL {
+        let sc = StoreConfig {
+            policy,
+            granularity: 4,
+            error_model: ErrorModel::at_rate(0.02),
+            seed: 7,
+            ..StoreConfig::default()
+        };
+        let mut store = WeightStore::load(&sc, &wf).unwrap();
+        let old_tensors = store.materialize().unwrap();
+        let old_acc = task.accuracy(&old_tensors[0].data);
+        let old_flips = store.report().injected_faults;
+
+        let dep = Deployment::builder().weights(wf.clone()).store(sc).build().unwrap();
+        let new_acc = task.accuracy(&dep.tensors()[0].data);
+        assert_eq!(new_acc, old_acc, "{policy:?}");
+        assert_eq!(dep.store_report().injected_faults, old_flips, "{policy:?}");
+    }
+}
+
+#[test]
+fn flip_aware_sweep_matches_rematerialize_oracle_and_restage_baseline() {
+    let wf = common::weight_file_for("inceptionmini", 4, 15_000, "facade/sweep");
+    let rates = [0.0f64, 0.005, 0.02];
+    let base = StoreConfig {
+        granularity: 4,
+        seed: 0xFACADE,
+        ..StoreConfig::default()
+    };
+    let fidelity = |tensors: &[mlcstt::runtime::artifacts::ParamSpec]| {
+        let mut same = 0usize;
+        let mut total = 0usize;
+        for (c, t) in wf.params.iter().zip(tensors) {
+            for (a, b) in c.data.iter().zip(&t.data) {
+                same += (fp::quantize_f16(*a).to_bits() == b.to_bits()) as usize;
+                total += 1;
+            }
+        }
+        same as f64 / total as f64
+    };
+
+    let (fast, fast_passes) = run_rate_sweep_with(&wf, &base, &rates, |_, _, tensors, _| {
+        Ok(fidelity(tensors))
+    })
+    .unwrap();
+    let (oracle, oracle_passes) =
+        run_rate_sweep_with_rematerialize(&wf, &base, &rates, |_, _, tensors, _| {
+            Ok(fidelity(tensors))
+        })
+        .unwrap();
+    assert_eq!(fast_passes, Policy::ALL.len());
+    assert_eq!(oracle_passes, Policy::ALL.len());
+
+    for (pi, &rate) in rates.iter().enumerate() {
+        for (si, policy) in Policy::ALL.into_iter().enumerate() {
+            let (f, o) = (&fast[pi], &oracle[pi]);
+            assert_eq!(f.rows[si].accuracy, o.rows[si].accuracy, "{policy:?} rate={rate}");
+            assert_eq!(f.rows[si].flipped_cells, o.rows[si].flipped_cells);
+            assert_eq!(f.reports[si].read_energy, o.reports[si].read_energy);
+            assert_eq!(f.reports[si].write_energy, o.reports[si].write_energy);
+            assert_eq!(f.reports[si].injected_faults, o.reports[si].injected_faults);
+
+            // Restage-per-point baseline: a fresh store per (policy, rate).
+            let cfg = StoreConfig {
+                policy,
+                error_model: ErrorModel::at_rate(rate),
+                ..base.clone()
+            };
+            let mut store = WeightStore::load(&cfg, &wf).unwrap();
+            let tensors = store.materialize().unwrap();
+            let report = store.report();
+            assert_eq!(f.rows[si].accuracy, fidelity(&tensors), "{policy:?} rate={rate}");
+            assert_eq!(f.reports[si].read_energy, report.read_energy, "{policy:?} rate={rate}");
+            assert_eq!(f.reports[si].write_energy, report.write_energy);
+            assert_eq!(f.reports[si].injected_faults, report.injected_faults);
+        }
+    }
+}
+
+/// Linear engine over buffer-materialized weights — both serving paths
+/// must classify identically.
+fn buffered_linear(task: &common::SyntheticTask, rate: f64, seed: u64) -> LinearEngine {
+    let dep = Deployment::builder()
+        .weights(task.weight_file())
+        .error_model(ErrorModel::at_rate(rate))
+        .seed(seed)
+        .build()
+        .unwrap();
+    LinearEngine::new(task.classes, task.dim, 4, dep.tensors()[0].data.clone()).unwrap()
+}
+
+#[test]
+fn registry_serving_matches_direct_server_and_routes_deterministically() {
+    let task_a = common::SyntheticTask::new(6, 128, 48, "facade/serve-a");
+    let task_b = common::SyntheticTask::new(6, 128, 48, "facade/serve-b");
+    let engine_a = buffered_linear(&task_a, 0.02, 11);
+    let engine_b = buffered_linear(&task_b, 0.0, 12);
+
+    // Ground truth straight from the engine (no serving layer).
+    let expect = |eng: &LinearEngine, task: &common::SyntheticTask| -> Vec<usize> {
+        (0..task.labels.len())
+            .map(|i| eng.classify_one(&task.samples[i * task.dim..(i + 1) * task.dim]))
+            .collect()
+    };
+    let want_a = expect(&engine_a, &task_a);
+    let want_b = expect(&engine_b, &task_b);
+
+    // Old path: one direct Server around engine a.
+    let ea = engine_a.clone();
+    let server = Server::start(move || Ok(ea), serve_cfg()).unwrap();
+    let direct: Vec<usize> = (0..task_a.labels.len())
+        .map(|i| {
+            let img = task_a.samples[i * task_a.dim..(i + 1) * task_a.dim].to_vec();
+            server.submit(img).unwrap().wait().unwrap().class
+        })
+        .collect();
+    server.shutdown();
+    assert_eq!(direct, want_a, "direct server must match the bare engine");
+
+    // New path: both models behind the registry, requests interleaved.
+    let (ea, eb) = (engine_a.clone(), engine_b.clone());
+    let mut registry = ModelRegistry::new();
+    registry.register("a", move || Ok(ea), serve_cfg()).unwrap();
+    registry.register("b", move || Ok(eb), serve_cfg()).unwrap();
+    let mut tickets = Vec::new();
+    for i in 0..task_a.labels.len() {
+        let img_a = task_a.samples[i * task_a.dim..(i + 1) * task_a.dim].to_vec();
+        let img_b = task_b.samples[i * task_b.dim..(i + 1) * task_b.dim].to_vec();
+        tickets.push(("a", i, registry.submit("a", img_a).unwrap()));
+        tickets.push(("b", i, registry.submit("b", img_b).unwrap()));
+    }
+    for (tag, i, ticket) in tickets {
+        let got = ticket.wait().unwrap().class;
+        let want = if tag == "a" { want_a[i] } else { want_b[i] };
+        assert_eq!(got, want, "model {tag} request {i}");
+    }
+    let report = registry.shutdown();
+    assert_eq!(report.sections.len(), 2);
+    assert_eq!(report.sections[0].1.served, task_a.labels.len());
+    assert_eq!(report.sections[1].1.served, task_b.labels.len());
+}
+
+#[test]
+fn threaded_censuses_are_integer_exact_at_every_worker_count() {
+    let ws = common::trained_like_weights(70_001, "facade/census");
+    let enc = WeightCodec::hybrid(4).encode(&ws);
+    // Per-word ground truth.
+    let mut pc = [0u64; 4];
+    let mut soft = 0u64;
+    for &w in &enc.words {
+        for (a, p) in pc.iter_mut().zip(fp::pattern_counts(w)) {
+            *a += p as u64;
+        }
+        soft += fp::soft_cells(w) as u64;
+    }
+    assert_eq!(enc.pattern_counts(), pc);
+    assert_eq!(enc.soft_cells(), soft);
+    for workers in [1usize, 2, 3, 7, 16] {
+        assert_eq!(fp::count_patterns_threaded(&enc.words, workers), pc, "workers={workers}");
+        assert_eq!(fp::soft_cells_threaded(&enc.words, workers), soft, "workers={workers}");
+    }
+}
+
+#[test]
+fn config_views_feed_the_serve_path() {
+    // The config's server/store views are what `mlcstt serve` now runs
+    // on; pin the wiring (threads ceiling flows into both views).
+    let cfg = Config::builder().threads(2).max_wait(Duration::from_millis(3)).build();
+    assert_eq!(cfg.server().codec_threads, 2);
+    assert_eq!(cfg.server().max_wait, Duration::from_millis(3));
+    assert_eq!(cfg.store().threads, 2);
+    // And a deployment built under it pins its store to the ceiling while
+    // staying bit-identical to the auto path (worker invariance).
+    let task = common::SyntheticTask::new(4, 64, 8, "facade/config");
+    let wf = task.weight_file();
+    let pinned = Deployment::builder()
+        .config(cfg)
+        .weights(wf.clone())
+        .error_model(ErrorModel::at_rate(0.02))
+        .seed(5)
+        .build()
+        .unwrap();
+    let auto = Deployment::builder()
+        .weights(wf)
+        .threads(0)
+        .error_model(ErrorModel::at_rate(0.02))
+        .seed(5)
+        .build()
+        .unwrap();
+    assert_eq!(pinned.tensors()[0].data, auto.tensors()[0].data);
+    assert_eq!(
+        pinned.store_report().injected_faults,
+        auto.store_report().injected_faults
+    );
+}

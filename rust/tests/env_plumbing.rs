@@ -1,23 +1,88 @@
-//! `MLCSTT_THREADS` plumbing (ISSUE 3 satellite), isolated in its own
-//! test binary: the single test below mutates the process environment,
-//! and glibc's setenv is undefined behavior against concurrent getenv —
-//! sibling tests in a shared binary read the environment through
-//! `threads::available()` and `fp::f16_mode()` on parallel harness
-//! threads. Cargo runs test binaries sequentially, so a dedicated binary
-//! with one test is race-free by construction.
+//! `MLCSTT_*` layering (ISSUE 3 + ISSUE 5 satellites), isolated in its
+//! own test binary: the single test below mutates the process
+//! environment, and glibc's setenv is undefined behavior against
+//! concurrent getenv — sibling tests in a shared binary read the
+//! environment through `threads::available()` and `fp::f16_mode()` on
+//! parallel harness threads. Cargo runs test binaries sequentially, so a
+//! dedicated binary with one test is race-free by construction.
+//!
+//! Precedence contract (resolved only in `api::config`): **builder beats
+//! env beats default**, with the historical fallback quirks pinned —
+//! `MLCSTT_THREADS=0` clamps to 1, unparsable values degrade to the
+//! default instead of erroring.
 
+use std::path::Path;
+
+use mlcstt::api::Config;
 use mlcstt::coordinator::ServerConfig;
+use mlcstt::fp::{self, F16Mode};
 use mlcstt::util::threads;
 
 #[test]
-fn mlcstt_threads_pins_server_codec_parallelism() {
+fn mlcstt_env_layering_builder_beats_env_beats_default() {
+    // --- f16 FIRST: the converter selection latches process-wide on its
+    // first resolution, so this is the only window where builder-beats-env
+    // is observable. With the env demanding `scalar`, a builder override
+    // must win the pin...
+    std::env::set_var("MLCSTT_F16", "scalar");
+    let cfg = Config::builder().f16(F16Mode::Branchless).build();
+    assert_eq!(cfg.f16(), F16Mode::Branchless, "builder beats env");
+    assert_eq!(fp::f16_mode(), F16Mode::Branchless, "and pins the process");
+    // ...and once latched, later env reads cannot rebind it (documented
+    // latch semantics: all modes are bit-exact, only speed differs).
+    assert_eq!(Config::from_env().f16(), F16Mode::Branchless);
+    std::env::remove_var("MLCSTT_F16");
+
+    // --- threads: env beats default...
     std::env::set_var("MLCSTT_THREADS", "3");
     assert_eq!(threads::available(), 3);
     assert_eq!(ServerConfig::default().codec_threads, 3);
-    std::env::set_var("MLCSTT_THREADS", "0"); // floors at 1
+    assert_eq!(Config::from_env().threads(), 3);
+    assert_eq!(Config::from_env().server().codec_threads, 3);
+    assert_eq!(Config::from_env().store().threads, 3);
+    // ...builder beats env...
+    assert_eq!(Config::builder().threads(5).build().threads(), 5);
+    // ...0 clamps to 1 on both layers...
+    std::env::set_var("MLCSTT_THREADS", "0");
     assert_eq!(threads::available(), 1);
-    assert_eq!(ServerConfig::default().codec_threads, 1);
+    assert_eq!(Config::from_env().threads(), 1);
+    assert_eq!(Config::builder().threads(0).build().threads(), 1);
+    // ...and an unparsable value degrades to the machine default.
+    std::env::set_var("MLCSTT_THREADS", "not-a-number");
+    assert!(threads::available() >= 1);
+    assert!(Config::from_env().threads() >= 1);
     std::env::remove_var("MLCSTT_THREADS");
     assert!(threads::available() >= 1);
     assert!(ServerConfig::default().codec_threads >= 1);
+
+    // --- eval: builder beats env beats caller default.
+    std::env::set_var("MLCSTT_EVAL", "123");
+    assert_eq!(Config::from_env().eval_or(512), 123);
+    assert_eq!(Config::builder().eval(7).build().eval_or(512), 7);
+    std::env::set_var("MLCSTT_EVAL", "garbage");
+    assert_eq!(Config::from_env().eval_or(512), 512, "unparsable -> default");
+    std::env::remove_var("MLCSTT_EVAL");
+    assert_eq!(Config::from_env().eval_or(512), 512);
+
+    // --- requests mirrors eval.
+    std::env::set_var("MLCSTT_REQUESTS", "44");
+    assert_eq!(Config::from_env().requests_or(128), 44);
+    assert_eq!(Config::builder().requests(9).build().requests_or(128), 9);
+    std::env::remove_var("MLCSTT_REQUESTS");
+    assert_eq!(Config::from_env().requests_or(128), 128);
+
+    // --- artifacts: builder beats env beats the crate default.
+    std::env::set_var("MLCSTT_ARTIFACTS", "/tmp/mlcstt-env-test");
+    assert_eq!(Config::from_env().artifacts_dir(), Path::new("/tmp/mlcstt-env-test"));
+    let flagged = Config::builder().artifacts("elsewhere").build();
+    assert_eq!(flagged.artifacts_dir(), Path::new("elsewhere"));
+    std::env::remove_var("MLCSTT_ARTIFACTS");
+    assert_eq!(Config::from_env().artifacts_dir(), Path::new(mlcstt::ARTIFACT_DIR));
+
+    // --- rates: env parses a comma list, skipping junk entries.
+    std::env::set_var("MLCSTT_RATES", "10, 20,junk,30");
+    assert_eq!(Config::from_env().rates_or(&[1.0]), vec![10.0, 20.0, 30.0]);
+    assert_eq!(Config::builder().rates(vec![5.0]).build().rates_or(&[1.0]), vec![5.0]);
+    std::env::remove_var("MLCSTT_RATES");
+    assert_eq!(Config::from_env().rates_or(&[1.0, 2.0]), vec![1.0, 2.0]);
 }

@@ -11,9 +11,8 @@ use mlcstt::runtime::Executor;
 use mlcstt::stt::ErrorModel;
 
 fn dir() -> PathBuf {
-    std::env::var("MLCSTT_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    // MLCSTT_ARTIFACTS resolves through the single env layer.
+    mlcstt::api::Config::from_env().artifacts_dir().to_path_buf()
 }
 
 macro_rules! require {
