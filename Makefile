@@ -7,7 +7,7 @@
 ARTIFACTS ?= artifacts
 FORCE ?=
 
-.PHONY: artifacts build test bench sweep serve-demo clean-artifacts
+.PHONY: artifacts build test bench sweep serve-demo load clean-artifacts
 
 artifacts:
 	python3 python/compile/aot.py --out-dir $(ARTIFACTS) $(if $(FORCE),--force,)
@@ -23,6 +23,13 @@ sweep:
 # linear classifiers — runs anywhere, no PJRT needed.
 serve-demo:
 	cargo run --release --offline --example registry_serve
+
+# Overload characterization (DESIGN.md §11): closed/open-loop sweep past
+# saturation with bounded admission; emits bench_out/LOAD_serving.json.
+# Uses trained artifacts when present, otherwise a synthetic throttled
+# engine with a known saturation point — runs anywhere.
+load:
+	cargo run --release --offline --example load_test
 
 build:
 	cargo build --release --offline

@@ -1,70 +1,350 @@
-//! Open-loop load test of the serving coordinator: Poisson arrivals at a
-//! sweep of offered rates, measuring batch fill, p50/p99 latency, and
-//! achieved throughput — the batcher characterization behind the §Perf
-//! coordinator-overhead claim.
+//! Overload characterization of the serving coordinator: closed- and
+//! open-loop arrival processes swept past saturation, with bounded
+//! admission, load shedding, and SLO accounting (DESIGN.md §11).
 //!
 //! ```bash
+//! cargo run --offline --release --example load_test     # synthetic fallback
 //! make artifacts && cargo run --offline --release --example load_test
 //! ```
 //!
-//! Uses the faster inceptionmini artifact; `MLCSTT_RATES` (comma-separated
-//! req/s) and `MLCSTT_REQUESTS` override the sweep.
+//! Runs anywhere: with trained artifacts present the PJRT inceptionmini
+//! engine is driven directly; without them a buffer-free `LinearEngine`
+//! wrapped in a `ThrottledEngine` (fixed per-batch service time, so the
+//! saturation point is known by construction) exercises the identical
+//! serving path. The sweep:
+//!
+//! 1. **calibrate** — a closed-ish pipelined burst through a deep queue
+//!    measures achieved saturation throughput;
+//! 2. **open loop** — Poisson arrivals at each offered rate (default
+//!    0.5×/1×/2×/4× the measured saturation; `MLCSTT_RATES` overrides
+//!    with absolute req/s) against a *shallow* bounded queue
+//!    (`MLCSTT_QUEUE_DEPTH`, default 32 here), counting sheds client-
+//!    and server-side;
+//! 3. **closed loop** — K client threads, one request in flight each
+//!    (never sheds; the latency floor).
+//!
+//! Every run lands in `bench_out/LOAD_serving.json` with the same top
+//! level as the `BENCH_*.json` pipeline (`bench`, `git_sha`, `records`;
+//! core fields `name`/`n`/`median_ns`/`p95_ns`/`per_sec` map to served /
+//! p50 / p95 / achieved rps) plus the SLO extension fields, so the
+//! overload envelope is a tracked CI artifact.
+//!
+//! Environment (via `api::Config`): MLCSTT_REQUESTS (per rate point,
+//! default 256), MLCSTT_RATES, MLCSTT_QUEUE_DEPTH, MLCSTT_MAX_WAIT_MS,
+//! MLCSTT_ARTIFACTS, MLCSTT_THREADS, MLCSTT_BENCH_DIR.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use mlcstt::api::{Config, Deployment};
-use mlcstt::coordinator::{poisson_trace, Server};
+use mlcstt::coordinator::{
+    poisson_trace, Admission, BatchClassifier, LinearEngine, RequestError, Server, ServerConfig,
+    ServerReport, ThrottledEngine,
+};
 use mlcstt::encoding::Policy;
 use mlcstt::runtime::artifacts::{model_available, TestSet};
 use mlcstt::stt::ErrorModel;
+use mlcstt::util::json::{self, Json};
+use mlcstt::util::rng::Xoshiro256;
+
+/// Shallow demo default for the bounded queue: deep enough for the
+/// closed-loop clients, shallow enough that a 2x-saturation open loop
+/// visibly sheds at a few hundred requests.
+const DEMO_QUEUE_DEPTH: usize = 32;
+
+/// Closed-loop client threads (each holds one request in flight).
+const CLOSED_CLIENTS: usize = 4;
+
+/// Synthetic-fallback geometry and per-batch service time: saturation is
+/// BATCH / SERVICE = 8 / 4 ms = 2000 req/s by construction.
+const CLASSES: usize = 8;
+const DIM: usize = 64;
+const BATCH: usize = 8;
+const SERVICE: Duration = Duration::from_millis(4);
 
 fn main() -> Result<()> {
-    // MLCSTT_ARTIFACTS / MLCSTT_REQUESTS / MLCSTT_RATES resolve through
-    // the layered config in one place.
-    let config = Config::builder().max_wait(Duration::from_millis(25)).build();
+    let config = Config::from_env();
+    let requests = config.requests_or(256);
     let dir = config.artifacts_dir().to_path_buf();
     let model = "inceptionmini";
-    anyhow::ensure!(
-        model_available(&dir, model),
-        "{model}: run `make artifacts` first"
-    );
-    let requests = config.requests_or(96);
-    let rates = config.rates_or(&[50.0, 200.0]);
 
-    // The deployment owns encode -> store -> faults -> materialize; its
-    // engine factory is re-used to pin a fresh worker per offered rate.
-    let dep = Deployment::builder()
-        .config(config.clone())
-        .model(model)
-        .policy(Policy::Hybrid)
-        .granularity(4)
-        .error_model(ErrorModel::at_rate(0.015))
-        .build()?;
-    let test = TestSet::read(&dir.join("testset.bin"))?;
-
-    println!("open-loop Poisson load test — {model}, {requests} requests per rate");
-    for rate in rates {
-        let trace = poisson_trace(requests, rate, test.n, 0xBEEF);
-        let server = Server::start(dep.engine_factory()?, config.server())?;
-
-        let start = Instant::now();
-        let mut tickets = Vec::with_capacity(trace.len());
-        for (arrival, &idx) in trace.arrivals.iter().zip(&trace.image_idx) {
-            if let Some(gap) = arrival.checked_sub(start.elapsed()) {
-                std::thread::sleep(gap);
-            }
-            tickets.push(server.submit(test.image(idx).to_vec())?);
-        }
-        for t in tickets {
-            t.wait()?;
-        }
-        let rep = server.shutdown();
+    let records = if model_available(&dir, model) {
+        println!("load test — PJRT {model} engine, {requests} requests per rate point");
+        let dep = Deployment::builder()
+            .config(config.clone())
+            .model(model)
+            .policy(Policy::Hybrid)
+            .granularity(4)
+            .error_model(ErrorModel::at_rate(0.015))
+            .build()?;
+        let test = TestSet::read(&dir.join("testset.bin"))?;
+        let pool: Vec<Vec<f32>> = (0..test.n).map(|i| test.image(i).to_vec()).collect();
+        campaign(&config, "pjrt", requests, &pool, || dep.engine_factory())?
+    } else {
         println!(
-            "offered {rate:>6.0} req/s | served {} in {} batches (fill {:>4.1}) | p50 {:>7.1} ms p99 {:>7.1} ms | achieved {:>6.1} req/s",
-            rep.served, rep.batches, rep.mean_batch_fill, rep.p50_ms, rep.p99_ms, rep.throughput_rps
+            "load test — no artifacts; synthetic throttled LinearEngine \
+             (saturation {} req/s by construction), {requests} requests per rate point",
+            BATCH as u64 * 1000 / SERVICE.as_millis() as u64
         );
-    }
+        let mut rng = Xoshiro256::seeded(41);
+        let weights: Vec<f32> = (0..CLASSES * DIM)
+            .map(|_| if rng.chance(0.5) { 0.5 } else { -0.5 })
+            .collect();
+        let pool: Vec<Vec<f32>> = (0..64)
+            .map(|_| (0..DIM).map(|_| (rng.next_gaussian() * 0.5) as f32).collect())
+            .collect();
+        campaign(&config, "synthetic", requests, &pool, move || {
+            let w = weights.clone();
+            Ok(move || {
+                let inner = LinearEngine::new(CLASSES, DIM, BATCH, w)?;
+                Ok(ThrottledEngine::new(inner, SERVICE))
+            })
+        })?
+    };
+
+    // Same sink as the bench_report pipeline: LOAD_*.json next to
+    // BENCH_*.json under MLCSTT_BENCH_DIR (default bench_out/), anchored
+    // at the workspace root.
+    let out_dir = bench_out_dir();
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let path = out_dir.join("LOAD_serving.json");
+    let doc = json::obj(vec![
+        ("bench", "load_serving".into()),
+        ("git_sha", Json::Str(git_sha())),
+        ("records", Json::Arr(records)),
+    ]);
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+    println!("load_report: wrote {}", path.display());
     Ok(())
+}
+
+/// The full sweep against one engine source: calibrate, open-loop rate
+/// sweep, closed-loop floor. `mk` yields a fresh worker-thread factory
+/// per server start (one pinned server per run).
+fn campaign<C, F, M>(
+    config: &Config,
+    source: &str,
+    requests: usize,
+    pool: &[Vec<f32>],
+    mk: M,
+) -> Result<Vec<Json>>
+where
+    C: BatchClassifier,
+    F: FnOnce() -> Result<C> + Send + 'static,
+    M: Fn() -> Result<F>,
+{
+    let mut records = Vec::new();
+
+    // --- 1. Calibrate: pipelined burst through a queue deep enough to
+    // never shed; achieved throughput ~= saturation.
+    let cal_n = requests.clamp(16, 64);
+    let mut deep = config.server();
+    deep.queue_depth = cal_n + CLOSED_CLIENTS;
+    let server = Server::start(mk()?, deep)?;
+    let mut tickets = Vec::with_capacity(cal_n);
+    for i in 0..cal_n {
+        tickets.push(server.submit(pool[i % pool.len()].clone())?.ticket()?);
+    }
+    for t in tickets {
+        t.wait()?;
+    }
+    let cal = server.shutdown();
+    let saturation = cal.throughput_rps.max(1.0);
+    println!(
+        "calibration: {} requests -> saturation ~{saturation:.0} req/s (p50 {:.1} ms)",
+        cal.served, cal.p50_ms
+    );
+    records.push(record(&format!("{source}:calibrate"), "closed-burst", saturation, &cal));
+
+    // --- 2. Open loop at each offered rate. MLCSTT_RATES gives absolute
+    // req/s; the default sweep brackets the measured saturation so the
+    // 2x/4x points exercise shedding.
+    let rates = config.rates_or(&[]);
+    let rates = if rates.is_empty() {
+        vec![0.5 * saturation, saturation, 2.0 * saturation, 4.0 * saturation]
+    } else {
+        rates
+    };
+    let shallow = {
+        let mut s = config.server();
+        s.queue_depth = config.queue_depth_or(DEMO_QUEUE_DEPTH);
+        s
+    };
+    for (ri, &rate) in rates.iter().enumerate() {
+        let rep = open_loop(mk()?, shallow.clone(), pool, requests, rate, 0xBEEF ^ ri as u64)?;
+        println!(
+            "open  {rate:>8.0} req/s offered | served {:>5} shed {:>5} err {:>3} | \
+             fill {:>4.1} | p50 {:>7.1} p95 {:>7.1} p99 {:>7.1} ms | q.max {:>3} | achieved {:>7.1} req/s",
+            rep.served,
+            rep.shed,
+            rep.errors,
+            rep.mean_batch_fill,
+            rep.p50_ms,
+            rep.p95_ms,
+            rep.p99_ms,
+            rep.queue_max,
+            rep.throughput_rps
+        );
+        records.push(record(&format!("{source}:open@{rate:.0}"), "open", rate, &rep));
+    }
+
+    // --- 3. Closed loop: K clients, one request in flight each — the
+    // latency floor, and by construction shed-free.
+    let rep = closed_loop(mk()?, shallow, pool, requests)?;
+    println!(
+        "closed {CLOSED_CLIENTS} clients          | served {:>5} shed {:>5} | p50 {:>7.1} p99 {:>7.1} ms | achieved {:>7.1} req/s",
+        rep.served, rep.shed, rep.p50_ms, rep.p99_ms, rep.throughput_rps
+    );
+    records.push(record(
+        &format!("{source}:closed@{CLOSED_CLIENTS}"),
+        "closed",
+        rep.throughput_rps,
+        &rep,
+    ));
+    Ok(records)
+}
+
+/// Open loop: Poisson arrivals at `rate` req/s; a shed or slow server
+/// never delays the arrival process. Returns the server's report (its
+/// shed counter is cross-checked against the client-side count).
+fn open_loop<C, F>(
+    factory: F,
+    cfg: ServerConfig,
+    pool: &[Vec<f32>],
+    requests: usize,
+    rate: f64,
+    seed: u64,
+) -> Result<ServerReport>
+where
+    C: BatchClassifier,
+    F: FnOnce() -> Result<C> + Send + 'static,
+{
+    let server = Server::start(factory, cfg)?;
+    let trace = poisson_trace(requests, rate, pool.len(), seed);
+    let start = Instant::now();
+    let mut tickets = Vec::with_capacity(requests);
+    let mut client_shed = 0usize;
+    for (arrival, &idx) in trace.arrivals.iter().zip(&trace.image_idx) {
+        if let Some(gap) = arrival.checked_sub(start.elapsed()) {
+            std::thread::sleep(gap);
+        }
+        match server.submit(pool[idx].clone())? {
+            Admission::Accepted(t) => tickets.push(t),
+            Admission::Rejected { .. } => client_shed += 1,
+        }
+    }
+    let mut engine_errors = 0usize;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => {}
+            Err(RequestError::Engine { .. }) => engine_errors += 1,
+            Err(e) => anyhow::bail!("unexpected request outcome: {e}"),
+        }
+    }
+    let rep = server.shutdown();
+    anyhow::ensure!(
+        rep.shed == client_shed && rep.errors == engine_errors,
+        "accounting drift: server {} shed / {} errors vs client {client_shed} / {engine_errors}",
+        rep.shed,
+        rep.errors
+    );
+    Ok(rep)
+}
+
+/// Closed loop: `CLOSED_CLIENTS` scoped threads sharing the server, each
+/// submitting its next request only after the previous answer.
+fn closed_loop<C, F>(
+    factory: F,
+    cfg: ServerConfig,
+    pool: &[Vec<f32>],
+    requests: usize,
+) -> Result<ServerReport>
+where
+    C: BatchClassifier,
+    F: FnOnce() -> Result<C> + Send + 'static,
+{
+    let server = Server::start(factory, cfg)?;
+    let per_client = requests.div_ceil(CLOSED_CLIENTS);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for c in 0..CLOSED_CLIENTS {
+            let server = &server;
+            handles.push(scope.spawn(move || -> Result<()> {
+                for i in 0..per_client {
+                    let img = pool[(c * per_client + i) % pool.len()].clone();
+                    server.submit(img)?.ticket()?.wait()?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread panicked")?;
+        }
+        Ok(())
+    })?;
+    Ok(server.shutdown())
+}
+
+/// One LOAD record: the five core `BENCH_*.json` fields (`name`, `n`,
+/// `median_ns`, `p95_ns`, `per_sec`) mapped onto serving terms, plus the
+/// SLO extension fields.
+fn record(name: &str, mode: &str, offered_rps: f64, r: &ServerReport) -> Json {
+    json::obj(vec![
+        ("name", name.into()),
+        ("n", Json::Num(r.served as f64)),
+        ("median_ns", Json::Num(r.p50_ms * 1e6)),
+        ("p95_ns", Json::Num(r.p95_ms * 1e6)),
+        ("per_sec", Json::Num(r.throughput_rps)),
+        ("mode", mode.into()),
+        ("offered_rps", Json::Num(offered_rps)),
+        ("served", Json::Num(r.served as f64)),
+        ("shed", Json::Num(r.shed as f64)),
+        ("errors", Json::Num(r.errors as f64)),
+        ("batches", Json::Num(r.batches as f64)),
+        ("mean_batch_fill", Json::Num(r.mean_batch_fill)),
+        ("p50_ms", Json::Num(r.p50_ms)),
+        ("p95_ms", Json::Num(r.p95_ms)),
+        ("p99_ms", Json::Num(r.p99_ms)),
+        ("queue_mean", Json::Num(r.queue_mean)),
+        ("queue_max", Json::Num(r.queue_max as f64)),
+        ("wall_s", Json::Num(r.wall_s)),
+    ])
+}
+
+/// Where LOAD_*.json lands: MLCSTT_BENCH_DIR (default `bench_out/`),
+/// relative values anchored at the workspace root (mirrors the bench
+/// harness; examples cannot include `benches/harness.rs`).
+fn bench_out_dir() -> PathBuf {
+    let p = mlcstt::api::env::bench_dir().unwrap_or_else(|| PathBuf::from("bench_out"));
+    if p.is_absolute() {
+        return p;
+    }
+    let root = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(m) => {
+            let m = PathBuf::from(m);
+            m.parent().map(|x| x.to_path_buf()).unwrap_or(m)
+        }
+        Err(_) => PathBuf::from("."),
+    };
+    root.join(p)
+}
+
+/// Current commit: `GITHUB_SHA` in CI, `git rev-parse` locally.
+fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        return sha;
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
 }

@@ -69,7 +69,7 @@ fn main() -> Result<()> {
     for r in 0..requests {
         let model = artifact_models[r % artifact_models.len()];
         let i = rng.below(test.n as u64) as usize;
-        tickets.push(registry.submit(model, test.image(i).to_vec())?);
+        tickets.push(registry.submit(model, test.image(i).to_vec())?.ticket()?);
     }
     for t in tickets {
         t.wait()?;
@@ -126,7 +126,7 @@ fn serve_synthetic(config: &Config, requests: usize) -> Result<()> {
         let image: Vec<f32> = (0..DIM)
             .map(|_| (rng.next_gaussian() * 0.5) as f32)
             .collect();
-        tickets.push(registry.submit(tag, image)?);
+        tickets.push(registry.submit(tag, image)?.ticket()?);
     }
     for t in tickets {
         t.wait()?;

@@ -89,7 +89,7 @@ fn main() -> Result<()> {
         for _ in 0..requests {
             let i = rng.below(test.n as u64) as usize;
             expected.push(test.labels[i] as usize);
-            tickets.push(registry.submit(model, test.image(i).to_vec())?);
+            tickets.push(registry.submit(model, test.image(i).to_vec())?.ticket()?);
         }
         let mut correct = 0usize;
         for (t, want) in tickets.into_iter().zip(expected) {
@@ -100,12 +100,16 @@ fn main() -> Result<()> {
         let report = registry.shutdown();
         let rep = &report.sections[0].1;
         println!(
-            "serving: {} req, {} batches (fill {:.1}), acc {:.4}, p50 {:.1} ms, p99 {:.1} ms, {:.1} req/s",
+            "serving: {} req ({} shed, {} errors), {} batches (fill {:.1}), acc {:.4}, \
+             p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms, {:.1} req/s",
             rep.served,
+            rep.shed,
+            rep.errors,
             rep.batches,
             rep.mean_batch_fill,
             correct as f64 / requests as f64,
             rep.p50_ms,
+            rep.p95_ms,
             rep.p99_ms,
             rep.throughput_rps
         );

@@ -285,9 +285,12 @@ fn main() {
         const DIM: usize = 64;
         const BATCH: usize = 8;
         let lw = weights(CLASSES * DIM);
+        // Depth 2x the submit burst: this bench fires m=1024 submits
+        // before waiting, and a shed here would corrupt the timing.
         let scfg = ServerConfig {
             max_wait: Duration::from_millis(1),
             codec_threads: 1,
+            queue_depth: 2048,
         };
         let mut registry = ModelRegistry::new();
         for name in ["route-a", "route-b"] {
@@ -302,7 +305,7 @@ fn main() {
             let mut tickets = Vec::with_capacity(m);
             for i in 0..m {
                 let tag = if i % 2 == 0 { "route-a" } else { "route-b" };
-                tickets.push(registry.submit(tag, img.clone()).unwrap());
+                tickets.push(registry.submit(tag, img.clone()).unwrap().ticket().unwrap());
             }
             tickets
                 .into_iter()

@@ -19,7 +19,7 @@
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use crate::coordinator::{ServerConfig, StoreConfig};
+use crate::coordinator::{ServerConfig, StoreConfig, DEFAULT_QUEUE_DEPTH};
 use crate::fp::{self, F16Mode};
 use crate::util::threads;
 
@@ -38,6 +38,8 @@ pub struct Config {
     requests: Option<usize>,
     rates: Option<Vec<f64>>,
     max_wait: Duration,
+    queue_depth: Option<usize>,
+    queue_budget: Option<usize>,
 }
 
 impl Config {
@@ -91,17 +93,33 @@ impl Config {
         self.rates.clone().unwrap_or_else(|| default.to_vec())
     }
 
-    /// Batcher flush timeout for serving (builder, else 20 ms).
+    /// Batch-coalesce deadline for serving (builder, else
+    /// `MLCSTT_MAX_WAIT_MS`, else 20 ms).
     pub fn max_wait(&self) -> Duration {
         self.max_wait
     }
 
-    /// The serving view: a [`ServerConfig`] carrying this config's flush
-    /// timeout and worker ceiling.
+    /// Bounded-admission depth (builder, else `MLCSTT_QUEUE_DEPTH`), or
+    /// the caller's `default` — entry points keep context-appropriate
+    /// defaults ([`DEFAULT_QUEUE_DEPTH`] for serving, a shallow queue for
+    /// the overload demos).
+    pub fn queue_depth_or(&self, default: usize) -> usize {
+        self.queue_depth.unwrap_or(default).max(1)
+    }
+
+    /// Registry-wide fair-admission budget (builder, else
+    /// `MLCSTT_QUEUE_BUDGET`); `None` means no cross-model gating.
+    pub fn queue_budget(&self) -> Option<usize> {
+        self.queue_budget
+    }
+
+    /// The serving view: a [`ServerConfig`] carrying this config's
+    /// coalesce deadline, worker ceiling, and admission depth.
     pub fn server(&self) -> ServerConfig {
         ServerConfig {
             max_wait: self.max_wait,
             codec_threads: self.threads,
+            queue_depth: self.queue_depth_or(DEFAULT_QUEUE_DEPTH),
         }
     }
 
@@ -130,6 +148,8 @@ pub struct ConfigBuilder {
     requests: Option<usize>,
     rates: Option<Vec<f64>>,
     max_wait: Option<Duration>,
+    queue_depth: Option<usize>,
+    queue_budget: Option<usize>,
 }
 
 impl ConfigBuilder {
@@ -172,9 +192,22 @@ impl ConfigBuilder {
         self
     }
 
-    /// Override the batcher flush timeout.
+    /// Override the batch-coalesce deadline.
     pub fn max_wait(mut self, d: Duration) -> Self {
         self.max_wait = Some(d);
+        self
+    }
+
+    /// Override the bounded-admission depth (clamped to >= 1, matching
+    /// the `MLCSTT_QUEUE_DEPTH` clamp).
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = Some(n.max(1));
+        self
+    }
+
+    /// Override the registry-wide fair-admission budget.
+    pub fn queue_budget(mut self, n: usize) -> Self {
+        self.queue_budget = Some(n);
         self
     }
 
@@ -198,7 +231,12 @@ impl ConfigBuilder {
             eval: self.eval.or_else(super::env::eval),
             requests: self.requests.or_else(super::env::requests),
             rates: self.rates.or_else(super::env::rates),
-            max_wait: self.max_wait.unwrap_or(DEFAULT_MAX_WAIT),
+            max_wait: self
+                .max_wait
+                .or_else(|| super::env::max_wait_ms().map(Duration::from_millis))
+                .unwrap_or(DEFAULT_MAX_WAIT),
+            queue_depth: self.queue_depth.or_else(super::env::queue_depth),
+            queue_budget: self.queue_budget.or_else(super::env::queue_budget),
         }
     }
 }
@@ -221,6 +259,8 @@ mod tests {
             .rates(vec![1.0, 2.0])
             .artifacts("somewhere")
             .max_wait(Duration::from_millis(5))
+            .queue_depth(7)
+            .queue_budget(42)
             .build();
         assert_eq!(cfg.threads(), 3);
         assert_eq!(cfg.eval_or(512), 77);
@@ -228,6 +268,11 @@ mod tests {
         assert_eq!(cfg.rates_or(&[9.0]), vec![1.0, 2.0]);
         assert_eq!(cfg.artifacts_dir(), Path::new("somewhere"));
         assert_eq!(cfg.max_wait(), Duration::from_millis(5));
+        assert_eq!(cfg.queue_depth_or(1024), 7);
+        assert_eq!(cfg.queue_budget(), Some(42));
+        assert_eq!(cfg.server().queue_depth, 7);
+        // queue_depth clamps like threads: 0 is meaningless.
+        assert_eq!(Config::builder().queue_depth(0).build().queue_depth_or(9), 1);
     }
 
     #[test]
@@ -235,6 +280,9 @@ mod tests {
         let cfg = Config::builder().threads(2).build();
         assert_eq!(cfg.server().codec_threads, 2);
         assert_eq!(cfg.server().max_wait, DEFAULT_MAX_WAIT);
+        // Depth may come from the ambient env in a dev shell; the view
+        // always carries a positive resolved bound.
+        assert!(cfg.server().queue_depth >= 1);
         let sc = cfg.store();
         assert_eq!(sc.threads, 2);
         assert_eq!(sc.policy, Policy::Hybrid);

@@ -5,31 +5,45 @@
 //! its thread from a `Send` factory). [`ModelRegistry`] extends that from
 //! one pinned engine to N: each registered model gets its own pinned
 //! worker + batcher, requests are routed by model tag at
-//! [`ModelRegistry::submit`], and [`ModelRegistry::shutdown`] returns one
-//! [`ServerReport`] section per model, in registration order.
+//! [`ModelRegistry::submit`] (an indexed O(1) lookup), and
+//! [`ModelRegistry::shutdown`] returns one [`ServerReport`] section per
+//! model, in registration order.
 //!
-//! Routing contract (pinned by `rust/tests/api_facade.rs`):
+//! Routing contract (pinned by `rust/tests/api_facade.rs` and
+//! `rust/tests/overload.rs`):
 //!
 //! * a tag addresses exactly the engine registered under it — per-model
-//!   queues share nothing, so one model's backlog never delays another's
+//!   queues share no state, so one model's backlog never delays another's
 //!   batcher;
 //! * routing adds no randomness: for a deterministic engine the response
 //!   to (tag, image) is independent of interleaving with other models'
 //!   traffic;
 //! * unknown tags and duplicate registrations are errors, not silent
-//!   fallbacks.
+//!   fallbacks;
+//! * under a registry-wide in-flight budget ([`ModelRegistry::with_budget`],
+//!   implemented by [`FairGate`]), global overload sheds only models over
+//!   their fair share — a cold model keeps admitting while a hot sibling
+//!   sheds (DESIGN.md §11).
+
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{BatchClassifier, Server, ServerConfig, ServerReport, Ticket};
+use crate::coordinator::{
+    Admission, BatchClassifier, FairGate, Server, ServerConfig, ServerReport,
+};
 
 use super::Deployment;
 
 /// A set of named, independently thread-pinned model servers with
-/// tag-routed submission.
+/// tag-routed submission and optional cross-model fair admission.
 #[derive(Default)]
 pub struct ModelRegistry {
     entries: Vec<(String, Server)>,
+    /// Tag → index into `entries` (registration order preserved there).
+    index: HashMap<String, usize>,
+    /// Cross-model admission gate, when a budget is configured.
+    gate: Option<FairGate>,
 }
 
 /// Final per-model serving metrics, in registration order — the
@@ -40,10 +54,40 @@ pub struct RegistryReport {
     pub sections: Vec<(String, ServerReport)>,
 }
 
+impl RegistryReport {
+    /// Requests served across all models.
+    pub fn total_served(&self) -> usize {
+        self.sections.iter().map(|(_, r)| r.served).sum()
+    }
+
+    /// Requests shed at admission across all models.
+    pub fn total_shed(&self) -> usize {
+        self.sections.iter().map(|(_, r)| r.shed).sum()
+    }
+
+    /// Requests resolved as engine errors across all models.
+    pub fn total_errors(&self) -> usize {
+        self.sections.iter().map(|(_, r)| r.errors).sum()
+    }
+}
+
 impl ModelRegistry {
-    /// An empty registry.
+    /// An empty registry with independent per-model admission (no
+    /// cross-model budget).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An empty registry whose models share a registry-wide in-flight
+    /// `budget`: while total in-flight stays under the budget every model
+    /// admits freely; at the budget, only models below their fair share
+    /// (`budget / models`, floored at 1) keep admitting. See [`FairGate`].
+    pub fn with_budget(budget: usize) -> Self {
+        ModelRegistry {
+            entries: Vec::new(),
+            index: HashMap::new(),
+            gate: Some(FairGate::new(budget)),
+        }
     }
 
     /// Register `name` with an engine `factory` (run **inside** the new
@@ -55,10 +99,17 @@ impl ModelRegistry {
         C: BatchClassifier,
         F: FnOnce() -> Result<C> + Send + 'static,
     {
-        if self.entries.iter().any(|(n, _)| n == name) {
+        if self.index.contains_key(name) {
             bail!("model {name:?} is already registered");
         }
-        let server = Server::start(factory, cfg)?;
+        let server = Server::start_with_gate(factory, cfg, self.gate.clone())?;
+        // Count the model only once its server is up: a failed factory
+        // must not shrink the siblings' fair share forever. The gate is
+        // consulted only by later submits, so the order is unobservable.
+        if let Some(g) = &self.gate {
+            g.add_model();
+        }
+        self.index.insert(name.to_string(), self.entries.len());
         self.entries.push((name.to_string(), server));
         Ok(())
     }
@@ -85,12 +136,33 @@ impl ModelRegistry {
         self.entries.is_empty()
     }
 
-    /// Route one image to the model registered under `model`; returns the
-    /// per-request [`Ticket`] exactly like [`Server::submit`].
-    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<Ticket> {
-        match self.entries.iter().find(|(n, _)| n == model) {
-            Some((_, server)) => server.submit(image),
-            None => bail!("unknown model {model:?} (registered: {:?})", self.models()),
+    /// Route one image to the model registered under `model`. The result
+    /// is the same bounded-admission decision as [`Server::submit`]:
+    /// [`Admission::Accepted`] with a ticket, or [`Admission::Rejected`]
+    /// when that model's queue (or the registry fair-share budget) sheds
+    /// it. The lookup is O(1); the unknown-tag error message is built
+    /// only on the error path.
+    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<Admission> {
+        match self.index.get(model) {
+            Some(&i) => self.entries[i].1.submit(image),
+            None => bail!("unknown model {model:?} ({} registered)", self.entries.len()),
+        }
+    }
+
+    /// Live per-model in-flight queue depths, in registration order —
+    /// the sampling hook for load monitors and the overload tests.
+    pub fn queue_depths(&self) -> Vec<(&str, usize)> {
+        self.entries
+            .iter()
+            .map(|(n, s)| (n.as_str(), s.queued()))
+            .collect()
+    }
+
+    /// Registry-wide in-flight total (0 without a budget gate).
+    pub fn in_flight(&self) -> usize {
+        match &self.gate {
+            Some(g) => g.in_flight(),
+            None => self.entries.iter().map(|(_, s)| s.queued()).sum(),
         }
     }
 
@@ -109,14 +181,15 @@ impl ModelRegistry {
 
 impl std::fmt::Display for RegistryReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        for (name, r) in &self.sections {
-            writeln!(
-                f,
-                "{name}: {} req in {} batches (fill {:.1}) | p50 {:.1} ms p99 {:.1} ms | {:.1} req/s",
-                r.served, r.batches, r.mean_batch_fill, r.p50_ms, r.p99_ms, r.throughput_rps
-            )?;
-        }
-        Ok(())
+        let table = crate::metrics::serving_table("registry serving report", &self.sections);
+        write!(f, "{table}")?;
+        writeln!(
+            f,
+            "totals: {} served / {} shed / {} errors",
+            self.total_served(),
+            self.total_shed(),
+            self.total_errors()
+        )
     }
 }
 
@@ -130,6 +203,7 @@ mod tests {
         ServerConfig {
             max_wait: Duration::from_millis(1),
             codec_threads: 1,
+            ..ServerConfig::default()
         }
     }
 
@@ -152,8 +226,8 @@ mod tests {
         assert_eq!(reg.len(), 2);
 
         let img = vec![1.0f32, 0.0];
-        let ta = reg.submit("a", img.clone()).unwrap();
-        let tb = reg.submit("b", img.clone()).unwrap();
+        let ta = reg.submit("a", img.clone()).unwrap().ticket().unwrap();
+        let tb = reg.submit("b", img.clone()).unwrap().ticket().unwrap();
         assert_eq!(ta.wait().unwrap().class, 0, "model a: +x is class 0");
         assert_eq!(tb.wait().unwrap().class, 1, "model b: +x is class 1");
         assert!(reg.submit("nope", img).is_err());
@@ -163,6 +237,9 @@ mod tests {
         assert_eq!(report.sections[0].0, "a");
         assert_eq!(report.sections[0].1.served, 1);
         assert_eq!(report.sections[1].1.served, 1);
+        assert_eq!(report.total_served(), 2);
+        assert_eq!(report.total_shed(), 0);
+        assert_eq!(report.total_errors(), 0);
     }
 
     #[test]
@@ -171,5 +248,18 @@ mod tests {
         reg.register("m", engine_a, cfg()).unwrap();
         assert!(reg.register("m", engine_b, cfg()).is_err());
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn queue_depths_sample_every_model() {
+        let mut reg = ModelRegistry::with_budget(16);
+        reg.register("a", engine_a, cfg()).unwrap();
+        reg.register("b", engine_b, cfg()).unwrap();
+        let depths = reg.queue_depths();
+        assert_eq!(depths.len(), 2);
+        assert_eq!(depths[0].0, "a");
+        let _ = reg.in_flight();
+        let report = reg.shutdown();
+        assert_eq!(report.total_served(), 0);
     }
 }

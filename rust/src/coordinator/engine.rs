@@ -255,6 +255,45 @@ impl BatchClassifier for LinearEngine {
     }
 }
 
+/// A [`BatchClassifier`] decorator with a fixed per-batch service time:
+/// every `classify_batch` sleeps `service` before delegating to the inner
+/// engine. This gives the serving loop a *known* saturation throughput —
+/// `batch_size / service` requests per second — which the overload tests
+/// (`rust/tests/overload.rs`) and the `load_test` example's synthetic
+/// fallback use to drive the server past saturation deterministically,
+/// without depending on host speed.
+pub struct ThrottledEngine<C: BatchClassifier> {
+    inner: C,
+    service: std::time::Duration,
+}
+
+impl<C: BatchClassifier> ThrottledEngine<C> {
+    /// Wrap `inner` with a fixed per-batch `service` time.
+    pub fn new(inner: C, service: std::time::Duration) -> Self {
+        ThrottledEngine { inner, service }
+    }
+
+    /// Saturation throughput, requests per second: `batch / service`.
+    pub fn saturation_rps(&self) -> f64 {
+        self.inner.batch_size() as f64 / self.service.as_secs_f64().max(1e-9)
+    }
+}
+
+impl<C: BatchClassifier> BatchClassifier for ThrottledEngine<C> {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn image_elems(&self) -> usize {
+        self.inner.image_elems()
+    }
+
+    fn classify_batch(&self, images: &[f32]) -> Result<Vec<usize>> {
+        std::thread::sleep(self.service);
+        self.inner.classify_batch(images)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +319,20 @@ mod tests {
         // +inf is a real argmax winner, not a NaN-like reject.
         let inf = LinearEngine::new(2, 1, 1, vec![f32::INFINITY, 1.0]).unwrap();
         assert_eq!(inf.classify_one(&[1.0]), 0);
+    }
+
+    #[test]
+    fn throttled_engine_delegates_and_knows_its_saturation() {
+        let inner = LinearEngine::new(2, 2, 4, vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let eng = ThrottledEngine::new(inner, std::time::Duration::from_millis(2));
+        assert_eq!(eng.batch_size(), 4);
+        assert_eq!(eng.image_elems(), 2);
+        // batch 4 / 2 ms = 2000 rps.
+        assert!((eng.saturation_rps() - 2000.0).abs() < 1e-6);
+        let t0 = std::time::Instant::now();
+        let preds = eng.classify_batch(&[0.9, 0.1, 0.1, 0.9, 1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(preds, vec![0, 1, 0, 1]);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(2));
     }
 
     #[test]

@@ -16,14 +16,18 @@
 //! * [`engine`] — [`engine::InferenceEngine`]: binds a materialized weight
 //!   set to a compiled PJRT executable, staging weights on the device once;
 //! * [`server`] — [`server::Server`]: a threaded request-queue/batcher
-//!   (vLLM-router-style, scaled to this workload) with latency metrics.
+//!   (vLLM-router-style, scaled to this workload) with bounded admission,
+//!   load shedding, and SLO accounting (DESIGN.md §11).
 
 pub mod engine;
 pub mod server;
 pub mod store;
 pub mod workload;
 
-pub use engine::{accuracy_of, BatchClassifier, InferenceEngine, LinearEngine};
-pub use server::{Server, ServerConfig, ServerReport, Ticket};
+pub use engine::{accuracy_of, BatchClassifier, InferenceEngine, LinearEngine, ThrottledEngine};
+pub use server::{
+    Admission, FairGate, RequestError, Server, ServerConfig, ServerReport, Ticket,
+    DEFAULT_QUEUE_DEPTH,
+};
 pub use store::{CleanMaterialize, StoreConfig, StoreReport, StoreSnapshot, WeightStore};
 pub use workload::{poisson_trace, uniform_trace, Trace};

@@ -1,10 +1,12 @@
-//! Threaded request server: queue → batcher → inference worker.
+//! Threaded request server: bounded admission → batcher → inference worker.
 //!
 //! A deliberately small vLLM-router-shaped loop scaled to this workload:
-//! clients submit single images; the batcher coalesces up to `batch` images
-//! (the artifact's compiled batch size) or flushes on `max_wait`; a worker
-//! thread runs the PJRT executable; responses return through per-request
-//! channels. Latency/throughput percentiles feed EXPERIMENTS.md §Perf.
+//! clients submit single images through a **bounded** admission queue; the
+//! batcher coalesces up to `batch` images (the artifact's compiled batch
+//! size) or flushes on an admission-anchored deadline; a worker thread runs
+//! the PJRT executable; responses return through per-request channels.
+//! Latency/throughput percentiles feed EXPERIMENTS.md §Perf and the
+//! `LOAD_*.json` overload envelope (DESIGN.md §11).
 //!
 //! PJRT handles are not `Send` (raw pointers under the hood), so the engine
 //! is *constructed inside* the worker thread from a `Send` factory closure —
@@ -12,7 +14,25 @@
 //! offline vendor set — std threads + mpsc are plenty for a single-executor
 //! CPU pipeline (the PJRT call dominates end-to-end time; see the
 //! coordinator-overhead measurement in `bench_hotpath`).
+//!
+//! # Admission, shedding, and honesty (DESIGN.md §11)
+//!
+//! Three serving contracts, all pinned by `rust/tests/overload.rs`:
+//!
+//! * **Bounded queues shed, never block.** [`Server::submit`] admits at
+//!   most [`ServerConfig::queue_depth`] in-flight requests; past that it
+//!   returns [`Admission::Rejected`] immediately (with the observed depth)
+//!   instead of queueing unbounded work. Sheds are counted in
+//!   [`ServerReport::shed`].
+//! * **Engine errors are errors.** A failing `classify_batch` resolves
+//!   every request of that batch as [`RequestError::Engine`] — never a
+//!   fabricated class-0 "success" — counted in [`ServerReport::errors`]
+//!   and excluded from the latency percentiles.
+//! * **Reports never lie with NaN.** An idle server reports
+//!   `throughput_rps = 0.0` over a well-defined wall window
+//!   ([`ServerReport::wall_s`]), not `NaN`/`inf`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -21,13 +41,19 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::engine::BatchClassifier;
-use crate::util::stats::Percentiles;
+use crate::util::stats::{Percentiles, Summary};
+
+/// Default bound on in-flight requests per model
+/// ([`ServerConfig::queue_depth`]): deep enough that offline drivers and
+/// benches never shed by accident, shallow enough that a stuck engine
+/// cannot absorb unbounded memory.
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
 
 /// One classification request.
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
-    respond: Sender<Response>,
+    respond: Sender<Result<Response, RequestError>>,
 }
 
 /// The server's answer.
@@ -39,10 +65,86 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// Typed per-request failure, distinguishable from a prediction.
+///
+/// Before ISSUE 6 an engine failure was answered as "class 0" and counted
+/// as served; a client could not tell a degraded answer from a real one
+/// (the exact failure mode Khoshavi et al. 2020's error-impact estimation
+/// assumes away). Now every non-answer is one of these variants.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// The engine's `classify_batch` failed; the whole batch resolves to
+    /// this error (counted in [`ServerReport::errors`], never as served).
+    Engine {
+        /// The engine's error rendered with its context chain.
+        message: String,
+    },
+    /// The admission queue was full; the request was shed without
+    /// queueing (counted in [`ServerReport::shed`]).
+    Shed {
+        /// In-flight depth observed at the admission decision.
+        depth: usize,
+    },
+    /// The worker vanished before answering (shutdown race).
+    Disconnected,
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Engine { message } => write!(f, "engine error: {message}"),
+            RequestError::Shed { depth } => {
+                write!(f, "request shed: admission queue full (depth {depth})")
+            }
+            RequestError::Disconnected => write!(f, "server worker disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// Admission decision from [`Server::submit`]: the bounded queue either
+/// accepted the request (yielding a [`Ticket`]) or shed it immediately.
+///
+/// Shedding is a *value*, not an `Err`: an overloaded server is operating
+/// exactly as configured, and load generators need to count sheds without
+/// conflating them with real failures (malformed image, worker gone).
+#[must_use = "a shed request is silent unless the caller checks it"]
+pub enum Admission {
+    /// Queued; wait on the ticket for the answer.
+    Accepted(Ticket),
+    /// Shed at admission: the queue already held `depth` requests.
+    Rejected {
+        /// In-flight depth observed at the admission decision.
+        depth: usize,
+    },
+}
+
+impl Admission {
+    /// True iff the request was shed.
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, Admission::Rejected { .. })
+    }
+
+    /// Unwrap to a [`Ticket`], converting a shed into
+    /// [`RequestError::Shed`] — for closed-loop callers that treat
+    /// shedding as exceptional (tests, strict drivers).
+    pub fn ticket(self) -> Result<Ticket, RequestError> {
+        match self {
+            Admission::Accepted(t) => Ok(t),
+            Admission::Rejected { depth } => Err(RequestError::Shed { depth }),
+        }
+    }
+}
+
 /// Server tuning.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Flush a partial batch after this long (fills with repeats).
+    /// Coalesce a partial batch up to this long **past first admission**
+    /// (fills with repeats). The deadline anchors at the first pending
+    /// request's enqueue time, so time spent queued behind a backlog
+    /// counts against the coalesce budget: a saturated queue flushes
+    /// full batches with no added wait (DESIGN.md §11).
     pub max_wait: Duration,
     /// Worker-thread cap for codec work on the serve path. The server
     /// loop itself runs no codec work — weight materialization happens
@@ -58,6 +160,12 @@ pub struct ServerConfig {
     /// bit-identical for every value (DESIGN.md §7/§8); only latency
     /// changes.
     pub codec_threads: usize,
+    /// Bound on in-flight (admitted, unanswered-by-worker-dequeue)
+    /// requests. `submit` sheds past this depth instead of queueing.
+    /// Layered as builder → `MLCSTT_QUEUE_DEPTH` →
+    /// [`DEFAULT_QUEUE_DEPTH`] through [`crate::api::Config::server`];
+    /// clamped to ≥ 1 (a zero-depth queue could never serve).
+    pub queue_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -65,54 +173,165 @@ impl Default for ServerConfig {
         ServerConfig {
             max_wait: Duration::from_millis(20),
             codec_threads: crate::util::threads::available(),
+            queue_depth: DEFAULT_QUEUE_DEPTH,
         }
+    }
+}
+
+/// Cross-model admission gate: a registry-wide in-flight budget that
+/// keeps one model's backlog from starving its siblings.
+///
+/// The rule is max-min-fair in spirit: while the registry-wide in-flight
+/// total is under `budget`, every model admits freely (work-conserving —
+/// a single hot model may use the whole budget when it is alone). Once
+/// the total reaches the budget, only models *below their fair share*
+/// (`budget / models`, floored at 1 so a cold model can always queue)
+/// keep admitting; above-share models shed. The per-model
+/// [`ServerConfig::queue_depth`] bound still applies on top.
+///
+/// Counters are sampled without a lock, so the budget is approximate
+/// under concurrent submitters (off by at most the number of in-flight
+/// `submit` calls); the per-model bound stays exact. Pinned by
+/// `rust/tests/overload.rs::fair_gate_sheds_hot_model_not_cold`.
+#[derive(Clone, Debug)]
+pub struct FairGate {
+    total: Arc<AtomicUsize>,
+    models: Arc<AtomicUsize>,
+    budget: usize,
+}
+
+impl FairGate {
+    /// A gate with a registry-wide in-flight `budget`.
+    pub fn new(budget: usize) -> Self {
+        FairGate {
+            total: Arc::new(AtomicUsize::new(0)),
+            models: Arc::new(AtomicUsize::new(0)),
+            budget,
+        }
+    }
+
+    /// Register one more model sharing this gate (shrinks fair share).
+    pub fn add_model(&self) {
+        self.models.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Registry-wide in-flight total right now.
+    pub fn in_flight(&self) -> usize {
+        self.total.load(Ordering::SeqCst)
+    }
+
+    /// Admission rule for a model currently holding `own_depth` in-flight
+    /// requests.
+    fn admits(&self, own_depth: usize) -> bool {
+        let total = self.total.load(Ordering::SeqCst);
+        if total < self.budget {
+            return true;
+        }
+        let models = self.models.load(Ordering::SeqCst).max(1);
+        own_depth < (self.budget / models).max(1)
+    }
+
+    fn on_admit(&self) {
+        self.total.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn on_dequeue(&self) {
+        // Saturating: a shutdown race must not wrap the counter.
+        let _ = self
+            .total
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |t| t.checked_sub(1));
     }
 }
 
 /// Aggregate serving metrics.
 #[derive(Clone, Debug)]
 pub struct ServerReport {
-    /// Requests answered.
+    /// Requests answered with a prediction.
     pub served: usize,
+    /// Requests shed at admission (queue full / over fair share).
+    pub shed: usize,
+    /// Requests resolved as engine errors (never counted as served).
+    pub errors: usize,
     /// Batches executed.
     pub batches: usize,
     /// Mean real requests per batch (the rest is padding).
     pub mean_batch_fill: f64,
-    /// Median end-to-end request latency, milliseconds.
+    /// Median end-to-end request latency, milliseconds (served only).
     pub p50_ms: f64,
+    /// 95th-percentile end-to-end request latency, milliseconds.
+    pub p95_ms: f64,
     /// 99th-percentile end-to-end request latency, milliseconds.
     pub p99_ms: f64,
-    /// Requests per second over the serving wall-clock window.
+    /// Served requests per second over [`ServerReport::wall_s`];
+    /// 0.0 (never NaN/inf) when the window is empty or degenerate.
     pub throughput_rps: f64,
+    /// Serving wall-clock window, seconds: first admission → last batch
+    /// completion, or launch → shutdown for an idle server.
+    pub wall_s: f64,
+    /// Mean in-flight depth observed at admission decisions (0.0 idle).
+    pub queue_mean: f64,
+    /// Deepest in-flight depth observed at an admission decision.
+    pub queue_max: usize,
+}
+
+/// State shared between the client-facing [`Server`] handle and its
+/// worker thread: metrics, the in-flight depth counter that implements
+/// the bounded queue, and the optional cross-model [`FairGate`].
+#[derive(Clone)]
+struct Shared {
+    metrics: Arc<Mutex<Metrics>>,
+    depth: Arc<AtomicUsize>,
+    gate: Option<FairGate>,
+}
+
+impl Shared {
+    /// Worker-side bookkeeping for one dequeued request.
+    fn dequeued(&self) {
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+        if let Some(g) = &self.gate {
+            g.on_dequeue();
+        }
+    }
 }
 
 /// A running server around one engine.
 pub struct Server {
     tx: Option<Sender<Request>>,
     worker: Option<JoinHandle<()>>,
-    metrics: Arc<Mutex<Metrics>>,
+    shared: Shared,
+    queue_bound: usize,
     img_elems: usize,
+    launched: Instant,
 }
 
 #[derive(Default)]
 struct Metrics {
     served: usize,
+    shed: usize,
+    errors: usize,
     batches: usize,
     fill_sum: usize,
     latencies: Percentiles,
+    queue_depth: Summary,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
 
-/// Client handle returned by [`Server::submit`].
+/// Client handle returned by an accepted [`Server::submit`].
 pub struct Ticket {
-    rx: Receiver<Response>,
+    rx: Receiver<Result<Response, RequestError>>,
 }
 
 impl Ticket {
-    /// Block until the server answers this request.
-    pub fn wait(self) -> Result<Response> {
-        Ok(self.rx.recv()?)
+    /// Block until the server resolves this request — a prediction, or a
+    /// typed [`RequestError`] (engine failure / worker gone). The error
+    /// is a concrete type so callers can branch on it without downcasts;
+    /// `?` still lifts it into `anyhow::Result` at facade call sites.
+    pub fn wait(self) -> Result<Response, RequestError> {
+        match self.rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => Err(RequestError::Disconnected),
+        }
     }
 }
 
@@ -123,16 +342,38 @@ impl Server {
     /// Blocks until the engine is up. Any [`BatchClassifier`] serves:
     /// the PJRT [`crate::coordinator::InferenceEngine`] in production,
     /// [`crate::coordinator::LinearEngine`] for backend-free demos and the
-    /// routing benches.
+    /// routing benches, [`crate::coordinator::ThrottledEngine`] for
+    /// overload tests with a known saturation point.
     pub fn start<F, C>(factory: F, cfg: ServerConfig) -> Result<Self>
+    where
+        C: BatchClassifier,
+        F: FnOnce() -> Result<C> + Send + 'static,
+    {
+        Self::start_with_gate(factory, cfg, None)
+    }
+
+    /// [`Server::start`] under a cross-model [`FairGate`]. Used by
+    /// [`crate::api::ModelRegistry`] when a registry-wide in-flight
+    /// budget is configured; the gate must already count this model
+    /// (see [`FairGate::add_model`]).
+    pub fn start_with_gate<F, C>(
+        factory: F,
+        cfg: ServerConfig,
+        gate: Option<FairGate>,
+    ) -> Result<Self>
     where
         C: BatchClassifier,
         F: FnOnce() -> Result<C> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let m = Arc::clone(&metrics);
+        let shared = Shared {
+            metrics: Arc::new(Mutex::new(Metrics::default())),
+            depth: Arc::new(AtomicUsize::new(0)),
+            gate,
+        };
+        let worker_shared = shared.clone();
+        let queue_bound = cfg.queue_depth.max(1);
 
         let worker = std::thread::spawn(move || {
             let engine = match factory() {
@@ -145,7 +386,7 @@ impl Server {
             let batch = engine.batch_size();
             let img_elems = engine.image_elems();
             let _ = ready_tx.send(Ok((batch, img_elems)));
-            worker_loop(engine, rx, m, cfg, batch, img_elems);
+            worker_loop(engine, rx, worker_shared, cfg, batch, img_elems);
         });
 
         let (_, img_elems) = ready_rx
@@ -155,55 +396,125 @@ impl Server {
         Ok(Server {
             tx: Some(tx),
             worker: Some(worker),
-            metrics,
+            shared,
+            queue_bound,
             img_elems,
+            launched: Instant::now(),
         })
     }
 
-    /// Submit one image; returns a ticket to wait on.
-    pub fn submit(&self, image: Vec<f32>) -> Result<Ticket> {
+    /// Submit one image through bounded admission. `Ok(Accepted(ticket))`
+    /// means queued; `Ok(Rejected { depth })` means shed because the
+    /// queue held `queue_depth` requests (or the [`FairGate`] ruled this
+    /// model over its fair share). `Err` is reserved for caller bugs and
+    /// teardown: a malformed image or a vanished worker.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Admission> {
         anyhow::ensure!(
             image.len() == self.img_elems,
             "image wants {} floats, got {}",
             self.img_elems,
             image.len()
         );
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("server running")
-            .send(Request {
-                image,
-                enqueued: Instant::now(),
-                respond: rtx,
+        // Exact admission: compare-and-increment so concurrent submitters
+        // can never overshoot the bound.
+        let mut observed = 0usize;
+        let admitted = self
+            .shared
+            .depth
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
+                observed = d;
+                let fair = match &self.shared.gate {
+                    Some(g) => g.admits(d),
+                    None => true,
+                };
+                (d < self.queue_bound && fair).then_some(d + 1)
             })
-            .map_err(|_| anyhow!("worker gone"))?;
-        Ok(Ticket { rx: rrx })
+            .is_ok();
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.queue_depth.add(observed as f64);
+            if !admitted {
+                m.shed += 1;
+                return Ok(Admission::Rejected { depth: observed });
+            }
+        }
+        if let Some(g) = &self.shared.gate {
+            g.on_admit();
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let sent = self.tx.as_ref().expect("server running").send(Request {
+            image,
+            enqueued: Instant::now(),
+            respond: rtx,
+        });
+        if sent.is_err() {
+            // Roll the admission back so the counters stay truthful.
+            self.shared.dequeued();
+            return Err(anyhow!("worker gone"));
+        }
+        Ok(Admission::Accepted(Ticket { rx: rrx }))
     }
 
-    /// Stop the worker and return final metrics.
+    /// In-flight (admitted, not yet dequeued by the worker) requests
+    /// right now — the live queue-depth sample behind
+    /// [`crate::api::ModelRegistry::queue_depths`].
+    pub fn queued(&self) -> usize {
+        self.shared.depth.load(Ordering::SeqCst)
+    }
+
+    /// Stop the worker and return final metrics. Total accounting always
+    /// balances: every submitted request is exactly one of served /
+    /// shed / errors (or still holds an unresolved ticket, impossible
+    /// after the worker drains and exits).
     pub fn shutdown(mut self) -> ServerReport {
         self.tx.take(); // close the queue
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-        let m = self.metrics.lock().unwrap();
+        let m = self.shared.metrics.lock().unwrap();
         let mut lat = m.latencies.clone();
-        let wall = match (m.started, m.finished) {
-            (Some(s), Some(f)) if f > s => (f - s).as_secs_f64(),
-            _ => f64::NAN,
+        // Well-defined wall window even when no request ever arrived:
+        // fall back to launch → now, and report 0.0 throughput on a
+        // degenerate (empty or zero-width) window instead of NaN/inf.
+        let started = m.started.unwrap_or(self.launched);
+        let finished = m.finished.unwrap_or_else(Instant::now);
+        let wall_s = finished.saturating_duration_since(started).as_secs_f64();
+        let pct = |lat: &mut Percentiles, p: f64| {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat.pct(p) * 1e3
+            }
         };
         ServerReport {
             served: m.served,
+            shed: m.shed,
+            errors: m.errors,
             batches: m.batches,
             mean_batch_fill: if m.batches == 0 {
                 0.0
             } else {
                 m.fill_sum as f64 / m.batches as f64
             },
-            p50_ms: if lat.is_empty() { 0.0 } else { lat.pct(50.0) * 1e3 },
-            p99_ms: if lat.is_empty() { 0.0 } else { lat.pct(99.0) * 1e3 },
-            throughput_rps: m.served as f64 / wall,
+            p50_ms: pct(&mut lat, 50.0),
+            p95_ms: pct(&mut lat, 95.0),
+            p99_ms: pct(&mut lat, 99.0),
+            throughput_rps: if wall_s > 0.0 {
+                m.served as f64 / wall_s
+            } else {
+                0.0
+            },
+            wall_s,
+            queue_mean: if m.queue_depth.count() == 0 {
+                0.0
+            } else {
+                m.queue_depth.mean()
+            },
+            queue_max: if m.queue_depth.count() == 0 {
+                0
+            } else {
+                m.queue_depth.max() as usize
+            },
         }
     }
 }
@@ -220,7 +531,7 @@ impl Drop for Server {
 fn worker_loop<C: BatchClassifier>(
     engine: C,
     rx: Receiver<Request>,
-    metrics: Arc<Mutex<Metrics>>,
+    shared: Shared,
     cfg: ServerConfig,
     batch: usize,
     img_elems: usize,
@@ -232,19 +543,39 @@ fn worker_loop<C: BatchClassifier>(
             Ok(r) => r,
             Err(_) => return, // all senders gone
         };
+        shared.dequeued();
         {
-            let mut m = metrics.lock().unwrap();
-            m.started.get_or_insert_with(Instant::now);
+            let mut m = shared.metrics.lock().unwrap();
+            // The serving window opens at the first request's *admission*,
+            // not the worker's dequeue — queue time is serving time.
+            m.started.get_or_insert(first.enqueued);
         }
-        let deadline = Instant::now() + cfg.max_wait;
         let mut pending = vec![first];
+        // Backlog-greedy: drain whatever is already queued, no waiting —
+        // a saturated queue forms full batches immediately.
+        while pending.len() < batch {
+            match rx.try_recv() {
+                Ok(r) => {
+                    shared.dequeued();
+                    pending.push(r);
+                }
+                Err(_) => break,
+            }
+        }
+        // Coalesce the remainder up to the admission-anchored deadline:
+        // time the first request already spent queued counts against the
+        // budget, so batching never adds wait on top of a backlog.
+        let deadline = pending[0].enqueued + cfg.max_wait;
         while pending.len() < batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
+                Ok(r) => {
+                    shared.dequeued();
+                    pending.push(r);
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
@@ -255,23 +586,37 @@ fn worker_loop<C: BatchClassifier>(
             let r = &pending[j.min(pending.len() - 1)];
             slot.copy_from_slice(&r.image);
         }
-        let preds = match engine.classify_batch(&images) {
-            Ok(p) => p,
-            Err(_) => vec![0; batch], // degrade: report class 0
-        };
+        let outcome = engine.classify_batch(&images);
         let now = Instant::now();
 
-        let mut m = metrics.lock().unwrap();
+        let mut m = shared.metrics.lock().unwrap();
         m.batches += 1;
         m.fill_sum += pending.len();
-        for (j, req) in pending.iter().enumerate() {
-            let latency = now - req.enqueued;
-            m.latencies.add(latency.as_secs_f64());
-            m.served += 1;
-            let _ = req.respond.send(Response {
-                class: preds[j],
-                latency,
-            });
+        match outcome {
+            Ok(preds) => {
+                for (j, req) in pending.iter().enumerate() {
+                    let latency = now - req.enqueued;
+                    m.latencies.add(latency.as_secs_f64());
+                    m.served += 1;
+                    let _ = req.respond.send(Ok(Response {
+                        class: preds[j],
+                        latency,
+                    }));
+                }
+            }
+            Err(err) => {
+                // An engine failure resolves the whole batch as typed
+                // errors: no fabricated class, no served count, and no
+                // latency samples (failed requests would poison the
+                // percentiles the SLO report is built on).
+                let message = format!("{err:#}");
+                m.errors += pending.len();
+                for req in &pending {
+                    let _ = req.respond.send(Err(RequestError::Engine {
+                        message: message.clone(),
+                    }));
+                }
+            }
         }
         m.finished = Some(now);
     }

@@ -413,7 +413,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     for _ in 0..requests {
         let i = rng.below(test.n as u64) as usize;
         expected.push(test.labels[i] as usize);
-        tickets.push(registry.submit(&model, test.image(i).to_vec())?);
+        // `.ticket()?` lifts an Admission::Rejected into a typed error:
+        // at the default queue depth this closed-ish replay never sheds.
+        tickets.push(registry.submit(&model, test.image(i).to_vec())?.ticket()?);
     }
     let mut correct = 0usize;
     for (t, want) in tickets.into_iter().zip(expected) {
@@ -424,13 +426,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let report = registry.shutdown();
     let section = &report.sections[0].1;
     println!(
-        "served {} requests in {} batches (mean fill {:.1})\n\
-         \x20 accuracy {:.4} | p50 {:.1} ms | p99 {:.1} ms | {:.1} req/s",
+        "served {} requests in {} batches (mean fill {:.1}; {} shed, {} errors)\n\
+         \x20 accuracy {:.4} | p50 {:.1} ms | p95 {:.1} ms | p99 {:.1} ms | {:.1} req/s",
         section.served,
         section.batches,
         section.mean_batch_fill,
+        section.shed,
+        section.errors,
         correct as f64 / requests as f64,
         section.p50_ms,
+        section.p95_ms,
         section.p99_ms,
         section.throughput_rps,
     );

@@ -182,6 +182,40 @@ pub fn bandwidth_table(model: &str, direction: &str, rows: &[BandwidthRow]) -> T
     t
 }
 
+/// Render per-model serving reports as an SLO table: one row per model
+/// with the served/shed/errors split, the latency percentiles, and the
+/// queue-depth stats (DESIGN.md §11). Used by
+/// [`crate::api::RegistryReport`]'s `Display` and the serving demos.
+pub fn serving_table(
+    title: &str,
+    rows: &[(String, crate::coordinator::ServerReport)],
+) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "model", "served", "shed", "errors", "batches", "fill", "p50 ms", "p95 ms",
+            "p99 ms", "req/s", "q.mean", "q.max",
+        ],
+    );
+    for (name, r) in rows {
+        t.row(vec![
+            name.clone(),
+            r.served.to_string(),
+            r.shed.to_string(),
+            r.errors.to_string(),
+            r.batches.to_string(),
+            format!("{:.1}", r.mean_batch_fill),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p95_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{:.1}", r.throughput_rps),
+            format!("{:.1}", r.queue_mean),
+            r.queue_max.to_string(),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +267,31 @@ mod tests {
         let s = energy_table("vgg", &rows).to_string();
         assert!(s.contains("9.00"), "{s}");
         assert!(s.contains("6.00"), "{s}");
+    }
+
+    #[test]
+    fn serving_table_renders_slo_columns() {
+        let rep = crate::coordinator::ServerReport {
+            served: 90,
+            shed: 8,
+            errors: 2,
+            batches: 12,
+            mean_batch_fill: 7.5,
+            p50_ms: 1.25,
+            p95_ms: 3.5,
+            p99_ms: 4.75,
+            throughput_rps: 123.4,
+            wall_s: 0.8,
+            queue_mean: 2.5,
+            queue_max: 6,
+        };
+        let s = serving_table("slo", &[("hot".to_string(), rep)]).to_string();
+        assert!(s.contains("== slo =="));
+        assert!(s.contains("hot"));
+        assert!(s.contains("90"));
+        assert!(s.contains("8"), "shed column");
+        assert!(s.contains("3.50"), "p95 column");
+        assert!(s.contains("q.max"));
     }
 
     #[test]

@@ -77,3 +77,26 @@ pub fn rates() -> Option<Vec<f64>> {
 pub fn bench_dir() -> Option<PathBuf> {
     raw("MLCSTT_BENCH_DIR").map(PathBuf::from)
 }
+
+/// `MLCSTT_QUEUE_DEPTH` — per-model bounded-admission depth (requests
+/// in flight before [`crate::coordinator::Server`] sheds). Parsed values
+/// clamp to at least 1 (a zero-depth queue could never serve, mirroring
+/// the `MLCSTT_THREADS=0` clamp); unset/unparsable is `None` (callers
+/// fall back to [`crate::coordinator::DEFAULT_QUEUE_DEPTH`]).
+pub fn queue_depth() -> Option<usize> {
+    raw("MLCSTT_QUEUE_DEPTH")?.parse::<usize>().ok().map(|n| n.max(1))
+}
+
+/// `MLCSTT_QUEUE_BUDGET` — registry-wide in-flight budget for
+/// cross-model fair admission ([`crate::coordinator::FairGate`]). Unset
+/// is `None`: models admit independently, no fair-share gating.
+pub fn queue_budget() -> Option<usize> {
+    raw("MLCSTT_QUEUE_BUDGET")?.parse().ok()
+}
+
+/// `MLCSTT_MAX_WAIT_MS` — batch-coalesce deadline in milliseconds
+/// (admission-anchored; see `ServerConfig::max_wait`). Unset/unparsable
+/// is `None` (callers default to 20 ms).
+pub fn max_wait_ms() -> Option<u64> {
+    raw("MLCSTT_MAX_WAIT_MS")?.parse().ok()
+}

@@ -31,6 +31,7 @@ fn serve_cfg() -> ServerConfig {
     ServerConfig {
         max_wait: Duration::from_millis(1),
         codec_threads: 1,
+        ..ServerConfig::default()
     }
 }
 
@@ -192,7 +193,7 @@ fn registry_serving_matches_direct_server_and_routes_deterministically() {
     let direct: Vec<usize> = (0..task_a.labels.len())
         .map(|i| {
             let img = task_a.samples[i * task_a.dim..(i + 1) * task_a.dim].to_vec();
-            server.submit(img).unwrap().wait().unwrap().class
+            server.submit(img).unwrap().ticket().unwrap().wait().unwrap().class
         })
         .collect();
     server.shutdown();
@@ -207,8 +208,8 @@ fn registry_serving_matches_direct_server_and_routes_deterministically() {
     for i in 0..task_a.labels.len() {
         let img_a = task_a.samples[i * task_a.dim..(i + 1) * task_a.dim].to_vec();
         let img_b = task_b.samples[i * task_b.dim..(i + 1) * task_b.dim].to_vec();
-        tickets.push(("a", i, registry.submit("a", img_a).unwrap()));
-        tickets.push(("b", i, registry.submit("b", img_b).unwrap()));
+        tickets.push(("a", i, registry.submit("a", img_a).unwrap().ticket().unwrap()));
+        tickets.push(("b", i, registry.submit("b", img_b).unwrap().ticket().unwrap()));
     }
     for (tag, i, ticket) in tickets {
         let got = ticket.wait().unwrap().class;

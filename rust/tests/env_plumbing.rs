@@ -85,4 +85,38 @@ fn mlcstt_env_layering_builder_beats_env_beats_default() {
     assert_eq!(Config::builder().rates(vec![5.0]).build().rates_or(&[1.0]), vec![5.0]);
     std::env::remove_var("MLCSTT_RATES");
     assert_eq!(Config::from_env().rates_or(&[1.0, 2.0]), vec![1.0, 2.0]);
+
+    // --- queue depth (ISSUE 6): builder beats env beats caller default,
+    // with the MLCSTT_THREADS-style 0 -> 1 clamp on both layers.
+    std::env::set_var("MLCSTT_QUEUE_DEPTH", "17");
+    assert_eq!(Config::from_env().queue_depth_or(1024), 17);
+    assert_eq!(Config::from_env().server().queue_depth, 17);
+    assert_eq!(Config::builder().queue_depth(5).build().queue_depth_or(1024), 5);
+    std::env::set_var("MLCSTT_QUEUE_DEPTH", "0");
+    assert_eq!(Config::from_env().queue_depth_or(1024), 1, "0 clamps to 1");
+    std::env::set_var("MLCSTT_QUEUE_DEPTH", "junk");
+    assert_eq!(Config::from_env().queue_depth_or(1024), 1024, "unparsable -> default");
+    std::env::remove_var("MLCSTT_QUEUE_DEPTH");
+    assert_eq!(Config::from_env().queue_depth_or(1024), 1024);
+
+    // --- registry-wide fair-admission budget: unset means no gate.
+    std::env::set_var("MLCSTT_QUEUE_BUDGET", "64");
+    assert_eq!(Config::from_env().queue_budget(), Some(64));
+    assert_eq!(Config::builder().queue_budget(9).build().queue_budget(), Some(9));
+    std::env::remove_var("MLCSTT_QUEUE_BUDGET");
+    assert_eq!(Config::from_env().queue_budget(), None);
+
+    // --- batch-coalesce deadline: builder beats env beats the 20 ms
+    // default, and the env value is milliseconds.
+    std::env::set_var("MLCSTT_MAX_WAIT_MS", "7");
+    assert_eq!(Config::from_env().max_wait(), std::time::Duration::from_millis(7));
+    assert_eq!(Config::from_env().server().max_wait, std::time::Duration::from_millis(7));
+    assert_eq!(
+        Config::builder().max_wait(std::time::Duration::from_millis(3)).build().max_wait(),
+        std::time::Duration::from_millis(3)
+    );
+    std::env::set_var("MLCSTT_MAX_WAIT_MS", "junk");
+    assert_eq!(Config::from_env().max_wait(), std::time::Duration::from_millis(20));
+    std::env::remove_var("MLCSTT_MAX_WAIT_MS");
+    assert_eq!(Config::from_env().max_wait(), std::time::Duration::from_millis(20));
 }

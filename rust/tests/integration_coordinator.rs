@@ -125,7 +125,7 @@ fn server_round_trips_requests_and_reports_metrics() {
     let n = 40usize;
     let mut tickets = Vec::new();
     for i in 0..n {
-        tickets.push(server.submit(test.image(i % test.n).to_vec()).unwrap());
+        tickets.push(server.submit(test.image(i % test.n).to_vec()).unwrap().ticket().unwrap());
     }
     let mut classes = Vec::new();
     for t in tickets {
@@ -135,9 +135,13 @@ fn server_round_trips_requests_and_reports_metrics() {
     }
     let report = server.shutdown();
     assert_eq!(report.served, n);
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.errors, 0);
     assert!(report.batches >= 1);
-    assert!(report.p99_ms >= report.p50_ms);
+    assert!(report.p95_ms >= report.p50_ms);
+    assert!(report.p99_ms >= report.p95_ms);
     assert!(report.throughput_rps > 0.0);
+    assert!(report.wall_s > 0.0);
     // Predictions must not be a constant (the model actually ran).
     assert!(classes.iter().any(|&c| c != classes[0]));
 }
@@ -164,6 +168,8 @@ fn server_rejects_malformed_images() {
     assert!(server.submit(vec![0.0; 7]).is_err());
     let report = server.shutdown();
     assert_eq!(report.served, 0);
+    // Idle window: a defined 0.0, never NaN (ISSUE 6 bugfix).
+    assert_eq!(report.throughput_rps, 0.0);
 }
 
 #[test]

@@ -1,0 +1,400 @@
+//! Overload-grade serving contracts (ISSUE 6): typed engine errors,
+//! NaN-free idle reports, bounded-queue shedding, cross-model fairness,
+//! backlog batch formation, and the 2x-saturation envelope.
+//!
+//! Everything here runs backend-free: `LinearEngine` (pure host) plus
+//! `ThrottledEngine` (fixed per-batch service time, so saturation is
+//! known by construction) drive the identical `Server`/`ModelRegistry`
+//! path the PJRT engine uses.
+
+use std::cell::Cell;
+use std::time::Duration;
+
+use anyhow::Result;
+use mlcstt::api::ModelRegistry;
+use mlcstt::coordinator::{
+    Admission, BatchClassifier, LinearEngine, RequestError, Server, ServerConfig, ThrottledEngine,
+};
+
+/// A classifier whose engine always fails — the LinearEngine-shaped
+/// stand-in for a PJRT executor dying mid-serve.
+struct FailingEngine {
+    batch: usize,
+    dim: usize,
+}
+
+impl BatchClassifier for FailingEngine {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+    fn image_elems(&self) -> usize {
+        self.dim
+    }
+    fn classify_batch(&self, _images: &[f32]) -> Result<Vec<usize>> {
+        anyhow::bail!("device lost")
+    }
+}
+
+/// Fails every other batch (first fails). `Cell` is fine: the engine
+/// lives on its single worker thread and never crosses it.
+struct FlakyEngine {
+    inner: LinearEngine,
+    calls: Cell<usize>,
+}
+
+impl BatchClassifier for FlakyEngine {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+    fn image_elems(&self) -> usize {
+        self.inner.image_elems()
+    }
+    fn classify_batch(&self, images: &[f32]) -> Result<Vec<usize>> {
+        let n = self.calls.get();
+        self.calls.set(n + 1);
+        if n % 2 == 0 {
+            anyhow::bail!("transient device error");
+        }
+        self.inner.classify_batch(images)
+    }
+}
+
+fn linear(batch: usize) -> LinearEngine {
+    // Class 0 likes +x, class 1 likes -x.
+    LinearEngine::new(2, 2, batch, vec![1.0, 0.0, -1.0, 0.0]).unwrap()
+}
+
+fn cfg(max_wait_ms: u64, queue_depth: usize) -> ServerConfig {
+    ServerConfig {
+        max_wait: Duration::from_millis(max_wait_ms),
+        codec_threads: 1,
+        queue_depth,
+    }
+}
+
+/// The headline bugfix pin: an engine error must never surface to a
+/// client as a successful class-0 prediction, never count as served, and
+/// never contribute a latency sample.
+#[test]
+fn engine_errors_are_typed_not_class_zero() {
+    let server = Server::start(|| Ok(FailingEngine { batch: 4, dim: 2 }), cfg(1, 64)).unwrap();
+    let n = 8usize;
+    let mut tickets = Vec::new();
+    for _ in 0..n {
+        tickets.push(server.submit(vec![1.0, 0.0]).unwrap().ticket().unwrap());
+    }
+    for t in tickets {
+        match t.wait() {
+            Err(RequestError::Engine { message }) => {
+                assert!(message.contains("device lost"), "{message}");
+            }
+            other => panic!("engine failure must be a typed error, got {other:?}"),
+        }
+    }
+    let rep = server.shutdown();
+    assert_eq!(rep.errors, n, "every request counted as an error");
+    assert_eq!(rep.served, 0, "no fabricated successes");
+    assert_eq!(rep.shed, 0);
+    assert!(rep.batches >= 1);
+    assert_eq!(rep.p50_ms, 0.0, "failed requests leave no latency samples");
+    assert_eq!(rep.throughput_rps, 0.0);
+}
+
+/// A flaky engine splits traffic into served + errors with nothing lost.
+#[test]
+fn flaky_engine_accounts_every_request() {
+    let server = Server::start(
+        || {
+            Ok(FlakyEngine {
+                inner: linear(1),
+                calls: Cell::new(0),
+            })
+        },
+        cfg(1, 64),
+    )
+    .unwrap();
+    // Sequential submit -> wait: batch size 1 makes each request its own
+    // batch, so outcomes alternate error/success deterministically.
+    let n = 6usize;
+    let mut served = 0usize;
+    let mut errors = 0usize;
+    for _ in 0..n {
+        match server.submit(vec![1.0, 0.0]).unwrap().ticket().unwrap().wait() {
+            Ok(resp) => {
+                assert_eq!(resp.class, 0);
+                served += 1;
+            }
+            Err(RequestError::Engine { .. }) => errors += 1,
+            Err(e) => panic!("unexpected outcome {e:?}"),
+        }
+    }
+    assert_eq!((served, errors), (3, 3));
+    let rep = server.shutdown();
+    assert_eq!(rep.served, served);
+    assert_eq!(rep.errors, errors);
+    assert!(rep.p50_ms > 0.0, "served requests do leave latency samples");
+    assert!(rep.throughput_rps > 0.0);
+}
+
+/// The NaN bugfix pin: an idle server reports a defined zero, not NaN.
+#[test]
+fn idle_shutdown_reports_zero_not_nan() {
+    let server = Server::start(|| Ok(linear(2)), cfg(1, 64)).unwrap();
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 0);
+    assert_eq!(rep.throughput_rps, 0.0, "idle window is 0.0, not NaN");
+    assert!(!rep.throughput_rps.is_nan());
+    assert!(rep.wall_s >= 0.0);
+    assert_eq!(rep.p50_ms, 0.0);
+    assert_eq!(rep.queue_max, 0);
+    assert_eq!(rep.queue_mean, 0.0);
+}
+
+/// Near-instant serving must produce a finite throughput (the historical
+/// `started == finished` window yielded inf).
+#[test]
+fn instant_serve_reports_finite_throughput() {
+    let server = Server::start(|| Ok(linear(1)), cfg(1, 64)).unwrap();
+    let resp = server
+        .submit(vec![1.0, 0.0])
+        .unwrap()
+        .ticket()
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.class, 0);
+    let rep = server.shutdown();
+    assert_eq!(rep.served, 1);
+    assert!(rep.throughput_rps.is_finite());
+    assert!(rep.throughput_rps >= 0.0);
+    assert!(rep.wall_s >= 0.0);
+}
+
+/// Bounded admission: past `queue_depth` in-flight requests, submits shed
+/// immediately with a typed rejection — they never block, and the
+/// server's shed counter matches the client's count exactly.
+#[test]
+fn full_queue_sheds_instead_of_blocking() {
+    let server = Server::start(
+        || Ok(ThrottledEngine::new(linear(2), Duration::from_millis(20))),
+        cfg(1, 4),
+    )
+    .unwrap();
+    let n = 40usize;
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..n {
+        match server.submit(vec![1.0, 0.0]).unwrap() {
+            Admission::Accepted(t) => tickets.push(t),
+            Admission::Rejected { depth } => {
+                assert!(depth >= 4, "shed only at the bound, observed {depth}");
+                shed += 1;
+            }
+        }
+    }
+    assert!(shed > 0, "2x+ overload against depth 4 must shed");
+    let accepted = tickets.len();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let rep = server.shutdown();
+    assert_eq!(rep.shed, shed, "server-side shed counter matches client");
+    assert_eq!(rep.served, accepted);
+    assert_eq!(rep.served + rep.shed, n, "every request accounted");
+    assert!(rep.queue_max <= 4, "observed depth never exceeds the bound");
+    assert!(rep.queue_max > 0);
+    // Bounded queue => bounded latency: worst case is the full queue
+    // draining ahead of you, far under this ceiling.
+    assert!(rep.p99_ms < 1000.0, "p99 {} ms", rep.p99_ms);
+}
+
+/// `Admission::ticket()` converts a shed into the typed error.
+#[test]
+fn rejected_admission_converts_to_typed_error() {
+    let server = Server::start(
+        || Ok(ThrottledEngine::new(linear(1), Duration::from_millis(20))),
+        cfg(1, 1),
+    )
+    .unwrap();
+    // Fill the depth-1 queue, then the next submit must shed.
+    let mut first = None;
+    let mut saw_shed = false;
+    for _ in 0..20 {
+        match server.submit(vec![1.0, 0.0]).unwrap() {
+            Admission::Accepted(t) => {
+                if first.is_none() {
+                    first = Some(t);
+                }
+            }
+            adm @ Admission::Rejected { .. } => {
+                assert!(adm.is_rejected());
+                match adm.ticket() {
+                    Err(RequestError::Shed { depth }) => assert!(depth >= 1),
+                    Err(e) => panic!("expected Shed, got {e:?}"),
+                    Ok(_) => panic!("expected Shed, got an accepted ticket"),
+                }
+                saw_shed = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_shed, "a depth-1 queue under burst must shed");
+    first.unwrap().wait().unwrap();
+    server.shutdown();
+}
+
+/// Cross-model fairness: under a registry-wide budget, a flooded hot
+/// model sheds while a cold sibling keeps serving untouched.
+#[test]
+fn fair_gate_sheds_hot_model_not_cold() {
+    let mut reg = ModelRegistry::with_budget(8);
+    reg.register(
+        "hot",
+        || Ok(ThrottledEngine::new(linear(2), Duration::from_millis(10))),
+        cfg(1, 64),
+    )
+    .unwrap();
+    reg.register("cold", || Ok(linear(2)), cfg(1, 64)).unwrap();
+
+    // Flood the hot model far past the shared budget...
+    let hot_n = 100usize;
+    let mut hot_tickets = Vec::new();
+    for _ in 0..hot_n {
+        match reg.submit("hot", vec![1.0, 0.0]).unwrap() {
+            Admission::Accepted(t) => hot_tickets.push(t),
+            Admission::Rejected { .. } => {}
+        }
+    }
+    let depths = reg.queue_depths();
+    assert_eq!(depths.len(), 2);
+    assert_eq!(depths[0].0, "hot");
+
+    // ...and the cold model still serves every request, sequentially.
+    for _ in 0..10 {
+        let resp = reg
+            .submit("cold", vec![1.0, 0.0])
+            .unwrap()
+            .ticket()
+            .expect("cold model must not shed under the hot flood")
+            .wait()
+            .unwrap();
+        assert_eq!(resp.class, 0);
+    }
+    for t in hot_tickets {
+        t.wait().unwrap();
+    }
+    let report = reg.shutdown();
+    let hot = &report.sections[0].1;
+    let cold = &report.sections[1].1;
+    assert!(hot.shed > 0, "hot model over its fair share must shed");
+    assert_eq!(hot.served + hot.shed, hot_n);
+    assert_eq!(cold.shed, 0, "cold model never sheds");
+    assert_eq!(cold.served, 10);
+    assert_eq!(report.total_served(), hot.served + 10);
+    assert_eq!(report.total_shed(), hot.shed);
+}
+
+/// A backlogged queue forms (near-)full batches with no added waiting:
+/// the coalesce deadline anchors at admission, so queue time eats the
+/// batching budget.
+#[test]
+fn backlog_forms_full_batches() {
+    let server = Server::start(
+        || Ok(ThrottledEngine::new(linear(4), Duration::from_millis(5))),
+        cfg(50, 100),
+    )
+    .unwrap();
+    let n = 40usize;
+    let mut tickets = Vec::new();
+    for _ in 0..n {
+        tickets.push(server.submit(vec![1.0, 0.0]).unwrap().ticket().unwrap());
+    }
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let rep = server.shutdown();
+    assert_eq!(rep.served, n);
+    assert!(
+        rep.mean_batch_fill > 2.0,
+        "backlog must coalesce, fill {}",
+        rep.mean_batch_fill
+    );
+    assert!(rep.batches < n, "batching actually batched");
+    assert!(rep.queue_mean > 0.0);
+}
+
+/// The acceptance envelope: offered load at ~2x the known saturation of
+/// a throttled engine, against a bounded queue — the run completes with
+/// bounded latency, nonzero sheds, full percentile + queue-depth stats.
+#[test]
+fn two_x_saturation_completes_with_bounded_latency_and_sheds() {
+    // batch 8 / 4 ms => saturation 2000 req/s; offer ~4000 req/s.
+    let server = Server::start(
+        || Ok(ThrottledEngine::new(linear(8), Duration::from_millis(4))),
+        cfg(20, 16),
+    )
+    .unwrap();
+    let n = 200usize;
+    let gap = Duration::from_micros(250); // 1 / 4000 rps
+    // Absolute-schedule pacing (arrival i lands at i * gap): per-sleep
+    // overhead cannot accumulate and silently lower the offered rate.
+    let start = std::time::Instant::now();
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..n {
+        if let Some(ahead) = (gap * i as u32).checked_sub(start.elapsed()) {
+            std::thread::sleep(ahead);
+        }
+        match server.submit(vec![1.0, 0.0]).unwrap() {
+            Admission::Accepted(t) => tickets.push(t),
+            Admission::Rejected { .. } => shed += 1,
+        }
+    }
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let rep = server.shutdown();
+    assert!(rep.shed > 0, "2x saturation against depth 16 must shed");
+    assert_eq!(rep.shed, shed);
+    assert!(rep.served > 0);
+    assert_eq!(rep.served + rep.shed, n);
+    assert_eq!(rep.errors, 0);
+    // Full SLO surface: ordered percentiles and queue-depth stats.
+    assert!(rep.p50_ms > 0.0);
+    assert!(rep.p95_ms >= rep.p50_ms);
+    assert!(rep.p99_ms >= rep.p95_ms);
+    assert!(rep.queue_max > 0 && rep.queue_max <= 16);
+    assert!(rep.queue_mean > 0.0);
+    assert!(rep.throughput_rps > 0.0 && rep.throughput_rps.is_finite());
+    // Bounded queue => bounded tail: worst case is a full 16-deep queue
+    // draining at 2 batches (8 ms) plus service — orders of magnitude
+    // under this ceiling even on a loaded CI host.
+    assert!(
+        rep.p99_ms < 1000.0,
+        "latency must not grow without bound, p99 {} ms",
+        rep.p99_ms
+    );
+}
+
+/// Unknown tags stay errors (now with a lazy, allocation-light message)
+/// and indexed routing still addresses the right model.
+#[test]
+fn registry_unknown_tag_is_lazy_error() {
+    let mut reg = ModelRegistry::new();
+    reg.register("a", || Ok(linear(2)), cfg(1, 64)).unwrap();
+    reg.register("b", || Ok(linear(2)), cfg(1, 64)).unwrap();
+    let err = reg.submit("nope", vec![1.0, 0.0]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown model"), "{msg}");
+    assert!(msg.contains("2 registered"), "{msg}");
+    let resp = reg
+        .submit("b", vec![1.0, 0.0])
+        .unwrap()
+        .ticket()
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.class, 0);
+    let report = reg.shutdown();
+    assert_eq!(report.total_served(), 1);
+}
