@@ -8,19 +8,25 @@
 //!
 //! Runs anywhere: with trained artifacts present every available Mini-net
 //! is deployed through the MLC buffer (hybrid, g=4, published 1.5e-2
-//! rate) and served through PJRT; without them the demo falls back to two
-//! pure-host linear classifiers whose weight matrices still live in the
-//! simulated buffer — same registry, same routing contract, no backend.
+//! rate) and served through PJRT; without them the demo serves two
+//! pure-host linear classifiers from one **shared multi-tenant buffer
+//! pool** deliberately sized too small for both — the workload ping-pongs
+//! the pool, and the report shows the absorbed evict→rebuild stalls plus
+//! the per-bank "buffer lifetime under traffic" wear table (DESIGN.md
+//! §12).
 //!
 //! Environment (via `api::Config`): MLCSTT_REQUESTS (total replay length,
-//! default 96), MLCSTT_ARTIFACTS, MLCSTT_THREADS.
+//! default 96), MLCSTT_ARTIFACTS, MLCSTT_THREADS, and the pool knobs
+//! MLCSTT_POOL_KB / MLCSTT_POOL_BANKS / MLCSTT_POOL_EXTENT /
+//! MLCSTT_EVICT (default geometry: 1.5 KB, 4 banks, 128-word extents,
+//! LRU).
 
 use std::time::Duration;
 
 use anyhow::Result;
 
-use mlcstt::api::{Config, Deployment, ModelRegistry};
-use mlcstt::coordinator::LinearEngine;
+use mlcstt::api::{BufferPool, Config, Deployment, ModelRegistry};
+use mlcstt::coordinator::{LinearEngine, StoreConfig};
 use mlcstt::encoding::Policy;
 use mlcstt::runtime::artifacts::{model_available, ParamSpec, TestSet, WeightFile};
 use mlcstt::stt::ErrorModel;
@@ -37,8 +43,8 @@ fn main() -> Result<()> {
         .collect();
 
     if artifact_models.is_empty() {
-        println!("(no artifacts — serving two buffer-backed linear models instead)\n");
-        return serve_synthetic(&config, requests);
+        println!("(no artifacts — serving two linear models from one shared buffer pool)\n");
+        return serve_pooled(&config, requests);
     }
 
     // One deployment per artifact model, all behind one registry.
@@ -78,43 +84,56 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Backend-free fallback: two linear classifiers whose weight matrices go
-/// through the simulated MLC buffer (one clean, one faulted) before
-/// serving — the registry path exercised end to end with zero PJRT.
-fn serve_synthetic(config: &Config, requests: usize) -> Result<()> {
+/// Backend-free fallback: two linear classifiers sharing one multi-tenant
+/// buffer pool sized for only one of them. Each model's weight matrix is
+/// admitted once; under traffic the least-recently-served model is
+/// evicted and transparently rebuilt (bit-identical weights and bills)
+/// the next time its worker needs it — the `rebuilds` column and the wear
+/// table in the final report are the point of the demo.
+fn serve_pooled(config: &Config, requests: usize) -> Result<()> {
     const CLASSES: usize = 8;
     const DIM: usize = 64;
     const BATCH: usize = 8;
 
-    let mut registry = ModelRegistry::new();
+    // Both models need 4 extents (512 words / 128); the default pool has
+    // 6, so at most one model is resident at a time.
+    let pool = BufferPool::from_config(config)
+        .unwrap_or_else(|| BufferPool::new(1536, 4, 128, config.evict_policy()));
+    println!(
+        "shared pool: {} extents of {} words across 4 banks, evict={:?}",
+        pool.free_extents(),
+        pool.extent_words(),
+        config.evict_policy(),
+    );
+
+    let mut registry = ModelRegistry::new().with_pool(pool.clone());
     for (name, rate, seed) in [("linear-clean", 0.0, 1u64), ("linear-faulted", 0.02, 2)] {
         let mut rng = Xoshiro256::seeded(seed);
         let weights: Vec<f32> = (0..CLASSES * DIM)
             .map(|_| if rng.chance(0.5) { 0.5 } else { -0.5 })
             .collect();
-        // Stage the matrix through the buffer like any model tensor.
-        let dep = Deployment::builder()
-            .config(config.clone())
-            .name(name)
-            .weights(WeightFile {
-                params: vec![ParamSpec {
-                    name: "classifier.w".into(),
-                    shape: vec![CLASSES, DIM],
-                    data: weights,
-                }],
-            })
-            .error_model(ErrorModel::at_rate(rate))
-            .seed(seed)
-            .build()?;
-        let sr = dep.store_report();
+        let store_cfg = StoreConfig {
+            error_model: ErrorModel::at_rate(rate),
+            seed,
+            ..StoreConfig::default()
+        };
+        let wf = WeightFile {
+            params: vec![ParamSpec {
+                name: "classifier.w".into(),
+                shape: vec![CLASSES, DIM],
+                data: weights,
+            }],
+        };
+        let sr = pool.admit(name, &store_cfg, &wf)?;
         println!(
-            "{name}: {} weights through the buffer, {} faulted cells",
+            "{name}: {} weights admitted to the pool, {} faulted cells",
             sr.weights, sr.injected_faults
         );
-        let stored = dep.tensors()[0].data.clone();
-        registry.register(
+        registry.register_pooled(
             name,
-            move || LinearEngine::new(CLASSES, DIM, BATCH, stored),
+            move |tensors: &[ParamSpec]| {
+                LinearEngine::new(CLASSES, DIM, BATCH, tensors[0].data.clone())
+            },
             config.server(),
         )?;
     }
@@ -131,6 +150,13 @@ fn serve_synthetic(config: &Config, requests: usize) -> Result<()> {
     for t in tickets {
         t.wait()?;
     }
-    println!("\nper-model serving report:\n{}", registry.shutdown());
+
+    let report = registry.shutdown();
+    println!("\nper-model serving report:\n{report}");
+    println!(
+        "pool: {} rebuilds absorbed, wear spread {:.2}",
+        pool.rebuilds(),
+        pool.wear_spread()
+    );
     Ok(())
 }

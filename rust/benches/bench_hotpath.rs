@@ -15,8 +15,9 @@ mod harness;
 
 use std::time::Duration;
 
-use mlcstt::api::{Config, Deployment, ModelRegistry};
-use mlcstt::buffer::{BufferConfig, MlcBuffer};
+use mlcstt::api::{BufferPool, Config, Deployment, EvictPolicy, ModelRegistry};
+use mlcstt::buffer::shared::SharedMlcBuffer;
+use mlcstt::buffer::{AccessStats, BufferConfig, MlcBuffer};
 use mlcstt::coordinator::{LinearEngine, ServerConfig, StoreConfig, WeightStore};
 use mlcstt::encoding::{Encoded, Policy, WeightCodec};
 use mlcstt::fp;
@@ -314,6 +315,52 @@ fn main() {
         });
         println!("registry route (2 models) : {}", harness::rate(m as u64, t.median));
         report.record("registry_route", m as u64, &t);
+    }
+
+    // Shared multi-tenant pool (ISSUE 7): the wear-leveled alloc/free
+    // churn path, and the evict -> rebuild ping-pong a two-tenant
+    // registry absorbs when the pool fits only one model.
+    {
+        let enc = WeightCodec::hybrid(4).encode(&ws);
+        let extent = 1024usize; // a multiple of the 16 banks
+        let need = n.div_ceil(extent);
+        let mut spool = SharedMlcBuffer::new(need * extent * 2, 16, extent, 1);
+        let model = ErrorModel::at_rate(0.015);
+        let mut rng = Xoshiro256::seeded(9);
+        let mut stats = AccessStats::default();
+        let (_, t) = harness::time_stats(3, || {
+            let r = spool.alloc_store(&enc, &model, &mut rng, 1, &mut stats).unwrap();
+            spool.free(&r);
+            r.n_extents
+        });
+        println!("wear-leveled pool store  : {}", harness::rate(n as u64, t.median));
+        report.record("wear_level_store", n as u64, &t);
+
+        let wf = WeightFile {
+            params: vec![ParamSpec {
+                name: "bench.w".into(),
+                shape: vec![n],
+                data: ws.clone(),
+            }],
+        };
+        let pcfg = |seed| StoreConfig {
+            error_model: ErrorModel::at_rate(0.015),
+            seed,
+            ..StoreConfig::default()
+        };
+        // Exactly one model fits, so every ensure_resident below evicts
+        // the sibling and replays a full store + materialize.
+        let pool = BufferPool::new(need * extent * 2, 16, extent, EvictPolicy::Lru);
+        pool.admit("a", &pcfg(1), &wf).unwrap();
+        pool.admit("b", &pcfg(2), &wf).unwrap();
+        let mut flip = 0usize;
+        let (_, t) = harness::time_stats(3, || {
+            flip += 1;
+            let name = if flip % 2 == 0 { "b" } else { "a" };
+            assert!(pool.ensure_resident(name).unwrap(), "must actually rebuild");
+        });
+        println!("pool evict+rebuild       : {}", harness::rate(n as u64, t.median));
+        report.record("shared_pool_evict_rebuild", n as u64, &t);
     }
 
     // End-to-end weight path for a real model (encode -> store -> load ->

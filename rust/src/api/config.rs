@@ -19,6 +19,7 @@
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+use crate::buffer::shared::EvictPolicy;
 use crate::coordinator::{ServerConfig, StoreConfig, DEFAULT_QUEUE_DEPTH};
 use crate::fp::{self, F16Mode};
 use crate::util::threads;
@@ -40,6 +41,10 @@ pub struct Config {
     max_wait: Duration,
     queue_depth: Option<usize>,
     queue_budget: Option<usize>,
+    pool_kb: Option<usize>,
+    pool_banks: Option<usize>,
+    pool_extent: Option<usize>,
+    evict: Option<EvictPolicy>,
 }
 
 impl Config {
@@ -113,6 +118,32 @@ impl Config {
         self.queue_budget
     }
 
+    /// Shared-pool capacity in KB (builder, else `MLCSTT_POOL_KB`);
+    /// `None` means no pool was configured — entry points keep private
+    /// per-deployment buffers or their own demo geometry.
+    pub fn pool_kb(&self) -> Option<usize> {
+        self.pool_kb
+    }
+
+    /// Shared-pool bank count (builder, else `MLCSTT_POOL_BANKS`), or the
+    /// caller's `default`.
+    pub fn pool_banks_or(&self, default: usize) -> usize {
+        self.pool_banks.unwrap_or(default).max(1)
+    }
+
+    /// Shared-pool extent size in words (builder, else
+    /// `MLCSTT_POOL_EXTENT`), or the caller's `default`. The pool itself
+    /// rounds this up to a multiple of the bank count.
+    pub fn pool_extent_or(&self, default: usize) -> usize {
+        self.pool_extent.unwrap_or(default).max(1)
+    }
+
+    /// Capacity-pressure policy for the shared pool (builder, else
+    /// `MLCSTT_EVICT`, else [`EvictPolicy::Lru`]).
+    pub fn evict_policy(&self) -> EvictPolicy {
+        self.evict.unwrap_or(EvictPolicy::Lru)
+    }
+
     /// The serving view: a [`ServerConfig`] carrying this config's
     /// coalesce deadline, worker ceiling, and admission depth.
     pub fn server(&self) -> ServerConfig {
@@ -150,6 +181,10 @@ pub struct ConfigBuilder {
     max_wait: Option<Duration>,
     queue_depth: Option<usize>,
     queue_budget: Option<usize>,
+    pool_kb: Option<usize>,
+    pool_banks: Option<usize>,
+    pool_extent: Option<usize>,
+    evict: Option<EvictPolicy>,
 }
 
 impl ConfigBuilder {
@@ -211,6 +246,31 @@ impl ConfigBuilder {
         self
     }
 
+    /// Override the shared-pool capacity in KB.
+    pub fn pool_kb(mut self, kb: usize) -> Self {
+        self.pool_kb = Some(kb);
+        self
+    }
+
+    /// Override the shared-pool bank count (clamped to >= 1, matching the
+    /// `MLCSTT_POOL_BANKS` clamp).
+    pub fn pool_banks(mut self, n: usize) -> Self {
+        self.pool_banks = Some(n.max(1));
+        self
+    }
+
+    /// Override the shared-pool extent size in words (clamped to >= 1).
+    pub fn pool_extent(mut self, words: usize) -> Self {
+        self.pool_extent = Some(words.max(1));
+        self
+    }
+
+    /// Override the shared-pool capacity-pressure policy.
+    pub fn evict(mut self, policy: EvictPolicy) -> Self {
+        self.evict = Some(policy);
+        self
+    }
+
     /// Resolve every layer — builder override, then `MLCSTT_*`
     /// environment, then default — in this one place.
     pub fn build(self) -> Config {
@@ -237,6 +297,10 @@ impl ConfigBuilder {
                 .unwrap_or(DEFAULT_MAX_WAIT),
             queue_depth: self.queue_depth.or_else(super::env::queue_depth),
             queue_budget: self.queue_budget.or_else(super::env::queue_budget),
+            pool_kb: self.pool_kb.or_else(super::env::pool_kb),
+            pool_banks: self.pool_banks.or_else(super::env::pool_banks),
+            pool_extent: self.pool_extent.or_else(super::env::pool_extent),
+            evict: self.evict.or_else(super::env::evict),
         }
     }
 }
@@ -273,6 +337,23 @@ mod tests {
         assert_eq!(cfg.server().queue_depth, 7);
         // queue_depth clamps like threads: 0 is meaningless.
         assert_eq!(Config::builder().queue_depth(0).build().queue_depth_or(9), 1);
+    }
+
+    #[test]
+    fn pool_knobs_layer_builder_over_default() {
+        let cfg = Config::builder()
+            .pool_kb(64)
+            .pool_banks(8)
+            .pool_extent(256)
+            .evict(EvictPolicy::Deny)
+            .build();
+        assert_eq!(cfg.pool_kb(), Some(64));
+        assert_eq!(cfg.pool_banks_or(16), 8);
+        assert_eq!(cfg.pool_extent_or(1024), 256);
+        assert_eq!(cfg.evict_policy(), EvictPolicy::Deny);
+        // Clamps mirror the env accessors. (The LRU default and env
+        // layering are pinned in env_plumbing.rs, away from ambient env.)
+        assert_eq!(Config::builder().pool_banks(0).build().pool_banks_or(16), 1);
     }
 
     #[test]

@@ -77,6 +77,13 @@ impl Deployment {
         &self.report
     }
 
+    /// Endurance wear absorbed storing this deployment's weights
+    /// (delegates to [`WeightStore::wear`]): the stress mix of the
+    /// store's write traffic, for lifetime projections.
+    pub fn wear(&self) -> &crate::stt::WearTracker {
+        self.store.wear()
+    }
+
     /// The protection policy the weights are stored under.
     pub fn policy(&self) -> Policy {
         self.store.policy()

@@ -10,7 +10,11 @@
 //! * [`Deployment`] — a builder owning the encode → MLC store → fault →
 //!   materialize → engine lifecycle every entry point used to hand-roll;
 //! * [`ModelRegistry`] — N named deployments served from N thread-pinned
-//!   workers with per-model request routing and report sections.
+//!   workers with per-model request routing and report sections;
+//! * [`BufferPool`] — one shared multi-tenant MLC buffer (extent
+//!   allocator, LRU eviction, wear-leveled placement) behind leases whose
+//!   [`PooledEngine`]s rebuild evicted models bit-identically on demand
+//!   (DESIGN.md §12).
 //!
 //! Every rebuilt path is pinned bit-identical to its pre-facade
 //! hand-rolled equivalent (flip sets, energy reports, accuracies) by
@@ -20,8 +24,12 @@ pub use crate::util::env;
 
 mod config;
 mod deployment;
+mod pool;
 mod registry;
 
 pub use config::{Config, ConfigBuilder};
 pub use deployment::{Deployment, DeploymentBuilder};
+pub use pool::{
+    BufferPool, EvictPolicy, ModelLease, PooledEngine, DEFAULT_POOL_BANKS, DEFAULT_POOL_EXTENT,
+};
 pub use registry::{ModelRegistry, RegistryReport};

@@ -1,0 +1,615 @@
+//! Shared multi-tenant buffer pool: N models' weights in one banked MLC
+//! buffer, with LRU eviction and on-demand, bit-identical rebuilds.
+//!
+//! [`BufferPool`] owns a [`SharedMlcBuffer`] (bank-aligned extent
+//! allocator + wear ledger, DESIGN.md §12) and a tenant table. A tenant is
+//! admitted once ([`BufferPool::admit`]) with its [`StoreConfig`] and
+//! weights; the pool encodes the clean tensors **once** and keeps them,
+//! because every (re)build replays the same deterministic recipe:
+//!
+//! 1. reset the tenant's [`AccessStats`] and reseed a frest fault RNG from
+//!    the tenant's seed;
+//! 2. store each tensor in file order through
+//!    [`SharedMlcBuffer::alloc_store`] (per-shard fault seeds drawn from
+//!    the tenant stream in shard order — exactly the draw order of a
+//!    private [`WeightStore::load`]);
+//! 3. materialize each tensor in order through the fused load→decode.
+//!
+//! Region-relative bank slots make read bills placement-independent and
+//! write energy is content-only, so the decoded tensors *and* the energy
+//! bills of every rebuild are bit-identical to a fresh private store with
+//! the same `(policy, granularity, error model, seed, threads)` and the
+//! pool's bank count — the eviction contract pinned by
+//! `rust/tests/shared_buffer.rs`.
+//!
+//! Under capacity pressure the pool evicts the least-recently-*served*
+//! resident tenant ([`EvictPolicy::Lru`]) and the victim rebuilds on its
+//! next request, transparently, inside [`PooledEngine::classify_batch`] —
+//! the stall is counted in [`crate::coordinator::ServerReport::rebuilds`].
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::buffer::shared::{BankWear, PoolRegion, SharedMlcBuffer};
+use crate::buffer::{AccessStats, BufferError, LOAD_SHARD_WORDS, STORE_SHARD_WORDS};
+use crate::coordinator::store::workers_for;
+use crate::coordinator::{BatchClassifier, StoreConfig, StoreReport};
+use crate::encoding::codec::MIN_WEIGHTS_PER_WORKER;
+use crate::encoding::{Encoded, WeightCodec};
+use crate::runtime::artifacts::{ParamSpec, WeightFile};
+use crate::stt::ErrorModel;
+use crate::util::rng::Xoshiro256;
+
+pub use crate::buffer::shared::EvictPolicy;
+
+/// Default pool bank count ([`crate::coordinator::StoreConfig`]'s default
+/// geometry).
+pub const DEFAULT_POOL_BANKS: usize = 16;
+
+/// Default extent size in words (16 KB extents at 2 bytes/word).
+pub const DEFAULT_POOL_EXTENT: usize = 8192;
+
+/// One admitted model: its build recipe (clean encodings + store config)
+/// and, while resident, its regions and decoded tensors.
+struct Tenant {
+    name: String,
+    /// Clean encoded tensors, in weight-file order — encoded once at
+    /// admit; every rebuild re-stores these exact images.
+    clean: Vec<Encoded>,
+    /// `(name, shape)` per tensor, for re-materialized [`ParamSpec`]s.
+    specs: Vec<(String, Vec<usize>)>,
+    model: ErrorModel,
+    seed: u64,
+    threads: usize,
+    /// Admit-time constants of the tenant's [`StoreReport`].
+    weights: usize,
+    metadata_overhead: f64,
+    soft_cells: u64,
+    /// Extent runs backing the tenant, `Some` iff resident.
+    resident: Option<Vec<PoolRegion>>,
+    /// Decoded tensors of the latest build (cleared on eviction).
+    tensors: Vec<ParamSpec>,
+    /// Per-tenant accounting, reset at each (re)build start so it always
+    /// equals what a fresh private store+materialize would have billed.
+    stats: AccessStats,
+    /// LRU clock stamp of the last serve/touch.
+    last_served: u64,
+    /// Builds performed (1 after admit, +1 per post-eviction rebuild).
+    builds: u64,
+}
+
+struct PoolInner {
+    shared: SharedMlcBuffer,
+    tenants: Vec<Tenant>,
+    index: HashMap<String, usize>,
+    evict: EvictPolicy,
+    /// Monotone LRU clock.
+    clock: u64,
+    /// On-demand rebuilds after an eviction (admit-time builds excluded).
+    rebuilds: u64,
+    /// Regions evicted under capacity pressure.
+    evictions: u64,
+}
+
+/// A cloneable handle to one shared buffer pool. All methods lock the
+/// pool; tenant builds hold the lock for their duration, which is what
+/// serializes an eviction against the victim's next request.
+#[derive(Clone)]
+pub struct BufferPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl BufferPool {
+    /// A pool of `capacity_bytes` across `banks`, with `extent_words`
+    /// allocation granularity (rounded up to a multiple of `banks` for
+    /// bank-slot alignment) and the given capacity-pressure policy.
+    pub fn new(
+        capacity_bytes: usize,
+        banks: usize,
+        extent_words: usize,
+        evict: EvictPolicy,
+    ) -> Self {
+        let banks = banks.max(1);
+        let extent = extent_words.max(1).div_ceil(banks) * banks;
+        BufferPool {
+            inner: Arc::new(Mutex::new(PoolInner {
+                shared: SharedMlcBuffer::new(capacity_bytes, banks, extent, 0),
+                tenants: Vec::new(),
+                index: HashMap::new(),
+                evict,
+                clock: 0,
+                rebuilds: 0,
+                evictions: 0,
+            })),
+        }
+    }
+
+    /// Build a pool from the facade [`super::Config`]'s `MLCSTT_POOL_*` /
+    /// `MLCSTT_EVICT` knobs; `None` when no `pool_kb` was configured.
+    pub fn from_config(config: &super::Config) -> Option<Self> {
+        config.pool_kb().map(|kb| {
+            BufferPool::new(
+                kb * 1024,
+                config.pool_banks_or(DEFAULT_POOL_BANKS),
+                config.pool_extent_or(DEFAULT_POOL_EXTENT),
+                config.evict_policy(),
+            )
+        })
+    }
+
+    /// Admit a model: encode its tensors once under `cfg`'s codec
+    /// settings, then build it into the pool (evicting under pressure per
+    /// the pool policy). `cfg.banks` and `cfg.capacity_bytes` are ignored
+    /// — the pool's geometry wins; everything else (policy, granularity,
+    /// error model, seed, threads) is the tenant's build recipe. Returns
+    /// the initial build's report, which every later rebuild reproduces
+    /// bit-identically.
+    pub fn admit(&self, name: &str, cfg: &StoreConfig, weights: &WeightFile) -> Result<StoreReport> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.index.contains_key(name) {
+            bail!("model {name:?} is already admitted to the pool");
+        }
+        let total = weights.total_elems();
+        anyhow::ensure!(total > 0, "empty weight file");
+
+        let codec = WeightCodec::new(cfg.policy, cfg.granularity);
+        let mut clean = Vec::with_capacity(weights.params.len());
+        let mut specs = Vec::with_capacity(weights.params.len());
+        let mut overhead_num = 0.0;
+        let mut soft = 0u64;
+        for p in &weights.params {
+            let w = workers_for(cfg.threads, p.data.len(), MIN_WEIGHTS_PER_WORKER);
+            let mut enc = Encoded::with_context(cfg.policy, cfg.granularity);
+            codec.encode_into_threaded(&p.data, &mut enc, w);
+            soft += enc.soft_cells();
+            overhead_num += enc.metadata_overhead() * enc.len() as f64;
+            specs.push((p.name.clone(), p.shape.clone()));
+            clean.push(enc);
+        }
+
+        let idx = inner.tenants.len();
+        inner.tenants.push(Tenant {
+            name: name.to_string(),
+            clean,
+            specs,
+            model: cfg.error_model.clone(),
+            seed: cfg.seed,
+            threads: cfg.threads,
+            weights: total,
+            metadata_overhead: overhead_num / total as f64,
+            soft_cells: soft,
+            resident: None,
+            tensors: Vec::new(),
+            stats: AccessStats::default(),
+            last_served: 0,
+            builds: 0,
+        });
+        if let Err(e) = inner.build_tenant(idx) {
+            inner.tenants.pop();
+            return Err(e).with_context(|| format!("admitting model {name:?}"));
+        }
+        inner.index.insert(name.to_string(), idx);
+        inner.touch(idx);
+        Ok(inner.report_of(idx))
+    }
+
+    /// The tenant's accounting as a [`StoreReport`] — after any build
+    /// (initial or post-eviction), bit-identical to a fresh private
+    /// [`crate::coordinator::WeightStore::load`] + `materialize` under
+    /// the same recipe and the pool's bank count.
+    pub fn report(&self, name: &str) -> Result<StoreReport> {
+        let inner = self.inner.lock().unwrap();
+        let idx = inner.idx(name)?;
+        Ok(inner.report_of(idx))
+    }
+
+    /// Whether the model's regions are currently in the buffer.
+    pub fn resident(&self, name: &str) -> Result<bool> {
+        let inner = self.inner.lock().unwrap();
+        let idx = inner.idx(name)?;
+        Ok(inner.tenants[idx].resident.is_some())
+    }
+
+    /// Rebuild the model now if it was evicted; returns `true` iff a
+    /// rebuild ran. (Serving uses [`ModelLease::rebuild_with`], which
+    /// does this and engine reconstruction under one lock.)
+    pub fn ensure_resident(&self, name: &str) -> Result<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        let idx = inner.idx(name)?;
+        inner.make_resident(idx)
+    }
+
+    /// The model's decoded tensors (rebuilding first if evicted).
+    pub fn tensors(&self, name: &str) -> Result<Vec<ParamSpec>> {
+        let mut inner = self.inner.lock().unwrap();
+        let idx = inner.idx(name)?;
+        inner.make_resident(idx)?;
+        Ok(inner.tenants[idx].tensors.clone())
+    }
+
+    /// A serving lease on one admitted model (errors on unknown names).
+    pub fn lease(&self, name: &str) -> Result<ModelLease> {
+        let inner = self.inner.lock().unwrap();
+        inner.idx(name)?;
+        Ok(ModelLease {
+            pool: self.clone(),
+            name: name.to_string(),
+        })
+    }
+
+    /// On-demand rebuilds absorbed after evictions (admits excluded).
+    pub fn rebuilds(&self) -> u64 {
+        self.inner.lock().unwrap().rebuilds
+    }
+
+    /// Regions evicted under capacity pressure.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    /// The pool's "buffer lifetime under traffic" report
+    /// ([`SharedMlcBuffer::bank_wear`]).
+    pub fn bank_wear(&self) -> Vec<BankWear> {
+        self.inner.lock().unwrap().shared.bank_wear()
+    }
+
+    /// Leveling quality across banks ([`SharedMlcBuffer::wear_spread`]).
+    pub fn wear_spread(&self) -> f64 {
+        self.inner.lock().unwrap().shared.wear_spread()
+    }
+
+    /// Free extents right now (diagnostic).
+    pub fn free_extents(&self) -> usize {
+        self.inner.lock().unwrap().shared.free_extents()
+    }
+
+    /// Allocation granularity in words (after bank-alignment rounding).
+    pub fn extent_words(&self) -> usize {
+        self.inner.lock().unwrap().shared.extent_words()
+    }
+}
+
+impl PoolInner {
+    fn idx(&self, name: &str) -> Result<usize> {
+        self.index
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("unknown pool model {name:?} ({} admitted)", self.tenants.len()))
+    }
+
+    fn touch(&mut self, idx: usize) {
+        self.clock += 1;
+        self.tenants[idx].last_served = self.clock;
+    }
+
+    /// Rebuild `idx` if evicted; returns whether a rebuild ran.
+    fn make_resident(&mut self, idx: usize) -> Result<bool> {
+        if self.tenants[idx].resident.is_some() {
+            return Ok(false);
+        }
+        self.build_tenant(idx)
+            .with_context(|| format!("rebuilding model {:?}", self.tenants[idx].name))?;
+        self.rebuilds += 1;
+        Ok(true)
+    }
+
+    /// (Re)build tenant `idx` from its clean encodings: reset its stats,
+    /// replay its seed stream, store every tensor (evicting under
+    /// pressure), then materialize every tensor — the deterministic
+    /// recipe that makes rebuilds bit-identical to a fresh store.
+    fn build_tenant(&mut self, idx: usize) -> Result<()> {
+        debug_assert!(self.tenants[idx].resident.is_none());
+        self.tenants[idx].stats = AccessStats::default();
+        let mut rng = Xoshiro256::seeded(self.tenants[idx].seed);
+        let mut regions: Vec<PoolRegion> = Vec::with_capacity(self.tenants[idx].clean.len());
+
+        for t in 0..self.tenants[idx].clean.len() {
+            loop {
+                // Split-borrow dance: the tenant and the shared buffer are
+                // both fields of self, so take the tenant entry apart.
+                let (tenant, shared) = {
+                    let PoolInner { tenants, shared, .. } = self;
+                    (&mut tenants[idx], shared)
+                };
+                let workers = workers_for(tenant.threads, tenant.clean[t].len(), STORE_SHARD_WORDS);
+                match shared.alloc_store(
+                    &tenant.clean[t],
+                    &tenant.model,
+                    &mut rng,
+                    workers,
+                    &mut tenant.stats,
+                ) {
+                    Ok(r) => {
+                        regions.push(r);
+                        break;
+                    }
+                    Err(BufferError::CapacityExceeded { requested, free }) => {
+                        if self.evict == EvictPolicy::Deny || !self.evict_someone(idx) {
+                            for r in &regions {
+                                self.shared.free(r);
+                            }
+                            self.tenants[idx].stats = AccessStats::default();
+                            bail!(
+                                "pool capacity exceeded ({requested} words requested, {free} \
+                                 free, evict={:?}) storing tensor {}",
+                                self.evict,
+                                self.tenants[idx].specs[t].0
+                            );
+                        }
+                        // Retry the same tensor: the failed attempt drew
+                        // no RNG state and billed nothing.
+                    }
+                    Err(e) => {
+                        for r in &regions {
+                            self.shared.free(r);
+                        }
+                        self.tenants[idx].stats = AccessStats::default();
+                        return Err(e.into());
+                    }
+                }
+            }
+        }
+
+        // Materialize in store order (the read half of a fresh build).
+        let mut tensors = Vec::with_capacity(regions.len());
+        for (t, r) in regions.iter().enumerate() {
+            let (tenant, shared) = {
+                let PoolInner { tenants, shared, .. } = self;
+                (&mut tenants[idx], shared)
+            };
+            let workers = workers_for(tenant.threads, r.region.len, LOAD_SHARD_WORDS);
+            let mut data = Vec::new();
+            shared
+                .load_decoded(r, &mut data, workers, &mut tenant.stats)
+                .map_err(anyhow::Error::from)
+                .with_context(|| format!("materializing tensor {}", tenant.specs[t].0))?;
+            let (name, shape) = tenant.specs[t].clone();
+            tensors.push(ParamSpec { name, shape, data });
+        }
+
+        let tenant = &mut self.tenants[idx];
+        tenant.resident = Some(regions);
+        tenant.tensors = tensors;
+        tenant.builds += 1;
+        Ok(())
+    }
+
+    /// Evict the least-recently-served resident tenant other than
+    /// `requester`; false when no one is evictable.
+    fn evict_someone(&mut self, requester: usize) -> bool {
+        let victim = self
+            .tenants
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| *i != requester && t.resident.is_some())
+            .min_by_key(|(_, t)| t.last_served)
+            .map(|(i, _)| i);
+        match victim {
+            Some(v) => {
+                if let Some(regions) = self.tenants[v].resident.take() {
+                    for r in &regions {
+                        self.shared.free(r);
+                    }
+                }
+                // The decoded copies leave with the regions: the victim
+                // rebuilds from its clean encodings on its next request.
+                self.tenants[v].tensors = Vec::new();
+                self.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn report_of(&self, idx: usize) -> StoreReport {
+        let t = &self.tenants[idx];
+        StoreReport {
+            tensors: t.clean.len(),
+            weights: t.weights,
+            write_energy: t.stats.write_energy,
+            read_energy: t.stats.read_energy,
+            injected_faults: t.stats.injected_faults,
+            metadata_overhead: t.metadata_overhead,
+            soft_cells_stored: t.soft_cells,
+        }
+    }
+}
+
+/// One model's serving handle on a [`BufferPool`]: everything an engine
+/// needs to survive eviction — residency checks, LRU touches, and
+/// atomic rebuild-plus-reconstruct.
+#[derive(Clone)]
+pub struct ModelLease {
+    pool: BufferPool,
+    name: String,
+}
+
+impl ModelLease {
+    /// The leased model's name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Atomically (under one pool lock): rebuild the model if it was
+    /// evicted, stamp the LRU clock, and — only when a rebuild ran —
+    /// reconstruct the engine from the fresh tensors. `None` means the
+    /// model was still resident and the caller's engine is still good
+    /// (rebuilt tensors are bit-identical, so "still good" is exact, not
+    /// approximate).
+    pub fn rebuild_with<C, B>(&self, build: &mut B) -> Result<Option<C>>
+    where
+        B: FnMut(&[ParamSpec]) -> Result<C>,
+    {
+        let mut inner = self.pool.inner.lock().unwrap();
+        let idx = inner.idx(&self.name)?;
+        let rebuilt = inner.make_resident(idx)?;
+        inner.touch(idx);
+        if rebuilt {
+            Ok(Some(build(&inner.tenants[idx].tensors)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Build an engine from the model's current tensors (rebuilding
+    /// first if evicted), under one pool lock.
+    pub fn build_engine<C, B>(&self, build: &mut B) -> Result<C>
+    where
+        B: FnMut(&[ParamSpec]) -> Result<C>,
+    {
+        let mut inner = self.pool.inner.lock().unwrap();
+        let idx = inner.idx(&self.name)?;
+        inner.make_resident(idx)?;
+        inner.touch(idx);
+        build(&inner.tenants[idx].tensors)
+    }
+
+    /// This model's current [`StoreReport`].
+    pub fn report(&self) -> Result<StoreReport> {
+        self.pool.report(&self.name)
+    }
+}
+
+/// A [`BatchClassifier`] whose weights live in a shared [`BufferPool`]:
+/// if the model was evicted since the last batch, `classify_batch`
+/// transparently rebuilds the region (bit-identical weights + bills) and
+/// reconstructs the inner engine before classifying — the
+/// evict→rematerialize stall the serving report counts as
+/// [`crate::coordinator::ServerReport::rebuilds`].
+///
+/// Interior mutability (`RefCell`/`Cell`) because [`BatchClassifier`]
+/// classifies through `&self` and the engine lives pinned inside one
+/// worker thread (the factory pattern of [`crate::coordinator::Server`]).
+pub struct PooledEngine<C, B>
+where
+    C: BatchClassifier,
+    B: FnMut(&[ParamSpec]) -> Result<C>,
+{
+    lease: ModelLease,
+    build: std::cell::RefCell<B>,
+    engine: std::cell::RefCell<C>,
+    rebuilds: std::cell::Cell<u64>,
+}
+
+impl<C, B> PooledEngine<C, B>
+where
+    C: BatchClassifier,
+    B: FnMut(&[ParamSpec]) -> Result<C>,
+{
+    /// Construct the engine from the leased model's tensors (rebuilding
+    /// them first if the model was evicted between admit and serve).
+    pub fn new(lease: ModelLease, mut build: B) -> Result<Self> {
+        let engine = lease.build_engine(&mut build)?;
+        Ok(PooledEngine {
+            lease,
+            build: std::cell::RefCell::new(build),
+            engine: std::cell::RefCell::new(engine),
+            rebuilds: std::cell::Cell::new(0),
+        })
+    }
+}
+
+impl<C, B> BatchClassifier for PooledEngine<C, B>
+where
+    C: BatchClassifier,
+    B: FnMut(&[ParamSpec]) -> Result<C>,
+{
+    fn batch_size(&self) -> usize {
+        self.engine.borrow().batch_size()
+    }
+
+    fn image_elems(&self) -> usize {
+        self.engine.borrow().image_elems()
+    }
+
+    fn classify_batch(&self, images: &[f32]) -> Result<Vec<usize>> {
+        if let Some(fresh) = self.lease.rebuild_with(&mut *self.build.borrow_mut())? {
+            *self.engine.borrow_mut() = fresh;
+            self.rebuilds.set(self.rebuilds.get() + 1);
+        }
+        self.engine.borrow().classify_batch(images)
+    }
+
+    fn rebuilds(&self) -> u64 {
+        self.rebuilds.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp;
+
+    fn weight_file(n: usize, scale: f32) -> WeightFile {
+        let data: Vec<f32> = (0..n)
+            .map(|i| fp::quantize_f16(((i as f32 / n as f32) * 1.6 - 0.8) * scale))
+            .collect();
+        WeightFile {
+            params: vec![ParamSpec {
+                name: "w".into(),
+                shape: vec![n],
+                data,
+            }],
+        }
+    }
+
+    fn cfg(seed: u64) -> StoreConfig {
+        StoreConfig {
+            error_model: ErrorModel::at_rate(0.0),
+            seed,
+            ..StoreConfig::default()
+        }
+    }
+
+    #[test]
+    fn admit_then_report_matches_private_store() {
+        // One tenant, no pressure: the pool report must equal a private
+        // WeightStore at the same recipe + the pool's bank count.
+        let wf = weight_file(4096, 1.0);
+        let pool = BufferPool::new(8192 * 2, 16, 256, EvictPolicy::Lru);
+        let rep = pool.admit("m", &cfg(3), &wf).unwrap();
+
+        let mut fresh = crate::coordinator::WeightStore::load(&cfg(3), &wf).unwrap();
+        let want_tensors = fresh.materialize().unwrap();
+        let want = fresh.report();
+        assert_eq!(rep.write_energy, want.write_energy);
+        assert_eq!(rep.read_energy, want.read_energy);
+        assert_eq!(rep.injected_faults, want.injected_faults);
+        assert_eq!(rep.weights, want.weights);
+        assert_eq!(pool.tensors("m").unwrap()[0].data, want_tensors[0].data);
+    }
+
+    #[test]
+    fn deny_policy_refuses_instead_of_evicting() {
+        let wf = weight_file(4096, 1.0);
+        let pool = BufferPool::new(4096 * 2, 16, 256, EvictPolicy::Deny);
+        pool.admit("a", &cfg(1), &wf).unwrap();
+        let err = pool.admit("b", &cfg(2), &wf).unwrap_err();
+        assert!(format!("{err:#}").contains("evict=Deny"), "{err:#}");
+        // The failed admit left no tenant behind.
+        assert!(pool.report("b").is_err());
+        assert!(pool.resident("a").unwrap());
+    }
+
+    #[test]
+    fn lru_eviction_prefers_least_recently_served() {
+        // Pool fits exactly one model; admitting b evicts a; serving a
+        // rebuilds it (and evicts b).
+        let wf = weight_file(4096, 1.0);
+        let pool = BufferPool::new(4096 * 2, 16, 256, EvictPolicy::Lru);
+        pool.admit("a", &cfg(1), &wf).unwrap();
+        pool.admit("b", &cfg(2), &wf).unwrap();
+        assert!(!pool.resident("a").unwrap());
+        assert!(pool.resident("b").unwrap());
+        assert_eq!(pool.evictions(), 1);
+        assert_eq!(pool.rebuilds(), 0, "admits are not rebuilds");
+
+        assert!(pool.ensure_resident("a").unwrap());
+        assert!(pool.resident("a").unwrap());
+        assert!(!pool.resident("b").unwrap());
+        assert_eq!(pool.rebuilds(), 1);
+        assert_eq!(pool.evictions(), 2);
+    }
+}

@@ -29,10 +29,13 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use crate::buffer::shared::BankWear;
 use crate::coordinator::{
     Admission, BatchClassifier, FairGate, Server, ServerConfig, ServerReport,
 };
+use crate::runtime::artifacts::ParamSpec;
 
+use super::pool::{BufferPool, PooledEngine};
 use super::Deployment;
 
 /// A set of named, independently thread-pinned model servers with
@@ -44,6 +47,9 @@ pub struct ModelRegistry {
     index: HashMap<String, usize>,
     /// Cross-model admission gate, when a budget is configured.
     gate: Option<FairGate>,
+    /// Shared multi-tenant weight pool, when one is attached
+    /// ([`ModelRegistry::with_pool`]).
+    pool: Option<BufferPool>,
 }
 
 /// Final per-model serving metrics, in registration order — the
@@ -52,6 +58,12 @@ pub struct ModelRegistry {
 pub struct RegistryReport {
     /// `(model name, that model's serving report)` per registered model.
     pub sections: Vec<(String, ServerReport)>,
+    /// Per-bank wear of the attached [`BufferPool`] at shutdown — the
+    /// "buffer lifetime under traffic" report. Empty without a pool.
+    pub wear: Vec<BankWear>,
+    /// Regions evicted from the pool under capacity pressure (0 without
+    /// a pool).
+    pub pool_evictions: u64,
 }
 
 impl RegistryReport {
@@ -68,6 +80,11 @@ impl RegistryReport {
     /// Requests resolved as engine errors across all models.
     pub fn total_errors(&self) -> usize {
         self.sections.iter().map(|(_, r)| r.errors).sum()
+    }
+
+    /// Evict→rematerialize stalls absorbed across all models' workers.
+    pub fn total_rebuilds(&self) -> u64 {
+        self.sections.iter().map(|(_, r)| r.rebuilds).sum()
     }
 }
 
@@ -121,6 +138,37 @@ impl ModelRegistry {
         self.register(&name, dep.engine_factory()?, cfg)
     }
 
+    /// Attach a shared multi-tenant weight pool; models registered with
+    /// [`ModelRegistry::register_pooled`] serve from it and survive
+    /// eviction transparently. The pool handle is cloneable, so the
+    /// caller can keep one for admits and wear sampling.
+    pub fn with_pool(mut self, pool: BufferPool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// The attached pool, if any.
+    pub fn pool(&self) -> Option<&BufferPool> {
+        self.pool.as_ref()
+    }
+
+    /// Register `name` — already admitted to the attached pool — behind a
+    /// [`PooledEngine`]: `build` turns the model's pooled tensors into a
+    /// concrete engine, and runs again (inside the worker thread) after
+    /// every eviction, on the bit-identical rebuilt tensors. The stalls
+    /// are surfaced as [`ServerReport::rebuilds`].
+    pub fn register_pooled<C, B>(&mut self, name: &str, build: B, cfg: ServerConfig) -> Result<()>
+    where
+        C: BatchClassifier,
+        B: FnMut(&[ParamSpec]) -> Result<C> + Send + 'static,
+    {
+        let Some(pool) = &self.pool else {
+            bail!("registry has no buffer pool (attach one with with_pool) for {name:?}");
+        };
+        let lease = pool.lease(name)?;
+        self.register(name, move || PooledEngine::new(lease, build), cfg)
+    }
+
     /// Registered model names, in registration order.
     pub fn models(&self) -> Vec<&str> {
         self.entries.iter().map(|(n, _)| n.as_str()).collect()
@@ -167,15 +215,19 @@ impl ModelRegistry {
     }
 
     /// Stop every model's worker and collect the per-model report
-    /// sections, in registration order.
+    /// sections, in registration order, plus the pool's wear ledger when
+    /// one is attached.
     pub fn shutdown(self) -> RegistryReport {
-        RegistryReport {
-            sections: self
-                .entries
-                .into_iter()
-                .map(|(name, server)| (name, server.shutdown()))
-                .collect(),
-        }
+        let sections: Vec<(String, ServerReport)> = self
+            .entries
+            .into_iter()
+            .map(|(name, server)| (name, server.shutdown()))
+            .collect();
+        // Sample wear only after the workers stopped, so late rebuilds
+        // are in the ledger.
+        let wear = self.pool.as_ref().map(BufferPool::bank_wear).unwrap_or_default();
+        let pool_evictions = self.pool.as_ref().map(BufferPool::evictions).unwrap_or(0);
+        RegistryReport { sections, wear, pool_evictions }
     }
 }
 
@@ -185,11 +237,18 @@ impl std::fmt::Display for RegistryReport {
         write!(f, "{table}")?;
         writeln!(
             f,
-            "totals: {} served / {} shed / {} errors",
+            "totals: {} served / {} shed / {} errors / {} rebuilds",
             self.total_served(),
             self.total_shed(),
-            self.total_errors()
-        )
+            self.total_errors(),
+            self.total_rebuilds()
+        )?;
+        if !self.wear.is_empty() {
+            let wear = crate::metrics::wear_table("buffer lifetime under traffic", &self.wear);
+            write!(f, "{wear}")?;
+            writeln!(f, "pool evictions: {}", self.pool_evictions)?;
+        }
+        Ok(())
     }
 }
 
@@ -240,6 +299,15 @@ mod tests {
         assert_eq!(report.total_served(), 2);
         assert_eq!(report.total_shed(), 0);
         assert_eq!(report.total_errors(), 0);
+    }
+
+    #[test]
+    fn register_pooled_requires_a_pool() {
+        let mut reg = ModelRegistry::new();
+        let err = reg
+            .register_pooled("m", |_t: &[ParamSpec]| engine_a(), cfg())
+            .unwrap_err();
+        assert!(format!("{err}").contains("no buffer pool"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,8 @@ use crate::stt::{AccessKind, CostModel, Energy, ErrorModel};
 use crate::util::rng::Xoshiro256;
 use crate::util::threads;
 
+pub mod shared;
+
 /// Fixed store-shard size in words. Shard boundaries — and therefore the
 /// per-shard RNG seed assignment — depend only on the stream length, never
 /// on the worker count, so the injected fault set is bit-identical whether
@@ -563,6 +565,113 @@ impl MlcBuffer {
         }
         Ok(())
     }
+
+    /// A buffer in **pool mode**: the whole payload and metadata plane are
+    /// marked allocated up front, so region checks validate against the
+    /// full geometry and placement is owned entirely by the caller (the
+    /// extent allocator in [`shared::SharedMlcBuffer`]) through
+    /// [`Self::store_at`]. The bump-pointer [`Self::store`] sees zero free
+    /// words and always fails — pool mode and append mode don't mix.
+    pub fn pooled(config: BufferConfig, seed: u64) -> Self {
+        let cap = config.capacity_words();
+        MlcBuffer {
+            config,
+            words: vec![0; cap],
+            meta: vec![0; cap],
+            used_words: cap,
+            used_meta: cap,
+            stats: AccessStats::default(),
+            rng: Xoshiro256::seeded(seed),
+        }
+    }
+
+    /// Store an encoded stream at an explicit word `offset` (pool mode).
+    ///
+    /// Identical physics and accounting to [`Self::store_with_threads`] —
+    /// same fixed-size shards, same content-dependent write energy summed
+    /// in shard order, same write-path fault injection — except that
+    /// placement and the fault RNG stream belong to the caller: per-shard
+    /// seeds are drawn from `rng` in shard order before any worker runs,
+    /// so a tenant that replays its own seed stream reproduces its flip
+    /// sets bit-for-bit at *any* offset. Metadata symbols land at the same
+    /// index as the payload (one group is never longer than one word, so
+    /// disjoint word ranges imply disjoint metadata ranges).
+    ///
+    /// Returns the region plus a [`StoreBill`] shaped so the caller can
+    /// replay the exact `Energy::add` sequence into a second accumulator
+    /// (per-tenant stats that stay bit-identical to a private store).
+    pub fn store_at(
+        &mut self,
+        enc: &Encoded,
+        offset: usize,
+        model: &ErrorModel,
+        rng: &mut Xoshiro256,
+        workers: usize,
+    ) -> Result<(Region, StoreBill), BufferError> {
+        if offset + enc.len() > self.words.len() || offset + enc.schemes.len() > self.meta.len() {
+            return Err(BufferError::CapacityExceeded {
+                requested: enc.len(),
+                free: self.words.len().saturating_sub(offset),
+            });
+        }
+        let n_shards = enc.len().div_ceil(STORE_SHARD_WORDS);
+        let seeds: Vec<u64> = (0..n_shards).map(|_| rng.next_u64()).collect();
+        let cost = &self.config.cost;
+        let dst_all = &mut self.words[offset..offset + enc.len()];
+
+        let jobs: Vec<(usize, &[u16], &mut [u16])> = enc
+            .words
+            .chunks(STORE_SHARD_WORDS)
+            .zip(dst_all.chunks_mut(STORE_SHARD_WORDS))
+            .enumerate()
+            .map(|(k, (src, dst))| (k, src, dst))
+            .collect();
+        let shards = threads::run_sharded(jobs, workers, |(k, src, dst)| {
+            store_shard(cost, model, src, dst, seeds[k])
+        });
+
+        for (energy, faults) in &shards {
+            self.stats.write_energy.add(*energy);
+            self.stats.injected_faults += *faults;
+        }
+        self.stats.writes += enc.len() as u64;
+
+        for (i, s) in enc.schemes.iter().enumerate() {
+            self.meta[offset + i] = s.symbol();
+            self.stats
+                .write_energy
+                .add(self.config.cost.trilevel_cell(AccessKind::Write));
+        }
+
+        Ok((
+            Region {
+                offset,
+                len: enc.len(),
+                granularity: enc.granularity,
+                policy: enc.policy,
+                meta_offset: offset,
+                meta_len: enc.schemes.len(),
+            },
+            StoreBill {
+                shards,
+                meta_writes: enc.schemes.len(),
+            },
+        ))
+    }
+}
+
+/// Accounting trace of one [`MlcBuffer::store_at`], shaped so a caller can
+/// replay the identical `Energy::add` sequence (per-shard partials in
+/// shard order, then one tri-level metadata charge per group) into a
+/// second accumulator — per-tenant stats in a shared pool stay bit-
+/// identical to what a private buffer would have billed.
+#[derive(Clone, Debug)]
+pub struct StoreBill {
+    /// `(energy, injected_faults)` per fixed-size store shard, in shard
+    /// order.
+    pub shards: Vec<(Energy, u64)>,
+    /// Tri-level metadata symbols written (one write charge each).
+    pub meta_writes: usize,
 }
 
 /// Write one store shard: bill the energy of programming the *intended*

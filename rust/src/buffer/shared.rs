@@ -1,0 +1,447 @@
+//! Multi-tenant extent allocation over one banked MLC buffer.
+//!
+//! [`SharedMlcBuffer`] hosts several models' encoded weights in a single
+//! [`MlcBuffer`] (pool mode, see [`MlcBuffer::pooled`]): the payload plane
+//! is split into fixed-size, bank-slot-aligned **extents**, a region is a
+//! contiguous run of extents, and placement is driven by the endurance
+//! model in [`crate::stt::endurance`] — per-extent write counters plus
+//! per-bank [`WearTracker`]s turn the seed's dormant wear math into
+//! write-leveling decisions and a "buffer lifetime under traffic" report
+//! (rendered by `metrics::wear_table`).
+//!
+//! Invariants (pinned by `rust/tests/shared_buffer.rs`):
+//!
+//! * extents never overlap: every live region owns a disjoint run of
+//!   extents, and `region.offset == first_extent * extent_words`;
+//! * extents are bank-slot aligned: `extent_words % banks == 0`, so a
+//!   region always starts at a fresh bank slot and its banked read
+//!   latency depends only on its length, never its placement — which is
+//!   what makes an evicted tenant's rebuild bill bit-identical to a
+//!   fresh store at any offset;
+//! * placement is deterministic wear-leveling: among windows of free
+//!   extents, prefer windows without *hot* extents (write count above
+//!   [`SharedMlcBuffer::level_ratio`] × the mean), then the window whose
+//!   worst extent is least worn, ties broken by total wear then lowest
+//!   start — so repeated alloc/free cycles rotate regions across the
+//!   plane instead of re-burning the same cells.
+//!
+//! Eviction policy lives one layer up in [`crate::api::BufferPool`]; this
+//! module only allocates, frees, and keeps the wear ledger. The
+//! [`EvictPolicy`] enum is defined here so `util::env` can parse
+//! `MLCSTT_EVICT` without reaching into the API layer.
+
+use crate::encoding::Encoded;
+use crate::stt::endurance::WearTracker;
+use crate::stt::{AccessKind, Energy, ErrorModel};
+use crate::util::rng::Xoshiro256;
+
+use super::{AccessStats, BufferConfig, BufferError, MlcBuffer, Region};
+
+/// Default hot-extent threshold: an extent whose write count exceeds
+/// `LEVEL_RATIO ×` the mean extent write count is avoided by placement
+/// until the rest of the plane catches up.
+pub const LEVEL_RATIO: f64 = 2.0;
+
+/// What a [`crate::api::BufferPool`] does under capacity pressure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Evict the least-recently-served resident model and rebuild it on
+    /// demand (the default).
+    Lru,
+    /// Refuse the allocation instead of evicting anyone.
+    Deny,
+}
+
+/// Per-extent allocator state.
+#[derive(Clone, Debug, Default)]
+struct Extent {
+    /// Words written into this extent across its lifetime (leveling key).
+    writes: u64,
+    /// Allocation id of the region currently owning this extent.
+    owner: Option<u64>,
+}
+
+/// A tenant's slice of the pool: the decodable [`Region`] plus the extent
+/// run backing it.
+#[derive(Clone, Debug)]
+pub struct PoolRegion {
+    /// The stored tensor's location + codec context (usable with every
+    /// region-based `MlcBuffer` read path).
+    pub region: Region,
+    /// First extent of the backing run.
+    pub first_extent: usize,
+    /// Extents in the backing run (`ceil(len / extent_words)`).
+    pub n_extents: usize,
+    /// Allocation id, so a stale handle can't free a reused extent.
+    id: u64,
+}
+
+/// One bank's row of the "buffer lifetime under traffic" report.
+#[derive(Clone, Debug)]
+pub struct BankWear {
+    /// Bank index.
+    pub bank: usize,
+    /// Extents mapped to this bank (`extent % banks` round-robin).
+    pub extents: usize,
+    /// Worst per-extent write count in this bank.
+    pub max_writes: u64,
+    /// Mean per-extent write count in this bank.
+    pub mean_writes: f64,
+    /// Mean endurance stress per stored word (soft transitions weighted
+    /// [`crate::stt::endurance::HARD_PULSE_WEIGHT`]×).
+    pub stress_per_write: f64,
+    /// Lifetime relative to an all-base-state write mix.
+    pub relative_lifetime: f64,
+    /// Projected word-writes until the rated switching endurance.
+    pub writes_until_rated: f64,
+}
+
+/// A bank-aligned extent allocator + wear ledger over one pool-mode
+/// [`MlcBuffer`]. See the module docs for the invariants.
+pub struct SharedMlcBuffer {
+    buf: MlcBuffer,
+    extent_words: usize,
+    extents: Vec<Extent>,
+    level_ratio: f64,
+    /// Per-bank wear, fed with every *intended* stored word (the pre-fault
+    /// image: programming stress is paid for what the write tried to
+    /// store, whether or not a fault lands).
+    bank_wear: Vec<WearTracker>,
+    next_id: u64,
+}
+
+impl SharedMlcBuffer {
+    /// A pool of `capacity_bytes` across `banks`, carved into extents of
+    /// `extent_words` words. `extent_words` must be a positive multiple of
+    /// `banks` (bank-slot alignment); a ragged tail of words smaller than
+    /// one extent is left unused. `seed` drives only pool-internal
+    /// randomness — tenant fault streams are passed per store.
+    pub fn new(capacity_bytes: usize, banks: usize, extent_words: usize, seed: u64) -> Self {
+        assert!(banks >= 1, "need at least one bank");
+        assert!(
+            extent_words >= 1 && extent_words % banks == 0,
+            "extent_words ({extent_words}) must be a positive multiple of banks ({banks})"
+        );
+        let config = BufferConfig::new(capacity_bytes, banks);
+        let n = config.capacity_words() / extent_words;
+        SharedMlcBuffer {
+            buf: MlcBuffer::pooled(config, seed),
+            extent_words,
+            extents: vec![Extent::default(); n],
+            level_ratio: LEVEL_RATIO,
+            bank_wear: vec![WearTracker::new(); banks],
+            next_id: 0,
+        }
+    }
+
+    /// Builder-style override of the hot-extent threshold ratio.
+    pub fn with_level_ratio(mut self, ratio: f64) -> Self {
+        assert!(ratio >= 1.0, "a ratio below 1 marks everything hot");
+        self.level_ratio = ratio;
+        self
+    }
+
+    /// Words per extent.
+    pub fn extent_words(&self) -> usize {
+        self.extent_words
+    }
+
+    /// Total extents in the pool.
+    pub fn extents(&self) -> usize {
+        self.extents.len()
+    }
+
+    /// Extents not currently owned by any region.
+    pub fn free_extents(&self) -> usize {
+        self.extents.iter().filter(|e| e.owner.is_none()).count()
+    }
+
+    /// Parallel banks (one word per bank per access slot).
+    pub fn banks(&self) -> usize {
+        self.buf.config.banks
+    }
+
+    /// Usable pool capacity in words (whole extents only).
+    pub fn capacity_words(&self) -> usize {
+        self.extents.len() * self.extent_words
+    }
+
+    /// Hot-extent threshold ratio in force.
+    pub fn level_ratio(&self) -> f64 {
+        self.level_ratio
+    }
+
+    /// Pool-aggregate transaction statistics (all tenants combined).
+    pub fn stats(&self) -> &AccessStats {
+        self.buf.stats()
+    }
+
+    /// Store `enc` into the least-worn free extent window, billing the
+    /// write into both the pool-aggregate stats and `tenant` (the exact
+    /// same `Energy::add` sequence a private buffer would perform — see
+    /// [`MlcBuffer::store_at`] and [`super::StoreBill`]). Per-shard fault
+    /// seeds are drawn from `rng` in shard order, so a tenant that replays
+    /// its own seed stream gets bit-identical flip sets at any placement.
+    pub fn alloc_store(
+        &mut self,
+        enc: &Encoded,
+        model: &ErrorModel,
+        rng: &mut Xoshiro256,
+        workers: usize,
+        tenant: &mut AccessStats,
+    ) -> Result<PoolRegion, BufferError> {
+        let need = enc.len().div_ceil(self.extent_words).max(1);
+        let start = self
+            .find_window(need)
+            .ok_or(BufferError::CapacityExceeded {
+                requested: enc.len(),
+                free: self.free_extents() * self.extent_words,
+            })?;
+        let offset = start * self.extent_words;
+        let (region, bill) = self.buf.store_at(enc, offset, model, rng, workers)?;
+
+        // Replay the bill into the tenant's accumulator in fresh-store
+        // order: shard partials, word count, then per-group metadata.
+        for (energy, faults) in &bill.shards {
+            tenant.write_energy.add(*energy);
+            tenant.injected_faults += *faults;
+        }
+        tenant.writes += enc.len() as u64;
+        for _ in 0..bill.meta_writes {
+            tenant
+                .write_energy
+                .add(self.buf.config.cost.trilevel_cell(AccessKind::Write));
+        }
+
+        // Wear ledger: ownership, per-extent write counters, and per-bank
+        // endurance stress over the intended image.
+        let id = self.next_id;
+        self.next_id += 1;
+        for e in start..start + need {
+            self.extents[e].owner = Some(id);
+        }
+        let banks = self.buf.config.banks;
+        for (i, &w) in enc.words.iter().enumerate() {
+            let e = start + i / self.extent_words;
+            self.extents[e].writes += 1;
+            self.bank_wear[e % banks].record_word(w);
+        }
+
+        Ok(PoolRegion {
+            region,
+            first_extent: start,
+            n_extents: need,
+            id,
+        })
+    }
+
+    /// Release a region's extents back to the free pool. Wear counters
+    /// are lifetime counters and survive the free (that's the point).
+    /// A stale handle (extents since reallocated) releases nothing.
+    pub fn free(&mut self, pr: &PoolRegion) {
+        for e in pr.first_extent..pr.first_extent + pr.n_extents {
+            if self.extents[e].owner == Some(pr.id) {
+                self.extents[e].owner = None;
+            }
+        }
+    }
+
+    /// Fused load→decode of a pool region, billing the read into both the
+    /// pool-aggregate stats and `tenant` (payload partial first, then one
+    /// tri-level charge per group — the order a private buffer bills).
+    pub fn load_decoded(
+        &mut self,
+        pr: &PoolRegion,
+        out: &mut Vec<f32>,
+        workers: usize,
+        tenant: &mut AccessStats,
+    ) -> Result<Energy, BufferError> {
+        let energy = self.buf.load_decoded(&pr.region, out, workers)?;
+        tenant.read_energy.add(energy);
+        tenant.reads += pr.region.len as u64;
+        for _ in 0..pr.region.meta_len {
+            tenant
+                .read_energy
+                .add(self.buf.config.cost.trilevel_cell(AccessKind::Read));
+        }
+        Ok(energy)
+    }
+
+    /// The "buffer lifetime under traffic" report: one row per bank with
+    /// extent-write extremes and the endurance projection of the wear mix
+    /// that bank has absorbed.
+    pub fn bank_wear(&self) -> Vec<BankWear> {
+        let banks = self.buf.config.banks;
+        (0..banks)
+            .map(|b| {
+                let mut n = 0usize;
+                let mut max = 0u64;
+                let mut sum = 0u64;
+                for e in (b..self.extents.len()).step_by(banks) {
+                    n += 1;
+                    max = max.max(self.extents[e].writes);
+                    sum += self.extents[e].writes;
+                }
+                let t = &self.bank_wear[b];
+                BankWear {
+                    bank: b,
+                    extents: n,
+                    max_writes: max,
+                    mean_writes: if n == 0 { 0.0 } else { sum as f64 / n as f64 },
+                    stress_per_write: t.stress_per_write(),
+                    relative_lifetime: t.relative_lifetime(),
+                    writes_until_rated: t.writes_until_rated(),
+                }
+            })
+            .collect()
+    }
+
+    /// Leveling quality: max over banks of total words written, divided
+    /// by the mean across banks. 1.0 is perfectly level (and the value
+    /// reported for an untouched pool); the allocator keeps this within
+    /// [`Self::level_ratio`] under steady churn.
+    pub fn wear_spread(&self) -> f64 {
+        let banks = self.buf.config.banks;
+        let totals: Vec<f64> = (0..banks)
+            .map(|b| {
+                (b..self.extents.len())
+                    .step_by(banks)
+                    .map(|e| self.extents[e].writes)
+                    .sum::<u64>() as f64
+            })
+            .collect();
+        let max = totals.iter().cloned().fold(0.0f64, f64::max);
+        let mean = totals.iter().sum::<f64>() / totals.len().max(1) as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Per-extent write counters, in extent order (test/diagnostic hook).
+    pub fn extent_writes(&self) -> Vec<u64> {
+        self.extents.iter().map(|e| e.writes).collect()
+    }
+
+    /// Deterministic wear-leveled placement: the free window of `need`
+    /// contiguous extents minimizing `(contains-hot, max-writes,
+    /// sum-writes, start)` lexicographically. Hot = write count strictly
+    /// above `level_ratio ×` the mean extent write count.
+    fn find_window(&self, need: usize) -> Option<usize> {
+        let n = self.extents.len();
+        if need > n {
+            return None;
+        }
+        let mean = if n == 0 {
+            0.0
+        } else {
+            self.extents.iter().map(|e| e.writes).sum::<u64>() as f64 / n as f64
+        };
+        let is_hot =
+            |x: &Extent| x.writes > 0 && (x.writes as f64) > self.level_ratio * mean;
+        let mut best: Option<(bool, u64, u64, usize)> = None;
+        'windows: for s in 0..=n - need {
+            let mut max_w = 0u64;
+            let mut sum_w = 0u64;
+            let mut hot = false;
+            for x in &self.extents[s..s + need] {
+                if x.owner.is_some() {
+                    continue 'windows;
+                }
+                max_w = max_w.max(x.writes);
+                sum_w += x.writes;
+                hot |= is_hot(x);
+            }
+            let key = (hot, max_w, sum_w, s);
+            if best.map_or(true, |b| key < b) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, _, s)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::WeightCodec;
+    use crate::fp;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| fp::quantize_f16((i as f32 / n as f32) * 1.8 - 0.9))
+            .collect()
+    }
+
+    #[test]
+    fn extents_are_bank_slot_aligned_and_disjoint() {
+        // 16 extents of 64 words over 4 banks.
+        let mut pool = SharedMlcBuffer::new(16 * 64 * 2, 4, 64, 1);
+        let enc = WeightCodec::hybrid(4).encode(&ramp(100)); // 2 extents
+        let model = ErrorModel::at_rate(0.0);
+        let mut rng = Xoshiro256::seeded(7);
+        let mut stats = AccessStats::default();
+        let a = pool
+            .alloc_store(&enc, &model, &mut rng, 1, &mut stats)
+            .unwrap();
+        let b = pool
+            .alloc_store(&enc, &model, &mut rng, 1, &mut stats)
+            .unwrap();
+        assert_eq!(a.region.offset, a.first_extent * 64);
+        assert_eq!(a.n_extents, 2);
+        assert_eq!(a.region.offset % 4, 0, "starts at a fresh bank slot");
+        let (a0, a1) = (a.first_extent, a.first_extent + a.n_extents);
+        let (b0, b1) = (b.first_extent, b.first_extent + b.n_extents);
+        assert!(a1 <= b0 || b1 <= a0, "extent runs overlap");
+        assert_eq!(pool.free_extents(), 12);
+    }
+
+    #[test]
+    fn freed_extents_are_reused_and_stale_handles_are_inert() {
+        let mut pool = SharedMlcBuffer::new(4 * 32 * 2, 4, 32, 1);
+        let enc = WeightCodec::hybrid(4).encode(&ramp(100)); // 4 extents
+        let model = ErrorModel::at_rate(0.0);
+        let mut rng = Xoshiro256::seeded(7);
+        let mut stats = AccessStats::default();
+        let a = pool
+            .alloc_store(&enc, &model, &mut rng, 1, &mut stats)
+            .unwrap();
+        assert!(matches!(
+            pool.alloc_store(&enc, &model, &mut rng, 1, &mut stats),
+            Err(BufferError::CapacityExceeded { .. })
+        ));
+        pool.free(&a);
+        let b = pool
+            .alloc_store(&enc, &model, &mut rng, 1, &mut stats)
+            .unwrap();
+        // The stale handle to `a` must not free `b`'s extents.
+        pool.free(&a);
+        assert_eq!(pool.free_extents(), 0);
+        let mut out = Vec::new();
+        pool.load_decoded(&b, &mut out, 1, &mut stats).unwrap();
+        assert_eq!(out, enc.decode());
+    }
+
+    #[test]
+    fn leveling_rotates_round_robin_over_equal_wear() {
+        // 8 one-extent slots; alloc/free the same 1-extent tensor: with
+        // all-free equal wear the allocator must sweep the plane instead
+        // of re-burning extent 0.
+        let mut pool = SharedMlcBuffer::new(8 * 16 * 2, 4, 16, 1);
+        let enc = WeightCodec::hybrid(4).encode(&ramp(16));
+        let model = ErrorModel::at_rate(0.0);
+        let mut rng = Xoshiro256::seeded(7);
+        let mut stats = AccessStats::default();
+        let mut placements = Vec::new();
+        for _ in 0..8 {
+            let r = pool
+                .alloc_store(&enc, &model, &mut rng, 1, &mut stats)
+                .unwrap();
+            placements.push(r.first_extent);
+            pool.free(&r);
+        }
+        assert_eq!(placements, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!((pool.wear_spread() - 1.0).abs() < 1e-12);
+    }
+}

@@ -27,6 +27,16 @@ pub trait BatchClassifier {
     /// Classify exactly one batch (`batch_size() * image_elems()` floats);
     /// returns the predicted class per image.
     fn classify_batch(&self, images: &[f32]) -> Result<Vec<usize>>;
+
+    /// Weight rebuilds this engine absorbed while serving. Pool-backed
+    /// engines ([`crate::api::PooledEngine`]) re-materialize an evicted
+    /// model's region on demand inside `classify_batch` and count each
+    /// stall here; engines whose weights cannot be evicted report 0. The
+    /// serving loop polls this after every batch into
+    /// [`crate::coordinator::ServerReport::rebuilds`].
+    fn rebuilds(&self) -> u64 {
+        0
+    }
 }
 
 /// A ready-to-serve model instance.

@@ -272,6 +272,10 @@ pub struct ServerReport {
     pub queue_mean: f64,
     /// Deepest in-flight depth observed at an admission decision.
     pub queue_max: usize,
+    /// Weight rebuilds the engine absorbed transparently while serving
+    /// ([`BatchClassifier::rebuilds`]): evict→rematerialize stalls for
+    /// pool-backed engines, 0 for engines that never rebuild.
+    pub rebuilds: u64,
 }
 
 /// State shared between the client-facing [`Server`] handle and its
@@ -311,6 +315,7 @@ struct Metrics {
     errors: usize,
     batches: usize,
     fill_sum: usize,
+    rebuilds: u64,
     latencies: Percentiles,
     queue_depth: Summary,
     started: Option<Instant>,
@@ -515,6 +520,7 @@ impl Server {
             } else {
                 m.queue_depth.max() as usize
             },
+            rebuilds: m.rebuilds,
         }
     }
 }
@@ -592,6 +598,9 @@ fn worker_loop<C: BatchClassifier>(
         let mut m = shared.metrics.lock().unwrap();
         m.batches += 1;
         m.fill_sum += pending.len();
+        // Cheap cumulative poll (the engine lives only in this thread, so
+        // this is the one place its rebuild counter can be read).
+        m.rebuilds = engine.rebuilds();
         match outcome {
             Ok(preds) => {
                 for (j, req) in pending.iter().enumerate() {

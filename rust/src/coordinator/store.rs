@@ -9,7 +9,7 @@ use crate::buffer::{
 use crate::encoding::codec::MIN_WEIGHTS_PER_WORKER;
 use crate::encoding::{Policy, WeightCodec};
 use crate::runtime::artifacts::{ParamSpec, WeightFile};
-use crate::stt::{Energy, ErrorModel};
+use crate::stt::{Energy, ErrorModel, WearTracker};
 use crate::util::threads;
 
 /// Resolve a pinned worker count against the actual work: `pin == 0`
@@ -17,7 +17,7 @@ use crate::util::threads;
 /// the per-worker minimum so tiny tensors stay single-threaded (spawning
 /// the full pinned fan-out for a 1k-word bias tensor would cost more than
 /// the work).
-fn workers_for(pin: usize, items: usize, min_per_worker: usize) -> usize {
+pub(crate) fn workers_for(pin: usize, items: usize, min_per_worker: usize) -> usize {
     if pin == 0 {
         threads::auto_workers(items, min_per_worker)
     } else {
@@ -123,6 +123,9 @@ pub struct WeightStore {
     /// [`Self::reinject`] (`None` until one runs) — the validity signal
     /// for [`Self::materialize_reusing`].
     last_flips: Option<Vec<u64>>,
+    /// Endurance stress of every intended stored word (the lifetime
+    /// projection `mlcstt serve` prints; DESIGN.md §12).
+    wear: WearTracker,
 }
 
 impl WeightStore {
@@ -140,11 +143,13 @@ impl WeightStore {
         let mut overhead_num = 0.0;
         let mut soft = 0u64;
         let mut enc = crate::encoding::Encoded::with_context(cfg.policy, cfg.granularity);
+        let mut wear = WearTracker::new();
         for p in &weights.params {
             let w = workers_for(cfg.threads, p.data.len(), MIN_WEIGHTS_PER_WORKER);
             codec.encode_into_threaded(&p.data, &mut enc, w);
             soft += enc.soft_cells();
             overhead_num += enc.metadata_overhead() * enc.len() as f64;
+            wear.record_stream(&enc.words);
             let region = buffer
                 .store(&enc)
                 .with_context(|| format!("storing tensor {}", p.name))?;
@@ -158,7 +163,15 @@ impl WeightStore {
             soft_cells: soft,
             threads: cfg.threads,
             last_flips: None,
+            wear,
         })
+    }
+
+    /// Endurance stress of the initial store's intended words: the
+    /// single-tenant lifetime projection (`stress/write`, relative
+    /// lifetime, writes-to-rated) behind the `mlcstt serve` report line.
+    pub fn wear(&self) -> &WearTracker {
+        &self.wear
     }
 
     pub fn policy(&self) -> Policy {

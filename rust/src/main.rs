@@ -399,6 +399,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         sr.injected_faults,
         100.0 * sr.metadata_overhead,
     );
+    // Buffer-lifetime projection of this store's write mix (the soft-bit
+    // pulses of the encoding policy decide how fast the cells age).
+    let wear = dep.wear();
+    println!(
+        "buffer lifetime: stress {:.3}/write, relative lifetime {:.3}, \
+         ~{:.2e} writes to rated endurance",
+        wear.stress_per_write(),
+        wear.relative_lifetime(),
+        wear.writes_until_rated(),
+    );
 
     // Serve through the registry: one named deployment, tag-routed
     // submits — the same path `registry_serve` scales to N models.

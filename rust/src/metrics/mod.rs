@@ -193,8 +193,8 @@ pub fn serving_table(
     let mut t = Table::new(
         title,
         &[
-            "model", "served", "shed", "errors", "batches", "fill", "p50 ms", "p95 ms",
-            "p99 ms", "req/s", "q.mean", "q.max",
+            "model", "served", "shed", "errors", "rebuilds", "batches", "fill", "p50 ms",
+            "p95 ms", "p99 ms", "req/s", "q.mean", "q.max",
         ],
     );
     for (name, r) in rows {
@@ -203,6 +203,7 @@ pub fn serving_table(
             r.served.to_string(),
             r.shed.to_string(),
             r.errors.to_string(),
+            r.rebuilds.to_string(),
             r.batches.to_string(),
             format!("{:.1}", r.mean_batch_fill),
             format!("{:.2}", r.p50_ms),
@@ -211,6 +212,38 @@ pub fn serving_table(
             format!("{:.1}", r.throughput_rps),
             format!("{:.1}", r.queue_mean),
             r.queue_max.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Render the shared pool's "buffer lifetime under traffic" report: one
+/// row per bank with per-extent write extremes and the endurance
+/// projection of that bank's absorbed wear mix
+/// ([`crate::buffer::shared::SharedMlcBuffer::bank_wear`]). Surfaced by
+/// [`crate::api::RegistryReport`]'s `Display` and the serving demos.
+pub fn wear_table(title: &str, rows: &[crate::buffer::shared::BankWear]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "bank",
+            "extents",
+            "max wr",
+            "mean wr",
+            "stress/wr",
+            "rel.life",
+            "wr-to-rated",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.bank.to_string(),
+            r.extents.to_string(),
+            r.max_writes.to_string(),
+            format!("{:.1}", r.mean_writes),
+            format!("{:.3}", r.stress_per_write),
+            format!("{:.3}", r.relative_lifetime),
+            format!("{:.2e}", r.writes_until_rated),
         ]);
     }
     t
@@ -284,6 +317,7 @@ mod tests {
             wall_s: 0.8,
             queue_mean: 2.5,
             queue_max: 6,
+            rebuilds: 3,
         };
         let s = serving_table("slo", &[("hot".to_string(), rep)]).to_string();
         assert!(s.contains("== slo =="));
@@ -292,6 +326,26 @@ mod tests {
         assert!(s.contains("8"), "shed column");
         assert!(s.contains("3.50"), "p95 column");
         assert!(s.contains("q.max"));
+        assert!(s.contains("rebuilds"));
+    }
+
+    #[test]
+    fn wear_table_renders_lifetime_columns() {
+        let rows = vec![crate::buffer::shared::BankWear {
+            bank: 0,
+            extents: 4,
+            max_writes: 1200,
+            mean_writes: 900.0,
+            stress_per_write: 1.75,
+            relative_lifetime: 0.571,
+            writes_until_rated: 2.29e15,
+        }];
+        let s = wear_table("buffer lifetime under traffic", &rows).to_string();
+        assert!(s.contains("buffer lifetime under traffic"));
+        assert!(s.contains("1200"));
+        assert!(s.contains("1.750"));
+        assert!(s.contains("wr-to-rated"));
+        assert!(s.contains("2.29e15"));
     }
 
     #[test]

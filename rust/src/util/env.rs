@@ -100,3 +100,37 @@ pub fn queue_budget() -> Option<usize> {
 pub fn max_wait_ms() -> Option<u64> {
     raw("MLCSTT_MAX_WAIT_MS")?.parse().ok()
 }
+
+/// `MLCSTT_POOL_KB` — shared multi-tenant buffer-pool capacity in KB
+/// ([`crate::api::BufferPool`]). Unset/unparsable is `None`: entry points
+/// fall back to per-deployment private buffers or their demo geometry.
+pub fn pool_kb() -> Option<usize> {
+    raw("MLCSTT_POOL_KB")?.parse().ok()
+}
+
+/// `MLCSTT_POOL_BANKS` — parallel banks of the shared pool. Parsed values
+/// clamp to at least 1 (mirroring the `MLCSTT_THREADS` clamp);
+/// unset/unparsable is `None` (callers supply their default geometry).
+pub fn pool_banks() -> Option<usize> {
+    raw("MLCSTT_POOL_BANKS")?.parse::<usize>().ok().map(|n| n.max(1))
+}
+
+/// `MLCSTT_POOL_EXTENT` — extent size of the shared pool's allocator, in
+/// words. Parsed values clamp to at least 1; [`crate::api::BufferPool`]
+/// additionally rounds up to a multiple of the bank count (bank-slot
+/// alignment). Unset/unparsable is `None`.
+pub fn pool_extent() -> Option<usize> {
+    raw("MLCSTT_POOL_EXTENT")?.parse::<usize>().ok().map(|n| n.max(1))
+}
+
+/// `MLCSTT_EVICT` — shared-pool capacity-pressure policy: `lru` (evict
+/// the least-recently-served model, rebuild on demand) or `deny` (refuse
+/// the allocation). Unset or unrecognized is `None` (callers default to
+/// LRU), matching the `MLCSTT_F16` enum-parse pattern.
+pub fn evict() -> Option<crate::buffer::shared::EvictPolicy> {
+    match raw("MLCSTT_EVICT")?.as_str() {
+        "lru" => Some(crate::buffer::shared::EvictPolicy::Lru),
+        "deny" => Some(crate::buffer::shared::EvictPolicy::Deny),
+        _ => None,
+    }
+}

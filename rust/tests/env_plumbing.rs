@@ -13,7 +13,7 @@
 
 use std::path::Path;
 
-use mlcstt::api::Config;
+use mlcstt::api::{Config, EvictPolicy};
 use mlcstt::coordinator::ServerConfig;
 use mlcstt::fp::{self, F16Mode};
 use mlcstt::util::threads;
@@ -119,4 +119,47 @@ fn mlcstt_env_layering_builder_beats_env_beats_default() {
     assert_eq!(Config::from_env().max_wait(), std::time::Duration::from_millis(20));
     std::env::remove_var("MLCSTT_MAX_WAIT_MS");
     assert_eq!(Config::from_env().max_wait(), std::time::Duration::from_millis(20));
+
+    // --- shared-pool knobs (ISSUE 7): capacity follows the eval pattern
+    // (unset means "no pool" rather than a default size)...
+    std::env::set_var("MLCSTT_POOL_KB", "96");
+    assert_eq!(Config::from_env().pool_kb(), Some(96));
+    assert_eq!(Config::builder().pool_kb(32).build().pool_kb(), Some(32));
+    std::env::set_var("MLCSTT_POOL_KB", "junk");
+    assert_eq!(Config::from_env().pool_kb(), None, "unparsable -> no pool");
+    std::env::remove_var("MLCSTT_POOL_KB");
+    assert_eq!(Config::from_env().pool_kb(), None);
+
+    // ...banks and extent follow the MLCSTT_THREADS clamp pattern...
+    std::env::set_var("MLCSTT_POOL_BANKS", "8");
+    assert_eq!(Config::from_env().pool_banks_or(4), 8);
+    assert_eq!(Config::builder().pool_banks(2).build().pool_banks_or(4), 2);
+    std::env::set_var("MLCSTT_POOL_BANKS", "0");
+    assert_eq!(Config::from_env().pool_banks_or(4), 1, "0 clamps to 1");
+    std::env::remove_var("MLCSTT_POOL_BANKS");
+    assert_eq!(Config::from_env().pool_banks_or(4), 4);
+
+    std::env::set_var("MLCSTT_POOL_EXTENT", "256");
+    assert_eq!(Config::from_env().pool_extent_or(8192), 256);
+    assert_eq!(Config::builder().pool_extent(64).build().pool_extent_or(8192), 64);
+    std::env::set_var("MLCSTT_POOL_EXTENT", "0");
+    assert_eq!(Config::from_env().pool_extent_or(8192), 1, "0 clamps to 1");
+    std::env::remove_var("MLCSTT_POOL_EXTENT");
+    assert_eq!(Config::from_env().pool_extent_or(8192), 8192);
+
+    // ...and the eviction policy follows the MLCSTT_F16 enum-parse
+    // pattern: unknown labels degrade to the LRU default.
+    std::env::set_var("MLCSTT_EVICT", "deny");
+    assert_eq!(Config::from_env().evict_policy(), EvictPolicy::Deny);
+    assert_eq!(
+        Config::builder().evict(EvictPolicy::Lru).build().evict_policy(),
+        EvictPolicy::Lru,
+        "builder beats env"
+    );
+    std::env::set_var("MLCSTT_EVICT", "lru");
+    assert_eq!(Config::from_env().evict_policy(), EvictPolicy::Lru);
+    std::env::set_var("MLCSTT_EVICT", "sometimes");
+    assert_eq!(Config::from_env().evict_policy(), EvictPolicy::Lru, "unknown -> default");
+    std::env::remove_var("MLCSTT_EVICT");
+    assert_eq!(Config::from_env().evict_policy(), EvictPolicy::Lru);
 }

@@ -1,0 +1,289 @@
+//! Multi-tenant shared buffer contract (ISSUE 7, DESIGN.md §12):
+//!
+//! * the extent allocator never overlaps live regions and every region
+//!   starts at a bank-slot-aligned extent boundary, under arbitrary
+//!   alloc/free churn;
+//! * an evicted tenant's on-demand rebuild is **bit-identical** to a
+//!   fresh private store under the same recipe — decoded tensors, flip
+//!   counts, and f64 energy bills included;
+//! * wear counters are monotone, placement rotates deterministically
+//!   under equal wear, and the leveling spread stays within the hot
+//!   threshold;
+//! * a registry serving two tenants through a pool that fits only one
+//!   completes a mixed workload with no lost, duplicated, or cross-wired
+//!   responses, while the ping-pong evictions surface as `rebuilds`.
+
+use std::time::Duration;
+
+use mlcstt::api::{BufferPool, EvictPolicy, ModelRegistry};
+use mlcstt::buffer::shared::{PoolRegion, SharedMlcBuffer, LEVEL_RATIO};
+use mlcstt::buffer::AccessStats;
+use mlcstt::coordinator::{LinearEngine, ServerConfig, StoreConfig, WeightStore};
+use mlcstt::encoding::WeightCodec;
+use mlcstt::fp;
+use mlcstt::runtime::artifacts::{ParamSpec, WeightFile};
+use mlcstt::stt::ErrorModel;
+use mlcstt::util::rng::Xoshiro256;
+
+/// Deterministic f16-representable weights (what a trained file holds).
+fn tensor(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|_| fp::quantize_f16((rng.next_gaussian() * 0.4) as f32))
+        .collect()
+}
+
+fn weight_file(parts: &[(&str, usize)], seed: u64) -> WeightFile {
+    WeightFile {
+        params: parts
+            .iter()
+            .enumerate()
+            .map(|(i, (name, n))| ParamSpec {
+                name: (*name).to_string(),
+                shape: vec![*n],
+                data: tensor(*n, seed + i as u64),
+            })
+            .collect(),
+    }
+}
+
+fn store_cfg(rate: f64, seed: u64, banks: usize) -> StoreConfig {
+    StoreConfig {
+        error_model: ErrorModel::at_rate(rate),
+        seed,
+        banks,
+        ..StoreConfig::default()
+    }
+}
+
+// ------------------------------------------------------- allocator churn
+
+#[test]
+fn allocator_never_overlaps_and_stays_bank_aligned_under_churn() {
+    const BANKS: usize = 4;
+    const EW: usize = 32; // words per extent
+    const EXTENTS: usize = 24;
+    let mut pool = SharedMlcBuffer::new(EXTENTS * EW * 2, BANKS, EW, 9);
+    let codec = WeightCodec::hybrid(4);
+    let model = ErrorModel::at_rate(0.0);
+    let mut rng = Xoshiro256::seeded(42);
+    let mut stats = AccessStats::default();
+    let mut live: Vec<PoolRegion> = Vec::new();
+
+    for step in 0..200u64 {
+        if !live.is_empty() && rng.chance(0.4) {
+            let i = rng.below(live.len() as u64) as usize;
+            pool.free(&live.swap_remove(i));
+        } else {
+            let words = 1 + rng.below((3 * EW) as u64) as usize;
+            let enc = codec.encode(&tensor(words, step));
+            let mut frng = Xoshiro256::seeded(step);
+            match pool.alloc_store(&enc, &model, &mut frng, 1, &mut stats) {
+                Ok(r) => live.push(r),
+                Err(_) => {
+                    // Full — drain and keep churning.
+                    for r in live.drain(..) {
+                        pool.free(&r);
+                    }
+                }
+            }
+        }
+
+        // Invariants hold after every step.
+        let mut owned = vec![false; pool.extents()];
+        for r in &live {
+            assert_eq!(r.region.offset, r.first_extent * EW, "extent-aligned offset");
+            assert_eq!(r.region.offset % BANKS, 0, "bank-slot-aligned start");
+            assert_eq!(r.n_extents, r.region.len.div_ceil(EW).max(1));
+            for e in r.first_extent..r.first_extent + r.n_extents {
+                assert!(!owned[e], "extent {e} owned by two live regions");
+                owned[e] = true;
+            }
+        }
+        let in_use: usize = live.iter().map(|r| r.n_extents).sum();
+        assert_eq!(pool.free_extents(), EXTENTS - in_use);
+    }
+}
+
+// --------------------------------------------- evict→rebuild bit-identity
+
+#[test]
+fn rebuild_after_eviction_is_bit_identical_to_a_fresh_store() {
+    // Pool of 20 extents × 256 words @ 16 banks: tenant a needs 17
+    // extents (12 + 5), tenant b needs 16 — only one fits at a time.
+    let pool = BufferPool::new(20 * 256 * 2, 16, 256, EvictPolicy::Lru);
+    let wf_a = weight_file(&[("conv.w", 3000), ("fc.w", 1100)], 5);
+    let wf_b = weight_file(&[("w", 4096)], 6);
+    let ca = store_cfg(0.02, 11, 16);
+    let cb = store_cfg(0.015, 22, 16);
+
+    let first = pool.admit("a", &ca, &wf_a).unwrap();
+    pool.admit("b", &cb, &wf_b).unwrap(); // evicts a
+    assert!(!pool.resident("a").unwrap());
+    assert!(pool.resident("b").unwrap());
+    assert!(pool.ensure_resident("a").unwrap()); // rebuilds a, evicts b
+    let rebuilt = pool.report("a").unwrap();
+    let tensors = pool.tensors("a").unwrap();
+
+    // Oracle: a private store+materialize under the same recipe and the
+    // pool's bank count, at a placement the pool never used.
+    let mut fresh = WeightStore::load(&ca, &wf_a).unwrap();
+    let want_tensors = fresh.materialize().unwrap();
+    let want = fresh.report();
+
+    assert_eq!(rebuilt.tensors, want.tensors);
+    assert_eq!(rebuilt.weights, want.weights);
+    assert_eq!(rebuilt.injected_faults, want.injected_faults);
+    assert!(rebuilt.injected_faults > 0, "the rate must actually flip cells");
+    assert_eq!(rebuilt.write_energy, want.write_energy, "f64 write bill");
+    assert_eq!(rebuilt.read_energy, want.read_energy, "f64 read bill");
+    assert_eq!(
+        rebuilt.metadata_overhead.to_bits(),
+        want.metadata_overhead.to_bits()
+    );
+    assert_eq!(rebuilt.soft_cells_stored, want.soft_cells_stored);
+
+    assert_eq!(tensors.len(), want_tensors.len());
+    for (got, want) in tensors.iter().zip(&want_tensors) {
+        assert_eq!(got.name, want.name);
+        assert_eq!(got.shape, want.shape);
+        assert_eq!(got.data, want.data, "decoded tensor {} differs", got.name);
+    }
+
+    // And the rebuild reproduced the initial admit exactly.
+    assert_eq!(first.write_energy, rebuilt.write_energy);
+    assert_eq!(first.read_energy, rebuilt.read_energy);
+    assert_eq!(first.injected_faults, rebuilt.injected_faults);
+}
+
+#[test]
+fn deny_policy_fails_admission_without_evicting_the_resident() {
+    let pool = BufferPool::new(16 * 256 * 2, 16, 256, EvictPolicy::Deny);
+    let wf = weight_file(&[("w", 4096)], 6);
+    pool.admit("a", &store_cfg(0.0, 1, 16), &wf).unwrap();
+    assert!(pool.admit("b", &store_cfg(0.0, 2, 16), &wf).is_err());
+    assert!(pool.resident("a").unwrap(), "the resident survives a denied admit");
+    assert_eq!(pool.evictions(), 0);
+}
+
+// ------------------------------------------- wear leveling + determinism
+
+#[test]
+fn wear_is_monotone_and_leveling_rotation_is_deterministic() {
+    // 8 extents of 64 words, 4 banks; a 128-word tensor fills exactly two
+    // extents, so repeated alloc/free sweeps the plane in pairs.
+    let run = || {
+        let mut pool = SharedMlcBuffer::new(8 * 64 * 2, 4, 64, 3);
+        let enc = WeightCodec::hybrid(4).encode(&tensor(128, 77));
+        let model = ErrorModel::at_rate(0.0);
+        let mut rng = Xoshiro256::seeded(5);
+        let mut stats = AccessStats::default();
+        let mut placements = Vec::new();
+        let mut last_total = 0u64;
+        for _ in 0..24 {
+            let r = pool.alloc_store(&enc, &model, &mut rng, 1, &mut stats).unwrap();
+            placements.push(r.first_extent);
+            let total: u64 = pool.extent_writes().iter().sum();
+            assert!(total > last_total, "wear counters only grow");
+            last_total = total;
+            pool.free(&r);
+        }
+        (placements, pool.extent_writes(), pool.wear_spread())
+    };
+
+    let (p1, w1, s1) = run();
+    let (p2, w2, s2) = run();
+    assert_eq!(p1, p2, "placement sequence is deterministic");
+    assert_eq!(w1, w2, "wear ledger is deterministic");
+    assert_eq!(s1.to_bits(), s2.to_bits());
+
+    // Equal-wear rotation: each sweep of 4 allocations covers the whole
+    // plane instead of re-burning extent 0.
+    let sweep: Vec<usize> = vec![0, 2, 4, 6];
+    assert_eq!(p1, sweep.repeat(6));
+    assert!(w1.iter().all(|&w| w > 0), "every extent absorbed writes");
+    assert!((s1 - 1.0).abs() < 1e-12, "perfectly level after whole sweeps");
+    assert!(s1 <= LEVEL_RATIO);
+}
+
+// --------------------------------------- serving across eviction ping-pong
+
+#[test]
+fn registry_serves_two_tenants_through_a_pool_that_fits_one() {
+    const CLASSES: usize = 8;
+    const DIM: usize = 64;
+    const BATCH: usize = 4;
+    const REQUESTS: usize = 64;
+
+    // 6 extents of 128 words @ 4 banks; each 512-word model needs 4
+    // extents, so residency ping-pongs between the tenants.
+    let pool = BufferPool::new(6 * 128 * 2, 4, 128, EvictPolicy::Lru);
+    let ca = store_cfg(0.0, 1, 4);
+    let cb = store_cfg(0.02, 2, 4);
+    let wf = |seed| weight_file(&[("classifier.w", CLASSES * DIM)], seed);
+    pool.admit("a", &ca, &wf(31)).unwrap();
+    // Host-side oracle from the (bit-identical under rebuild) tensors.
+    let ta = pool.tensors("a").unwrap()[0].data.clone();
+    pool.admit("b", &cb, &wf(32)).unwrap();
+    let tb = pool.tensors("b").unwrap()[0].data.clone();
+    let oracle_a = LinearEngine::new(CLASSES, DIM, BATCH, ta).unwrap();
+    let oracle_b = LinearEngine::new(CLASSES, DIM, BATCH, tb).unwrap();
+
+    let scfg = ServerConfig {
+        max_wait: Duration::from_millis(1),
+        codec_threads: 1,
+        ..ServerConfig::default()
+    };
+    let mut registry = ModelRegistry::new().with_pool(pool.clone());
+    for name in ["a", "b"] {
+        registry
+            .register_pooled(
+                name,
+                move |tensors: &[ParamSpec]| {
+                    LinearEngine::new(CLASSES, DIM, BATCH, tensors[0].data.clone())
+                },
+                scfg.clone(),
+            )
+            .unwrap();
+    }
+
+    let mut rng = Xoshiro256::seeded(7);
+    let mut tickets = Vec::with_capacity(REQUESTS);
+    for r in 0..REQUESTS {
+        let image: Vec<f32> = (0..DIM).map(|_| (rng.next_gaussian() * 0.5) as f32).collect();
+        let (tag, oracle) = if r % 2 == 0 { ("a", &oracle_a) } else { ("b", &oracle_b) };
+        let want = oracle.classify_one(&image);
+        tickets.push((registry.submit(tag, image).unwrap().ticket().unwrap(), want));
+    }
+    for (t, want) in tickets {
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.class, want, "response lost, duplicated, or cross-wired");
+    }
+
+    let report = registry.shutdown();
+    assert_eq!(report.total_served(), REQUESTS);
+    assert_eq!(report.total_errors(), 0);
+    assert_eq!(report.total_shed(), 0);
+    assert!(report.total_rebuilds() > 0, "ping-pong must absorb rebuild stalls");
+    assert!(report.pool_evictions > 0);
+    assert_eq!(report.wear.len(), 4, "one wear row per bank");
+    assert!(report.wear.iter().any(|w| w.max_writes > 0));
+    assert!(
+        pool.wear_spread() <= LEVEL_RATIO,
+        "leveling spread {} over threshold",
+        pool.wear_spread()
+    );
+    let shown = format!("{report}");
+    assert!(shown.contains("rebuilds"));
+    assert!(shown.contains("buffer lifetime under traffic"));
+
+    // After all that traffic, the last rebuild's bills still equal a
+    // fresh private store — eviction never leaks accounting.
+    let mut fresh = WeightStore::load(&cb, &wf(32)).unwrap();
+    fresh.materialize().unwrap();
+    let want = fresh.report();
+    let got = pool.report("b").unwrap();
+    assert_eq!(got.write_energy, want.write_energy);
+    assert_eq!(got.read_energy, want.read_energy);
+    assert_eq!(got.injected_faults, want.injected_faults);
+}

@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Propose an updated bench/baseline.json from a full bench run.
+
+Reads the machine-readable ``BENCH_hotpath.json`` a bench run emitted,
+applies a safety margin (floors sit well below observed throughput so
+shared-runner noise never trips the 25% CI gate), and writes a proposed
+baseline next to a markdown diff of old floor vs observed vs proposed.
+
+Stdlib only — runs on a bare CI python. Typical CI usage
+(``.github/workflows/bench-record.yml``)::
+
+    python3 scripts/record_baseline.py \
+        --report bench_out/BENCH_hotpath.json \
+        --baseline bench/baseline.json \
+        --out baseline-proposed.json \
+        --summary "$GITHUB_STEP_SUMMARY"
+
+The proposal keeps the baseline's record *set* (every gated name stays
+gated) and adds any new records the report carries, so a bench added in a
+PR gets a floor on the next recording run rather than silently escaping
+the gate. Records in the baseline but missing from the report keep their
+old floor and are flagged in the diff.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_MARGIN = 0.5  # proposed floor = margin x observed throughput
+
+
+def load(path):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def fmt(x):
+    return f"{x:.3g}" if x is not None else "-"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--report", required=True, help="BENCH_hotpath.json from the run")
+    ap.add_argument("--baseline", required=True, help="committed bench/baseline.json")
+    ap.add_argument("--out", required=True, help="where to write the proposed baseline")
+    ap.add_argument(
+        "--margin",
+        type=float,
+        default=DEFAULT_MARGIN,
+        help=f"floor = margin x observed per_sec (default {DEFAULT_MARGIN})",
+    )
+    ap.add_argument("--sha", default=os.environ.get("GITHUB_SHA", "local"))
+    ap.add_argument("--summary", default=None, help="markdown diff target (append)")
+    args = ap.parse_args()
+    if not 0.0 < args.margin <= 1.0:
+        sys.exit(f"--margin {args.margin} out of (0, 1]")
+
+    report = load(args.report)
+    baseline = load(args.baseline)
+    observed = {r["name"]: r for r in report.get("records", [])}
+    old = {r["name"]: r for r in baseline.get("records", [])}
+
+    rows = []  # (name, old_floor, observed, proposed, note)
+    proposed_records = []
+    # Baseline order first (stable diffs), then report-only names.
+    names = list(old) + [n for n in observed if n not in old]
+    for name in names:
+        prev = old.get(name, {}).get("per_sec")
+        got = observed.get(name)
+        if got is None:
+            rows.append((name, prev, None, prev, "missing from report: floor kept"))
+            proposed_records.append(old[name])
+            continue
+        floor = args.margin * got["per_sec"]
+        note = "new record" if name not in old else ""
+        rows.append((name, prev, got["per_sec"], floor, note))
+        proposed_records.append(
+            {
+                "name": name,
+                "n": got["n"],
+                "median_ns": got["median_ns"],
+                "p95_ns": got["p95_ns"],
+                "per_sec": floor,
+            }
+        )
+
+    proposal = {
+        "bench": baseline.get("bench", report.get("bench", "hotpath")),
+        "git_sha": args.sha,
+        "comment": (
+            f"Recorded floors: {args.margin:g}x the observed median throughput of "
+            f"bench run {args.sha} (see bench-record workflow). Review the diff in "
+            "the run summary, then replace bench/baseline.json with this file."
+        ),
+        "records": proposed_records,
+    }
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(proposal, f, indent=2)
+        f.write("\n")
+
+    lines = [
+        "## Proposed bench baseline",
+        "",
+        f"margin: floors at {args.margin:g}x observed; run: `{args.sha}`",
+        "",
+        "| record | old floor/s | observed/s | proposed floor/s | note |",
+        "|---|---|---|---|---|",
+    ]
+    for name, prev, got, floor, note in rows:
+        lines.append(f"| {name} | {fmt(prev)} | {fmt(got)} | {fmt(floor)} | {note} |")
+    table = "\n".join(lines) + "\n"
+    print(table)
+    if args.summary:
+        with open(args.summary, "a", encoding="utf-8") as f:
+            f.write(table)
+
+    missing = [n for n, _, got, _, _ in rows if got is None]
+    if missing:
+        print(f"warning: {len(missing)} baseline record(s) missing from the report: "
+              + ", ".join(missing), file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()
