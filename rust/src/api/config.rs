@@ -21,6 +21,7 @@ use std::time::Duration;
 
 use crate::buffer::shared::EvictPolicy;
 use crate::coordinator::{ServerConfig, StoreConfig, DEFAULT_QUEUE_DEPTH};
+use crate::encoding::Policy;
 use crate::fp::{self, F16Mode};
 use crate::util::threads;
 
@@ -45,6 +46,7 @@ pub struct Config {
     pool_banks: Option<usize>,
     pool_extent: Option<usize>,
     evict: Option<EvictPolicy>,
+    policy: Option<Policy>,
 }
 
 impl Config {
@@ -144,6 +146,12 @@ impl Config {
         self.evict.unwrap_or(EvictPolicy::Lru)
     }
 
+    /// Protection policy (builder, else `MLCSTT_POLICY`), or the caller's
+    /// `default` — entry points keep the paper's [`Policy::Hybrid`].
+    pub fn policy_or(&self, default: Policy) -> Policy {
+        self.policy.unwrap_or(default)
+    }
+
     /// The serving view: a [`ServerConfig`] carrying this config's
     /// coalesce deadline, worker ceiling, and admission depth.
     pub fn server(&self) -> ServerConfig {
@@ -154,15 +162,18 @@ impl Config {
         }
     }
 
-    /// The weight-store view: a default-policy [`StoreConfig`] whose codec
-    /// worker cap is pinned to this config's ceiling. Pinning is
-    /// equivalent to the historical auto path (`threads: 0`): both floor
-    /// by per-worker minimum work and cap at
+    /// The weight-store view: a [`StoreConfig`] whose codec worker cap is
+    /// pinned to this config's ceiling and whose protection policy is the
+    /// resolved one ([`Self::policy_or`] with the paper's hybrid default
+    /// — the historical view behavior when `MLCSTT_POLICY` is unset).
+    /// Pinning is equivalent to the historical auto path (`threads: 0`):
+    /// both floor by per-worker minimum work and cap at
     /// [`threads::available`], and results are worker-count-invariant by
     /// construction.
     pub fn store(&self) -> StoreConfig {
         StoreConfig {
             threads: self.threads,
+            policy: self.policy_or(Policy::Hybrid),
             ..StoreConfig::default()
         }
     }
@@ -185,6 +196,7 @@ pub struct ConfigBuilder {
     pool_banks: Option<usize>,
     pool_extent: Option<usize>,
     evict: Option<EvictPolicy>,
+    policy: Option<Policy>,
 }
 
 impl ConfigBuilder {
@@ -271,6 +283,12 @@ impl ConfigBuilder {
         self
     }
 
+    /// Override the protection policy deployments encode under.
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
     /// Resolve every layer — builder override, then `MLCSTT_*`
     /// environment, then default — in this one place.
     pub fn build(self) -> Config {
@@ -301,6 +319,7 @@ impl ConfigBuilder {
             pool_banks: self.pool_banks.or_else(super::env::pool_banks),
             pool_extent: self.pool_extent.or_else(super::env::pool_extent),
             evict: self.evict.or_else(super::env::evict),
+            policy: self.policy.or_else(super::env::policy),
         }
     }
 }
@@ -368,6 +387,13 @@ mod tests {
         assert_eq!(sc.threads, 2);
         assert_eq!(sc.policy, Policy::Hybrid);
         assert_eq!(sc.banks, 16);
+    }
+
+    #[test]
+    fn builder_policy_reaches_the_store_view() {
+        let cfg = Config::builder().policy(Policy::ZeroSpaceParity).build();
+        assert_eq!(cfg.policy_or(Policy::Hybrid), Policy::ZeroSpaceParity);
+        assert_eq!(cfg.store().policy, Policy::ZeroSpaceParity);
     }
 
     #[test]

@@ -332,10 +332,10 @@ impl<'w> DeploymentBuilder<'w> {
         };
         let name = self.name.unwrap_or(default_name);
 
-        let mut sc = self.base_store.unwrap_or_else(|| StoreConfig {
-            threads: config.threads(),
-            ..StoreConfig::default()
-        });
+        // The no-base_store default resolves the protection policy through
+        // the config layers (builder > `MLCSTT_POLICY` > hybrid); an
+        // explicit `.store(...)` base or `.policy(...)` setter still wins.
+        let mut sc = self.base_store.unwrap_or_else(|| config.store());
         if let Some(policy) = self.policy {
             sc.policy = policy;
         }

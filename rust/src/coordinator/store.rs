@@ -144,9 +144,15 @@ impl WeightStore {
         let mut soft = 0u64;
         let mut enc = crate::encoding::Encoded::with_context(cfg.policy, cfg.granularity);
         let mut wear = WearTracker::new();
+        // The store drives encoding through the ProtectionPolicy trait
+        // (DESIGN.md §13): for the paper's scheme family the boxed
+        // implementation delegates to the exact `WeightCodec` call it
+        // replaced, so stored bytes are bit-identical by construction
+        // (pinned by `rust/tests/policy_matrix.rs`).
+        let protection = crate::encoding::protection_for(cfg.policy, cfg.granularity);
         for p in &weights.params {
             let w = workers_for(cfg.threads, p.data.len(), MIN_WEIGHTS_PER_WORKER);
-            codec.encode_into_threaded(&p.data, &mut enc, w);
+            protection.encode_into(&p.data, &mut enc, w);
             soft += enc.soft_cells();
             overhead_num += enc.metadata_overhead() * enc.len() as f64;
             wear.record_stream(&enc.words);

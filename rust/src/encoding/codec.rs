@@ -12,6 +12,7 @@
 //! also produces the statistics the paper reports: pattern counts (Fig. 6)
 //! and metadata storage overhead (Table 3).
 
+use super::parity;
 use super::scheme::{self, Scheme};
 use super::select::{select_from_tallies, Policy};
 use super::swar;
@@ -79,12 +80,19 @@ impl WeightCodec {
             out.words.resize(weights.len(), 0);
         }
 
-        if self.policy == Policy::Unprotected {
+        if !self.policy.has_metadata() {
             out.schemes.clear();
-            // Raw binary16, one metadata-free stream.
+            // Metadata-free stream: raw binary16 (Unprotected) or in-place
+            // parity-protected words (ZeroSpaceParity). Both are per-word
+            // maps, so sharding needs no group alignment.
+            let encode: fn(&[f32], &mut [u16]) = if self.policy == Policy::ZeroSpaceParity {
+                parity::encode_slice
+            } else {
+                fp::quantize_into
+            };
             let bounds = threads::chunk_bounds(weights.len(), 1, workers);
             if bounds.len() <= 1 {
-                fp::quantize_into(weights, &mut out.words);
+                encode(weights, &mut out.words);
             } else {
                 std::thread::scope(|scope| {
                     let mut rest: &mut [u16] = &mut out.words;
@@ -92,7 +100,7 @@ impl WeightCodec {
                         let (dst, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
                         rest = tail;
                         let src = &weights[start..end];
-                        scope.spawn(move || fp::quantize_into(src, dst));
+                        scope.spawn(move || encode(src, dst));
                     }
                 });
             }
@@ -158,8 +166,19 @@ impl WeightCodec {
         let mut words = Vec::with_capacity(weights.len());
         let mut schemes = Vec::with_capacity(weights.len().div_ceil(self.granularity));
 
-        if self.policy == Policy::Unprotected {
-            words.extend(weights.iter().map(|&w| fp::f32_to_f16_bits(w)));
+        if !self.policy.has_metadata() {
+            words.extend(weights.iter().map(|&w| {
+                let h = fp::f32_to_f16_bits(w);
+                if self.policy == Policy::ZeroSpaceParity {
+                    debug_assert!(
+                        fp::backup_bit_free(h),
+                        "weight {w} outside the |w| < 2 premise"
+                    );
+                    parity::encode_word(h)
+                } else {
+                    h
+                }
+            }));
             return Encoded {
                 words,
                 schemes,
@@ -239,13 +258,14 @@ impl Encoded {
         self.words.is_empty()
     }
 
-    /// Scheme governing word index `i`.
+    /// Scheme governing word index `i` (`NoChange` for the metadata-free
+    /// policies, which store no per-group symbols).
     #[inline]
     pub fn scheme_of(&self, i: usize) -> Scheme {
-        if self.policy == Policy::Unprotected {
-            Scheme::NoChange
-        } else {
+        if self.policy.has_metadata() {
             self.schemes[i / self.granularity]
+        } else {
+            Scheme::NoChange
         }
     }
 
@@ -273,10 +293,10 @@ impl Encoded {
         if out.len() != self.len() {
             out.resize(self.len(), 0.0);
         }
-        let g = if self.policy == Policy::Unprotected {
-            1
-        } else {
+        let g = if self.policy.has_metadata() {
             self.granularity
+        } else {
+            1
         };
         let bounds = threads::chunk_bounds(self.len(), g, workers);
         if bounds.len() <= 1 {
@@ -314,10 +334,11 @@ impl Encoded {
     /// Decode a single stored image.
     #[inline]
     pub fn decode_word(&self, i: usize, stored: u16) -> f32 {
-        if self.policy == Policy::Unprotected {
-            return fp::f16_bits_to_f32(stored);
+        match self.policy {
+            Policy::Unprotected => fp::f16_bits_to_f32(stored),
+            Policy::ZeroSpaceParity => parity::decode_word(stored),
+            _ => fp::f16_bits_to_f32(scheme::invert(self.scheme_of(i), stored)),
         }
-        fp::f16_bits_to_f32(scheme::invert(self.scheme_of(i), stored))
     }
 
     /// Pattern census over the stored stream (Fig. 6): `[n00,n01,n10,n11]`,
@@ -343,7 +364,7 @@ impl Encoded {
     /// Metadata storage overhead (Table 3): 2 bits per group over the
     /// 16-bit payload words. Granularity 1 -> 0.125, 16 -> 0.0078125.
     pub fn metadata_overhead(&self) -> f64 {
-        if self.policy == Policy::Unprotected || self.is_empty() {
+        if !self.policy.has_metadata() || self.is_empty() {
             return 0.0;
         }
         let groups = self.len().div_ceil(self.granularity);
@@ -389,7 +410,7 @@ impl Encoded {
     /// scheme group, billed at SLC cost (identical on both accounting
     /// paths by construction).
     fn add_metadata_cost(&self, cost: &CostModel, kind: AccessKind, total: &mut Energy) {
-        if self.policy != Policy::Unprotected {
+        if self.policy.has_metadata() {
             let meta = cost.trilevel_cell(kind);
             let groups = self.schemes.len() as f64;
             total.add(Energy {
@@ -430,6 +451,10 @@ pub fn decode_slice(
     debug_assert_eq!(src.len(), dst.len());
     if policy == Policy::Unprotected {
         fp::decode_f16_slice(src, dst);
+        return;
+    }
+    if policy == Policy::ZeroSpaceParity {
+        parity::decode_slice(src, dst);
         return;
     }
     let g = granularity;
@@ -599,12 +624,7 @@ mod tests {
     #[test]
     fn swar_encode_matches_scalar_oracle() {
         let ws = ramp(3000);
-        for policy in [
-            Policy::Unprotected,
-            Policy::ProtectRound,
-            Policy::ProtectRotate,
-            Policy::Hybrid,
-        ] {
+        for policy in Policy::EXTENDED {
             for g in [1usize, 2, 4, 8, 16, 7] {
                 let codec = WeightCodec::new(policy, g);
                 let fast = codec.encode(&ws);
@@ -614,6 +634,23 @@ mod tests {
                 assert_eq!(fast.decode(), oracle.decode_scalar(), "{policy:?} g={g}");
             }
         }
+    }
+
+    #[test]
+    fn parity_stream_is_zero_space_and_lossless() {
+        let ws = ramp(1003);
+        let enc = WeightCodec::new(Policy::ZeroSpaceParity, 1).encode(&ws);
+        assert!(enc.schemes.is_empty());
+        assert_eq!(enc.metadata_overhead(), 0.0);
+        assert_eq!(enc.decode(), ws);
+        for (w, &stored) in ws.iter().zip(&enc.words) {
+            assert_eq!(stored, parity::encode_word(fp::f32_to_f16_bits(*w)));
+        }
+        // Metadata billing stays zero too: parity pays exactly what the
+        // unprotected stream pays per word, nothing per group.
+        let cost = CostModel::default();
+        let e = enc.access_energy(&cost, AccessKind::Write);
+        assert_eq!(e.cycles, enc.access_energy_scalar(&cost, AccessKind::Write).cycles);
     }
 
     #[test]

@@ -11,14 +11,23 @@
 //! * [`codec`] — end-to-end weight-tensor encoder/decoder producing the
 //!   stored word stream + tri-level metadata, plus pattern statistics
 //!   (Fig. 6) and metadata overhead accounting (Table 3). Large tensors
-//!   shard across `std::thread::scope` workers with bit-identical output.
+//!   shard across `std::thread::scope` workers with bit-identical output;
+//! * [`parity`] — the in-place zero-space competitor (Guan 2019): even
+//!   parity over the exponent/high-mantissa field in the free bit 14,
+//!   detect-and-saturate on decode;
+//! * [`policy`] — the [`ProtectionPolicy`] trait (DESIGN.md §13) that
+//!   makes the paper's scheme one implementation among the related-work
+//!   competitors, object-safe for store/deployment/sweep plumbing.
 
 pub mod codec;
+pub mod parity;
+pub mod policy;
 pub mod scheme;
 pub mod select;
 pub mod staterestrict;
 pub mod swar;
 
 pub use codec::{Encoded, WeightCodec};
+pub use policy::{protection_for, ParityProtection, ProtectionPolicy, SchemeProtection};
 pub use scheme::Scheme;
 pub use select::{select_from_tallies, select_scheme, Policy};

@@ -1,0 +1,179 @@
+//! In-place zero-space parity protection (Guan et al. 2019, "In-Place
+//! Zero-Space Memory Protection for CNN").
+//!
+//! The same observation that frees bit 14 for the paper's sign backup
+//! (|w| < 2 for CNN weights, so the exponent MSB is always 0) frees it for
+//! an *error-detecting* code instead: bit 14 stores even parity over the
+//! bits whose flips hurt accuracy most — the exponent and high-mantissa
+//! field, bits 6..=13 ([`PARITY_FIELD`]). On read, a parity mismatch means
+//! at least one flip landed inside the protected span; the decoder cannot
+//! correct it, so it *saturates*: the decoded value is clamped into
+//! `[-1, 1]`, which bounds the error a high-exponent flip can inject
+//! (an exponent-MSB flip alone would otherwise scale the weight by 2^8).
+//!
+//! Properties pinned by `rust/tests/prop_encoding.rs` and
+//! `rust/tests/policy_matrix.rs`:
+//!
+//! - **Zero space:** the code lives entirely in the otherwise-unused bit;
+//!   `metadata_overhead_bits` is exactly 0.
+//! - **Single-flip detection:** any single bitflip in the detection domain
+//!   ([`DETECT_MASK`]: the field plus the parity bit itself) flips the
+//!   parity check and is detected.
+//! - **Non-expansive repair:** clamping into `[-1, 1]` never increases
+//!   `|decoded - original|` versus the unprotected decode, because the
+//!   original weight already lies in that interval (projection onto a
+//!   convex set containing the target is non-expansive).
+//!
+//! The trade against the paper's scheme: parity detects (and bounds)
+//! exponent-field flips the sign backup ignores, but leaves the sign bit
+//! exposed and performs no reformation, so its vulnerable-cell count is
+//! that of the raw stream.
+
+use crate::fp;
+
+/// The protected span: exponent bits (10..=13, sans the free bit 14) plus
+/// the four highest mantissa bits (6..=9) — the flips with the largest
+/// value impact.
+pub const PARITY_FIELD: u16 = 0x3FC0;
+
+/// Bits whose single flips the check detects: the protected field plus the
+/// parity bit itself (a flipped check bit reports a mismatch over an
+/// intact field; saturation then decodes with zero error, since the field
+/// is untouched and bit 14 is cleared before conversion).
+pub const DETECT_MASK: u16 = PARITY_FIELD | fp::BACKUP_MASK;
+
+/// Even parity of the protected field, positioned at bit 14.
+#[inline]
+pub fn parity_bit(h: u16) -> u16 {
+    (((h & PARITY_FIELD).count_ones() as u16) & 1) << 14
+}
+
+/// Encode one quantized f16 word: clear bit 14 (free in the |w| < 2
+/// domain) and store the field parity there. Total on all of `u16` — any
+/// stray bit 14 in the input is ignored, mirroring the packed kernel
+/// [`super::swar::parity_protect4`].
+#[inline]
+pub fn encode_word(h: u16) -> u16 {
+    (h & !fp::BACKUP_MASK) | parity_bit(h)
+}
+
+/// Does the stored word fail its parity check?
+#[inline]
+pub fn mismatch(stored: u16) -> bool {
+    (((stored >> 14) ^ (stored & PARITY_FIELD).count_ones() as u16) & 1) != 0
+}
+
+/// Decode one stored word: strip the parity bit, convert, and on a parity
+/// mismatch clamp the value into `[-1, 1]`. The conversion is always
+/// finite — with bit 14 cleared the f16 exponent cannot be all-ones — so
+/// the clamp is well-defined even under multi-bit corruption.
+#[inline]
+pub fn decode_word(stored: u16) -> f32 {
+    let raw = fp::f16_bits_to_f32(stored & !fp::BACKUP_MASK);
+    if mismatch(stored) {
+        raw.clamp(-1.0, 1.0)
+    } else {
+        raw
+    }
+}
+
+/// Quantize a weight slice and parity-protect it into `out` (same length),
+/// four lanes at a time via [`super::swar::parity_protect4`].
+pub fn encode_slice(weights: &[f32], out: &mut [u16]) {
+    debug_assert_eq!(weights.len(), out.len());
+    fp::quantize_into(weights, out);
+    let quads = out.len() / fp::LANES * fp::LANES;
+    for c in out[..quads].chunks_exact_mut(fp::LANES) {
+        let x = super::swar::parity_protect4(fp::pack4([c[0], c[1], c[2], c[3]]));
+        c.copy_from_slice(&fp::unpack4(x));
+    }
+    for w in &mut out[quads..] {
+        *w = encode_word(*w);
+    }
+}
+
+/// Decode a stored slice into `dst` (same length): strip parity bits, bulk
+/// f16→f32 convert, then clamp the mismatching positions. The scratch
+/// buffer is a fixed-size stack block so the bulk converter
+/// ([`fp::decode_f16_slice`]) still runs without a heap allocation per call.
+pub fn decode_slice(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    const BLOCK: usize = 256;
+    let mut scratch = [0u16; BLOCK];
+    for (sb, db) in src.chunks(BLOCK).zip(dst.chunks_mut(BLOCK)) {
+        let s = &mut scratch[..sb.len()];
+        for (c, &w) in s.iter_mut().zip(sb) {
+            *c = w & !fp::BACKUP_MASK;
+        }
+        fp::decode_f16_slice(s, db);
+        for (d, &w) in db.iter_mut().zip(sb) {
+            if mismatch(w) {
+                *d = d.clamp(-1.0, 1.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_quantization_exact() {
+        for i in 0..512 {
+            let w = (i as f32 / 256.0) - 1.0;
+            let enc = encode_word(fp::f32_to_f16_bits(w));
+            assert!(!mismatch(enc), "clean word mismatches: w={w}");
+            assert_eq!(decode_word(enc), fp::quantize_f16(w), "w={w}");
+        }
+    }
+
+    #[test]
+    fn single_flips_in_detection_domain_are_detected() {
+        let enc = encode_word(fp::f32_to_f16_bits(0.7321));
+        for pos in 0..16u32 {
+            let hit = fp::flip_bit(enc, pos);
+            let in_domain = (1u16 << pos) & DETECT_MASK != 0;
+            assert_eq!(mismatch(hit), in_domain, "pos={pos}");
+        }
+    }
+
+    #[test]
+    fn parity_bit_flip_decodes_exactly() {
+        // Flipping the check bit itself saturates over an intact field:
+        // the decode strips bit 14 first, so the value is untouched and
+        // already inside [-1, 1].
+        let w = -0.4182;
+        let enc = encode_word(fp::f32_to_f16_bits(w));
+        let hit = fp::flip_bit(enc, 14);
+        assert!(mismatch(hit));
+        assert_eq!(decode_word(hit), fp::quantize_f16(w));
+    }
+
+    #[test]
+    fn slice_paths_match_word_paths() {
+        for len in [0usize, 1, 3, 4, 7, 255, 256, 257, 1000] {
+            let ws: Vec<f32> = (0..len)
+                .map(|i| (i as f32 * 0.7391).sin() * 0.9)
+                .collect();
+            let mut enc = vec![0u16; len];
+            encode_slice(&ws, &mut enc);
+            let expect: Vec<u16> = ws
+                .iter()
+                .map(|&w| encode_word(fp::f32_to_f16_bits(w)))
+                .collect();
+            assert_eq!(enc, expect, "encode len={len}");
+
+            // Corrupt a few words so the decode exercises the clamp path.
+            for (i, w) in enc.iter_mut().enumerate() {
+                if i % 5 == 2 {
+                    *w = fp::flip_bit(*w, (i % 14) as u32);
+                }
+            }
+            let mut dec = vec![0.0f32; len];
+            decode_slice(&enc, &mut dec);
+            let expect: Vec<f32> = enc.iter().map(|&w| decode_word(w)).collect();
+            assert_eq!(dec, expect, "decode len={len}");
+        }
+    }
+}

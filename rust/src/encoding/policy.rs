@@ -1,0 +1,205 @@
+//! The pluggable protection-policy abstraction (DESIGN.md §13).
+//!
+//! [`ProtectionPolicy`] extracts the codec surface the rest of the system
+//! actually depends on — encode, decode, metadata billing, and the
+//! vulnerable-cell mask fault injection keys on — so the paper's hybrid
+//! scheme and its ablations become *implementations* next to the
+//! related-work competitors (in-place zero-space parity, Guan 2019) rather
+//! than hard-coded branches. The trait is object-safe: `coordinator::store`,
+//! `api::Deployment`, and the sweep plumbing hold a
+//! `Box<dyn ProtectionPolicy>` built by [`protection_for`].
+//!
+//! Contract (pinned by `rust/tests/policy_matrix.rs`):
+//!
+//! - `encode_into`/`decode_into` are bit-identical for every worker count.
+//! - At error rate 0, decode(encode(w)) is the fp16 quantization of `w`
+//!   for lossless policies, and within the Round perturbation bound for
+//!   the rounding ablations.
+//! - Driving the paper's scheme through the trait is bit-identical —
+//!   stored words, scheme symbols, flip sets, energy bills, decoded
+//!   tensors — to calling [`WeightCodec`] directly.
+//! - `vulnerable_mask` marks exactly the intermediate (`01`/`10`) cells of
+//!   the *stored* image, which is what makes fault injection
+//!   policy-agnostic: vulnerability is content-derived.
+
+use super::codec::{Encoded, WeightCodec};
+use super::select::Policy;
+
+/// One protection scheme's full codec surface, object-safe for dynamic
+/// dispatch through store/deployment/sweep plumbing.
+pub trait ProtectionPolicy: Send + Sync {
+    /// The policy enum value this implementation realizes.
+    fn policy(&self) -> Policy;
+
+    /// Human-readable label (sweep/CLI key). Defaults to the enum label.
+    fn label(&self) -> &'static str {
+        self.policy().label()
+    }
+
+    /// Encode a weight tensor into `out` (buffers reused), bit-identical
+    /// for every `workers` value.
+    fn encode_into(&self, weights: &[f32], out: &mut Encoded, workers: usize);
+
+    /// Decode a (possibly fault-mutated) stream into `out`, bit-identical
+    /// for every `workers` value.
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>, workers: usize);
+
+    /// Exact metadata bill in bits for an `n`-weight tensor (Table 3
+    /// numerator): tri-level symbols, parity bits already in-word, etc.
+    fn metadata_overhead_bits(&self, n: usize) -> u64;
+
+    /// Mask of vulnerable (intermediate-state) bit positions in one stored
+    /// word: bit `2i` set iff MLC cell `i` is in a `01`/`10` state. The
+    /// default is the content-derived rule every current policy shares —
+    /// vulnerability lives in the stored pattern, not the scheme.
+    fn vulnerable_mask(&self, stored: u16) -> u16 {
+        (stored ^ (stored >> 1)) & 0x5555
+    }
+}
+
+/// The paper's scheme family driven through the trait: a thin wrapper over
+/// [`WeightCodec`], so every byte it produces is the pre-trait codec's by
+/// construction (and pinned to be by `policy_matrix.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct SchemeProtection {
+    codec: WeightCodec,
+}
+
+impl SchemeProtection {
+    /// Wrap a codec configuration (any enum policy, any granularity >= 1).
+    pub fn new(policy: Policy, granularity: usize) -> Self {
+        SchemeProtection {
+            codec: WeightCodec::new(policy, granularity),
+        }
+    }
+
+    /// The wrapped codec (tests compare against it directly).
+    pub fn codec(&self) -> &WeightCodec {
+        &self.codec
+    }
+}
+
+impl ProtectionPolicy for SchemeProtection {
+    fn policy(&self) -> Policy {
+        self.codec.policy
+    }
+
+    fn encode_into(&self, weights: &[f32], out: &mut Encoded, workers: usize) {
+        self.codec.encode_into_threaded(weights, out, workers);
+    }
+
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>, workers: usize) {
+        enc.decode_into_threaded(out, workers);
+    }
+
+    fn metadata_overhead_bits(&self, n: usize) -> u64 {
+        if !self.codec.policy.has_metadata() || n == 0 {
+            return 0;
+        }
+        // One tri-level symbol (2 bits) per granularity group.
+        2 * n.div_ceil(self.codec.granularity) as u64
+    }
+}
+
+/// In-place zero-space parity (Guan 2019) through the trait: granularity
+/// is irrelevant (the code is per-word) and the metadata bill is exactly
+/// zero — the defining property the prop tests pin.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ParityProtection;
+
+impl ParityProtection {
+    fn codec() -> WeightCodec {
+        WeightCodec::new(Policy::ZeroSpaceParity, 1)
+    }
+}
+
+impl ProtectionPolicy for ParityProtection {
+    fn policy(&self) -> Policy {
+        Policy::ZeroSpaceParity
+    }
+
+    fn encode_into(&self, weights: &[f32], out: &mut Encoded, workers: usize) {
+        Self::codec().encode_into_threaded(weights, out, workers);
+    }
+
+    fn decode_into(&self, enc: &Encoded, out: &mut Vec<f32>, workers: usize) {
+        enc.decode_into_threaded(out, workers);
+    }
+
+    fn metadata_overhead_bits(&self, _n: usize) -> u64 {
+        0
+    }
+}
+
+/// Build the implementation for an enum policy — the single construction
+/// point store/deployment/sweep plumbing goes through.
+pub fn protection_for(policy: Policy, granularity: usize) -> Box<dyn ProtectionPolicy> {
+    match policy {
+        Policy::ZeroSpaceParity => Box::new(ParityProtection),
+        _ => Box::new(SchemeProtection::new(policy, granularity)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| fp::quantize_f16((i as f32 / n as f32) * 2.0 - 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn trait_hybrid_is_bit_identical_to_codec() {
+        let ws = ramp(2000);
+        for g in [1usize, 4, 16] {
+            let codec = WeightCodec::hybrid(g);
+            let direct = codec.encode(&ws);
+            let p = protection_for(Policy::Hybrid, g);
+            let mut via = Encoded::with_context(Policy::Hybrid, g);
+            for workers in [1usize, 3] {
+                p.encode_into(&ws, &mut via, workers);
+                assert_eq!(via.words, direct.words, "g={g} workers={workers}");
+                assert_eq!(via.schemes, direct.schemes, "g={g}");
+                let mut dec = Vec::new();
+                p.decode_into(&via, &mut dec, workers);
+                assert_eq!(dec, direct.decode(), "g={g} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn overhead_bits_match_table3_ratios() {
+        for (g, n) in [(1usize, 1024usize), (4, 1024), (16, 1024), (4, 13)] {
+            let p = protection_for(Policy::Hybrid, g);
+            assert_eq!(p.metadata_overhead_bits(n), 2 * n.div_ceil(g) as u64);
+            let enc = WeightCodec::hybrid(g).encode(&ramp(n));
+            let ratio = p.metadata_overhead_bits(n) as f64 / (16 * n) as f64;
+            assert!((ratio - enc.metadata_overhead()).abs() < 1e-12, "g={g} n={n}");
+        }
+        assert_eq!(protection_for(Policy::Unprotected, 4).metadata_overhead_bits(1024), 0);
+        assert_eq!(protection_for(Policy::ZeroSpaceParity, 4).metadata_overhead_bits(1024), 0);
+        assert_eq!(protection_for(Policy::Hybrid, 4).metadata_overhead_bits(0), 0);
+    }
+
+    #[test]
+    fn vulnerable_mask_counts_soft_cells() {
+        let p = protection_for(Policy::Hybrid, 4);
+        for h in (0..=u16::MAX).step_by(97) {
+            let mask = p.vulnerable_mask(h);
+            assert_eq!(mask.count_ones(), fp::soft_cells(h), "h={h:#06x}");
+            assert_eq!(mask & !0x5555, 0, "mask outside even positions");
+        }
+    }
+
+    #[test]
+    fn factory_labels_cover_extended_set() {
+        for policy in Policy::EXTENDED {
+            let p = protection_for(policy, 4);
+            assert_eq!(p.policy(), policy);
+            assert_eq!(p.label(), policy.label());
+        }
+    }
+}

@@ -22,6 +22,12 @@ pub enum Policy {
     ProtectRotate,
     /// Sign protection + best of all three (the paper's full scheme).
     Hybrid,
+    /// In-place zero-space parity (Guan et al. 2019): instead of backing up
+    /// the sign, bit 14 stores even parity over the exponent/high-mantissa
+    /// field (bits 6..=13). Single flips inside the protected field are
+    /// *detected* and the decode saturates into `[-1, 1]`; no reformation,
+    /// no metadata symbols, zero storage overhead.
+    ZeroSpaceParity,
 }
 
 impl Policy {
@@ -32,11 +38,24 @@ impl Policy {
             Policy::ProtectRound => &[Scheme::NoChange, Scheme::Round],
             Policy::ProtectRotate => &[Scheme::NoChange, Scheme::Rotate],
             Policy::Hybrid => &[Scheme::NoChange, Scheme::Rotate, Scheme::Round],
+            // Parity stores words verbatim below bit 14 — reformation would
+            // perturb the protected field the parity bit covers.
+            Policy::ZeroSpaceParity => &[Scheme::NoChange],
         }
     }
 
+    /// Whether bit 14 carries a sign backup (the paper's protection). The
+    /// parity policy spends the same bit on detection instead, so a sign
+    /// flip is as exposed as in the unprotected system.
     pub fn protects_sign(self) -> bool {
-        !matches!(self, Policy::Unprotected)
+        !matches!(self, Policy::Unprotected | Policy::ZeroSpaceParity)
+    }
+
+    /// Whether encoded streams carry per-group scheme symbols (the
+    /// tri-level metadata cells of §5.2). Unprotected stores raw words and
+    /// parity is in-place zero-space: neither bills metadata.
+    pub fn has_metadata(self) -> bool {
+        !matches!(self, Policy::Unprotected | Policy::ZeroSpaceParity)
     }
 
     pub fn label(self) -> &'static str {
@@ -45,6 +64,7 @@ impl Policy {
             Policy::ProtectRound => "baseline+rounding",
             Policy::ProtectRotate => "baseline+rotate",
             Policy::Hybrid => "hybrid",
+            Policy::ZeroSpaceParity => "zero-parity",
         }
     }
 
@@ -54,15 +74,29 @@ impl Policy {
             "baseline+rounding" | "round" => Some(Policy::ProtectRound),
             "baseline+rotate" | "rotate" => Some(Policy::ProtectRotate),
             "hybrid" => Some(Policy::Hybrid),
+            "zero-parity" | "parity" => Some(Policy::ZeroSpaceParity),
             _ => None,
         }
     }
 
+    /// The four bars of Fig. 8 (the paper's design space). Legacy sweep
+    /// output stays keyed to this set; [`Policy::EXTENDED`] adds the
+    /// related-work competitors.
     pub const ALL: [Policy; 4] = [
         Policy::Unprotected,
         Policy::ProtectRound,
         Policy::ProtectRotate,
         Policy::Hybrid,
+    ];
+
+    /// Every policy including the related-work competitors — the axis the
+    /// `mlcstt sweep --policies all` front iterates.
+    pub const EXTENDED: [Policy; 5] = [
+        Policy::Unprotected,
+        Policy::ProtectRound,
+        Policy::ProtectRotate,
+        Policy::Hybrid,
+        Policy::ZeroSpaceParity,
     ];
 }
 
@@ -212,9 +246,21 @@ mod tests {
 
     #[test]
     fn labels_roundtrip() {
-        for p in Policy::ALL {
+        for p in Policy::EXTENDED {
             assert_eq!(Policy::from_label(p.label()), Some(p));
         }
+        assert_eq!(Policy::from_label("parity"), Some(Policy::ZeroSpaceParity));
         assert_eq!(Policy::from_label("nope"), None);
+    }
+
+    #[test]
+    fn extended_is_all_plus_parity() {
+        assert_eq!(&Policy::EXTENDED[..4], &Policy::ALL[..]);
+        assert_eq!(Policy::EXTENDED[4], Policy::ZeroSpaceParity);
+        assert_eq!(Policy::ZeroSpaceParity.candidates(), &[Scheme::NoChange]);
+        assert!(!Policy::ZeroSpaceParity.protects_sign());
+        assert!(!Policy::ZeroSpaceParity.has_metadata());
+        assert!(Policy::Hybrid.has_metadata());
+        assert!(!Policy::Unprotected.has_metadata());
     }
 }

@@ -27,6 +27,9 @@ const FIELD4: u64 = 0x3FFF_3FFF_3FFF_3FFF;
 const ONES4: u64 = 0x0001_0001_0001_0001;
 /// Low nibble of each lane (the Round target).
 const NIB4: u64 = 0x000F_000F_000F_000F;
+/// Parity-protected field (bits 6..=13, exponent + high mantissa) of each
+/// lane — the packed image of [`super::parity::PARITY_FIELD`].
+const PARITY_FIELD4: u64 = 0x3FC0_3FC0_3FC0_3FC0;
 /// Even (intra-cell low) bit positions of each lane.
 const EVEN4: u64 = 0x5555_5555_5555_5555;
 
@@ -87,6 +90,21 @@ pub fn invert4(s: Scheme, x: u64) -> u64 {
         Scheme::Rotate => rotate_field_left4(x),
         Scheme::NoChange | Scheme::Round => x,
     })
+}
+
+/// [`super::parity::encode_word`] on four quantized lanes: XOR-fold each
+/// lane's protected field (bits 6..=13) down to bit 6 and store the even
+/// parity in bit 14. The folds shift downward by at most 4 + 2 + 1 = 7
+/// positions, so bits leaking from the lane above (whose lowest masked bit
+/// sits at lane-relative 16 + 6 = 22) land no lower than bit 15 — bit 6 of
+/// every lane stays contamination-free and carries the exact 8-bit parity.
+#[inline]
+pub fn parity_protect4(x: u64) -> u64 {
+    let mut f = x & PARITY_FIELD4;
+    f ^= f >> 4;
+    f ^= f >> 2;
+    f ^= f >> 1;
+    (x & !BACKUP4) | (((f >> 6) & ONES4) << 14)
 }
 
 // --------------------------------------------------------- slice kernels
@@ -307,6 +325,19 @@ mod tests {
                 let expect: Vec<u16> = stored.iter().map(|&w| scheme::invert(s, w)).collect();
                 assert_eq!(back, expect, "{s:?} len={len}");
             }
+        }
+    }
+
+    #[test]
+    fn parity_protect_matches_scalar_sampled() {
+        use crate::encoding::parity;
+        for h in (0..=u16::MAX).step_by(251) {
+            let ws = lanes_of(h);
+            assert_eq!(
+                unpack4(parity_protect4(pack4(ws))),
+                ws.map(parity::encode_word),
+                "parity h={h:#06x}"
+            );
         }
     }
 

@@ -96,8 +96,9 @@ pub fn run_accuracy_experiment(
 
 // -------------------------------------------------------------- rate sweep
 
-/// One error-rate point of a sweep: per-policy accuracy rows (in
-/// [`Policy::ALL`] order) plus the matching store reports.
+/// One error-rate point of a sweep: per-policy accuracy rows (in the
+/// sweep's policy-axis order — [`Policy::ALL`] for the legacy drivers)
+/// plus the matching store reports.
 pub struct RatePoint {
     pub rate: f64,
     pub rows: Vec<AccuracyRow>,
@@ -128,6 +129,7 @@ fn rate_sweep_core<E>(
     weights: &WeightFile,
     base: &StoreConfig,
     rates: &[f64],
+    policies: &[Policy],
     reuse_clean: bool,
     mut eval: E,
 ) -> Result<(Vec<RatePoint>, usize)>
@@ -143,7 +145,7 @@ where
         })
         .collect();
     let mut encode_passes = 0usize;
-    for policy in Policy::ALL {
+    for &policy in policies {
         let mut dep = Deployment::builder()
             .weights_ref(weights)
             .store(StoreConfig {
@@ -205,7 +207,24 @@ pub fn run_rate_sweep_with<E>(
 where
     E: FnMut(Policy, f64, &[ParamSpec], &StoreReport) -> Result<f64>,
 {
-    rate_sweep_core(weights, base, rates, true, eval)
+    rate_sweep_core(weights, base, rates, &Policy::ALL, true, eval)
+}
+
+/// [`run_rate_sweep_with`] over an explicit policy axis — the
+/// `--policies` front of `mlcstt sweep`. Rows inside each point follow
+/// `policies` order; passing [`Policy::ALL`] reproduces the legacy sweep
+/// exactly (same deployments, same flip sets, same rows).
+pub fn run_policy_sweep_with<E>(
+    weights: &WeightFile,
+    base: &StoreConfig,
+    rates: &[f64],
+    policies: &[Policy],
+    eval: E,
+) -> Result<(Vec<RatePoint>, usize)>
+where
+    E: FnMut(Policy, f64, &[ParamSpec], &StoreReport) -> Result<f64>,
+{
+    rate_sweep_core(weights, base, rates, policies, true, eval)
 }
 
 /// [`run_rate_sweep_with`] minus the flip-set-aware shortcut: every point
@@ -220,7 +239,7 @@ pub fn run_rate_sweep_with_rematerialize<E>(
 where
     E: FnMut(Policy, f64, &[ParamSpec], &StoreReport) -> Result<f64>,
 {
-    rate_sweep_core(weights, base, rates, false, eval)
+    rate_sweep_core(weights, base, rates, &Policy::ALL, false, eval)
 }
 
 /// Render sweep points as one table: a row per (rate, policy) with
@@ -259,6 +278,21 @@ pub fn run_rate_sweep(
     eval: usize,
     seed: u64,
 ) -> Result<RateSweep> {
+    run_rate_sweep_policies(dir, model, rates, &Policy::ALL, granularity, eval, seed)
+}
+
+/// [`run_rate_sweep`] over an explicit policy axis (the
+/// `mlcstt sweep --policies` path): identical pipeline, rows keyed by the
+/// given policies instead of the fixed Fig. 8 four.
+pub fn run_rate_sweep_policies(
+    dir: &Path,
+    model: &str,
+    rates: &[f64],
+    policies: &[Policy],
+    granularity: usize,
+    eval: usize,
+    seed: u64,
+) -> Result<RateSweep> {
     let (manifest, weights) = load_model(dir, model)?;
     let (hlo, _, _) = model_paths(dir, model);
     let test = TestSet::read(&dir.join("testset.bin"))?;
@@ -272,11 +306,12 @@ pub fn run_rate_sweep(
         seed,
         ..StoreConfig::default()
     };
-    let (points, encode_passes) = run_rate_sweep_with(&weights, &base, rates, |_, _, tensors, _| {
-        engine.restage(tensors)?;
-        let (acc, _, _) = engine.accuracy(&test, eval)?;
-        Ok(acc)
-    })?;
+    let (points, encode_passes) =
+        run_policy_sweep_with(&weights, &base, rates, policies, |_, _, tensors, _| {
+            engine.restage(tensors)?;
+            let (acc, _, _) = engine.accuracy(&test, eval)?;
+            Ok(acc)
+        })?;
     let table = rate_sweep_table(
         &format!("{model} (g={granularity}, eval={eval}, seed={seed})"),
         error_free,

@@ -1,0 +1,243 @@
+//! Entropy-based error-impact estimation (Khoshavi et al. 2020 direction):
+//! predict a policy's accuracy loss from the *stored stream's content* —
+//! no fault campaign, no RNG.
+//!
+//! Derivation (DESIGN.md §13): the write/retention fault model
+//! ([`crate::stt::ErrorModel`]) corrupts each vulnerable (`01`/`10`) cell
+//! independently with probability `rate`, then flips exactly one of its
+//! two junction bits, chosen uniformly. To first order in `rate` the
+//! expected decoded-value damage of a stream is therefore a sum over
+//! (stored word, vulnerable cell, junction) triples:
+//!
+//! ```text
+//!   E[SSE] ≈ Σ_words Σ_{vulnerable cells} Σ_{junction ∈ {lo, hi}}
+//!            (rate / 2) · (decode(word ^ junction_bit) − decode(word))²
+//! ```
+//!
+//! Because stored words repeat heavily (weights are quantized f16), the
+//! sum collapses onto a pattern census: one `(scheme symbol, word)`
+//! histogram over the stream, then one decode-delta evaluation per
+//! *distinct* bucket instead of per word. Non-finite corrupted decodes
+//! saturate to ±65504, the same convention as
+//! [`super::bitflip_sse_study`]. The estimate drops the O(rate²)
+//! multi-flip terms, so it is a *ranking* tool, not an absolute
+//! predictor — `rust/tests/policy_matrix.rs` validates exactly that: the
+//! estimator's policy ordering matches the real campaign's at the
+//! published rates.
+//!
+//! The per-bit Shannon entropy of the stored stream rides along as the
+//! Khoshavi-style diagnostic: high-entropy bit positions are where
+//! content-dependent vulnerability (and thus damage) concentrates.
+
+use crate::encoding::{parity, scheme, Encoded, Policy, Scheme, WeightCodec};
+use crate::fp;
+
+/// Saturation value for corrupted decodes that overflow f16 (the
+/// [`super::bitflip_sse_study`] convention).
+const SATURATE: f32 = 65504.0;
+
+/// One policy's predicted fault impact at one error rate — everything the
+/// sweep front reports for the "entropy-estimated" system.
+#[derive(Clone, Debug)]
+pub struct ImpactEstimate {
+    /// Policy the estimated stream was encoded under.
+    pub policy: Policy,
+    /// Per-cell corruption probability the estimate is evaluated at.
+    pub rate: f64,
+    /// First-order expected sum of squared decoded-value errors.
+    pub expected_sse: f64,
+    /// First-order expected number of weights whose decode changes.
+    pub expected_upsets: f64,
+    /// `1 - expected_upsets / n`: the predicted fraction of weights that
+    /// decode bit-exactly despite faults (clamped to `[0, 1]`).
+    pub predicted_fidelity: f64,
+    /// Shannon entropy (bits) of each stored bit position over the stream,
+    /// LSB first — the content-concentration diagnostic.
+    pub bit_entropy: [f64; 16],
+    /// Mean of [`Self::bit_entropy`].
+    pub mean_entropy: f64,
+}
+
+/// Decode one stored image under an explicit `(policy, scheme)` pair —
+/// the bucket-level form of [`Encoded::decode_word`].
+#[inline]
+fn decode_stored(policy: Policy, s: Scheme, stored: u16) -> f32 {
+    let v = match policy {
+        Policy::Unprotected => fp::f16_bits_to_f32(stored),
+        Policy::ZeroSpaceParity => parity::decode_word(stored),
+        _ => fp::f16_bits_to_f32(scheme::invert(s, stored)),
+    };
+    if v.is_finite() {
+        v
+    } else {
+        SATURATE.copysign(v)
+    }
+}
+
+/// Estimate the fault impact of an encoded (clean) stream at `rate`
+/// analytically. Deterministic, RNG-free, and O(distinct words), not
+/// O(weights): the heavy quantization of f16 weight tensors makes the
+/// census tiny relative to the stream.
+pub fn estimate_impact(enc: &Encoded, rate: f64) -> ImpactEstimate {
+    let n = enc.len();
+    // (scheme symbol, stored word) census. Metadata-free policies have a
+    // single implicit NoChange symbol.
+    let syms = if enc.policy.has_metadata() { 3 } else { 1 };
+    let mut census = vec![0u64; syms << 16];
+    let mut bit_counts = [0u64; 16];
+    for (i, &w) in enc.words.iter().enumerate() {
+        let s = if syms == 1 {
+            0
+        } else {
+            enc.scheme_of(i).symbol() as usize
+        };
+        census[(s << 16) | w as usize] += 1;
+        let mut m = w;
+        while m != 0 {
+            bit_counts[m.trailing_zeros() as usize] += 1;
+            m &= m - 1;
+        }
+    }
+
+    let mut expected_sse = 0.0f64;
+    let mut expected_upsets = 0.0f64;
+    let junction_p = rate * 0.5;
+    for (key, &count) in census.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let w = (key & 0xFFFF) as u16;
+        let s = Scheme::ALL[key >> 16];
+        let clean = decode_stored(enc.policy, s, w);
+        // Each vulnerable cell fails with probability `rate` and flips its
+        // low (soft) or high (hard) junction with probability 1/2 each.
+        let mut mask = (w ^ (w >> 1)) & 0x5555;
+        while mask != 0 {
+            let lo = mask.trailing_zeros();
+            for bit in [lo, lo + 1] {
+                let hit = decode_stored(enc.policy, s, w ^ (1 << bit));
+                if hit != clean {
+                    let d = (hit - clean) as f64;
+                    expected_sse += count as f64 * junction_p * d * d;
+                    expected_upsets += count as f64 * junction_p;
+                }
+            }
+            mask &= mask - 1;
+        }
+    }
+
+    let mut bit_entropy = [0.0f64; 16];
+    if n > 0 {
+        for (h, &ones) in bit_entropy.iter_mut().zip(&bit_counts) {
+            let p = ones as f64 / n as f64;
+            if p > 0.0 && p < 1.0 {
+                *h = -(p * p.log2() + (1.0 - p) * (1.0 - p).log2());
+            }
+        }
+    }
+    let mean_entropy = bit_entropy.iter().sum::<f64>() / 16.0;
+    let predicted_fidelity = if n == 0 {
+        1.0
+    } else {
+        (1.0 - expected_upsets / n as f64).clamp(0.0, 1.0)
+    };
+
+    ImpactEstimate {
+        policy: enc.policy,
+        rate,
+        expected_sse,
+        expected_upsets,
+        predicted_fidelity,
+        bit_entropy,
+        mean_entropy,
+    }
+}
+
+/// Convenience wrapper: encode `weights` under `(policy, granularity)` and
+/// estimate the impact of faulting that stream at `rate`.
+pub fn estimate_policy_impact(
+    policy: Policy,
+    granularity: usize,
+    weights: &[f32],
+    rate: f64,
+) -> ImpactEstimate {
+    let enc = WeightCodec::new(policy, granularity).encode(weights);
+    estimate_impact(&enc, rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stt::error::ERROR_RATE_HI;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| fp::quantize_f16((i as f32 / n as f32) * 1.8 - 0.9))
+            .collect()
+    }
+
+    #[test]
+    fn zero_rate_predicts_zero_damage() {
+        let est = estimate_policy_impact(Policy::Hybrid, 4, &ramp(500), 0.0);
+        assert_eq!(est.expected_sse, 0.0);
+        assert_eq!(est.expected_upsets, 0.0);
+        assert_eq!(est.predicted_fidelity, 1.0);
+    }
+
+    #[test]
+    fn first_order_estimate_is_linear_in_rate() {
+        let ws = ramp(777);
+        for policy in Policy::EXTENDED {
+            let a = estimate_policy_impact(policy, 4, &ws, 1e-2);
+            let b = estimate_policy_impact(policy, 4, &ws, 2e-2);
+            assert!(
+                (b.expected_sse - 2.0 * a.expected_sse).abs() <= 1e-9 * a.expected_sse.max(1.0),
+                "{policy:?}"
+            );
+            assert!(
+                (b.expected_upsets - 2.0 * a.expected_upsets).abs()
+                    <= 1e-9 * a.expected_upsets.max(1.0),
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn protection_ranks_below_unprotected() {
+        let ws = ramp(4096);
+        let raw = estimate_policy_impact(Policy::Unprotected, 1, &ws, ERROR_RATE_HI);
+        // The paper's scheme suppresses vulnerable cells *and* shields the
+        // sign; parity cannot reduce vulnerability but clamps the
+        // catastrophic exponent flips. Both must predict less damage.
+        for policy in [Policy::Hybrid, Policy::ZeroSpaceParity] {
+            let est = estimate_policy_impact(policy, 4, &ws, ERROR_RATE_HI);
+            assert!(
+                est.expected_sse < raw.expected_sse,
+                "{policy:?}: {} vs raw {}",
+                est.expected_sse,
+                raw.expected_sse
+            );
+        }
+    }
+
+    #[test]
+    fn estimator_is_deterministic_and_entropy_bounded() {
+        let ws = ramp(1000);
+        let a = estimate_policy_impact(Policy::Hybrid, 4, &ws, ERROR_RATE_HI);
+        let b = estimate_policy_impact(Policy::Hybrid, 4, &ws, ERROR_RATE_HI);
+        assert_eq!(a.expected_sse, b.expected_sse);
+        assert_eq!(a.bit_entropy, b.bit_entropy);
+        for h in a.bit_entropy {
+            assert!((0.0..=1.0).contains(&h), "entropy {h} out of range");
+        }
+        assert!(a.mean_entropy > 0.0);
+    }
+
+    #[test]
+    fn empty_stream_is_benign() {
+        let est = estimate_policy_impact(Policy::Hybrid, 4, &[], ERROR_RATE_HI);
+        assert_eq!(est.expected_sse, 0.0);
+        assert_eq!(est.predicted_fidelity, 1.0);
+        assert_eq!(est.mean_entropy, 0.0);
+    }
+}

@@ -8,7 +8,12 @@
 //!
 //! [`FaultCampaign`] packages that flow with explicit seeding so every
 //! reported accuracy number is reproducible, plus the Fig. 4 bit-position
-//! SSE study.
+//! SSE study. [`estimator`] is the campaign's analytic complement: a
+//! census-driven first-order prediction of the same damage, no RNG needed.
+
+pub mod estimator;
+
+pub use estimator::{estimate_impact, estimate_policy_impact, ImpactEstimate};
 
 use crate::encoding::{Encoded, WeightCodec};
 use crate::fp;

@@ -286,21 +286,37 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         .flag("artifacts", "", ARTIFACTS_HELP)
         .flag("rates", "0.0,0.005,0.01,0.015,0.02", "soft-error rates to sweep")
         .flag("granularity", "4", "metadata granularity")
-        .flag("eval", "512", "test images to evaluate per point")
-        .flag("seed", "7", "fault-injection seed");
+        .flag("eval", "", "test images per point (default: $MLCSTT_EVAL, then 512)")
+        .flag("seed", "7", "fault-injection seed")
+        .flag(
+            "policies",
+            "",
+            "policy axis: \"all\" (every policy incl. zero-parity) or comma-separated \
+             labels; emits bench_out/SWEEP_policies.json and runs artifact-free if \
+             needed (empty = the Fig. 8 four through PJRT artifacts)",
+        );
     let m = cmd.parse(args).map_err(usage_err)?;
     let rates: Vec<f64> = m
         .list("rates")
         .iter()
         .map(|r| r.parse().with_context(|| format!("bad --rates entry {r:?}")))
         .collect::<Result<_>>()?;
+    let eval = if m.str("eval").is_empty() {
+        Config::from_env().eval_or(512)
+    } else {
+        m.usize("eval")?
+    };
+
+    if !m.str("policies").is_empty() {
+        return cmd_sweep_policies(&m, &rates, eval);
+    }
 
     let exp = mlcstt::experiments::run_rate_sweep(
         &artifacts_dir(&m),
         m.str("model"),
         &rates,
         m.usize("granularity")?,
-        m.usize("eval")?,
+        eval,
         m.u64("seed")?,
     )?;
     println!("{}", exp.table);
@@ -309,6 +325,147 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         exp.encode_passes,
         rates.len()
     );
+    Ok(())
+}
+
+/// The `--policies` front: sweep an explicit policy axis (ISSUE 8), print
+/// the table, and write the machine-readable per-policy front — measured
+/// campaign rows plus the analytic entropy-estimator rows — to
+/// `SWEEP_policies.json` in `$MLCSTT_BENCH_DIR` (default `bench_out/`).
+/// With trained artifacts present the metric is model accuracy through
+/// PJRT; without them it is weight fidelity on a synthetic trained-shaped
+/// tensor of `eval` weights (the `rate_sweep` example's fallback).
+fn cmd_sweep_policies(m: &mlcstt::util::cli::Matches, rates: &[f64], eval: usize) -> Result<()> {
+    use mlcstt::coordinator::StoreConfig;
+    use mlcstt::experiments::{rate_sweep_table, run_policy_sweep_with, run_rate_sweep_policies};
+    use mlcstt::faults::estimate_policy_impact;
+    use mlcstt::runtime::artifacts::{model_available, ParamSpec};
+    use mlcstt::util::json::{obj, Json};
+
+    let spec = m.str("policies");
+    let policies: Vec<Policy> = if spec == "all" {
+        Policy::EXTENDED.to_vec()
+    } else {
+        m.list("policies")
+            .iter()
+            .map(|l| Policy::from_label(l).with_context(|| format!("bad --policies entry {l:?}")))
+            .collect::<Result<_>>()?
+    };
+    let dir = artifacts_dir(m);
+    let model = m.str("model");
+    let granularity = m.usize("granularity")?;
+    let seed = m.u64("seed")?;
+
+    let (points, encode_passes, error_free, metric, flat, source) =
+        if model_available(&dir, model) {
+            let sweep =
+                run_rate_sweep_policies(&dir, model, rates, &policies, granularity, eval, seed)?;
+            let (_, weights) = load_weights(&dir, model)?;
+            (
+                sweep.points,
+                sweep.encode_passes,
+                sweep.error_free,
+                "accuracy",
+                weights.flat(),
+                model.to_string(),
+            )
+        } else {
+            println!(
+                "({model} artifacts missing — sweeping a synthetic tensor, fidelity metric)\n"
+            );
+            let mut rng = Xoshiro256::seeded(seed);
+            let weights = WeightFile {
+                params: vec![ParamSpec {
+                    name: "synthetic.w".into(),
+                    shape: vec![eval],
+                    data: (0..eval)
+                        .map(|_| ((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
+                        .collect(),
+                }],
+            };
+            let base = StoreConfig {
+                granularity,
+                seed,
+                ..StoreConfig::default()
+            };
+            let clean = weights.params[0].data.clone();
+            let (points, encode_passes) =
+                run_policy_sweep_with(&weights, &base, rates, &policies, |_, _, tensors, _| {
+                    let same = clean
+                        .iter()
+                        .zip(&tensors[0].data)
+                        .filter(|(a, b)| mlcstt::fp::quantize_f16(**a).to_bits() == b.to_bits())
+                        .count();
+                    Ok(same as f64 / clean.len() as f64)
+                })?;
+            (points, encode_passes, 1.0, "weight_fidelity", clean, "synthetic".to_string())
+        };
+
+    println!(
+        "{}",
+        rate_sweep_table(
+            &format!("{source} policies=[{spec}] (g={granularity}, eval={eval}, seed={seed}) — {metric}"),
+            error_free,
+            &points,
+        )
+    );
+    println!(
+        "(encode+store passes: {encode_passes} — one per policy for all {} rate points)",
+        rates.len()
+    );
+
+    let mut rows = Vec::new();
+    for p in &points {
+        for (row, report) in p.rows.iter().zip(&p.reports) {
+            rows.push(obj(vec![
+                ("system", Json::Str(row.system.clone())),
+                ("rate", Json::Num(p.rate)),
+                ("accuracy", Json::Num(row.accuracy)),
+                ("flipped_cells", Json::Num(row.flipped_cells as f64)),
+                ("read_nj", Json::Num(report.read_energy.nanojoules)),
+                ("write_nj", Json::Num(report.write_energy.nanojoules)),
+                ("metadata_overhead", Json::Num(report.metadata_overhead)),
+                ("soft_cells", Json::Num(report.soft_cells_stored as f64)),
+            ]));
+        }
+    }
+    // The analytic competitor rides along as its own system: a predicted
+    // front from the stream census alone (no fault campaign, no RNG).
+    let mut estimated = Vec::new();
+    for &policy in &policies {
+        for &rate in rates {
+            let est = estimate_policy_impact(policy, granularity, &flat, rate);
+            estimated.push(obj(vec![
+                ("system", Json::Str(policy.label().into())),
+                ("rate", Json::Num(rate)),
+                ("expected_sse", Json::Num(est.expected_sse)),
+                ("expected_upsets", Json::Num(est.expected_upsets)),
+                ("predicted_fidelity", Json::Num(est.predicted_fidelity)),
+                ("mean_bit_entropy", Json::Num(est.mean_entropy)),
+            ]));
+        }
+    }
+    let mut systems: Vec<Json> = policies.iter().map(|p| Json::Str(p.label().into())).collect();
+    systems.push(Json::Str("entropy-estimated".into()));
+    let doc = obj(vec![
+        ("schema", Json::Str("mlcstt/sweep-policies/v1".into())),
+        ("model", Json::Str(source)),
+        ("metric", Json::Str(metric.into())),
+        ("granularity", Json::Num(granularity as f64)),
+        ("eval", Json::Num(eval as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("error_free", Json::Num(error_free)),
+        ("systems", Json::Arr(systems)),
+        ("rows", Json::Arr(rows)),
+        ("estimated", Json::Arr(estimated)),
+    ]);
+    let out_dir = mlcstt::api::env::bench_dir().unwrap_or_else(|| PathBuf::from("bench_out"));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let path = out_dir.join("SWEEP_policies.json");
+    std::fs::write(&path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 
@@ -355,7 +512,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("artifacts", "", ARTIFACTS_HELP)
         .flag("requests", "256", "number of requests to replay")
         .flag("rate", "0.015", "soft-error rate")
-        .flag("policy", "hybrid", "unprotected | round | rotate | hybrid")
+        .flag("policy", "hybrid", "unprotected | round | rotate | hybrid | zero-parity")
         .flag("granularity", "4", "metadata granularity")
         .flag("max-wait-ms", "20", "batcher flush timeout")
         .flag("seed", "11", "campaign seed");

@@ -123,6 +123,16 @@ pub fn pool_extent() -> Option<usize> {
     raw("MLCSTT_POOL_EXTENT")?.parse::<usize>().ok().map(|n| n.max(1))
 }
 
+/// `MLCSTT_POLICY` — protection-policy selection for deployments built
+/// without an explicit store override: any [`crate::encoding::Policy`]
+/// label (`unprotected`, `round`, `rotate`, `hybrid`, `zero-parity`, plus
+/// the long-form Fig. 8 names). Unset or unrecognized is `None` (callers
+/// default to the paper's hybrid scheme), matching the `MLCSTT_F16`
+/// enum-parse pattern.
+pub fn policy() -> Option<crate::encoding::Policy> {
+    crate::encoding::Policy::from_label(raw("MLCSTT_POLICY")?.as_str())
+}
+
 /// `MLCSTT_EVICT` — shared-pool capacity-pressure policy: `lru` (evict
 /// the least-recently-served model, rebuild on demand) or `deny` (refuse
 /// the allocation). Unset or unrecognized is `None` (callers default to

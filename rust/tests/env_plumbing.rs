@@ -14,6 +14,7 @@
 use std::path::Path;
 
 use mlcstt::api::{Config, EvictPolicy};
+use mlcstt::encoding::Policy;
 use mlcstt::coordinator::ServerConfig;
 use mlcstt::fp::{self, F16Mode};
 use mlcstt::util::threads;
@@ -162,4 +163,23 @@ fn mlcstt_env_layering_builder_beats_env_beats_default() {
     assert_eq!(Config::from_env().evict_policy(), EvictPolicy::Lru, "unknown -> default");
     std::env::remove_var("MLCSTT_EVICT");
     assert_eq!(Config::from_env().evict_policy(), EvictPolicy::Lru);
+
+    // --- protection policy (ISSUE 8): the same enum-parse pattern, and
+    // the resolved value must reach the deployment's store view.
+    std::env::set_var("MLCSTT_POLICY", "zero-parity");
+    assert_eq!(Config::from_env().policy_or(Policy::Hybrid), Policy::ZeroSpaceParity);
+    assert_eq!(Config::from_env().store().policy, Policy::ZeroSpaceParity);
+    std::env::set_var("MLCSTT_POLICY", "parity"); // short alias
+    assert_eq!(Config::from_env().policy_or(Policy::Hybrid), Policy::ZeroSpaceParity);
+    std::env::set_var("MLCSTT_POLICY", "unprotected");
+    assert_eq!(Config::from_env().store().policy, Policy::Unprotected);
+    assert_eq!(
+        Config::builder().policy(Policy::ProtectRotate).build().store().policy,
+        Policy::ProtectRotate,
+        "builder beats env"
+    );
+    std::env::set_var("MLCSTT_POLICY", "extra-protected");
+    assert_eq!(Config::from_env().store().policy, Policy::Hybrid, "unknown -> default");
+    std::env::remove_var("MLCSTT_POLICY");
+    assert_eq!(Config::from_env().store().policy, Policy::Hybrid);
 }

@@ -4,7 +4,7 @@
 use mlcstt::encoding::scheme::{
     self, protect_sign, rotate_field_left, rotate_field_right, round_low_nibble, unprotect_sign,
 };
-use mlcstt::encoding::{select_scheme, Policy, Scheme, WeightCodec};
+use mlcstt::encoding::{parity, protection_for, select_scheme, Policy, Scheme, WeightCodec};
 use mlcstt::fp;
 use mlcstt::util::prop::{prop_assert, Runner};
 
@@ -148,5 +148,64 @@ fn prop_pattern_counts_invariants() {
         let ok = pc.iter().sum::<u64>() == 8 * ws.len() as u64
             && pc[1] + pc[2] == enc.soft_cells();
         prop_assert(ok, format!("{pc:?}"))
+    });
+}
+
+// ------------------------------------------------- zero-space parity
+
+/// Bit positions covered by the in-place parity code: the protected field
+/// (bits 6..=13) plus the parity bit itself (bit 14).
+const DETECT_BITS: [u16; 9] = [6, 7, 8, 9, 10, 11, 12, 13, 14];
+
+#[test]
+fn prop_parity_detects_any_single_flip_in_protected_field() {
+    Runner::new("parity-detects-single-flip", 0xAC, CASES).run(|g| {
+        let h = fp::f32_to_f16_bits(g.weights(1, 1)[0]);
+        let stored = parity::encode_word(h);
+        let bit = *g.pick(&DETECT_BITS);
+        let flipped = stored ^ (1u16 << bit);
+        prop_assert(
+            !parity::mismatch(stored) && parity::mismatch(flipped),
+            format!("h={h:#06x} stored={stored:#06x} bit={bit}"),
+        )
+    });
+}
+
+#[test]
+fn prop_parity_repair_never_increases_error() {
+    // Detect-and-saturate vs decoding the same corrupted word with no
+    // repair: clamping into [-1, 1] is a projection onto a convex set
+    // containing the true weight, so it can never move the decode away
+    // from it — for *any* flip pattern, not just single detectable flips.
+    Runner::new("parity-repair-contracts", 0xAD, CASES).run(|g| {
+        let w = g.weights(1, 1)[0];
+        let h = fp::f32_to_f16_bits(w);
+        let truth = fp::f16_bits_to_f32(h);
+        let corrupted = parity::encode_word(h) ^ g.u16();
+        let repaired = parity::decode_word(corrupted);
+        let unrepaired = fp::f16_bits_to_f32(corrupted & !fp::BACKUP_MASK);
+        prop_assert(
+            (repaired - truth).abs() <= (unrepaired - truth).abs(),
+            format!(
+                "w={w} corrupted={corrupted:#06x}: |{repaired} - {truth}| > |{unrepaired} - {truth}|"
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_parity_overhead_is_exactly_zero() {
+    Runner::new("parity-zero-space", 0xAE, 150).run(|g| {
+        let ws = g.weights(1, 300);
+        let granularity = 1 + g.below(16);
+        let prot = protection_for(Policy::ZeroSpaceParity, granularity);
+        if prot.metadata_overhead_bits(ws.len()) != 0 {
+            return Err(format!("overhead bits nonzero at n={}", ws.len()));
+        }
+        let enc = WeightCodec::new(Policy::ZeroSpaceParity, granularity).encode(&ws);
+        let ok = enc.schemes.is_empty()
+            && enc.metadata_overhead() == 0.0
+            && enc.decode().iter().zip(&ws).all(|(d, w)| *d == fp::quantize_f16(*w));
+        prop_assert(ok, format!("g={granularity} n={}", ws.len()))
     });
 }
