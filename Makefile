@@ -7,7 +7,7 @@
 ARTIFACTS ?= artifacts
 FORCE ?=
 
-.PHONY: artifacts build test bench sweep serve-demo load clean-artifacts
+.PHONY: artifacts build test bench sweep serve-demo swap-demo load clean-artifacts
 
 artifacts:
 	python3 python/compile/aot.py --out-dir $(ARTIFACTS) $(if $(FORCE),--force,)
@@ -23,6 +23,13 @@ sweep:
 # linear classifiers — runs anywhere, no PJRT needed.
 serve-demo:
 	cargo run --release --offline --example registry_serve
+
+# Zero-downtime delivery chaos smoke (DESIGN.md §14): streams three
+# versioned rollouts through injected read faults, a retry-exhausting
+# corruption, and a failing canary, asserting zero dropped or mis-served
+# requests and bit-identical rollback. Emits bench_out/DELIVERY_hot_swap.json.
+swap-demo:
+	cargo run --release --offline --example hot_swap
 
 # Overload characterization (DESIGN.md §11): closed/open-loop sweep past
 # saturation with bounded admission; emits bench_out/LOAD_serving.json.

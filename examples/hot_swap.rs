@@ -1,0 +1,262 @@
+//! Zero-downtime delivery demo + chaos smoke: stream a new weight
+//! version through verify → stage → canary → hot swap while the
+//! incumbent keeps serving, then prove the rollback contract by letting
+//! two more deliveries fail on purpose (DESIGN.md §14).
+//!
+//! ```bash
+//! make swap-demo         # == cargo run --release --offline --example hot_swap
+//! ```
+//!
+//! Self-contained (no trained artifacts): a synthetic linear classifier
+//! serves from a shared multi-tenant MLC buffer pool sized to hold the
+//! live and the staged version side by side. The script:
+//!
+//! 1. serves version 0 and checks every answer against its decode;
+//! 2. leaves a tail of requests **in flight**, then delivers v1 through
+//!    a chaos stream (every chunk times out once and arrives corrupted
+//!    once — the retry/backoff path converges) and hot-swaps it in; the
+//!    in-flight tail must drain on the old engine, bit-exact;
+//! 3. delivers v2 with one chunk corrupted past the retry budget —
+//!    `RetriesExhausted`, rollback, v1 keeps serving bit-identically;
+//! 4. delivers v3 with a deliberately wrong canary expectation —
+//!    `CanaryFailed`, rollback, v1 still serving.
+//!
+//! The process exits non-zero if any request is dropped or mis-served,
+//! or if a failed delivery leaves anything but the incumbent serving —
+//! this is the CI chaos gate. Writes `DELIVERY_hot_swap.json` (counts,
+//! verdicts) to `$MLCSTT_BENCH_DIR` (default `bench_out/`).
+//!
+//! Environment (via `api::Config`): MLCSTT_EVAL scales the streamed
+//! weight count (default 512 → 4096 in CI), MLCSTT_REQUESTS the replay
+//! length per phase, plus the delivery knobs MLCSTT_DELIVERY_RETRIES /
+//! MLCSTT_DELIVERY_BACKOFF_MS / MLCSTT_CANARY and the pool geometry
+//! knobs.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use mlcstt::api::{
+    deliver, BufferPool, CanaryCheck, ChaosStream, Config, DeliveryError, DeploymentManifest,
+    MemoryStream, ModelRegistry,
+};
+use mlcstt::coordinator::{BatchClassifier, LinearEngine, StoreConfig};
+use mlcstt::runtime::artifacts::{ParamSpec, WeightFile};
+use mlcstt::stt::ErrorModel;
+use mlcstt::util::json::{obj, Json};
+use mlcstt::util::rng::Xoshiro256;
+
+const CLASSES: usize = 8;
+const BATCH: usize = 8;
+const MODEL: &str = "hotswap-demo";
+const CHUNK: usize = 256;
+
+/// Deterministic f16-representable weights for one version.
+fn weights_for(version: u64, dim: usize) -> WeightFile {
+    let mut rng = Xoshiro256::seeded(0x5EED ^ version.wrapping_mul(0x9E37_79B9));
+    WeightFile {
+        params: vec![ParamSpec {
+            name: "classifier.w".into(),
+            shape: vec![CLASSES, dim],
+            data: (0..CLASSES * dim)
+                .map(|_| {
+                    mlcstt::fp::quantize_f16(((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
+                })
+                .collect(),
+        }],
+    }
+}
+
+/// Canary probes for a version's clean weights: each probe image is a
+/// class row of the weight matrix, and the expectation is the clean
+/// decode's own argmax — robust to the mantissa-LSB faults the
+/// protected store may keep.
+fn canary_checks(weights: &WeightFile, dim: usize, sabotage: bool) -> Result<Vec<CanaryCheck>> {
+    let reference = LinearEngine::new(CLASSES, dim, 1, weights.flat())?;
+    (0..BATCH)
+        .map(|c| {
+            let row = (c % CLASSES) * dim;
+            let image = weights.params[0].data[row..row + dim].to_vec();
+            let mut expect = reference.classify_batch(&image)?[0];
+            if sabotage {
+                expect = (expect + 1) % CLASSES;
+            }
+            Ok(CanaryCheck { image, expect })
+        })
+        .collect()
+}
+
+/// Replay `n` closed-loop requests and demand every answer match the
+/// reference decode exactly. Returns the served count (anything short of
+/// `n` means a drop, which is a hard failure upstream).
+fn replay(
+    registry: &ModelRegistry,
+    reference: &LinearEngine,
+    dim: usize,
+    n: usize,
+    rng: &mut Xoshiro256,
+) -> Result<usize> {
+    for _ in 0..n {
+        let image: Vec<f32> = (0..dim).map(|_| (rng.next_gaussian() * 0.5) as f32).collect();
+        let want = reference.classify_batch(&image)?[0];
+        let got = registry
+            .submit(MODEL, image)?
+            .ticket()
+            .context("request shed during replay")?
+            .wait()
+            .context("request dropped during replay")?
+            .class;
+        ensure!(got == want, "mis-served: predicted {got}, decode says {want}");
+    }
+    Ok(n)
+}
+
+/// Decode-reference engine for the pool tenant currently backing `tag`.
+fn pool_reference(pool: &BufferPool, tag: &str, dim: usize) -> Result<LinearEngine> {
+    let tensors = pool.tensors(tag)?;
+    LinearEngine::new(CLASSES, dim, 1, tensors[0].data.clone())
+}
+
+fn main() -> Result<()> {
+    let config = Config::builder().max_wait(Duration::from_millis(5)).build();
+    let eval = config.eval_or(512);
+    let requests = config.requests_or(96);
+    let dim = (eval / CLASSES).max(8);
+    let n_weights = CLASSES * dim;
+    println!(
+        "hot-swap chaos smoke: {n_weights} weights/version in {} chunks, {requests} requests/phase",
+        n_weights.div_ceil(CHUNK),
+    );
+
+    // Pool sized for the live and the staged version side by side (plus
+    // slack), unless the environment picks its own geometry.
+    let pool = BufferPool::from_config(&config)
+        .unwrap_or_else(|| BufferPool::new(9 * n_weights / 2, 4, 256, config.evict_policy()));
+    let store = StoreConfig {
+        error_model: ErrorModel::at_rate(0.002),
+        seed: 11,
+        ..StoreConfig::default()
+    };
+
+    // Version 0 goes live through the ordinary pooled path.
+    let v0 = weights_for(0, dim);
+    pool.admit(MODEL, &store, &v0)?;
+    let mut registry = ModelRegistry::new().with_pool(pool.clone());
+    registry.register_pooled(
+        MODEL,
+        move |t: &[ParamSpec]| LinearEngine::new(CLASSES, dim, BATCH, t[0].data.clone()),
+        config.server(),
+    )?;
+    let mut rng = Xoshiro256::seeded(7);
+    let v0_reference = pool_reference(&pool, MODEL, dim)?;
+    let mut served = replay(&registry, &v0_reference, dim, requests, &mut rng)?;
+    println!("phase 1: {served} requests served by v0, all matching its decode");
+
+    // Leave a tail in flight across the swap: admitted before the park,
+    // these must drain on the old engine, bit-exact.
+    let mut tail = Vec::new();
+    let mut tail_want = Vec::new();
+    for _ in 0..2 * BATCH {
+        let image: Vec<f32> = (0..dim).map(|_| (rng.next_gaussian() * 0.5) as f32).collect();
+        tail_want.push(v0_reference.classify_batch(&image)?[0]);
+        tail.push(registry.submit(MODEL, image)?.ticket()?);
+    }
+
+    // Delivery 1 (succeeds): every chunk times out once and arrives
+    // corrupted once before coming clean — inside the default budget.
+    let v1 = weights_for(1, dim);
+    let manifest = DeploymentManifest::describe(MODEL, 1, &v1, CHUNK, &store)?;
+    let mut stream =
+        ChaosStream::new(MemoryStream::from_weights(1, &v1, CHUNK)).fail_first(1).corrupt_first(1);
+    let checks = canary_checks(&v1, dim, false)?;
+    let delivered = deliver(&mut registry, &manifest, &mut stream, &checks, &config, move |t| {
+        LinearEngine::new(CLASSES, dim, BATCH, t[0].data.clone())
+    })
+    .map_err(|e| anyhow::anyhow!("chaos delivery should converge, got: {e}"))?;
+    println!(
+        "phase 2: v1 swapped in after {} retries ({:.1} ms backoff), {} canary batches",
+        delivered.retries,
+        delivered.backoff_total.as_secs_f64() * 1e3,
+        delivered.canary_batches,
+    );
+    for (t, want) in tail.into_iter().zip(tail_want) {
+        let got = t.wait().context("in-flight request dropped by the swap")?.class;
+        ensure!(got == want, "in-flight request mis-served across the swap");
+        served += 1;
+    }
+    let v1_tag = format!("{MODEL}@v1");
+    ensure!(!pool.contains(MODEL), "old tenant should be withdrawn after the swap");
+    let v1_reference = pool_reference(&pool, &v1_tag, dim)?;
+    served += replay(&registry, &v1_reference, dim, requests, &mut rng)?;
+    println!("phase 2: in-flight tail drained bit-exact; v1 now answers every request");
+
+    // Delivery 2 (fails): one chunk stays corrupted past the budget.
+    let v2 = weights_for(2, dim);
+    let manifest2 = DeploymentManifest::describe(MODEL, 2, &v2, CHUNK, &store)?;
+    let budget = config.delivery_retries_or(mlcstt::api::DEFAULT_DELIVERY_RETRIES);
+    let mut stream2 = ChaosStream::new(MemoryStream::from_weights(2, &v2, CHUNK))
+        .corrupt_first(budget + 1)
+        .on_chunk(0);
+    let checks2 = canary_checks(&v2, dim, false)?;
+    let err = deliver(&mut registry, &manifest2, &mut stream2, &checks2, &config, move |t| {
+        LinearEngine::new(CLASSES, dim, BATCH, t[0].data.clone())
+    })
+    .expect_err("a chunk corrupted past the budget must fail the delivery");
+    ensure!(
+        matches!(err, DeliveryError::RetriesExhausted { chunk: 0, .. }),
+        "expected RetriesExhausted on chunk 0, got: {err}"
+    );
+    ensure!(!pool.contains(&format!("{MODEL}@v2")), "failed staging must be withdrawn");
+    served += replay(&registry, &v1_reference, dim, requests, &mut rng)?;
+    println!("phase 3: exhausted delivery rolled back ({err}); v1 still serving bit-identically");
+
+    // Delivery 3 (fails): clean stream, sabotaged canary expectations.
+    let v3 = weights_for(3, dim);
+    let manifest3 = DeploymentManifest::describe(MODEL, 3, &v3, CHUNK, &store)?;
+    let mut stream3 = MemoryStream::from_weights(3, &v3, CHUNK);
+    let checks3 = canary_checks(&v3, dim, true)?;
+    let err3 = deliver(&mut registry, &manifest3, &mut stream3, &checks3, &config, move |t| {
+        LinearEngine::new(CLASSES, dim, BATCH, t[0].data.clone())
+    })
+    .expect_err("a sabotaged canary must block the swap");
+    ensure!(
+        matches!(err3, DeliveryError::CanaryFailed { .. }),
+        "expected CanaryFailed, got: {err3}"
+    );
+    ensure!(!pool.contains(&format!("{MODEL}@v3")), "canary-failed staging must be withdrawn");
+    served += replay(&registry, &v1_reference, dim, requests, &mut rng)?;
+    println!("phase 4: flaky canary rolled back ({err3}); v1 still serving bit-identically");
+
+    let report = registry.shutdown();
+    println!("\n{report}");
+    ensure!(report.swaps == 1, "exactly one swap should have committed");
+    ensure!(report.rollbacks == 2, "exactly two deliveries should have rolled back");
+    ensure!(report.total_errors() == 0, "no request may error in this smoke");
+    ensure!(report.total_shed() == 0, "no request may shed in this smoke");
+
+    let doc = obj(vec![
+        ("schema", Json::Str("mlcstt/delivery-smoke/v1".into())),
+        ("weights_per_version", Json::from(n_weights)),
+        ("chunks", Json::from(manifest.chunk_count())),
+        ("served", Json::from(served)),
+        ("dropped", Json::from(0usize)),
+        ("mis_served", Json::from(0usize)),
+        ("swaps", Json::Num(report.swaps as f64)),
+        ("rollbacks", Json::Num(report.rollbacks as f64)),
+        ("chunk_retries", Json::Num(report.delivery_retries as f64)),
+        ("unavailable", Json::from(report.total_unavailable())),
+        ("delivery", delivered.to_json()),
+        ("exhausted_error", Json::Str(err.to_string())),
+        ("canary_error", Json::Str(err3.to_string())),
+    ]);
+    let out_dir = mlcstt::api::env::bench_dir().unwrap_or_else(|| PathBuf::from("bench_out"));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let path = out_dir.join("DELIVERY_hot_swap.json");
+    std::fs::write(&path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {}", path.display());
+    println!("\nhot-swap chaos smoke PASSED: {served} served, 0 dropped, 0 mis-served");
+    Ok(())
+}

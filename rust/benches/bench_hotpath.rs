@@ -15,7 +15,10 @@ mod harness;
 
 use std::time::Duration;
 
-use mlcstt::api::{BufferPool, Config, Deployment, EvictPolicy, ModelRegistry};
+use mlcstt::api::{
+    deliver, BufferPool, Config, Deployment, DeploymentManifest, EvictPolicy, MemoryStream,
+    ModelRegistry,
+};
 use mlcstt::buffer::shared::SharedMlcBuffer;
 use mlcstt::buffer::{AccessStats, BufferConfig, MlcBuffer};
 use mlcstt::coordinator::{LinearEngine, ServerConfig, StoreConfig, WeightStore};
@@ -315,6 +318,53 @@ fn main() {
         });
         println!("registry route (2 models) : {}", harness::rate(m as u64, t.median));
         report.record("registry_route", m as u64, &t);
+    }
+
+    // Zero-downtime delivery (ISSUE 9): a full manifest -> streamed
+    // verify -> stage -> canary-free hot swap per iteration, version
+    // advancing monotonically so every swap commits.
+    {
+        const CLASSES: usize = 8;
+        const DIM: usize = 64;
+        const BATCH: usize = 8;
+        let lw = weights(CLASSES * DIM);
+        let wf = WeightFile {
+            params: vec![ParamSpec {
+                name: "deliver.w".into(),
+                shape: vec![CLASSES, DIM],
+                data: lw.clone(),
+            }],
+        };
+        let dcfg = Config::builder().delivery_backoff(Duration::ZERO).build();
+        let dstore = StoreConfig {
+            error_model: ErrorModel::at_rate(0.0),
+            seed: 17,
+            threads: 1,
+            ..StoreConfig::default()
+        };
+        let mut registry = ModelRegistry::new();
+        registry
+            .register(
+                "swap",
+                move || LinearEngine::new(CLASSES, DIM, BATCH, lw),
+                dcfg.server(),
+            )
+            .unwrap();
+        let m = CLASSES * DIM;
+        let mut version = 0u64;
+        let (_, t) = harness::time_stats(3, || {
+            version += 1;
+            let manifest =
+                DeploymentManifest::describe("swap", version, &wf, 128, &dstore).unwrap();
+            let mut stream = MemoryStream::from_weights(version, &wf, 128);
+            deliver(&mut registry, &manifest, &mut stream, &[], &dcfg, |p: &[ParamSpec]| {
+                LinearEngine::new(CLASSES, DIM, BATCH, p[0].data.clone())
+            })
+            .unwrap()
+            .chunks
+        });
+        println!("delivery hot swap        : {}", harness::rate(m as u64, t.median));
+        report.record("delivery_hot_swap", m as u64, &t);
     }
 
     // Shared multi-tenant pool (ISSUE 7): the wear-leveled alloc/free

@@ -47,6 +47,9 @@ pub struct Config {
     pool_extent: Option<usize>,
     evict: Option<EvictPolicy>,
     policy: Option<Policy>,
+    delivery_retries: Option<usize>,
+    delivery_backoff: Option<Duration>,
+    canary: Option<usize>,
 }
 
 impl Config {
@@ -152,6 +155,30 @@ impl Config {
         self.policy.unwrap_or(default)
     }
 
+    /// Per-chunk re-read budget for streamed weight delivery (builder,
+    /// else `MLCSTT_DELIVERY_RETRIES`), or the caller's `default`
+    /// ([`crate::api::DEFAULT_DELIVERY_RETRIES`] at the delivery entry
+    /// points). `0` fails a delivery on the first bad read.
+    pub fn delivery_retries_or(&self, default: usize) -> usize {
+        self.delivery_retries.unwrap_or(default)
+    }
+
+    /// Base backoff delay between delivery chunk retries (builder, else
+    /// `MLCSTT_DELIVERY_BACKOFF_MS`), or the caller's `default`
+    /// ([`crate::api::DEFAULT_DELIVERY_BACKOFF`] at the delivery entry
+    /// points). Zero retries immediately.
+    pub fn delivery_backoff_or(&self, default: Duration) -> Duration {
+        self.delivery_backoff.unwrap_or(default)
+    }
+
+    /// Canary probe batches a staged engine must pass before a hot swap
+    /// commits (builder, else `MLCSTT_CANARY`), or the caller's `default`
+    /// ([`crate::api::DEFAULT_CANARY_BATCHES`] at the delivery entry
+    /// points). `0` skips the canary.
+    pub fn canary_or(&self, default: usize) -> usize {
+        self.canary.unwrap_or(default)
+    }
+
     /// The serving view: a [`ServerConfig`] carrying this config's
     /// coalesce deadline, worker ceiling, and admission depth.
     pub fn server(&self) -> ServerConfig {
@@ -197,6 +224,9 @@ pub struct ConfigBuilder {
     pool_extent: Option<usize>,
     evict: Option<EvictPolicy>,
     policy: Option<Policy>,
+    delivery_retries: Option<usize>,
+    delivery_backoff: Option<Duration>,
+    canary: Option<usize>,
 }
 
 impl ConfigBuilder {
@@ -289,6 +319,24 @@ impl ConfigBuilder {
         self
     }
 
+    /// Override the per-chunk re-read budget for weight delivery.
+    pub fn delivery_retries(mut self, n: usize) -> Self {
+        self.delivery_retries = Some(n);
+        self
+    }
+
+    /// Override the base backoff delay between delivery chunk retries.
+    pub fn delivery_backoff(mut self, d: Duration) -> Self {
+        self.delivery_backoff = Some(d);
+        self
+    }
+
+    /// Override the canary probe batch count gating hot swaps.
+    pub fn canary(mut self, n: usize) -> Self {
+        self.canary = Some(n);
+        self
+    }
+
     /// Resolve every layer — builder override, then `MLCSTT_*`
     /// environment, then default — in this one place.
     pub fn build(self) -> Config {
@@ -320,6 +368,11 @@ impl ConfigBuilder {
             pool_extent: self.pool_extent.or_else(super::env::pool_extent),
             evict: self.evict.or_else(super::env::evict),
             policy: self.policy.or_else(super::env::policy),
+            delivery_retries: self.delivery_retries.or_else(super::env::delivery_retries),
+            delivery_backoff: self
+                .delivery_backoff
+                .or_else(|| super::env::delivery_backoff_ms().map(Duration::from_millis)),
+            canary: self.canary.or_else(super::env::canary),
         }
     }
 }
@@ -373,6 +426,23 @@ mod tests {
         // Clamps mirror the env accessors. (The LRU default and env
         // layering are pinned in env_plumbing.rs, away from ambient env.)
         assert_eq!(Config::builder().pool_banks(0).build().pool_banks_or(16), 1);
+    }
+
+    #[test]
+    fn delivery_knobs_layer_builder_over_default() {
+        let cfg = Config::builder()
+            .delivery_retries(2)
+            .delivery_backoff(Duration::from_millis(7))
+            .canary(3)
+            .build();
+        assert_eq!(cfg.delivery_retries_or(5), 2);
+        assert_eq!(cfg.delivery_backoff_or(Duration::from_millis(1)), Duration::from_millis(7));
+        assert_eq!(cfg.canary_or(1), 3);
+        // Zero is meaningful for all three (fail-fast / no wait / no
+        // canary), so none of them clamp.
+        let cfg = Config::builder().delivery_retries(0).canary(0).build();
+        assert_eq!(cfg.delivery_retries_or(5), 0);
+        assert_eq!(cfg.canary_or(4), 0);
     }
 
     #[test]

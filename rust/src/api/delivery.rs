@@ -1,0 +1,991 @@
+//! Zero-downtime weight delivery: streamed, hash-verified, hot-swapped
+//! deployments with retry/backoff, canary, and rollback (DESIGN.md §14).
+//!
+//! The paper's protection scheme keeps a faulty MLC buffer serving
+//! accurate inferences, but until this module the system assumed weights
+//! *arrive* whole and intact — one corrupted or truncated transfer meant
+//! a failed build and a dropped model. [`deliver`] closes that gap with
+//! an end-to-end rollout pipeline over the existing serving stack:
+//!
+//! 1. **Manifest** — a [`DeploymentManifest`] (model, version, protection
+//!    policy, granularity, fault rate, chunk geometry, per-chunk
+//!    checksums) is the unit of rollout: everything needed to verify the
+//!    stream and rebuild the staged store deterministically.
+//! 2. **Streamed verification** — a fallible [`WeightStream`] delivers
+//!    the flattened weights chunk by chunk; every chunk is length- and
+//!    hash-checked ([`chunk_checksum`], FNV-1a over the f32 bit
+//!    patterns) as it lands. Failed reads retry under a bounded budget
+//!    (`MLCSTT_DELIVERY_RETRIES`) with deterministic seeded equal-jitter
+//!    exponential backoff ([`crate::util::backoff::Backoff`],
+//!    `MLCSTT_DELIVERY_BACKOFF_MS`).
+//! 3. **Staging** — the verified weights build into the registry's
+//!    shared [`super::BufferPool`] under a versioned tenant tag *alongside* the
+//!    live version (or into a private staged store without a pool); the
+//!    incumbent keeps serving throughout.
+//! 4. **Canary** — a probe batch ([`CanaryCheck`], `MLCSTT_CANARY`
+//!    batches) must classify correctly through an engine built from the
+//!    staged tensors before the swap may commit.
+//! 5. **Atomic swap or rollback** — [`super::ModelRegistry::swap`] flips
+//!    routing to the new engine in one assignment and drains the old
+//!    server (no request dropped, accounting retired, never observable
+//!    half-swapped). *Any* failure — verification, staging, canary, swap
+//!    — leaves the incumbent serving bit-identically and surfaces as a
+//!    typed [`DeliveryError`], with retries/rollbacks counted in the
+//!    [`super::RegistryReport`].
+//!
+//! Pinned by `rust/tests/delivery.rs` (property tests over corrupted /
+//! truncated / wrong-version / flaky-canary inputs) and exercised under
+//! chaos in `examples/hot_swap.rs` (`make swap-demo`).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::{BatchClassifier, StoreConfig, StoreReport};
+use crate::encoding::Policy;
+use crate::runtime::artifacts::{ParamSpec, WeightFile};
+use crate::stt::ErrorModel;
+use crate::util::backoff::Backoff;
+use crate::util::json::{obj, Json};
+
+use super::pool::PooledEngine;
+use super::{Config, Deployment, ModelRegistry};
+
+/// Default per-chunk re-read budget ([`Config::delivery_retries_or`],
+/// `MLCSTT_DELIVERY_RETRIES`).
+pub const DEFAULT_DELIVERY_RETRIES: usize = 3;
+
+/// Default base delay of the retry backoff
+/// ([`Config::delivery_backoff_or`], `MLCSTT_DELIVERY_BACKOFF_MS`).
+pub const DEFAULT_DELIVERY_BACKOFF: Duration = Duration::from_millis(5);
+
+/// Default canary probe batches gating a swap
+/// ([`Config::canary_or`], `MLCSTT_CANARY`).
+pub const DEFAULT_CANARY_BATCHES: usize = 1;
+
+/// FNV-1a (64-bit) over a chunk's f32 **bit patterns**, little-endian
+/// byte order. Bit-exact by construction: two chunks hash equal iff
+/// every weight is bit-identical (NaN payloads and `-0.0` vs `0.0`
+/// included), which is the same identity the staged-vs-fresh store
+/// argument rests on. No crypto dependency — this guards against
+/// transfer corruption, not an adversary.
+pub fn chunk_checksum(chunk: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in chunk {
+        for b in w.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The unit of rollout: everything [`deliver`] needs to verify a stream
+/// and rebuild the staged store deterministically. Schema documented in
+/// DESIGN.md §14; [`DeploymentManifest::to_json`] renders it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeploymentManifest {
+    /// Registry tag of the model being redeployed.
+    pub model: String,
+    /// Offered version; must exceed the registry's live version and match
+    /// the stream's claimed version ([`WeightStream::version`]).
+    pub version: u64,
+    /// Protection policy the staged store encodes under.
+    pub policy: Policy,
+    /// Metadata granularity of the staged store.
+    pub granularity: usize,
+    /// Write-fault rate of the staged store's error model.
+    pub error_rate: f64,
+    /// Fault-injection seed of the staged store (also seeds the retry
+    /// backoff jitter, mixed with the chunk index).
+    pub seed: u64,
+    /// Weights per chunk (the final chunk may be shorter).
+    pub chunk_elems: usize,
+    /// Total weights across the flattened stream.
+    pub total_elems: usize,
+    /// `(name, shape)` per tensor, in stream order — how the verified
+    /// flat stream reassembles into a [`WeightFile`].
+    pub specs: Vec<(String, Vec<usize>)>,
+    /// Per-chunk [`chunk_checksum`]s, in stream order.
+    pub checksums: Vec<u64>,
+}
+
+impl DeploymentManifest {
+    /// Describe `weights` as a rollout manifest: flatten in tensor order,
+    /// chunk by `chunk_elems`, and checksum every chunk. The staged
+    /// store's recipe (policy, granularity, error model, seed) is taken
+    /// from `store`; its capacity/banks are ignored — the receiving
+    /// pool's geometry wins, exactly as in [`super::BufferPool::admit`].
+    pub fn describe(
+        model: &str,
+        version: u64,
+        weights: &WeightFile,
+        chunk_elems: usize,
+        store: &StoreConfig,
+    ) -> Result<Self> {
+        ensure!(chunk_elems >= 1, "chunk_elems must be >= 1");
+        let total = weights.total_elems();
+        ensure!(total > 0, "empty weight file");
+        let flat = weights.flat();
+        let checksums = flat.chunks(chunk_elems).map(chunk_checksum).collect();
+        Ok(DeploymentManifest {
+            model: model.to_string(),
+            version,
+            policy: store.policy,
+            granularity: store.granularity,
+            error_rate: store.error_model.write_error_rate,
+            seed: store.seed,
+            chunk_elems,
+            total_elems: total,
+            specs: weights
+                .params
+                .iter()
+                .map(|p| (p.name.clone(), p.shape.clone()))
+                .collect(),
+            checksums,
+        })
+    }
+
+    /// Number of chunks in the stream.
+    pub fn chunk_count(&self) -> usize {
+        self.total_elems.div_ceil(self.chunk_elems)
+    }
+
+    /// Expected length of chunk `index` (the final chunk carries the
+    /// remainder).
+    pub fn chunk_len(&self, index: usize) -> usize {
+        let start = index * self.chunk_elems;
+        self.chunk_elems.min(self.total_elems.saturating_sub(start))
+    }
+
+    /// The staged store's [`StoreConfig`]: the manifest's recipe plus the
+    /// caller's worker ceiling (capacity/banks stay at their defaults —
+    /// the pool's geometry wins on admission).
+    pub fn store_config(&self, threads: usize) -> StoreConfig {
+        StoreConfig {
+            policy: self.policy,
+            granularity: self.granularity,
+            error_model: ErrorModel::at_rate(self.error_rate),
+            seed: self.seed,
+            threads,
+            ..StoreConfig::default()
+        }
+    }
+
+    /// Reassemble a fully-verified flat stream into a [`WeightFile`]
+    /// under this manifest's tensor specs.
+    pub fn reassemble(&self, flat: Vec<f32>) -> Result<WeightFile> {
+        ensure!(
+            flat.len() == self.total_elems,
+            "stream carries {} weights, manifest wants {}",
+            flat.len(),
+            self.total_elems
+        );
+        let mut params = Vec::with_capacity(self.specs.len());
+        let mut off = 0usize;
+        for (name, shape) in &self.specs {
+            let n: usize = shape.iter().product();
+            ensure!(off + n <= flat.len(), "tensor {name} overruns the stream");
+            params.push(ParamSpec {
+                name: name.clone(),
+                shape: shape.clone(),
+                data: flat[off..off + n].to_vec(),
+            });
+            off += n;
+        }
+        ensure!(off == flat.len(), "specs cover {off} of {} weights", flat.len());
+        Ok(WeightFile { params })
+    }
+
+    /// Render the manifest schema (DESIGN.md §14) as JSON.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", Json::from(self.model.as_str())),
+            ("version", Json::Num(self.version as f64)),
+            ("policy", Json::from(self.policy.label())),
+            ("granularity", Json::Num(self.granularity as f64)),
+            ("error_rate", Json::Num(self.error_rate)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("chunk_elems", Json::Num(self.chunk_elems as f64)),
+            ("total_elems", Json::Num(self.total_elems as f64)),
+            ("chunks", Json::Num(self.chunk_count() as f64)),
+            (
+                "checksums",
+                Json::Arr(
+                    self.checksums
+                        .iter()
+                        .map(|c| Json::from(format!("{c:016x}").as_str()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A fallible, re-readable chunk source for one weight version. Reads
+/// may fail transiently (network, storage) and may return corrupted or
+/// short data — [`deliver`] verifies every chunk and retries failed
+/// reads, so implementations must tolerate `read_chunk` being called
+/// repeatedly for the same index.
+pub trait WeightStream {
+    /// The version this source claims to carry; gated against the
+    /// manifest before any chunk is read.
+    fn version(&self) -> u64;
+
+    /// Read chunk `index` (0-based) of the flattened weight stream.
+    fn read_chunk(&mut self, index: usize) -> Result<Vec<f32>>;
+}
+
+/// An in-memory [`WeightStream`] over a flattened weight vector — the
+/// synthetic source the demos and tests deliver from (a file- or
+/// network-backed source implements the same trait).
+pub struct MemoryStream {
+    version: u64,
+    flat: Vec<f32>,
+    chunk_elems: usize,
+}
+
+impl MemoryStream {
+    /// A stream claiming `version`, over `weights` flattened in tensor
+    /// order, chunked by `chunk_elems` (matching the manifest geometry).
+    pub fn from_weights(version: u64, weights: &WeightFile, chunk_elems: usize) -> Self {
+        MemoryStream {
+            version,
+            flat: weights.flat(),
+            chunk_elems: chunk_elems.max(1),
+        }
+    }
+}
+
+impl WeightStream for MemoryStream {
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn read_chunk(&mut self, index: usize) -> Result<Vec<f32>> {
+        let start = index * self.chunk_elems;
+        if start >= self.flat.len() {
+            bail!("chunk {index} out of range ({} weights)", self.flat.len());
+        }
+        let end = (start + self.chunk_elems).min(self.flat.len());
+        Ok(self.flat[start..end].to_vec())
+    }
+}
+
+/// A chaos decorator over any [`WeightStream`]: injects deterministic,
+/// per-chunk-attempt faults — synthetic read timeouts, truncation, bit
+/// corruption — so retry/rollback paths can be driven on purpose. For
+/// each affected chunk, attempt `n` (0-based) fails while `n <`
+/// `fail_reads`, returns a short chunk while `n < fail_reads +
+/// truncate_reads`, returns a bit-flipped chunk while `n < fail_reads +
+/// truncate_reads + corrupt_reads`, and is clean afterwards — so a
+/// retry budget at least that deep always converges, and a shallower
+/// one deterministically exhausts.
+pub struct ChaosStream<S> {
+    inner: S,
+    fail_reads: usize,
+    truncate_reads: usize,
+    corrupt_reads: usize,
+    /// Restrict faults to this chunk (`None` = every chunk).
+    only_chunk: Option<usize>,
+    /// Attempts observed per chunk index.
+    reads: HashMap<usize, usize>,
+}
+
+impl<S: WeightStream> ChaosStream<S> {
+    /// Wrap `inner` with no faults configured (builders below add them).
+    pub fn new(inner: S) -> Self {
+        ChaosStream {
+            inner,
+            fail_reads: 0,
+            truncate_reads: 0,
+            corrupt_reads: 0,
+            only_chunk: None,
+            reads: HashMap::new(),
+        }
+    }
+
+    /// First `n` attempts per affected chunk error ("synthetic timeout").
+    pub fn fail_first(mut self, n: usize) -> Self {
+        self.fail_reads = n;
+        self
+    }
+
+    /// The next `n` attempts per affected chunk come back one weight
+    /// short.
+    pub fn truncate_first(mut self, n: usize) -> Self {
+        self.truncate_reads = n;
+        self
+    }
+
+    /// The next `n` attempts per affected chunk come back with one bit
+    /// flipped in the first weight.
+    pub fn corrupt_first(mut self, n: usize) -> Self {
+        self.corrupt_reads = n;
+        self
+    }
+
+    /// Only inject faults on chunk `index` (default: every chunk).
+    pub fn on_chunk(mut self, index: usize) -> Self {
+        self.only_chunk = Some(index);
+        self
+    }
+}
+
+impl<S: WeightStream> WeightStream for ChaosStream<S> {
+    fn version(&self) -> u64 {
+        self.inner.version()
+    }
+
+    fn read_chunk(&mut self, index: usize) -> Result<Vec<f32>> {
+        let n = {
+            let seen = self.reads.entry(index).or_insert(0);
+            let n = *seen;
+            *seen += 1;
+            n
+        };
+        let affected = match self.only_chunk {
+            None => true,
+            Some(c) => c == index,
+        };
+        if !affected {
+            return self.inner.read_chunk(index);
+        }
+        if n < self.fail_reads {
+            bail!("synthetic timeout reading chunk {index} (attempt {n})");
+        }
+        let mut data = self.inner.read_chunk(index)?;
+        if n < self.fail_reads.saturating_add(self.truncate_reads) {
+            data.pop();
+            return Ok(data);
+        }
+        let corrupt_until = self
+            .fail_reads
+            .saturating_add(self.truncate_reads)
+            .saturating_add(self.corrupt_reads);
+        if n < corrupt_until {
+            if let Some(w) = data.first_mut() {
+                *w = f32::from_bits(w.to_bits() ^ 0x0040_0000);
+            }
+        }
+        Ok(data)
+    }
+}
+
+/// Typed delivery failure. Every variant means the same thing for the
+/// serving side: **the incumbent version is still live and serving
+/// bit-identically** — [`deliver`] never commits a partial swap.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeliveryError {
+    /// A chunk's FNV-1a checksum did not match the manifest.
+    ChecksumMismatch {
+        /// Chunk index in the stream.
+        chunk: usize,
+        /// Manifest checksum.
+        want: u64,
+        /// Checksum of the bytes actually read.
+        got: u64,
+    },
+    /// A chunk came back shorter (or longer) than the manifest geometry.
+    Truncated {
+        /// Chunk index in the stream.
+        chunk: usize,
+        /// Expected weight count.
+        want: usize,
+        /// Received weight count.
+        got: usize,
+    },
+    /// The offered version conflicts: the stream claims a different
+    /// version than the manifest, or the manifest does not advance the
+    /// registry's live version.
+    VersionConflict {
+        /// The model being delivered.
+        model: String,
+        /// The manifest's offered version.
+        offered: u64,
+        /// The conflicting version observed (the stream's claim, or the
+        /// already-live version for a stale rollout).
+        found: u64,
+    },
+    /// A chunk kept failing past the retry budget; `cause` is the final
+    /// attempt's typed failure.
+    RetriesExhausted {
+        /// Chunk index that exhausted its budget.
+        chunk: usize,
+        /// Re-reads performed (the configured budget).
+        retries: usize,
+        /// The last attempt's failure.
+        cause: Box<DeliveryError>,
+    },
+    /// The stream's `read_chunk` itself errored (timeout, I/O).
+    Read {
+        /// Chunk index of the failed read.
+        chunk: usize,
+        /// The source error, with its context chain.
+        message: String,
+    },
+    /// The staged engine failed its canary probe — wrong predictions or
+    /// an engine error on the probe batch.
+    CanaryFailed {
+        /// Probe predictions checked before the verdict.
+        checked: usize,
+        /// Probe predictions that diverged from the expectation.
+        mismatches: usize,
+        /// What went wrong (divergence summary or the engine's error).
+        message: String,
+    },
+    /// Staging the verified weights (pool admission, store build, engine
+    /// construction, or the swap itself) failed.
+    Staging {
+        /// The underlying error, with its context chain.
+        message: String,
+    },
+}
+
+impl std::fmt::Display for DeliveryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeliveryError::ChecksumMismatch { chunk, want, got } => {
+                write!(f, "chunk {chunk}: checksum mismatch (want {want:016x}, got {got:016x})")
+            }
+            DeliveryError::Truncated { chunk, want, got } => {
+                write!(f, "chunk {chunk}: truncated ({got} of {want} weights)")
+            }
+            DeliveryError::VersionConflict { model, offered, found } => {
+                write!(f, "version conflict for {model:?}: offered v{offered}, found v{found}")
+            }
+            DeliveryError::RetriesExhausted { chunk, retries, cause } => {
+                write!(f, "chunk {chunk}: {retries} retries exhausted; last failure: {cause}")
+            }
+            DeliveryError::Read { chunk, message } => {
+                write!(f, "chunk {chunk}: read failed: {message}")
+            }
+            DeliveryError::CanaryFailed { checked, mismatches, message } => {
+                write!(f, "canary failed ({mismatches}/{checked} diverged): {message}")
+            }
+            DeliveryError::Staging { message } => write!(f, "staging failed: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for DeliveryError {}
+
+/// One canary expectation: the staged engine must classify `image` as
+/// `expect`. [`deliver`] fills `MLCSTT_CANARY` probe batches from these
+/// cyclically.
+#[derive(Clone, Debug)]
+pub struct CanaryCheck {
+    /// Probe image (`image_elems` floats for the staged engine).
+    pub image: Vec<f32>,
+    /// Required predicted class.
+    pub expect: usize,
+}
+
+/// What a committed (or failed) delivery did — the `DELIVERY_*.json`
+/// payload of `examples/hot_swap.rs` and `mlcstt deliver`.
+#[derive(Clone, Debug)]
+pub struct DeliveryReport {
+    /// The redeployed model's registry tag.
+    pub model: String,
+    /// The now-live version.
+    pub version: u64,
+    /// Chunks verified.
+    pub chunks: usize,
+    /// Chunk re-reads spent (beyond each chunk's first attempt).
+    pub retries: u64,
+    /// Backoff delay accumulated across those retries.
+    pub backoff_total: Duration,
+    /// Canary probe batches the staged engine passed.
+    pub canary_batches: usize,
+    /// Staged store accounting (encode + fault injection + materialize
+    /// of the *new* version).
+    pub store: StoreReport,
+}
+
+impl DeliveryReport {
+    /// Render as JSON for the `DELIVERY_*.json` artifacts.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", Json::from(self.model.as_str())),
+            ("version", Json::Num(self.version as f64)),
+            ("chunks", Json::Num(self.chunks as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("backoff_ms", Json::Num(self.backoff_total.as_secs_f64() * 1e3)),
+            ("canary_batches", Json::Num(self.canary_batches as f64)),
+            ("injected_faults", Json::Num(self.store.injected_faults as f64)),
+            ("write_nj", Json::Num(self.store.write_energy.nanojoules)),
+            ("read_nj", Json::Num(self.store.read_energy.nanojoules)),
+        ])
+    }
+}
+
+/// Versioned pool tenant tag for a staged/live delivery.
+fn pool_tag(model: &str, version: u64) -> String {
+    format!("{model}@v{version}")
+}
+
+/// Record the failure-path accounting and surface the typed error.
+fn fail(
+    registry: &mut ModelRegistry,
+    retries: u64,
+    err: DeliveryError,
+) -> Result<DeliveryReport, DeliveryError> {
+    registry.note_retries(retries);
+    registry.note_rollback();
+    Err(err)
+}
+
+/// Read chunk `index` once and verify it against the manifest.
+fn read_verified<S: WeightStream + ?Sized>(
+    stream: &mut S,
+    manifest: &DeploymentManifest,
+    index: usize,
+) -> Result<Vec<f32>, DeliveryError> {
+    let data = stream.read_chunk(index).map_err(|e| DeliveryError::Read {
+        chunk: index,
+        message: format!("{e:#}"),
+    })?;
+    let want = manifest.chunk_len(index);
+    if data.len() != want {
+        return Err(DeliveryError::Truncated {
+            chunk: index,
+            want,
+            got: data.len(),
+        });
+    }
+    let got = chunk_checksum(&data);
+    if got != manifest.checksums[index] {
+        return Err(DeliveryError::ChecksumMismatch {
+            chunk: index,
+            want: manifest.checksums[index],
+            got,
+        });
+    }
+    Ok(data)
+}
+
+/// Probe a staged engine: fill `batches` canary batches from `checks`
+/// cyclically and require every prediction to match.
+fn run_canary<C, B>(
+    tensors: &[ParamSpec],
+    checks: &[CanaryCheck],
+    batches: usize,
+    build: &mut B,
+) -> Result<(), DeliveryError>
+where
+    C: BatchClassifier,
+    B: FnMut(&[ParamSpec]) -> Result<C>,
+{
+    if batches == 0 || checks.is_empty() {
+        return Ok(());
+    }
+    let engine = build(tensors).map_err(|e| DeliveryError::Staging {
+        message: format!("building canary engine: {e:#}"),
+    })?;
+    let bs = engine.batch_size();
+    let elems = engine.image_elems();
+    let mut images = vec![0f32; bs * elems];
+    let mut checked = 0usize;
+    let mut mismatches = 0usize;
+    for b in 0..batches {
+        let mut expected = Vec::with_capacity(bs);
+        for j in 0..bs {
+            let p = &checks[(b * bs + j) % checks.len()];
+            if p.image.len() != elems {
+                return Err(DeliveryError::Staging {
+                    message: format!(
+                        "canary probe wants {elems} floats, got {}",
+                        p.image.len()
+                    ),
+                });
+            }
+            images[j * elems..(j + 1) * elems].copy_from_slice(&p.image);
+            expected.push(p.expect);
+        }
+        let preds = engine
+            .classify_batch(&images)
+            .map_err(|e| DeliveryError::CanaryFailed {
+                checked,
+                mismatches,
+                message: format!("probe batch {b} errored: {e:#}"),
+            })?;
+        for (j, want) in expected.iter().enumerate() {
+            checked += 1;
+            if preds[j] != *want {
+                mismatches += 1;
+            }
+        }
+    }
+    if mismatches > 0 {
+        return Err(DeliveryError::CanaryFailed {
+            checked,
+            mismatches,
+            message: "staged predictions diverged from canary expectations".into(),
+        });
+    }
+    Ok(())
+}
+
+/// Deliver `manifest`'s version of `manifest.model` from `stream` into
+/// `registry`, hot-swapping on success — the module-level pipeline
+/// (verify → stage → canary → swap) in one call.
+///
+/// `build` turns a tensor set into the serving engine; with a pool
+/// attached it also becomes the staged tenant's rebuild hook (the
+/// [`PooledEngine`] contract of
+/// [`super::ModelRegistry::register_pooled`]), so the new version
+/// survives eviction like any tenant. `checks` are the canary
+/// expectations ([`Config::canary_or`] batches gate the swap; pass `&[]`
+/// or set the knob to 0 to skip).
+///
+/// On `Err`, the incumbent is untouched and still serving — the staged
+/// tenant (if any) has been withdrawn, the rollback is counted, and the
+/// retry spend is in the registry report either way.
+pub fn deliver<S, C, B>(
+    registry: &mut ModelRegistry,
+    manifest: &DeploymentManifest,
+    stream: &mut S,
+    checks: &[CanaryCheck],
+    config: &Config,
+    mut build: B,
+) -> Result<DeliveryReport, DeliveryError>
+where
+    S: WeightStream + ?Sized,
+    C: BatchClassifier,
+    B: FnMut(&[ParamSpec]) -> Result<C> + Send + 'static,
+{
+    let model = manifest.model.clone();
+    if !registry.models().iter().any(|m| *m == model) {
+        return fail(
+            registry,
+            0,
+            DeliveryError::Staging {
+                message: format!("unknown model {model:?} ({} registered)", registry.len()),
+            },
+        );
+    }
+    // Version gates fail fast: no chunk is worth reading for a stream
+    // that claims the wrong version or a rollout that does not advance.
+    if stream.version() != manifest.version {
+        return fail(
+            registry,
+            0,
+            DeliveryError::VersionConflict {
+                model,
+                offered: manifest.version,
+                found: stream.version(),
+            },
+        );
+    }
+    let live = registry.version(&model);
+    if manifest.version <= live {
+        return fail(
+            registry,
+            0,
+            DeliveryError::VersionConflict {
+                model,
+                offered: manifest.version,
+                found: live,
+            },
+        );
+    }
+    if manifest.checksums.len() != manifest.chunk_count() {
+        return fail(
+            registry,
+            0,
+            DeliveryError::Staging {
+                message: format!(
+                    "manifest carries {} checksums for {} chunks",
+                    manifest.checksums.len(),
+                    manifest.chunk_count()
+                ),
+            },
+        );
+    }
+
+    // 1. Streamed, incrementally verified transfer with bounded retries
+    //    under deterministic seeded backoff.
+    let budget = config.delivery_retries_or(DEFAULT_DELIVERY_RETRIES);
+    let base = config.delivery_backoff_or(DEFAULT_DELIVERY_BACKOFF);
+    let mut flat: Vec<f32> = Vec::with_capacity(manifest.total_elems);
+    let mut retries_total: u64 = 0;
+    let mut backoff_total = Duration::ZERO;
+    for i in 0..manifest.chunk_count() {
+        // Per-chunk schedule, deterministically derived from the manifest
+        // seed + chunk index (golden-ratio mix): replays are bit-exact.
+        let mut backoff = Backoff::new(
+            base,
+            manifest.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut failures = 0usize;
+        loop {
+            match read_verified(stream, manifest, i) {
+                Ok(mut data) => {
+                    flat.append(&mut data);
+                    break;
+                }
+                Err(cause) => {
+                    if failures >= budget {
+                        let err = if budget == 0 {
+                            cause
+                        } else {
+                            DeliveryError::RetriesExhausted {
+                                chunk: i,
+                                retries: budget,
+                                cause: Box::new(cause),
+                            }
+                        };
+                        return fail(registry, retries_total, err);
+                    }
+                    failures += 1;
+                    retries_total += 1;
+                    let d = backoff.next_delay();
+                    backoff_total += d;
+                    if !d.is_zero() {
+                        std::thread::sleep(d);
+                    }
+                }
+            }
+        }
+    }
+    let weights = match manifest.reassemble(flat) {
+        Ok(w) => w,
+        Err(e) => {
+            return fail(
+                registry,
+                retries_total,
+                DeliveryError::Staging {
+                    message: format!("{e:#}"),
+                },
+            )
+        }
+    };
+
+    // 2. Stage alongside the live version, canary, then atomically swap.
+    let staging = pool_tag(&model, manifest.version);
+    let store_cfg = manifest.store_config(config.threads());
+    let canary_batches = config.canary_or(DEFAULT_CANARY_BATCHES);
+    let report = |store: StoreReport| DeliveryReport {
+        model: model.clone(),
+        version: manifest.version,
+        chunks: manifest.chunk_count(),
+        retries: retries_total,
+        backoff_total,
+        canary_batches: if checks.is_empty() { 0 } else { canary_batches },
+        store,
+    };
+
+    if let Some(pool) = registry.pool().cloned() {
+        // A stale tenant from an aborted earlier attempt must not block
+        // redelivery of the same version.
+        if pool.contains(&staging) {
+            let _ = pool.remove(&staging);
+        }
+        let store = match pool.admit(&staging, &store_cfg, &weights) {
+            Ok(r) => r,
+            Err(e) => {
+                return fail(
+                    registry,
+                    retries_total,
+                    DeliveryError::Staging {
+                        message: format!("{e:#}"),
+                    },
+                )
+            }
+        };
+        let tensors = match pool.tensors(&staging) {
+            Ok(t) => t,
+            Err(e) => {
+                let _ = pool.remove(&staging);
+                return fail(
+                    registry,
+                    retries_total,
+                    DeliveryError::Staging {
+                        message: format!("{e:#}"),
+                    },
+                );
+            }
+        };
+        if let Err(err) = run_canary(&tensors, checks, canary_batches, &mut build) {
+            let _ = pool.remove(&staging);
+            return fail(registry, retries_total, err);
+        }
+        let lease = match pool.lease(&staging) {
+            Ok(l) => l,
+            Err(e) => {
+                let _ = pool.remove(&staging);
+                return fail(
+                    registry,
+                    retries_total,
+                    DeliveryError::Staging {
+                        message: format!("{e:#}"),
+                    },
+                );
+            }
+        };
+        let swap =
+            registry.swap(&model, move || PooledEngine::new(lease, build), config.server());
+        if let Err(e) = swap {
+            let _ = pool.remove(&staging);
+            return fail(
+                registry,
+                retries_total,
+                DeliveryError::Staging {
+                    message: format!("{e:#}"),
+                },
+            );
+        }
+        // Committed: stamp the version and withdraw the loser's tenant
+        // (the caller-admitted plain tag for a first delivery, the prior
+        // versioned tag afterwards).
+        registry.set_version(&model, manifest.version);
+        let old_tenant = if live == 0 { model.clone() } else { pool_tag(&model, live) };
+        if pool.contains(&old_tenant) {
+            let _ = pool.remove(&old_tenant);
+        }
+        registry.note_retries(retries_total);
+        Ok(report(store))
+    } else {
+        // No pool: stage a private store (encode + faults + materialize),
+        // serve the decoded tensors from a plain engine factory.
+        let dep = match Deployment::builder()
+            .weights(weights)
+            .name(&staging)
+            .store(store_cfg)
+            .build()
+        {
+            Ok(d) => d,
+            Err(e) => {
+                return fail(
+                    registry,
+                    retries_total,
+                    DeliveryError::Staging {
+                        message: format!("{e:#}"),
+                    },
+                )
+            }
+        };
+        let tensors = dep.tensors().to_vec();
+        let store = dep.store_report().clone();
+        if let Err(err) = run_canary(&tensors, checks, canary_batches, &mut build) {
+            return fail(registry, retries_total, err);
+        }
+        if let Err(e) = registry.swap(&model, move || build(&tensors), config.server()) {
+            return fail(
+                registry,
+                retries_total,
+                DeliveryError::Staging {
+                    message: format!("{e:#}"),
+                },
+            );
+        }
+        registry.set_version(&model, manifest.version);
+        registry.note_retries(retries_total);
+        Ok(report(store))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weight_file(n: usize) -> WeightFile {
+        let data: Vec<f32> = (0..n)
+            .map(|i| crate::fp::quantize_f16((i as f32 / n as f32) * 1.6 - 0.8))
+            .collect();
+        WeightFile {
+            params: vec![ParamSpec {
+                name: "w".into(),
+                shape: vec![n],
+                data,
+            }],
+        }
+    }
+
+    #[test]
+    fn checksum_is_bit_exact_and_order_sensitive() {
+        let a = chunk_checksum(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, chunk_checksum(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, chunk_checksum(&[1.0, 3.0, 2.0]));
+        // Bit identity, not numeric identity.
+        assert_ne!(chunk_checksum(&[0.0]), chunk_checksum(&[-0.0]));
+        assert_ne!(
+            chunk_checksum(&[f32::from_bits(1)]),
+            chunk_checksum(&[f32::from_bits(2)])
+        );
+    }
+
+    #[test]
+    fn manifest_chunk_geometry_covers_the_stream() {
+        let wf = weight_file(100);
+        let m = DeploymentManifest::describe("m", 1, &wf, 32, &StoreConfig::default()).unwrap();
+        assert_eq!(m.chunk_count(), 4);
+        assert_eq!(m.checksums.len(), 4);
+        assert_eq!(m.chunk_len(0), 32);
+        assert_eq!(m.chunk_len(3), 4, "tail chunk carries the remainder");
+        assert_eq!((0..4).map(|i| m.chunk_len(i)).sum::<usize>(), 100);
+        // Round-trip: a clean memory stream reassembles bit-identically.
+        let mut s = MemoryStream::from_weights(1, &wf, 32);
+        let mut flat = Vec::new();
+        for i in 0..m.chunk_count() {
+            let chunk = read_verified(&mut s, &m, i).unwrap();
+            flat.extend(chunk);
+        }
+        let back = m.reassemble(flat).unwrap();
+        assert_eq!(back.params[0].data, wf.params[0].data);
+        assert_eq!(back.params[0].shape, wf.params[0].shape);
+    }
+
+    #[test]
+    fn chaos_stream_fault_schedule_is_deterministic() {
+        let wf = weight_file(64);
+        let m = DeploymentManifest::describe("m", 1, &wf, 32, &StoreConfig::default()).unwrap();
+        let mut s = ChaosStream::new(MemoryStream::from_weights(1, &wf, 32))
+            .fail_first(1)
+            .truncate_first(1)
+            .corrupt_first(1)
+            .on_chunk(0);
+        // Attempt 0: synthetic timeout.
+        assert!(matches!(
+            read_verified(&mut s, &m, 0),
+            Err(DeliveryError::Read { chunk: 0, .. })
+        ));
+        // Attempt 1: truncated.
+        assert_eq!(
+            read_verified(&mut s, &m, 0).unwrap_err(),
+            DeliveryError::Truncated { chunk: 0, want: 32, got: 31 }
+        );
+        // Attempt 2: corrupted -> checksum mismatch.
+        assert!(matches!(
+            read_verified(&mut s, &m, 0),
+            Err(DeliveryError::ChecksumMismatch { chunk: 0, .. })
+        ));
+        // Attempt 3: clean; other chunks always clean.
+        assert!(read_verified(&mut s, &m, 0).is_ok());
+        assert!(read_verified(&mut s, &m, 1).is_ok());
+    }
+
+    #[test]
+    fn manifest_json_carries_the_schema_fields() {
+        let wf = weight_file(8);
+        let m = DeploymentManifest::describe("demo", 3, &wf, 4, &StoreConfig::default()).unwrap();
+        let j = m.to_json().to_string_pretty();
+        for key in ["model", "version", "policy", "granularity", "error_rate", "checksums"] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+
+    #[test]
+    fn delivery_error_displays_are_actionable() {
+        let e = DeliveryError::RetriesExhausted {
+            chunk: 2,
+            retries: 3,
+            cause: Box::new(DeliveryError::ChecksumMismatch { chunk: 2, want: 1, got: 2 }),
+        };
+        let s = format!("{e}");
+        assert!(s.contains("chunk 2"), "{s}");
+        assert!(s.contains("3 retries"), "{s}");
+        assert!(s.contains("checksum mismatch"), "{s}");
+    }
+}

@@ -14,7 +14,11 @@
 //! * [`BufferPool`] — one shared multi-tenant MLC buffer (extent
 //!   allocator, LRU eviction, wear-leveled placement) behind leases whose
 //!   [`PooledEngine`]s rebuild evicted models bit-identically on demand
-//!   (DESIGN.md §12).
+//!   (DESIGN.md §12);
+//! * [`deliver`] — zero-downtime weight delivery: a streamed,
+//!   hash-verified [`DeploymentManifest`] rollout with bounded seeded
+//!   retry/backoff, canary gating, and atomic hot swap or rollback
+//!   (DESIGN.md §14).
 //!
 //! Every rebuilt path is pinned bit-identical to its pre-facade
 //! hand-rolled equivalent (flip sets, energy reports, accuracies) by
@@ -23,11 +27,17 @@
 pub use crate::util::env;
 
 mod config;
+mod delivery;
 mod deployment;
 mod pool;
 mod registry;
 
 pub use config::{Config, ConfigBuilder};
+pub use delivery::{
+    chunk_checksum, deliver, CanaryCheck, ChaosStream, DeliveryError, DeliveryReport,
+    DeploymentManifest, MemoryStream, WeightStream, DEFAULT_CANARY_BATCHES,
+    DEFAULT_DELIVERY_BACKOFF, DEFAULT_DELIVERY_RETRIES,
+};
 pub use deployment::{Deployment, DeploymentBuilder};
 pub use pool::{
     BufferPool, EvictPolicy, ModelLease, PooledEngine, DEFAULT_POOL_BANKS, DEFAULT_POOL_EXTENT,

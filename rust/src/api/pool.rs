@@ -229,6 +229,36 @@ impl BufferPool {
         Ok(inner.tenants[idx].tensors.clone())
     }
 
+    /// Whether `name` is currently admitted (resident or evicted).
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().index.contains_key(name)
+    }
+
+    /// Withdraw a model from the pool: free its resident regions (if
+    /// any) back to the extent allocator and drop its tenant entry,
+    /// clean encodings included. The delivery path uses this to discard
+    /// the losing version once a hot swap commits or rolls back
+    /// (DESIGN.md §14) — the winner's regions are untouched. Errors on
+    /// unknown names; outstanding [`ModelLease`]s for the removed model
+    /// error on their next use.
+    pub fn remove(&self, name: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let idx = inner.idx(name)?;
+        if let Some(regions) = inner.tenants[idx].resident.take() {
+            for r in &regions {
+                inner.shared.free(r);
+            }
+        }
+        inner.tenants.swap_remove(idx);
+        inner.index.remove(name);
+        // swap_remove moved the former tail into `idx`: re-point it.
+        if idx < inner.tenants.len() {
+            let moved = inner.tenants[idx].name.clone();
+            inner.index.insert(moved, idx);
+        }
+        Ok(())
+    }
+
     /// A serving lease on one admitted model (errors on unknown names).
     pub fn lease(&self, name: &str) -> Result<ModelLease> {
         let inner = self.inner.lock().unwrap();
@@ -591,6 +621,33 @@ mod tests {
         // The failed admit left no tenant behind.
         assert!(pool.report("b").is_err());
         assert!(pool.resident("a").unwrap());
+    }
+
+    #[test]
+    fn remove_frees_regions_and_keeps_index_consistent() {
+        let wf = weight_file(1024, 1.0);
+        let pool = BufferPool::new(8192 * 8, 16, 256, EvictPolicy::Lru);
+        pool.admit("a", &cfg(1), &wf).unwrap();
+        pool.admit("b", &cfg(2), &wf).unwrap();
+        pool.admit("c", &cfg(3), &wf).unwrap();
+        let free_before = pool.free_extents();
+
+        assert!(pool.contains("a"));
+        pool.remove("a").unwrap();
+        assert!(!pool.contains("a"));
+        assert!(pool.free_extents() > free_before, "regions returned");
+        assert!(pool.remove("a").is_err(), "double remove is an error");
+
+        // swap_remove moved "c" into a's slot: both survivors still
+        // resolve and serve.
+        assert!(pool.resident("b").unwrap());
+        assert!(pool.resident("c").unwrap());
+        pool.report("b").unwrap();
+        pool.report("c").unwrap();
+
+        // The freed name can be admitted again (redelivery).
+        pool.admit("a", &cfg(4), &wf).unwrap();
+        assert!(pool.contains("a"));
     }
 
     #[test]

@@ -50,6 +50,18 @@ pub struct ModelRegistry {
     /// Shared multi-tenant weight pool, when one is attached
     /// ([`ModelRegistry::with_pool`]).
     pool: Option<BufferPool>,
+    /// Drained serving reports of servers replaced by [`ModelRegistry::swap`],
+    /// in retirement order — surfaced as [`RegistryReport::retired`] so a
+    /// hot swap never loses the old engine's accounting.
+    retired: Vec<(String, ServerReport)>,
+    /// Completed hot swaps ([`ModelRegistry::swap`]).
+    swaps: u64,
+    /// Delivery rollbacks recorded by [`ModelRegistry::note_rollback`].
+    rollbacks: u64,
+    /// Chunk re-reads recorded by [`ModelRegistry::note_retries`].
+    delivery_retries: u64,
+    /// Live delivered version per model (absent/0 = never delivered).
+    versions: HashMap<String, u64>,
 }
 
 /// Final per-model serving metrics, in registration order — the
@@ -64,27 +76,54 @@ pub struct RegistryReport {
     /// Regions evicted from the pool under capacity pressure (0 without
     /// a pool).
     pub pool_evictions: u64,
+    /// Serving reports of servers retired by hot swaps
+    /// ([`ModelRegistry::swap`]), in retirement order: the pre-swap
+    /// engine's traffic, fully drained — hot swaps never lose accounting.
+    pub retired: Vec<(String, ServerReport)>,
+    /// Completed hot swaps over the registry's lifetime.
+    pub swaps: u64,
+    /// Delivery rollbacks (failed verifications/stagings/canaries that
+    /// left the incumbent serving; [`ModelRegistry::note_rollback`]).
+    pub rollbacks: u64,
+    /// Chunk re-reads spent by weight deliveries
+    /// ([`ModelRegistry::note_retries`]), successful or not.
+    pub delivery_retries: u64,
 }
 
 impl RegistryReport {
-    /// Requests served across all models.
+    /// Every live and retired section, in that order — hot-swapped-out
+    /// servers count toward totals so a swap never loses traffic.
+    fn all_sections(&self) -> impl Iterator<Item = &(String, ServerReport)> {
+        self.sections.iter().chain(self.retired.iter())
+    }
+
+    /// Requests served across all models (including swap-retired servers).
     pub fn total_served(&self) -> usize {
-        self.sections.iter().map(|(_, r)| r.served).sum()
+        self.all_sections().map(|(_, r)| r.served).sum()
     }
 
-    /// Requests shed at admission across all models.
+    /// Requests shed at admission across all models (including
+    /// swap-retired servers).
     pub fn total_shed(&self) -> usize {
-        self.sections.iter().map(|(_, r)| r.shed).sum()
+        self.all_sections().map(|(_, r)| r.shed).sum()
     }
 
-    /// Requests resolved as engine errors across all models.
+    /// Requests resolved as engine errors across all models (including
+    /// swap-retired servers).
     pub fn total_errors(&self) -> usize {
-        self.sections.iter().map(|(_, r)| r.errors).sum()
+        self.all_sections().map(|(_, r)| r.errors).sum()
     }
 
-    /// Evict→rematerialize stalls absorbed across all models' workers.
+    /// Evict→rematerialize stalls absorbed across all models' workers
+    /// (including swap-retired servers).
     pub fn total_rebuilds(&self) -> u64 {
-        self.sections.iter().map(|(_, r)| r.rebuilds).sum()
+        self.all_sections().map(|(_, r)| r.rebuilds).sum()
+    }
+
+    /// Requests declined as typed [`crate::coordinator::RequestError::Unavailable`]
+    /// across all models (live and retired sections).
+    pub fn total_unavailable(&self) -> usize {
+        self.all_sections().map(|(_, r)| r.unavailable).sum()
     }
 }
 
@@ -101,9 +140,8 @@ impl ModelRegistry {
     /// (`budget / models`, floored at 1) keep admitting. See [`FairGate`].
     pub fn with_budget(budget: usize) -> Self {
         ModelRegistry {
-            entries: Vec::new(),
-            index: HashMap::new(),
             gate: Some(FairGate::new(budget)),
+            ..Self::default()
         }
     }
 
@@ -169,6 +207,100 @@ impl ModelRegistry {
         self.register(name, move || PooledEngine::new(lease, build), cfg)
     }
 
+    /// Hot-swap the engine serving `name` — the commit point of a
+    /// zero-downtime delivery ([`super::deliver`], DESIGN.md §14).
+    ///
+    /// Ordering is the whole contract:
+    ///
+    /// 1. the replacement server starts first (its `factory` runs inside
+    ///    the new worker thread and must come up) — any failure here
+    ///    returns `Err` with the incumbent untouched and still serving;
+    /// 2. only then is the incumbent parked
+    ///    ([`Server::set_unavailable`], reason `"hot swap: draining"`) and
+    ///    replaced in the routing table — from this instant new
+    ///    submissions reach the new engine;
+    /// 3. the incumbent is drained ([`Server::shutdown`] joins its worker,
+    ///    resolving every admitted request) and its report is retired into
+    ///    [`RegistryReport::retired`], so no traffic is dropped and no
+    ///    accounting is lost.
+    ///
+    /// The registry is never observable half-swapped: `&mut self`
+    /// excludes concurrent routing, and the table flips in one assignment
+    /// between a fully-up new server and a fully-drained old one. The
+    /// [`FairGate`] model count is unchanged (one server leaves, one
+    /// enters).
+    pub fn swap<C, F>(&mut self, name: &str, factory: F, cfg: ServerConfig) -> Result<()>
+    where
+        C: BatchClassifier,
+        F: FnOnce() -> Result<C> + Send + 'static,
+    {
+        let Some(&i) = self.index.get(name) else {
+            bail!("unknown model {name:?} ({} registered)", self.entries.len());
+        };
+        let fresh = Server::start_with_gate(factory, cfg, self.gate.clone())?;
+        let old = std::mem::replace(&mut self.entries[i].1, fresh);
+        old.set_unavailable(name, "hot swap: draining");
+        self.retired.push((name.to_string(), old.shutdown()));
+        self.swaps += 1;
+        Ok(())
+    }
+
+    /// Park `name`: until [`ModelRegistry::set_available`], its requests
+    /// resolve as typed
+    /// [`crate::coordinator::RequestError::Unavailable`] (counted in
+    /// [`ServerReport::unavailable`]). For rebuild/maintenance windows
+    /// where an operator wants routing to answer honestly instead of
+    /// queueing into a stalled engine.
+    pub fn set_unavailable(&self, model: &str, reason: &str) -> Result<()> {
+        match self.index.get(model) {
+            Some(&i) => {
+                self.entries[i].1.set_unavailable(model, reason);
+                Ok(())
+            }
+            None => bail!("unknown model {model:?} ({} registered)", self.entries.len()),
+        }
+    }
+
+    /// Reopen admission for `model` after [`ModelRegistry::set_unavailable`].
+    pub fn set_available(&self, model: &str) -> Result<()> {
+        match self.index.get(model) {
+            Some(&i) => {
+                self.entries[i].1.set_available();
+                Ok(())
+            }
+            None => bail!("unknown model {model:?} ({} registered)", self.entries.len()),
+        }
+    }
+
+    /// The live delivered version of `model`: what the last committed
+    /// [`super::deliver`] stamped via [`ModelRegistry::set_version`], or 0
+    /// for a model that has only ever served its registration-time
+    /// weights. Unknown models also report 0 (version gating happens
+    /// before existence checks would matter).
+    pub fn version(&self, model: &str) -> u64 {
+        self.versions.get(model).copied().unwrap_or(0)
+    }
+
+    /// Stamp `model`'s live version — the commit marker of a delivery.
+    /// [`super::deliver`] calls this only after the swap succeeded, so a
+    /// rolled-back delivery never advances the version and a stale
+    /// re-offer of the same manifest fails its version gate.
+    pub fn set_version(&mut self, model: &str, version: u64) {
+        self.versions.insert(model.to_string(), version);
+    }
+
+    /// Record a delivery rollback (verification/staging/canary failure
+    /// that left the incumbent serving) for [`RegistryReport::rollbacks`].
+    pub fn note_rollback(&mut self) {
+        self.rollbacks += 1;
+    }
+
+    /// Record `n` delivery chunk re-reads for
+    /// [`RegistryReport::delivery_retries`].
+    pub fn note_retries(&mut self, n: u64) {
+        self.delivery_retries += n;
+    }
+
     /// Registered model names, in registration order.
     pub fn models(&self) -> Vec<&str> {
         self.entries.iter().map(|(n, _)| n.as_str()).collect()
@@ -227,7 +359,15 @@ impl ModelRegistry {
         // are in the ledger.
         let wear = self.pool.as_ref().map(BufferPool::bank_wear).unwrap_or_default();
         let pool_evictions = self.pool.as_ref().map(BufferPool::evictions).unwrap_or(0);
-        RegistryReport { sections, wear, pool_evictions }
+        RegistryReport {
+            sections,
+            wear,
+            pool_evictions,
+            retired: self.retired,
+            swaps: self.swaps,
+            rollbacks: self.rollbacks,
+            delivery_retries: self.delivery_retries,
+        }
     }
 }
 
@@ -237,12 +377,24 @@ impl std::fmt::Display for RegistryReport {
         write!(f, "{table}")?;
         writeln!(
             f,
-            "totals: {} served / {} shed / {} errors / {} rebuilds",
+            "totals: {} served / {} shed / {} errors / {} unavailable / {} rebuilds",
             self.total_served(),
             self.total_shed(),
             self.total_errors(),
+            self.total_unavailable(),
             self.total_rebuilds()
         )?;
+        if !self.retired.is_empty() {
+            let table = crate::metrics::serving_table("retired by hot swap", &self.retired);
+            write!(f, "{table}")?;
+        }
+        if self.swaps + self.rollbacks + self.delivery_retries > 0 {
+            writeln!(
+                f,
+                "delivery: {} swaps / {} rollbacks / {} chunk retries",
+                self.swaps, self.rollbacks, self.delivery_retries
+            )?;
+        }
         if !self.wear.is_empty() {
             let wear = crate::metrics::wear_table("buffer lifetime under traffic", &self.wear);
             write!(f, "{wear}")?;
@@ -316,6 +468,54 @@ mod tests {
         reg.register("m", engine_a, cfg()).unwrap();
         assert!(reg.register("m", engine_b, cfg()).is_err());
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn swap_flips_routing_and_retires_the_old_report() {
+        let mut reg = ModelRegistry::new();
+        reg.register("m", engine_a, cfg()).unwrap();
+        let img = vec![1.0f32, 0.0];
+        let t = reg.submit("m", img.clone()).unwrap().ticket().unwrap();
+        assert_eq!(t.wait().unwrap().class, 0, "incumbent: +x is class 0");
+
+        reg.swap("m", engine_b, cfg()).unwrap();
+        let t = reg.submit("m", img.clone()).unwrap().ticket().unwrap();
+        assert_eq!(t.wait().unwrap().class, 1, "replacement: +x is class 1");
+        assert!(reg.swap("ghost", engine_a, cfg()).is_err());
+
+        let report = reg.shutdown();
+        assert_eq!(report.swaps, 1);
+        assert_eq!(report.retired.len(), 1);
+        assert_eq!(report.retired[0].1.served, 1, "pre-swap traffic retained");
+        assert_eq!(report.sections[0].1.served, 1);
+        assert_eq!(report.total_served(), 2, "totals span live + retired");
+    }
+
+    #[test]
+    fn parked_model_declines_with_typed_unavailability() {
+        let mut reg = ModelRegistry::new();
+        reg.register("m", engine_a, cfg()).unwrap();
+        reg.set_unavailable("m", "rebuild in progress").unwrap();
+        let err = reg
+            .submit("m", vec![1.0f32, 0.0])
+            .unwrap()
+            .ticket()
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            crate::coordinator::RequestError::Unavailable {
+                model: "m".into(),
+                reason: "rebuild in progress".into(),
+            }
+        );
+        reg.set_available("m").unwrap();
+        let t = reg.submit("m", vec![1.0f32, 0.0]).unwrap().ticket().unwrap();
+        assert_eq!(t.wait().unwrap().class, 0);
+        let report = reg.shutdown();
+        assert_eq!(report.total_unavailable(), 1);
+        assert_eq!(report.total_served(), 1);
     }
 
     #[test]

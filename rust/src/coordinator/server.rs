@@ -31,6 +31,11 @@
 //! * **Reports never lie with NaN.** An idle server reports
 //!   `throughput_rps = 0.0` over a well-defined wall window
 //!   ([`ServerReport::wall_s`]), not `NaN`/`inf`.
+//! * **Unavailability is typed.** A model parked mid-rebuild or
+//!   mid-hot-swap ([`Server::set_unavailable`]) resolves every submission
+//!   as [`RequestError::Unavailable`] — naming the model and why — instead
+//!   of a generic engine error, counted in [`ServerReport::unavailable`]
+//!   (DESIGN.md §14).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -87,6 +92,18 @@ pub enum RequestError {
     },
     /// The worker vanished before answering (shutdown race).
     Disconnected,
+    /// The model is parked — mid-rebuild or mid-hot-swap — and declining
+    /// work until the operation settles (counted in
+    /// [`ServerReport::unavailable`]). Unlike [`RequestError::Shed`] this
+    /// is not a load signal: retrying immediately is pointless until the
+    /// swap/rebuild finishes, and unlike [`RequestError::Engine`] nothing
+    /// failed — the request was never attempted.
+    Unavailable {
+        /// The model the request was routed to.
+        model: String,
+        /// Why it is parked (e.g. `"hot swap: draining"`).
+        reason: String,
+    },
 }
 
 impl std::fmt::Display for RequestError {
@@ -97,6 +114,9 @@ impl std::fmt::Display for RequestError {
                 write!(f, "request shed: admission queue full (depth {depth})")
             }
             RequestError::Disconnected => write!(f, "server worker disconnected"),
+            RequestError::Unavailable { model, reason } => {
+                write!(f, "model {model:?} unavailable: {reason}")
+            }
         }
     }
 }
@@ -252,6 +272,9 @@ pub struct ServerReport {
     pub shed: usize,
     /// Requests resolved as engine errors (never counted as served).
     pub errors: usize,
+    /// Requests declined with [`RequestError::Unavailable`] because the
+    /// model was parked mid-rebuild/mid-swap when they arrived.
+    pub unavailable: usize,
     /// Batches executed.
     pub batches: usize,
     /// Mean real requests per batch (the rest is padding).
@@ -286,6 +309,10 @@ struct Shared {
     metrics: Arc<Mutex<Metrics>>,
     depth: Arc<AtomicUsize>,
     gate: Option<FairGate>,
+    /// `Some((model, reason))` while the model is parked (mid-rebuild /
+    /// mid-hot-swap): [`Server::submit`] resolves requests as
+    /// [`RequestError::Unavailable`] without touching the queue.
+    parked: Arc<Mutex<Option<(String, String)>>>,
 }
 
 impl Shared {
@@ -313,6 +340,7 @@ struct Metrics {
     served: usize,
     shed: usize,
     errors: usize,
+    unavailable: usize,
     batches: usize,
     fill_sum: usize,
     rebuilds: u64,
@@ -376,6 +404,7 @@ impl Server {
             metrics: Arc::new(Mutex::new(Metrics::default())),
             depth: Arc::new(AtomicUsize::new(0)),
             gate,
+            parked: Arc::new(Mutex::new(None)),
         };
         let worker_shared = shared.clone();
         let queue_bound = cfg.queue_depth.max(1);
@@ -420,6 +449,15 @@ impl Server {
             self.img_elems,
             image.len()
         );
+        // A parked model declines before admission: the request never
+        // queues, and the ticket is pre-resolved with the typed reason so
+        // callers keep the single accept-then-wait control flow.
+        if let Some((model, reason)) = self.shared.parked.lock().unwrap().clone() {
+            self.shared.metrics.lock().unwrap().unavailable += 1;
+            let (rtx, rrx) = mpsc::channel();
+            let _ = rtx.send(Err(RequestError::Unavailable { model, reason }));
+            return Ok(Admission::Accepted(Ticket { rx: rrx }));
+        }
         // Exact admission: compare-and-increment so concurrent submitters
         // can never overshoot the bound.
         let mut observed = 0usize;
@@ -467,10 +505,26 @@ impl Server {
         self.shared.depth.load(Ordering::SeqCst)
     }
 
+    /// Park this model: until [`Server::set_available`], every `submit`
+    /// resolves as [`RequestError::Unavailable`] naming `model` and
+    /// `reason`, counted in [`ServerReport::unavailable`]. Requests
+    /// already admitted keep draining through the worker — parking gates
+    /// *new* arrivals only, which is exactly the hot-swap contract
+    /// (DESIGN.md §14): the old engine finishes what it accepted.
+    pub fn set_unavailable(&self, model: &str, reason: &str) {
+        *self.shared.parked.lock().unwrap() = Some((model.to_string(), reason.to_string()));
+    }
+
+    /// Reopen admission after [`Server::set_unavailable`] (rollback path:
+    /// a failed swap hands the queue back to the incumbent engine).
+    pub fn set_available(&self) {
+        *self.shared.parked.lock().unwrap() = None;
+    }
+
     /// Stop the worker and return final metrics. Total accounting always
     /// balances: every submitted request is exactly one of served /
-    /// shed / errors (or still holds an unresolved ticket, impossible
-    /// after the worker drains and exits).
+    /// shed / errors / unavailable (or still holds an unresolved ticket,
+    /// impossible after the worker drains and exits).
     pub fn shutdown(mut self) -> ServerReport {
         self.tx.take(); // close the queue
         if let Some(w) = self.worker.take() {
@@ -495,6 +549,7 @@ impl Server {
             served: m.served,
             shed: m.shed,
             errors: m.errors,
+            unavailable: m.unavailable,
             batches: m.batches,
             mean_batch_fill: if m.batches == 0 {
                 0.0

@@ -10,6 +10,7 @@
 //! mlcstt accuracy  --model vggmini          Fig. 8  fault-injection accuracy
 //! mlcstt bandwidth --net vgg16              Fig. 9  systolic bandwidth
 //! mlcstt serve     --model vggmini          e2e serving demo + latency
+//! mlcstt deliver   --fail 2 --corrupt 1     zero-downtime hot-swap delivery demo
 //! ```
 //!
 //! Everything is deterministic under `--seed`.
@@ -53,6 +54,7 @@ fn main() {
         "sweep" => cmd_sweep(&rest),
         "bandwidth" => cmd_bandwidth(&rest),
         "serve" => cmd_serve(&rest),
+        "deliver" => cmd_deliver(&rest),
         other => {
             print_usage();
             Err(anyhow::anyhow!("unknown subcommand {other:?}"))
@@ -76,6 +78,7 @@ fn print_usage() {
          \x20 sweep      Fig. 8 accuracy-vs-error-rate sweep (snapshot reuse)\n\
          \x20 bandwidth  Fig. 9 systolic-array bandwidth vs buffer size\n\
          \x20 serve      end-to-end serving demo with latency metrics\n\
+         \x20 deliver    zero-downtime hot-swap delivery demo (chaos-injectable)\n\
          \x20 version    print version\n\n\
          run `mlcstt <subcommand> --help` for flags",
         mlcstt::version()
@@ -606,6 +609,249 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         section.p99_ms,
         section.throughput_rps,
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------- deliver
+
+/// Synthetic linear-model geometry of the delivery demo (mirrors
+/// `examples/registry_serve.rs` so the two demos tell one story).
+const DELIVER_CLASSES: usize = 8;
+const DELIVER_DIM: usize = 64;
+const DELIVER_BATCH: usize = 8;
+
+/// Deterministic f16-representable synthetic weights for one version.
+fn synthetic_weights(seed: u64) -> WeightFile {
+    use mlcstt::runtime::artifacts::ParamSpec;
+    let mut rng = Xoshiro256::seeded(seed);
+    WeightFile {
+        params: vec![ParamSpec {
+            name: "linear.w".into(),
+            shape: vec![DELIVER_CLASSES, DELIVER_DIM],
+            data: (0..DELIVER_CLASSES * DELIVER_DIM)
+                .map(|_| {
+                    mlcstt::fp::quantize_f16(((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0))
+                })
+                .collect(),
+        }],
+    }
+}
+
+/// The ISSUE 9 pipeline end to end on a synthetic model: serve a live
+/// version, stream the next one through verify → stage → canary → swap
+/// (with optional injected chaos), and prove the serving contract on
+/// both verdicts — committed swaps answer from the new decode, failures
+/// roll back to the incumbent. Writes `DELIVERY_cli.json`.
+fn cmd_deliver(args: &[String]) -> Result<()> {
+    use mlcstt::api::{
+        deliver, CanaryCheck, ChaosStream, DeploymentManifest, MemoryStream, WeightStream,
+    };
+    use mlcstt::coordinator::{BatchClassifier, LinearEngine, StoreConfig};
+    use mlcstt::runtime::artifacts::ParamSpec;
+    use mlcstt::util::json::{obj, Json};
+
+    let cmd = Command::new("deliver", "zero-downtime hot-swap delivery demo (synthetic model)")
+        .flag("model", "demo", "registry tag of the served model")
+        .flag("version", "2", "offered version (must advance the live version)")
+        .flag("requests", "64", "requests replayed before and after the verdict")
+        .flag("chunk", "128", "stream chunk size in weights")
+        .flag("rate", "0.002", "soft-error rate of the staged store")
+        .flag("policy", "hybrid", "unprotected | round | rotate | hybrid | zero-parity")
+        .flag("granularity", "4", "metadata granularity")
+        .flag("retries", "", "per-chunk retry budget (default: $MLCSTT_DELIVERY_RETRIES, then 3)")
+        .flag(
+            "backoff-ms",
+            "",
+            "retry backoff base in ms (default: $MLCSTT_DELIVERY_BACKOFF_MS, then 5)",
+        )
+        .flag("canary", "", "canary probe batches (default: $MLCSTT_CANARY, then 1)")
+        .flag("fail", "0", "chaos: failed reads injected per chunk")
+        .flag("truncate", "0", "chaos: truncated reads injected per chunk")
+        .flag("corrupt", "0", "chaos: corrupted reads injected per chunk")
+        .flag("seed", "11", "weights + faults + backoff-jitter seed");
+    let m = cmd.parse(args).map_err(usage_err)?;
+    let model = m.str("model").to_string();
+    let version = m.u64("version")?;
+    let requests = m.usize("requests")?;
+    let chunk = m.usize("chunk")?;
+    let rate = m.f64("rate")?;
+    let policy = Policy::from_label(m.str("policy"))
+        .with_context(|| format!("bad --policy {:?}", m.str("policy")))?;
+    let granularity = m.usize("granularity")?;
+    let seed = m.u64("seed")?;
+    let fail = m.usize("fail")?;
+    let truncate = m.usize("truncate")?;
+    let corrupt = m.usize("corrupt")?;
+
+    // Layered config: explicit flags beat the MLCSTT_DELIVERY_* /
+    // MLCSTT_CANARY environment knobs, which beat the defaults.
+    let mut builder = Config::builder().max_wait(Duration::from_millis(20));
+    if !m.str("retries").is_empty() {
+        builder = builder.delivery_retries(m.usize("retries")?);
+    }
+    if !m.str("backoff-ms").is_empty() {
+        builder = builder.delivery_backoff(Duration::from_millis(m.u64("backoff-ms")?));
+    }
+    if !m.str("canary").is_empty() {
+        builder = builder.canary(m.usize("canary")?);
+    }
+    let config = builder.build();
+    let store = StoreConfig {
+        policy,
+        granularity,
+        error_model: ErrorModel::at_rate(rate),
+        seed,
+        threads: config.threads(),
+        ..StoreConfig::default()
+    };
+
+    // The incumbent version, staged through the usual encode -> MLC
+    // store -> faults -> materialize lifecycle and served from its
+    // decoded tensors.
+    let dep = Deployment::builder()
+        .config(config.clone())
+        .weights(synthetic_weights(seed))
+        .name(model.as_str())
+        .store(store.clone())
+        .build()?;
+    let live = dep.tensors().to_vec();
+    let mut registry = ModelRegistry::new();
+    registry.register(
+        &model,
+        {
+            let flat = live[0].data.clone();
+            move || LinearEngine::new(DELIVER_CLASSES, DELIVER_DIM, DELIVER_BATCH, flat)
+        },
+        config.server(),
+    )?;
+
+    // Replay closed-loop requests and count agreement with a reference
+    // decode (served answers must match it exactly).
+    let replay = |registry: &ModelRegistry,
+                  reference: &LinearEngine,
+                  rng: &mut Xoshiro256|
+     -> Result<(usize, usize)> {
+        let mut served = 0usize;
+        let mut agree = 0usize;
+        for _ in 0..requests {
+            let image: Vec<f32> =
+                (0..DELIVER_DIM).map(|_| (rng.next_gaussian() * 0.5) as f32).collect();
+            let want = reference.classify_batch(&image)?[0];
+            let got = registry.submit(&model, image)?.ticket()?.wait()?.class;
+            served += 1;
+            if got == want {
+                agree += 1;
+            }
+        }
+        Ok((served, agree))
+    };
+    let mut rng = Xoshiro256::seeded(seed ^ 0xD15C0);
+    let live_reference =
+        LinearEngine::new(DELIVER_CLASSES, DELIVER_DIM, 1, live[0].data.clone())?;
+    let (served_before, agree_before) = replay(&registry, &live_reference, &mut rng)?;
+
+    // The next version: manifest + canary expectations from its clean
+    // weights, streamed through optional injected chaos.
+    let next = synthetic_weights(seed.wrapping_add(version));
+    let manifest = DeploymentManifest::describe(&model, version, &next, chunk, &store)?;
+    let clean_reference = LinearEngine::new(DELIVER_CLASSES, DELIVER_DIM, 1, next.flat())?;
+    let checks: Vec<CanaryCheck> = (0..DELIVER_BATCH)
+        .map(|c| {
+            let row = (c % DELIVER_CLASSES) * DELIVER_DIM;
+            let image = next.params[0].data[row..row + DELIVER_DIM].to_vec();
+            let expect = clean_reference.classify_batch(&image)?[0];
+            Ok(CanaryCheck { image, expect })
+        })
+        .collect::<Result<_>>()?;
+    let mut stream: Box<dyn WeightStream> = if fail + truncate + corrupt > 0 {
+        Box::new(
+            ChaosStream::new(MemoryStream::from_weights(version, &next, chunk))
+                .fail_first(fail)
+                .truncate_first(truncate)
+                .corrupt_first(corrupt),
+        )
+    } else {
+        Box::new(MemoryStream::from_weights(version, &next, chunk))
+    };
+
+    println!(
+        "delivering {model}@v{version}: {} weights in {} chunks \
+         (chaos per chunk: {fail} fail / {truncate} truncate / {corrupt} corrupt)",
+        manifest.total_elems,
+        manifest.chunk_count(),
+    );
+    let outcome = deliver(
+        &mut registry,
+        &manifest,
+        stream.as_mut(),
+        &checks,
+        &config,
+        |t: &[ParamSpec]| {
+            LinearEngine::new(DELIVER_CLASSES, DELIVER_DIM, DELIVER_BATCH, t[0].data.clone())
+        },
+    );
+    let swapped = outcome.is_ok();
+    match &outcome {
+        Ok(r) => println!(
+            "swap committed: v{} live after {} chunks / {} retries / {:.1} ms backoff / {} canary batches",
+            r.version,
+            r.chunks,
+            r.retries,
+            r.backoff_total.as_secs_f64() * 1e3,
+            r.canary_batches,
+        ),
+        Err(e) => println!("delivery failed (incumbent keeps serving): {e}"),
+    }
+
+    // Either verdict must uphold the serving contract: a committed swap
+    // answers from the new version's decode, a failure rolls back to the
+    // incumbent's — both references rebuilt independently here (the
+    // store decode is deterministic per recipe, DESIGN.md §12/§14).
+    let reference = if swapped {
+        let staged = Deployment::builder()
+            .config(config.clone())
+            .weights(synthetic_weights(seed.wrapping_add(version)))
+            .name("verify")
+            .store(manifest.store_config(config.threads()))
+            .build()?;
+        LinearEngine::new(DELIVER_CLASSES, DELIVER_DIM, 1, staged.tensors()[0].data.clone())?
+    } else {
+        live_reference
+    };
+    let (served_after, agree_after) = replay(&registry, &reference, &mut rng)?;
+    println!(
+        "before the verdict: {served_before}/{requests} served, {agree_before} matching the live decode\n\
+         after  {}: {served_after}/{requests} served, {agree_after} matching the expected decode",
+        if swapped { "the swap    " } else { "the rollback" },
+    );
+    let report = registry.shutdown();
+    println!("{report}");
+
+    let verdict = match &outcome {
+        Ok(r) => ("delivery", r.to_json()),
+        Err(e) => ("error", Json::Str(e.to_string())),
+    };
+    let doc = obj(vec![
+        ("schema", Json::Str("mlcstt/delivery/v1".into())),
+        ("manifest", manifest.to_json()),
+        ("swapped", Json::Bool(swapped)),
+        ("served_before", Json::from(served_before)),
+        ("agree_before", Json::from(agree_before)),
+        ("served_after", Json::from(served_after)),
+        ("agree_after", Json::from(agree_after)),
+        ("swaps", Json::Num(report.swaps as f64)),
+        ("rollbacks", Json::Num(report.rollbacks as f64)),
+        ("chunk_retries", Json::Num(report.delivery_retries as f64)),
+        ("unavailable", Json::from(report.total_unavailable())),
+        verdict,
+    ]);
+    let out_dir = mlcstt::api::env::bench_dir().unwrap_or_else(|| PathBuf::from("bench_out"));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let path = out_dir.join("DELIVERY_cli.json");
+    std::fs::write(&path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

@@ -193,8 +193,8 @@ pub fn serving_table(
     let mut t = Table::new(
         title,
         &[
-            "model", "served", "shed", "errors", "rebuilds", "batches", "fill", "p50 ms",
-            "p95 ms", "p99 ms", "req/s", "q.mean", "q.max",
+            "model", "served", "shed", "errors", "unavail", "rebuilds", "batches", "fill",
+            "p50 ms", "p95 ms", "p99 ms", "req/s", "q.mean", "q.max",
         ],
     );
     for (name, r) in rows {
@@ -203,6 +203,7 @@ pub fn serving_table(
             r.served.to_string(),
             r.shed.to_string(),
             r.errors.to_string(),
+            r.unavailable.to_string(),
             r.rebuilds.to_string(),
             r.batches.to_string(),
             format!("{:.1}", r.mean_batch_fill),
@@ -308,6 +309,7 @@ mod tests {
             served: 90,
             shed: 8,
             errors: 2,
+            unavailable: 1,
             batches: 12,
             mean_batch_fill: 7.5,
             p50_ms: 1.25,

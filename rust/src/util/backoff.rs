@@ -1,0 +1,180 @@
+//! Deterministic seeded exponential backoff (DESIGN.md §14).
+//!
+//! Retry loops in this crate must stay reproducible: a delivery campaign
+//! replayed with the same seed has to make the same retry decisions and
+//! sleep the same (virtual) durations, or the chaos tests in
+//! `rust/tests/delivery.rs` could not pin failure paths. So there is no
+//! wall-clock randomness here — jitter comes from a
+//! [`crate::util::rng::Xoshiro256`] stream seeded by the caller, and the
+//! schedule is a pure function of `(base, cap, seed, attempt)`.
+//!
+//! The shape is classic equal-jitter exponential backoff: attempt `k`
+//! waits somewhere in `[bound(k)/2, bound(k))` where
+//! `bound(k) = base · 2^min(k, cap)`. The exponent cap keeps the wait
+//! bounded no matter how many retries a caller configures, and the
+//! half-floor keeps successive retries from synchronizing at zero.
+//!
+//! [`crate::api::deliver`] consumes this for chunk re-reads instead of an
+//! inline loop; the closed-form unit tests below pin the envelope.
+
+use std::time::Duration;
+
+use crate::util::rng::Xoshiro256;
+
+/// Largest allowed doubling exponent. `base · 2^20` already turns a 1 ms
+/// base into ~17 min; anything above is a configuration error, so
+/// [`Backoff::with_cap`] clamps here to keep the `1 << cap` shift sound.
+pub const MAX_EXPONENT: u32 = 20;
+
+/// Default doubling cap: delays stop growing after `base · 2^6` (64×).
+pub const DEFAULT_EXPONENT_CAP: u32 = 6;
+
+/// A deterministic equal-jitter exponential backoff schedule.
+///
+/// Construction fixes the whole schedule: two instances built with the
+/// same `(base, cap, seed)` yield identical delay sequences. Callers pull
+/// delays with [`Backoff::next_delay`] and decide themselves whether to
+/// sleep, accumulate into a timeout budget, or both.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: u32,
+    attempt: u32,
+    rng: Xoshiro256,
+}
+
+impl Backoff {
+    /// A schedule with the [`DEFAULT_EXPONENT_CAP`] doubling cap.
+    pub fn new(base: Duration, seed: u64) -> Self {
+        Self::with_cap(base, DEFAULT_EXPONENT_CAP, seed)
+    }
+
+    /// A schedule whose delays stop doubling after `base · 2^cap`
+    /// (`cap` clamped to [`MAX_EXPONENT`]).
+    pub fn with_cap(base: Duration, cap: u32, seed: u64) -> Self {
+        Backoff {
+            base,
+            cap: cap.min(MAX_EXPONENT),
+            attempt: 0,
+            rng: Xoshiro256::seeded(seed),
+        }
+    }
+
+    /// Jitter-free ceiling for attempt `k`: `base · 2^min(k, cap)`,
+    /// saturating instead of overflowing for pathological bases.
+    pub fn bound(&self, attempt: u32) -> Duration {
+        self.base.saturating_mul(1u32 << attempt.min(self.cap))
+    }
+
+    /// Attempts drawn so far (the next [`Backoff::next_delay`] serves
+    /// this attempt index).
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Draw the delay for the current attempt and advance. Equal jitter:
+    /// uniform in `[bound/2, bound)` for a non-zero bound, exactly zero
+    /// for a zero base (callers disabling backoff pay no wait at all).
+    pub fn next_delay(&mut self) -> Duration {
+        let bound = self.bound(self.attempt);
+        self.attempt = self.attempt.saturating_add(1);
+        let half = bound / 2;
+        // One RNG draw per attempt even when the base is zero, so a
+        // schedule's draw count — and therefore any RNG stream split
+        // after it — does not depend on the configured base.
+        let u = self.rng.next_f64();
+        if bound.is_zero() {
+            return Duration::ZERO;
+        }
+        half + Duration::from_nanos((half.as_nanos() as f64 * u) as u64)
+    }
+
+    /// Rewind to attempt 0 **and** restart the jitter stream from a fresh
+    /// split, for callers reusing one schedule across independent items
+    /// (each item still gets a distinct but deterministic sequence).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+        self.rng = self.rng.split();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delays(mut b: Backoff, n: usize) -> Vec<Duration> {
+        (0..n).map(|_| b.next_delay()).collect()
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = delays(Backoff::new(Duration::from_millis(5), 0xD15EA5E), 8);
+        let b = delays(Backoff::new(Duration::from_millis(5), 0xD15EA5E), 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = delays(Backoff::new(Duration::from_millis(5), 1), 8);
+        let b = delays(Backoff::new(Duration::from_millis(5), 2), 8);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn every_delay_inside_the_equal_jitter_envelope() {
+        let base = Duration::from_millis(3);
+        let mut b = Backoff::with_cap(base, 4, 42);
+        for k in 0..12u32 {
+            let bound = b.bound(k);
+            let d = b.next_delay();
+            assert!(d >= bound / 2, "attempt {k}: {d:?} < {:?}", bound / 2);
+            assert!(d < bound, "attempt {k}: {d:?} >= {bound:?}");
+        }
+        assert_eq!(b.attempt(), 12);
+    }
+
+    #[test]
+    fn bound_is_closed_form_and_caps() {
+        let base = Duration::from_millis(2);
+        let b = Backoff::with_cap(base, 4, 0);
+        for k in 0..5u32 {
+            assert_eq!(b.bound(k), base * (1 << k));
+        }
+        // Past the cap the ceiling freezes at base · 2^cap.
+        assert_eq!(b.bound(9), base * 16);
+        assert_eq!(b.bound(31), base * 16);
+    }
+
+    #[test]
+    fn cap_clamps_to_max_exponent() {
+        let b = Backoff::with_cap(Duration::from_nanos(1), 63, 0);
+        assert_eq!(b.bound(u32::MAX), Duration::from_nanos(1 << MAX_EXPONENT));
+    }
+
+    #[test]
+    fn zero_base_never_waits() {
+        let mut b = Backoff::new(Duration::ZERO, 7);
+        for _ in 0..6 {
+            assert_eq!(b.next_delay(), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn saturates_instead_of_overflowing() {
+        let b = Backoff::with_cap(Duration::MAX, 20, 0);
+        assert_eq!(b.bound(20), Duration::MAX);
+    }
+
+    #[test]
+    fn reset_restarts_attempts_on_a_split_stream() {
+        let mut b = Backoff::new(Duration::from_millis(1), 9);
+        let first = b.next_delay();
+        b.reset();
+        assert_eq!(b.attempt(), 0);
+        // Same attempt index, different (split) jitter stream: the bound
+        // envelope holds but the draw is independent of the first pass.
+        let again = b.next_delay();
+        assert!(again >= b.bound(0) / 2 && again < b.bound(0));
+        let _ = first;
+    }
+}

@@ -133,6 +133,33 @@ pub fn policy() -> Option<crate::encoding::Policy> {
     crate::encoding::Policy::from_label(raw("MLCSTT_POLICY")?.as_str())
 }
 
+/// `MLCSTT_DELIVERY_RETRIES` — re-read budget per chunk for streamed
+/// weight delivery ([`crate::api::deliver`]): how many times a failed
+/// chunk read/verify is retried before the delivery fails with
+/// `RetriesExhausted`. `0` means fail on the first bad read.
+/// Unset/unparsable is `None` (callers default to
+/// [`crate::api::DEFAULT_DELIVERY_RETRIES`]).
+pub fn delivery_retries() -> Option<usize> {
+    raw("MLCSTT_DELIVERY_RETRIES")?.parse().ok()
+}
+
+/// `MLCSTT_DELIVERY_BACKOFF_MS` — base delay, in milliseconds, of the
+/// deterministic equal-jitter exponential backoff between chunk retries
+/// ([`crate::util::backoff::Backoff`]). `0` retries immediately.
+/// Unset/unparsable is `None` (callers default to
+/// [`crate::api::DEFAULT_DELIVERY_BACKOFF`]).
+pub fn delivery_backoff_ms() -> Option<u64> {
+    raw("MLCSTT_DELIVERY_BACKOFF_MS")?.parse().ok()
+}
+
+/// `MLCSTT_CANARY` — canary probe batches a freshly staged engine must
+/// classify correctly before a hot swap commits. `0` skips the canary
+/// (verification + staging still gate). Unset/unparsable is `None`
+/// (callers default to [`crate::api::DEFAULT_CANARY_BATCHES`]).
+pub fn canary() -> Option<usize> {
+    raw("MLCSTT_CANARY")?.parse().ok()
+}
+
 /// `MLCSTT_EVICT` — shared-pool capacity-pressure policy: `lru` (evict
 /// the least-recently-served model, rebuild on demand) or `deny` (refuse
 /// the allocation). Unset or unrecognized is `None` (callers default to

@@ -6,6 +6,9 @@
 //! * [`rng`] — SplitMix64 seeding + xoshiro256** streams (deterministic,
 //!   splittable; every stochastic component in the crate takes a seed),
 //! * [`json`] — a small, strict JSON parser/serializer (manifests, config),
+//! * [`backoff`] — deterministic seeded equal-jitter exponential backoff
+//!   (no wall-clock randomness; the retry engine under
+//!   [`crate::api::deliver`]),
 //! * [`cli`] — declarative flag parsing for the `mlcstt` binary,
 //! * [`stats`] — streaming summaries used by benches and reports,
 //! * [`prop`] — a miniature property-testing harness (random case
@@ -17,6 +20,7 @@
 //!   [`threads`] and [`crate::fp`] can use it without depending on the
 //!   facade layer; DESIGN.md §10).
 
+pub mod backoff;
 pub mod cli;
 pub mod env;
 pub mod json;

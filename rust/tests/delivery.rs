@@ -1,0 +1,366 @@
+//! Zero-downtime delivery contracts (ISSUE 9, DESIGN.md §14): under
+//! corrupted chunks, truncated streams, wrong-version manifests, flaky
+//! reads, and sabotaged canaries, every delivery outcome is either "the
+//! old version still serving bit-identically" or a typed
+//! [`DeliveryError`] — never a partial swap, never a dropped request.
+//!
+//! Everything runs backend-free: synthetic f16-representable weights
+//! through `LinearEngine`, staged stores at rate 0 so "bit-identical"
+//! is checkable as exact prediction equality against a clean reference
+//! decode.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use mlcstt::api::{
+    deliver, BufferPool, CanaryCheck, ChaosStream, Config, DeliveryError, DeploymentManifest,
+    EvictPolicy, MemoryStream, ModelRegistry, WeightStream,
+};
+use mlcstt::coordinator::{BatchClassifier, LinearEngine, StoreConfig};
+use mlcstt::runtime::artifacts::{ParamSpec, WeightFile};
+use mlcstt::stt::ErrorModel;
+use mlcstt::util::prop::{prop_assert, Runner};
+use mlcstt::util::rng::Xoshiro256;
+
+const CLASSES: usize = 4;
+const DIM: usize = 16;
+const BATCH: usize = 4;
+
+/// Deterministic f16-representable weights (bit-exact through a rate-0
+/// store decode) for one version.
+fn weights(seed: u64) -> WeightFile {
+    let mut rng = Xoshiro256::seeded(seed);
+    WeightFile {
+        params: vec![ParamSpec {
+            name: "w".into(),
+            shape: vec![CLASSES, DIM],
+            data: (0..CLASSES * DIM)
+                .map(|_| {
+                    mlcstt::fp::quantize_f16(((rng.next_gaussian() * 0.3) as f32).clamp(-1.0, 1.0))
+                })
+                .collect(),
+        }],
+    }
+}
+
+/// Fault-free staged-store recipe (decode == quantized input).
+fn clean_store(seed: u64) -> StoreConfig {
+    StoreConfig {
+        error_model: ErrorModel::at_rate(0.0),
+        seed,
+        threads: 1,
+        ..StoreConfig::default()
+    }
+}
+
+/// Delivery config: explicit budget, zero backoff (no sleeps in tests),
+/// one canary batch.
+fn config(retries: usize) -> Config {
+    Config::builder()
+        .max_wait(Duration::from_millis(1))
+        .threads(1)
+        .delivery_retries(retries)
+        .delivery_backoff(Duration::ZERO)
+        .canary(1)
+        .build()
+}
+
+/// A registry serving `v0` as the incumbent under the tag "m".
+fn fresh_registry(v0: &WeightFile) -> Result<ModelRegistry> {
+    let mut registry = ModelRegistry::new();
+    let flat = v0.flat();
+    registry.register(
+        "m",
+        move || LinearEngine::new(CLASSES, DIM, BATCH, flat),
+        config(0).server(),
+    )?;
+    Ok(registry)
+}
+
+/// Canary expectations from a version's clean decode; `sabotage` shifts
+/// every expected class so the probe can only fail.
+fn canary(version_weights: &WeightFile, sabotage: bool) -> Result<Vec<CanaryCheck>> {
+    let reference = LinearEngine::new(CLASSES, DIM, 1, version_weights.flat())?;
+    (0..BATCH)
+        .map(|c| {
+            let row = (c % CLASSES) * DIM;
+            let image = version_weights.params[0].data[row..row + DIM].to_vec();
+            let mut expect = reference.classify_batch(&image)?[0];
+            if sabotage {
+                expect = (expect + 1) % CLASSES;
+            }
+            Ok(CanaryCheck { image, expect })
+        })
+        .collect()
+}
+
+/// True iff `probes` served answers all match the reference decode.
+fn serves_exactly(
+    registry: &ModelRegistry,
+    reference: &WeightFile,
+    probes: usize,
+    seed: u64,
+) -> Result<bool> {
+    let engine = LinearEngine::new(CLASSES, DIM, 1, reference.flat())?;
+    let mut rng = Xoshiro256::seeded(seed);
+    for _ in 0..probes {
+        let image: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian() as f32).collect();
+        let want = engine.classify_batch(&image)?[0];
+        let got = registry.submit("m", image)?.ticket()?.wait()?.class;
+        if got != want {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+fn build(t: &[ParamSpec]) -> Result<LinearEngine> {
+    LinearEngine::new(CLASSES, DIM, BATCH, t[0].data.clone())
+}
+
+/// Property: a fault injected deeper than the retry budget — corrupted,
+/// truncated, or failing reads on a random chunk, at a random chunk
+/// geometry — always fails with a typed error attributing the right
+/// chunk, never advances the version, and leaves the incumbent serving
+/// bit-identically.
+#[test]
+fn property_failed_delivery_always_rolls_back_bit_identical() {
+    let mut r = Runner::new("failed-delivery-rollback", 0xDE11, 24);
+    r.run(|g| {
+        let v0 = weights(1);
+        let v1 = weights(2);
+        let chunk = 1 + g.below(CLASSES * DIM + 8);
+        let budget = g.below(3);
+        let cfg = config(budget);
+        let manifest = DeploymentManifest::describe("m", 1, &v1, chunk, &clean_store(9))
+            .map_err(|e| e.to_string())?;
+        let target = g.below(manifest.chunk_count());
+        let deep = budget + 1; // one fault past the budget
+        let base = MemoryStream::from_weights(1, &v1, chunk);
+        let mut stream: Box<dyn WeightStream> = match g.below(3) {
+            0 => Box::new(ChaosStream::new(base).corrupt_first(deep).on_chunk(target)),
+            1 => Box::new(ChaosStream::new(base).truncate_first(deep).on_chunk(target)),
+            _ => Box::new(ChaosStream::new(base).fail_first(deep).on_chunk(target)),
+        };
+        let mut registry = fresh_registry(&v0).map_err(|e| e.to_string())?;
+        let checks = canary(&v1, false).map_err(|e| e.to_string())?;
+        let err = match deliver(&mut registry, &manifest, stream.as_mut(), &checks, &cfg, build) {
+            Err(e) => e,
+            Ok(_) => return Err("a fault past the budget must fail the delivery".into()),
+        };
+        let typed = match (&err, budget) {
+            (DeliveryError::ChecksumMismatch { chunk: c, .. }, 0) => *c == target,
+            (DeliveryError::Truncated { chunk: c, .. }, 0) => *c == target,
+            (DeliveryError::Read { chunk: c, .. }, 0) => *c == target,
+            (DeliveryError::RetriesExhausted { chunk: c, retries, .. }, b) if b > 0 => {
+                *c == target && *retries == b
+            }
+            _ => false,
+        };
+        prop_assert(typed, format!("unexpected error shape (budget {budget}): {err}"))?;
+        prop_assert(registry.version("m") == 0, "a failed delivery must not advance the version")?;
+        let intact =
+            serves_exactly(&registry, &v0, 6, g.u64()).map_err(|e| e.to_string())?;
+        prop_assert(intact, "the incumbent must keep serving bit-identically after rollback")
+    });
+}
+
+/// Property: any chaos schedule *inside* the retry budget converges — the
+/// swap commits, the retry spend is exactly the injected fault count, and
+/// the new version serves bit-identically to its clean decode.
+#[test]
+fn property_recoverable_chaos_converges_to_a_bit_exact_swap() {
+    let mut r = Runner::new("chaos-convergent-swap", 0x54A9, 16);
+    r.run(|g| {
+        let v0 = weights(1);
+        let v1 = weights(2);
+        let chunk = 1 + g.below(CLASSES * DIM);
+        let fails = g.below(2);
+        let truncates = g.below(2);
+        let corrupts = g.below(2);
+        let per_chunk = fails + truncates + corrupts;
+        let cfg = config(per_chunk); // budget == injected faults: converges exactly
+        let manifest = DeploymentManifest::describe("m", 1, &v1, chunk, &clean_store(4))
+            .map_err(|e| e.to_string())?;
+        let mut stream = ChaosStream::new(MemoryStream::from_weights(1, &v1, chunk))
+            .fail_first(fails)
+            .truncate_first(truncates)
+            .corrupt_first(corrupts);
+        let mut registry = fresh_registry(&v0).map_err(|e| e.to_string())?;
+        let checks = canary(&v1, false).map_err(|e| e.to_string())?;
+        let report = deliver(&mut registry, &manifest, &mut stream, &checks, &cfg, build)
+            .map_err(|e| format!("in-budget chaos must converge, got: {e}"))?;
+        prop_assert(
+            report.retries == (per_chunk * manifest.chunk_count()) as u64,
+            format!(
+                "retry spend {} != {} faults injected",
+                report.retries,
+                per_chunk * manifest.chunk_count()
+            ),
+        )?;
+        prop_assert(registry.version("m") == 1, "the committed version must be live")?;
+        let exact = serves_exactly(&registry, &v1, 6, g.u64()).map_err(|e| e.to_string())?;
+        prop_assert(exact, "the swapped version must serve its clean decode bit-identically")
+    });
+}
+
+/// Version gates fail fast and typed: a stream claiming the wrong
+/// version, and a manifest that does not advance the live version, are
+/// both rejected before any chunk transfers, and each rejection counts
+/// as a rollback.
+#[test]
+fn wrong_version_manifests_are_rejected_before_any_read() {
+    let v0 = weights(1);
+    let v1 = weights(2);
+    let mut registry = fresh_registry(&v0).unwrap();
+    let manifest = DeploymentManifest::describe("m", 2, &v1, 16, &clean_store(3)).unwrap();
+
+    // The stream claims v7 against a v2 manifest.
+    let mut s = MemoryStream::from_weights(7, &v1, 16);
+    let err = deliver(&mut registry, &manifest, &mut s, &[], &config(1), build).unwrap_err();
+    assert_eq!(
+        err,
+        DeliveryError::VersionConflict { model: "m".into(), offered: 2, found: 7 }
+    );
+    assert_eq!(registry.version("m"), 0);
+
+    // A clean delivery commits v2...
+    let mut s = MemoryStream::from_weights(2, &v1, 16);
+    deliver(&mut registry, &manifest, &mut s, &[], &config(1), build).unwrap();
+    assert_eq!(registry.version("m"), 2);
+
+    // ...after which re-offering v2 is stale, and rejected.
+    let mut s = MemoryStream::from_weights(2, &v1, 16);
+    let err = deliver(&mut registry, &manifest, &mut s, &[], &config(1), build).unwrap_err();
+    assert_eq!(
+        err,
+        DeliveryError::VersionConflict { model: "m".into(), offered: 2, found: 2 }
+    );
+
+    let report = registry.shutdown();
+    assert_eq!(report.swaps, 1, "only the clean delivery swapped");
+    assert_eq!(report.rollbacks, 2, "both rejections counted as rollbacks");
+}
+
+/// In-flight requests admitted before a swap drain on the old engine,
+/// answering from the old decode — nothing is dropped at the instant of
+/// the swap, and the retired section accounts for them.
+#[test]
+fn in_flight_requests_drain_on_the_old_engine_across_a_swap() {
+    let v0 = weights(1);
+    let v1 = weights(2);
+    let mut registry = fresh_registry(&v0).unwrap();
+    let reference = LinearEngine::new(CLASSES, DIM, 1, v0.flat()).unwrap();
+    let mut rng = Xoshiro256::seeded(17);
+    let mut tail = Vec::new();
+    for _ in 0..2 * BATCH {
+        let image: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian() as f32).collect();
+        let want = reference.classify_batch(&image).unwrap()[0];
+        tail.push((registry.submit("m", image).unwrap().ticket().unwrap(), want));
+    }
+
+    let manifest = DeploymentManifest::describe("m", 1, &v1, 16, &clean_store(8)).unwrap();
+    let mut s = MemoryStream::from_weights(1, &v1, 16);
+    let checks = canary(&v1, false).unwrap();
+    deliver(&mut registry, &manifest, &mut s, &checks, &config(0), build).unwrap();
+
+    for (t, want) in tail {
+        let got = t.wait().expect("in-flight request dropped by the swap").class;
+        assert_eq!(got, want, "in-flight request must answer from the old decode");
+    }
+    assert!(serves_exactly(&registry, &v1, 6, 23).unwrap(), "new decode serves after the swap");
+
+    let report = registry.shutdown();
+    assert_eq!(report.retired.len(), 1);
+    assert_eq!(report.retired[0].1.served, 2 * BATCH, "retired section owns the drained tail");
+    assert_eq!(report.retired[0].1.shed, 0);
+    assert_eq!(report.retired[0].1.errors, 0);
+}
+
+/// Pool-staged deliveries hand tenants over atomically: a failed canary
+/// withdraws the staged tenant and keeps the live one; a success retires
+/// the old tenant and leaves exactly the new version resident.
+#[test]
+fn pool_staging_swaps_tenants_and_rolls_back_cleanly() {
+    let v0 = weights(1);
+    let v1 = weights(2);
+    let v2 = weights(3);
+    let pool = BufferPool::new(4096, 4, 64, EvictPolicy::Lru);
+    pool.admit("m", &clean_store(5), &v0).unwrap();
+    let mut registry = ModelRegistry::new().with_pool(pool.clone());
+    registry.register_pooled("m", build, config(0).server()).unwrap();
+
+    // Sabotaged canary: rollback withdraws the staged tenant.
+    let manifest = DeploymentManifest::describe("m", 1, &v1, 16, &clean_store(6)).unwrap();
+    let mut s = MemoryStream::from_weights(1, &v1, 16);
+    let checks = canary(&v1, true).unwrap();
+    let err = deliver(&mut registry, &manifest, &mut s, &checks, &config(0), build).unwrap_err();
+    assert!(
+        matches!(err, DeliveryError::CanaryFailed { mismatches, .. } if mismatches > 0),
+        "sabotaged canary must fail typed, got: {err}"
+    );
+    assert!(pool.contains("m"), "live tenant must survive a canary rollback");
+    assert!(!pool.contains("m@v1"), "staged tenant must be withdrawn on rollback");
+    assert!(serves_exactly(&registry, &v0, 6, 31).unwrap());
+
+    // Clean canary: the swap commits and the old tenant retires.
+    let mut s = MemoryStream::from_weights(1, &v1, 16);
+    let checks = canary(&v1, false).unwrap();
+    deliver(&mut registry, &manifest, &mut s, &checks, &config(0), build).unwrap();
+    assert!(!pool.contains("m"), "pre-delivery tenant retires after the swap");
+    assert!(pool.contains("m@v1"));
+    assert!(serves_exactly(&registry, &v1, 6, 37).unwrap());
+
+    // A second committed delivery retires the prior versioned tenant.
+    let manifest2 = DeploymentManifest::describe("m", 2, &v2, 16, &clean_store(7)).unwrap();
+    let mut s = MemoryStream::from_weights(2, &v2, 16);
+    let checks = canary(&v2, false).unwrap();
+    deliver(&mut registry, &manifest2, &mut s, &checks, &config(0), build).unwrap();
+    assert!(!pool.contains("m@v1"));
+    assert!(pool.contains("m@v2"));
+    assert!(serves_exactly(&registry, &v2, 6, 41).unwrap());
+
+    let report = registry.shutdown();
+    assert_eq!(report.swaps, 2);
+    assert_eq!(report.rollbacks, 1);
+}
+
+/// `MLCSTT_CANARY=0` (here via the builder) skips probing entirely: even
+/// expectations that could only fail do not block the swap.
+#[test]
+fn canary_zero_skips_probing() {
+    let v0 = weights(1);
+    let v1 = weights(2);
+    let mut registry = fresh_registry(&v0).unwrap();
+    let cfg = Config::builder()
+        .max_wait(Duration::from_millis(1))
+        .threads(1)
+        .delivery_retries(0)
+        .delivery_backoff(Duration::ZERO)
+        .canary(0)
+        .build();
+    let manifest = DeploymentManifest::describe("m", 1, &v1, 16, &clean_store(2)).unwrap();
+    let mut s = MemoryStream::from_weights(1, &v1, 16);
+    let checks = canary(&v1, true).unwrap(); // would fail if probed
+    let report = deliver(&mut registry, &manifest, &mut s, &checks, &cfg, build).unwrap();
+    assert_eq!(report.canary_batches, 0);
+    assert_eq!(registry.version("m"), 1);
+    registry.shutdown();
+}
+
+/// Delivering to a tag the registry does not serve is a typed staging
+/// error, not a panic or a silent no-op.
+#[test]
+fn unknown_model_is_a_typed_staging_error() {
+    let v0 = weights(1);
+    let v1 = weights(2);
+    let mut registry = fresh_registry(&v0).unwrap();
+    let manifest = DeploymentManifest::describe("ghost", 1, &v1, 16, &clean_store(2)).unwrap();
+    let mut s = MemoryStream::from_weights(1, &v1, 16);
+    let err = deliver(&mut registry, &manifest, &mut s, &[], &config(0), build).unwrap_err();
+    assert!(
+        matches!(&err, DeliveryError::Staging { message } if message.contains("ghost")),
+        "expected a typed staging error naming the tag, got: {err}"
+    );
+    registry.shutdown();
+}

@@ -182,4 +182,68 @@ fn mlcstt_env_layering_builder_beats_env_beats_default() {
     assert_eq!(Config::from_env().store().policy, Policy::Hybrid, "unknown -> default");
     std::env::remove_var("MLCSTT_POLICY");
     assert_eq!(Config::from_env().store().policy, Policy::Hybrid);
+
+    // --- delivery retry budget (ISSUE 9): builder beats env beats the
+    // caller default; 0 is meaningful (fail on the first bad read), so
+    // no clamp — and junk degrades to the default.
+    std::env::set_var("MLCSTT_DELIVERY_RETRIES", "7");
+    assert_eq!(Config::from_env().delivery_retries_or(3), 7);
+    assert_eq!(Config::builder().delivery_retries(1).build().delivery_retries_or(3), 1);
+    std::env::set_var("MLCSTT_DELIVERY_RETRIES", "0");
+    assert_eq!(Config::from_env().delivery_retries_or(3), 0, "0 means fail-fast, no clamp");
+    assert_eq!(Config::builder().delivery_retries(0).build().delivery_retries_or(3), 0);
+    std::env::set_var("MLCSTT_DELIVERY_RETRIES", "junk");
+    assert_eq!(Config::from_env().delivery_retries_or(3), 3, "unparsable -> default");
+    std::env::remove_var("MLCSTT_DELIVERY_RETRIES");
+    assert_eq!(
+        Config::from_env().delivery_retries_or(mlcstt::api::DEFAULT_DELIVERY_RETRIES),
+        mlcstt::api::DEFAULT_DELIVERY_RETRIES
+    );
+
+    // --- delivery backoff base: env value is milliseconds, 0 means
+    // retry immediately (no clamp).
+    std::env::set_var("MLCSTT_DELIVERY_BACKOFF_MS", "12");
+    assert_eq!(
+        Config::from_env().delivery_backoff_or(std::time::Duration::from_millis(5)),
+        std::time::Duration::from_millis(12)
+    );
+    assert_eq!(
+        Config::builder()
+            .delivery_backoff(std::time::Duration::from_millis(2))
+            .build()
+            .delivery_backoff_or(std::time::Duration::from_millis(5)),
+        std::time::Duration::from_millis(2),
+        "builder beats env"
+    );
+    std::env::set_var("MLCSTT_DELIVERY_BACKOFF_MS", "0");
+    assert_eq!(
+        Config::from_env().delivery_backoff_or(std::time::Duration::from_millis(5)),
+        std::time::Duration::ZERO,
+        "0 retries immediately, no clamp"
+    );
+    std::env::set_var("MLCSTT_DELIVERY_BACKOFF_MS", "junk");
+    assert_eq!(
+        Config::from_env().delivery_backoff_or(std::time::Duration::from_millis(5)),
+        std::time::Duration::from_millis(5),
+        "unparsable -> default"
+    );
+    std::env::remove_var("MLCSTT_DELIVERY_BACKOFF_MS");
+    assert_eq!(
+        Config::from_env().delivery_backoff_or(mlcstt::api::DEFAULT_DELIVERY_BACKOFF),
+        mlcstt::api::DEFAULT_DELIVERY_BACKOFF
+    );
+
+    // --- canary batches: 0 is meaningful (skip the probe), no clamp.
+    std::env::set_var("MLCSTT_CANARY", "4");
+    assert_eq!(Config::from_env().canary_or(1), 4);
+    assert_eq!(Config::builder().canary(2).build().canary_or(1), 2, "builder beats env");
+    std::env::set_var("MLCSTT_CANARY", "0");
+    assert_eq!(Config::from_env().canary_or(1), 0, "0 skips the canary, no clamp");
+    std::env::set_var("MLCSTT_CANARY", "junk");
+    assert_eq!(Config::from_env().canary_or(1), 1, "unparsable -> default");
+    std::env::remove_var("MLCSTT_CANARY");
+    assert_eq!(
+        Config::from_env().canary_or(mlcstt::api::DEFAULT_CANARY_BATCHES),
+        mlcstt::api::DEFAULT_CANARY_BATCHES
+    );
 }

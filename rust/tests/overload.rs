@@ -376,6 +376,50 @@ fn two_x_saturation_completes_with_bounded_latency_and_sheds() {
     );
 }
 
+/// Typed unavailability (ISSUE 9 satellite): a parked model — the
+/// rebuild/hot-swap window — declines new arrivals with
+/// `RequestError::Unavailable` naming the model and reason, never a
+/// generic engine error; requests admitted *before* the park still
+/// drain; the report counts the declines in its own column; and
+/// unparking restores service.
+#[test]
+fn parked_model_declines_typed_and_drains_admitted_work() {
+    let server = Server::start(
+        || Ok(ThrottledEngine::new(linear(2), Duration::from_millis(10))),
+        cfg(1, 64),
+    )
+    .unwrap();
+    // Admit work, then park: the admitted tickets must still serve.
+    let mut admitted = Vec::new();
+    for _ in 0..4 {
+        admitted.push(server.submit(vec![1.0, 0.0]).unwrap().ticket().unwrap());
+    }
+    server.set_unavailable("m", "hot swap: draining");
+    // New arrivals are declined with the typed reason, not queued.
+    let n_declined = 3usize;
+    for _ in 0..n_declined {
+        match server.submit(vec![1.0, 0.0]).unwrap().ticket().unwrap().wait() {
+            Err(RequestError::Unavailable { model, reason }) => {
+                assert_eq!(model, "m");
+                assert_eq!(reason, "hot swap: draining");
+            }
+            other => panic!("parked model must decline typed, got {other:?}"),
+        }
+    }
+    for t in admitted {
+        assert_eq!(t.wait().unwrap().class, 0, "pre-park work drains normally");
+    }
+    // Unparking restores service.
+    server.set_available();
+    let resp = server.submit(vec![1.0, 0.0]).unwrap().ticket().unwrap().wait().unwrap();
+    assert_eq!(resp.class, 0);
+    let rep = server.shutdown();
+    assert_eq!(rep.unavailable, n_declined, "declines counted in their own column");
+    assert_eq!(rep.served, 5, "declines are not served");
+    assert_eq!(rep.errors, 0, "declines are not engine errors");
+    assert_eq!(rep.shed, 0, "declines are not sheds");
+}
+
 /// Unknown tags stay errors (now with a lazy, allocation-light message)
 /// and indexed routing still addresses the right model.
 #[test]
