@@ -7,7 +7,7 @@
 ARTIFACTS ?= artifacts
 FORCE ?=
 
-.PHONY: artifacts build test bench sweep serve-demo swap-demo load clean-artifacts
+.PHONY: artifacts build test bench sweep serve-demo swap-demo scrub-demo load clean-artifacts
 
 artifacts:
 	python3 python/compile/aot.py --out-dir $(ARTIFACTS) $(if $(FORCE),--force,)
@@ -30,6 +30,13 @@ serve-demo:
 # requests and bit-identical rollback. Emits bench_out/DELIVERY_hot_swap.json.
 swap-demo:
 	cargo run --release --offline --example hot_swap
+
+# Background-scrubbing retention gate (DESIGN.md §15): ages twin buffers
+# under identical retention faults, scrubbing only one, and asserts the
+# scrubbed twin decodes bit-identically while the neglected twin decays.
+# Emits bench_out/SCRUB_retention.json.
+scrub-demo:
+	cargo run --release --offline --example scrub_retention
 
 # Overload characterization (DESIGN.md §11): closed/open-loop sweep past
 # saturation with bounded admission; emits bench_out/LOAD_serving.json.

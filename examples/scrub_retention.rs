@@ -1,0 +1,206 @@
+//! Retention demo + CI gate for the background scrubbing subsystem
+//! (DESIGN.md §15): the same weight image ages in two MLC buffers under
+//! identical retention faults — one buffer is scrubbed every cycle, the
+//! other is neglected — and only the scrubbed one still decodes
+//! bit-identically to the trained weights at the end.
+//!
+//! ```bash
+//! make scrub-demo        # == cargo run --release --offline --example scrub_retention
+//! ```
+//!
+//! Self-contained (no trained artifacts): a synthetic linear classifier's
+//! weights are encoded once, stored into twin buffers, and aged for
+//! `CYCLES` disturb rounds at a deliberately hot soft-error rate. Each
+//! round the scrubbed twin runs one scrub pass — golden-checksum
+//! detection, in-place repair from the clean image, per-bank EWMA
+//! telemetry. The gate:
+//!
+//! 1. the scrubbed twin's final decode is **bit-identical** to the clean
+//!    weights (fidelity 1.0) and classifies a probe set exactly like the
+//!    clean reference;
+//! 2. the neglected twin has accumulated decode damage (fidelity < 1.0)
+//!    — the decay the scrubber exists to hold back;
+//! 3. the online EWMA primed and tracked a nonzero corrected-flip rate.
+//!
+//! The process exits non-zero if any of that fails — this is the CI
+//! retention gate. Writes `SCRUB_retention.json` (fidelities, agreement
+//! counts, telemetry) to `$MLCSTT_BENCH_DIR` (default `bench_out/`).
+//!
+//! Environment (via `api::Config`): MLCSTT_EVAL scales the weight count
+//! (default 4096), plus the usual pool-free buffer knobs. The scrub
+//! schedule here is driven explicitly (one pass per cycle) so the demo
+//! is deterministic; the scheduler policies are pinned in
+//! `rust/tests/scrub.rs`.
+
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
+
+use mlcstt::api::Config;
+use mlcstt::buffer::{shard_checksums, BufferConfig, MlcBuffer};
+use mlcstt::coordinator::LinearEngine;
+use mlcstt::encoding::{protection_for, Policy, WeightCodec};
+use mlcstt::fp;
+use mlcstt::scrub::RateEstimator;
+use mlcstt::stt::ErrorModel;
+use mlcstt::util::json::{obj, Json};
+use mlcstt::util::rng::Xoshiro256;
+
+const CLASSES: usize = 8;
+const BANKS: usize = 16;
+const CYCLES: usize = 8;
+const RATE: f64 = 0.02;
+const SEED: u64 = 0x5C12B;
+
+fn main() -> Result<()> {
+    let config = Config::from_env();
+    let dim = (config.eval_or(4096) / CLASSES).max(16);
+    let granularity = 4;
+
+    // Trained-like weights, encoded once: this clean image is both the
+    // repair source and the fidelity oracle.
+    let mut rng = Xoshiro256::seeded(SEED);
+    let weights: Vec<f32> = (0..CLASSES * dim)
+        .map(|_| fp::quantize_f16(((rng.next_gaussian() * 0.25) as f32).clamp(-1.0, 1.0)))
+        .collect();
+    let enc = WeightCodec::new(Policy::Hybrid, granularity).encode(&weights);
+    let golden = shard_checksums(&enc.words);
+    let prot = protection_for(Policy::Hybrid, granularity);
+    let mut clean_decode = Vec::new();
+    enc.decode_into(&mut clean_decode);
+
+    // Twin buffers, same geometry and seed: identical disturb streams,
+    // so the only difference between them is the scrubbing.
+    let mk = || -> Result<(MlcBuffer, mlcstt::buffer::Region)> {
+        let cfg = BufferConfig::new(enc.len() * 2, BANKS)
+            .with_error_model(ErrorModel::at_rate(0.0));
+        let mut buf = MlcBuffer::new(cfg, SEED ^ 0xA6E);
+        let region = buf.store(&enc).map_err(anyhow::Error::from)?;
+        Ok((buf, region))
+    };
+    let (mut scrubbed, sregion) = mk()?;
+    let (mut neglected, nregion) = mk()?;
+
+    println!(
+        "aging {} weights (hybrid/g{granularity}) for {CYCLES} cycles at rate {RATE}: \
+         scrubbed twin vs neglected twin",
+        CLASSES * dim,
+    );
+    let model = ErrorModel::at_rate(RATE);
+    let mut estimator = RateEstimator::new(BANKS);
+    let mut corrected_words = 0u64;
+    let mut dirty_shards = 0u64;
+    for cycle in 0..CYCLES {
+        // Same seed stream on both twins; the flip *counts* may differ
+        // after cycle 0 because corruption is content-dependent (the
+        // vulnerable-cell mask of an already-corrupted word differs).
+        let fs: u64 = scrubbed
+            .corrupt_region_write_shards(&sregion, &model, 2)
+            .map_err(anyhow::Error::from)?
+            .iter()
+            .sum();
+        let fnn: u64 = neglected
+            .corrupt_region_write_shards(&nregion, &model, 2)
+            .map_err(anyhow::Error::from)?
+            .iter()
+            .sum();
+        let pass = scrubbed
+            .scrub_region(&sregion, &enc.words, &golden, prot.as_ref())
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("scrub pass {cycle}"))?;
+        estimator.observe(&pass);
+        corrected_words += pass.corrected_words;
+        dirty_shards += pass.dirty_shards;
+        println!(
+            "cycle {cycle}: {fs} words flipped; scrub repaired {} words / {} shards (ewma {:.5})",
+            pass.corrected_words,
+            pass.dirty_shards,
+            estimator.observed_rate(),
+        );
+    }
+
+    // Final decodes. Fidelity = fraction of weights that decode
+    // bit-identically to the clean image.
+    let fidelity = |buf: &mut MlcBuffer, region| -> Result<(Vec<f32>, f64)> {
+        let mut out = Vec::new();
+        buf.load_decoded(region, &mut out, 2).map_err(anyhow::Error::from)?;
+        let same = out
+            .iter()
+            .zip(&clean_decode)
+            .filter(|(a, b)| a.to_bits() == b.to_bits())
+            .count();
+        let f = same as f64 / clean_decode.len() as f64;
+        Ok((out, f))
+    };
+    let (s_out, s_fidelity) = fidelity(&mut scrubbed, &sregion)?;
+    let (n_out, n_fidelity) = fidelity(&mut neglected, &nregion)?;
+
+    // Classification agreement against the clean reference on a probe
+    // set — the accuracy face of the same decay.
+    let reference = LinearEngine::new(CLASSES, dim, 1, clean_decode.clone())?;
+    let s_engine = LinearEngine::new(CLASSES, dim, 1, s_out)?;
+    let n_engine = LinearEngine::new(CLASSES, dim, 1, n_out)?;
+    let probes = 64usize;
+    let mut prng = Xoshiro256::seeded(SEED ^ 0xBEEF);
+    let (mut s_agree, mut n_agree) = (0usize, 0usize);
+    for _ in 0..probes {
+        let image: Vec<f32> = (0..dim).map(|_| (prng.next_gaussian() * 0.5) as f32).collect();
+        let want = reference.classify_batch(&image)?[0];
+        if s_engine.classify_batch(&image)?[0] == want {
+            s_agree += 1;
+        }
+        if n_engine.classify_batch(&image)?[0] == want {
+            n_agree += 1;
+        }
+    }
+
+    println!(
+        "scrubbed:  fidelity {s_fidelity:.4}, {s_agree}/{probes} probe agreement\n\
+         neglected: fidelity {n_fidelity:.4}, {n_agree}/{probes} probe agreement\n\
+         scrub telemetry: {corrected_words} words repaired across {dirty_shards} dirty shards, \
+         ewma {:.5} (configured rate {RATE})",
+        estimator.observed_rate(),
+    );
+
+    // The gate.
+    ensure!(
+        s_fidelity == 1.0 && s_agree == probes,
+        "scrubbed twin must decode and classify bit-identically \
+         (fidelity {s_fidelity}, agreement {s_agree}/{probes})"
+    );
+    ensure!(
+        n_fidelity < 1.0,
+        "neglected twin was expected to accumulate decode damage at rate {RATE} x {CYCLES} cycles"
+    );
+    ensure!(n_agree <= s_agree, "decay cannot improve agreement");
+    ensure!(estimator.observed_rate() > 0.0, "EWMA never primed");
+    ensure!(corrected_words > 0 && dirty_shards > 0, "scrubber never repaired anything");
+
+    let doc = obj(vec![
+        ("schema", Json::Str("mlcstt/scrub-retention/v1".into())),
+        ("weights", Json::from(CLASSES * dim)),
+        ("cycles", Json::from(CYCLES)),
+        ("rate", Json::from(RATE)),
+        ("scrubbed_fidelity", Json::from(s_fidelity)),
+        ("neglected_fidelity", Json::from(n_fidelity)),
+        ("probes", Json::from(probes)),
+        ("scrubbed_agreement", Json::from(s_agree)),
+        ("neglected_agreement", Json::from(n_agree)),
+        ("corrected_words", Json::Num(corrected_words as f64)),
+        ("dirty_shards", Json::Num(dirty_shards as f64)),
+        ("observed_rate", Json::from(estimator.observed_rate())),
+        (
+            "bank_rates",
+            Json::Arr(estimator.bank_rates().iter().map(|&r| Json::from(r)).collect()),
+        ),
+    ]);
+    let out_dir = mlcstt::api::env::bench_dir().unwrap_or_else(|| PathBuf::from("bench_out"));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let path = out_dir.join("SCRUB_retention.json");
+    std::fs::write(&path, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {}", path.display());
+    println!("PASSED");
+    Ok(())
+}

@@ -411,6 +411,26 @@ fn main() {
         });
         println!("pool evict+rebuild       : {}", harness::rate(n as u64, t.median));
         report.record("shared_pool_evict_rebuild", n as u64, &t);
+
+        // Background scrub pass (ISSUE 10): steady-state scan of one
+        // resident n-weight tenant whose image is clean — the checksum
+        // walk plus read billing, no repairs (the common case a
+        // scheduled pass hits between leases).
+        let scrub_pool = BufferPool::new(need * extent * 2, 16, extent, EvictPolicy::Lru);
+        scrub_pool
+            .admit(
+                "s",
+                &StoreConfig {
+                    error_model: ErrorModel::at_rate(0.0),
+                    seed: 4,
+                    ..StoreConfig::default()
+                },
+                &wf,
+            )
+            .unwrap();
+        let (_, t) = harness::time_stats(3, || scrub_pool.scrub_pass().unwrap().scrubbed_words);
+        println!("scrub pass (clean scan)  : {}", harness::rate(n as u64, t.median));
+        report.record("scrub_pass", n as u64, &t);
     }
 
     // End-to-end weight path for a real model (encode -> store -> load ->

@@ -23,6 +23,7 @@ use crate::buffer::shared::EvictPolicy;
 use crate::coordinator::{ServerConfig, StoreConfig, DEFAULT_QUEUE_DEPTH};
 use crate::encoding::Policy;
 use crate::fp::{self, F16Mode};
+use crate::scrub::{ScrubMode, ScrubPolicy, DEFAULT_SCRUB_THRESHOLD};
 use crate::util::threads;
 
 /// Default batcher flush timeout (the historical `ServerConfig` default).
@@ -50,6 +51,9 @@ pub struct Config {
     delivery_retries: Option<usize>,
     delivery_backoff: Option<Duration>,
     canary: Option<usize>,
+    scrub_interval: Option<Duration>,
+    scrub_mode: Option<ScrubMode>,
+    scrub_threshold: Option<f64>,
 }
 
 impl Config {
@@ -179,6 +183,38 @@ impl Config {
         self.canary.unwrap_or(default)
     }
 
+    /// Scrub interval (builder, else `MLCSTT_SCRUB_MS`); `None` or zero
+    /// means scrubbing is off.
+    pub fn scrub_interval(&self) -> Option<Duration> {
+        self.scrub_interval
+    }
+
+    /// Adaptive-scheduler decay threshold (builder, else
+    /// `MLCSTT_SCRUB_THRESH`, else [`DEFAULT_SCRUB_THRESHOLD`]).
+    pub fn scrub_threshold(&self) -> f64 {
+        self.scrub_threshold.unwrap_or(DEFAULT_SCRUB_THRESHOLD)
+    }
+
+    /// The assembled scrub scheduler: interval + mode + threshold resolve
+    /// into one [`ScrubPolicy`]. A missing or zero interval means
+    /// [`ScrubPolicy::Off`] regardless of mode (0 = off, the pre-subsystem
+    /// default); an interval with no explicit mode means
+    /// [`ScrubPolicy::Fixed`].
+    pub fn scrub_policy(&self) -> ScrubPolicy {
+        let interval = self.scrub_interval.unwrap_or(Duration::ZERO);
+        if interval.is_zero() {
+            return ScrubPolicy::Off;
+        }
+        match self.scrub_mode.unwrap_or(ScrubMode::Fixed) {
+            ScrubMode::Off => ScrubPolicy::Off,
+            ScrubMode::Fixed => ScrubPolicy::Fixed(interval),
+            ScrubMode::Adaptive => ScrubPolicy::Adaptive {
+                base: interval,
+                threshold: self.scrub_threshold(),
+            },
+        }
+    }
+
     /// The serving view: a [`ServerConfig`] carrying this config's
     /// coalesce deadline, worker ceiling, and admission depth.
     pub fn server(&self) -> ServerConfig {
@@ -227,6 +263,9 @@ pub struct ConfigBuilder {
     delivery_retries: Option<usize>,
     delivery_backoff: Option<Duration>,
     canary: Option<usize>,
+    scrub_interval: Option<Duration>,
+    scrub_mode: Option<ScrubMode>,
+    scrub_threshold: Option<f64>,
 }
 
 impl ConfigBuilder {
@@ -337,6 +376,25 @@ impl ConfigBuilder {
         self
     }
 
+    /// Override the scrub interval. `Duration::ZERO` is meaningful — it
+    /// turns scrubbing off — so there is no clamp.
+    pub fn scrub_interval(mut self, d: Duration) -> Self {
+        self.scrub_interval = Some(d);
+        self
+    }
+
+    /// Override the scrub-scheduler kind.
+    pub fn scrub_mode(mut self, mode: ScrubMode) -> Self {
+        self.scrub_mode = Some(mode);
+        self
+    }
+
+    /// Override the adaptive-scheduler decay threshold.
+    pub fn scrub_threshold(mut self, t: f64) -> Self {
+        self.scrub_threshold = Some(t);
+        self
+    }
+
     /// Resolve every layer — builder override, then `MLCSTT_*`
     /// environment, then default — in this one place.
     pub fn build(self) -> Config {
@@ -373,6 +431,11 @@ impl ConfigBuilder {
                 .delivery_backoff
                 .or_else(|| super::env::delivery_backoff_ms().map(Duration::from_millis)),
             canary: self.canary.or_else(super::env::canary),
+            scrub_interval: self
+                .scrub_interval
+                .or_else(|| super::env::scrub_ms().map(Duration::from_millis)),
+            scrub_mode: self.scrub_mode.or_else(super::env::scrub_mode),
+            scrub_threshold: self.scrub_threshold.or_else(super::env::scrub_thresh),
         }
     }
 }
@@ -443,6 +506,45 @@ mod tests {
         let cfg = Config::builder().delivery_retries(0).canary(0).build();
         assert_eq!(cfg.delivery_retries_or(5), 0);
         assert_eq!(cfg.canary_or(4), 0);
+    }
+
+    #[test]
+    fn scrub_knobs_layer_builder_over_default() {
+        // Interval alone means Fixed; mode completes it; zero is off.
+        let cfg = Config::builder()
+            .scrub_interval(Duration::from_millis(250))
+            .build();
+        assert_eq!(cfg.scrub_interval(), Some(Duration::from_millis(250)));
+        assert_eq!(
+            cfg.scrub_policy(),
+            ScrubPolicy::Fixed(Duration::from_millis(250))
+        );
+        let cfg = Config::builder()
+            .scrub_interval(Duration::from_millis(100))
+            .scrub_mode(ScrubMode::Adaptive)
+            .scrub_threshold(0.25)
+            .build();
+        assert!((cfg.scrub_threshold() - 0.25).abs() < 1e-12);
+        assert_eq!(
+            cfg.scrub_policy(),
+            ScrubPolicy::Adaptive {
+                base: Duration::from_millis(100),
+                threshold: 0.25,
+            }
+        );
+        // Zero is meaningful (off), so the interval does not clamp — and
+        // it wins over any mode.
+        let cfg = Config::builder()
+            .scrub_interval(Duration::ZERO)
+            .scrub_mode(ScrubMode::Adaptive)
+            .build();
+        assert_eq!(cfg.scrub_policy(), ScrubPolicy::Off);
+        // An explicit Off mode beats a nonzero interval.
+        let cfg = Config::builder()
+            .scrub_interval(Duration::from_millis(50))
+            .scrub_mode(ScrubMode::Off)
+            .build();
+        assert_eq!(cfg.scrub_policy(), ScrubPolicy::Off);
     }
 
     #[test]

@@ -18,7 +18,11 @@
 //! * [`deliver`] — zero-downtime weight delivery: a streamed,
 //!   hash-verified [`DeploymentManifest`] rollout with bounded seeded
 //!   retry/backoff, canary gating, and atomic hot swap or rollback
-//!   (DESIGN.md §14).
+//!   (DESIGN.md §14);
+//! * [`ScrubPolicy`] — background scrubbing of pooled tenants: golden
+//!   checksums detect retention damage between leases, repairs replay
+//!   the store path bit-identically, and the per-bank
+//!   corrected-flip EWMA drives the adaptive scheduler (DESIGN.md §15).
 //!
 //! Every rebuilt path is pinned bit-identical to its pre-facade
 //! hand-rolled equivalent (flip sets, energy reports, accuracies) by
@@ -43,3 +47,5 @@ pub use pool::{
     BufferPool, EvictPolicy, ModelLease, PooledEngine, DEFAULT_POOL_BANKS, DEFAULT_POOL_EXTENT,
 };
 pub use registry::{ModelRegistry, RegistryReport};
+
+pub use crate::scrub::{ScrubMode, ScrubPolicy, ScrubTelemetry};

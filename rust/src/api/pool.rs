@@ -26,19 +26,29 @@
 //! resident tenant ([`EvictPolicy::Lru`]) and the victim rebuilds on its
 //! next request, transparently, inside [`PooledEngine::classify_batch`] —
 //! the stall is counted in [`crate::coordinator::ServerReport::rebuilds`].
+//!
+//! Between leases the pool also runs **background scrubbing** (DESIGN.md
+//! §15) when a [`ScrubPolicy`] other than `Off` is installed: under the
+//! same single lock, every resident region is walked against its golden
+//! checksums, decayed shards are repaired from the clean image, and the
+//! per-bank corrected-flip EWMA feeds the adaptive scheduler — so a scrub
+//! never races a rebuild, and `Off` is byte-for-byte the old behavior.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::buffer::shared::{BankWear, PoolRegion, SharedMlcBuffer};
-use crate::buffer::{AccessStats, BufferError, LOAD_SHARD_WORDS, STORE_SHARD_WORDS};
+use crate::buffer::{shard_checksums, AccessStats, BufferError, LOAD_SHARD_WORDS, STORE_SHARD_WORDS};
 use crate::coordinator::store::workers_for;
 use crate::coordinator::{BatchClassifier, StoreConfig, StoreReport};
 use crate::encoding::codec::MIN_WEIGHTS_PER_WORKER;
-use crate::encoding::{Encoded, WeightCodec};
+use crate::encoding::{protection_for, Encoded, WeightCodec};
+use crate::faults::estimator::estimate_impact;
 use crate::runtime::artifacts::{ParamSpec, WeightFile};
+use crate::scrub::{RateEstimator, ScrubPolicy, ScrubTelemetry};
 use crate::stt::ErrorModel;
 use crate::util::rng::Xoshiro256;
 
@@ -58,6 +68,15 @@ struct Tenant {
     /// Clean encoded tensors, in weight-file order — encoded once at
     /// admit; every rebuild re-stores these exact images.
     clean: Vec<Encoded>,
+    /// Golden per-shard FNV checksums of each clean encoding (DESIGN.md
+    /// §15). Rebuilds re-store the same words, so these survive eviction
+    /// and stay the scrub cursor's detection reference for the tenant's
+    /// whole pool lifetime.
+    golden: Vec<Vec<u64>>,
+    /// Admit-time estimated E[SSE] per weight at the tenant's configured
+    /// write-error rate ([`crate::faults::estimator::estimate_impact`]) —
+    /// the adaptive scrub scheduler's second decay signal.
+    sse_per_weight: f64,
     /// `(name, shape)` per tensor, for re-materialized [`ParamSpec`]s.
     specs: Vec<(String, Vec<usize>)>,
     model: ErrorModel,
@@ -80,11 +99,46 @@ struct Tenant {
     builds: u64,
 }
 
+/// Background-scrub state of one pool (DESIGN.md §15): the scheduler
+/// policy, the per-bank error-rate telemetry, and lifetime counters.
+struct ScrubState {
+    policy: ScrubPolicy,
+    estimator: RateEstimator,
+    /// When the last scheduled pass finished (`None` until the first).
+    /// Read only when the policy is not [`ScrubPolicy::Off`] — `Off`
+    /// performs no clock reads at all, keeping it byte-for-byte the
+    /// pre-subsystem behavior.
+    last: Option<Instant>,
+    passes: u64,
+    scrubbed_words: u64,
+    corrected_words: u64,
+    corrected_cells: u64,
+    policy_detected: u64,
+    dirty_shards: u64,
+}
+
+impl ScrubState {
+    fn new(banks: usize) -> Self {
+        ScrubState {
+            policy: ScrubPolicy::Off,
+            estimator: RateEstimator::new(banks),
+            last: None,
+            passes: 0,
+            scrubbed_words: 0,
+            corrected_words: 0,
+            corrected_cells: 0,
+            policy_detected: 0,
+            dirty_shards: 0,
+        }
+    }
+}
+
 struct PoolInner {
     shared: SharedMlcBuffer,
     tenants: Vec<Tenant>,
     index: HashMap<String, usize>,
     evict: EvictPolicy,
+    scrub: ScrubState,
     /// Monotone LRU clock.
     clock: u64,
     /// On-demand rebuilds after an eviction (admit-time builds excluded).
@@ -119,6 +173,7 @@ impl BufferPool {
                 tenants: Vec::new(),
                 index: HashMap::new(),
                 evict,
+                scrub: ScrubState::new(banks),
                 clock: 0,
                 rebuilds: 0,
                 evictions: 0,
@@ -127,16 +182,28 @@ impl BufferPool {
     }
 
     /// Build a pool from the facade [`super::Config`]'s `MLCSTT_POOL_*` /
-    /// `MLCSTT_EVICT` knobs; `None` when no `pool_kb` was configured.
+    /// `MLCSTT_EVICT` / `MLCSTT_SCRUB_*` knobs; `None` when no `pool_kb`
+    /// was configured.
     pub fn from_config(config: &super::Config) -> Option<Self> {
         config.pool_kb().map(|kb| {
-            BufferPool::new(
+            let pool = BufferPool::new(
                 kb * 1024,
                 config.pool_banks_or(DEFAULT_POOL_BANKS),
                 config.pool_extent_or(DEFAULT_POOL_EXTENT),
                 config.evict_policy(),
-            )
+            );
+            pool.set_scrub(config.scrub_policy());
+            pool
         })
+    }
+
+    /// Install the background-scrub scheduler policy (DESIGN.md §15).
+    /// [`ScrubPolicy::Off`] (the default) disables scheduled scrubbing
+    /// entirely; an explicit [`BufferPool::scrub_pass`] still works.
+    pub fn set_scrub(&self, policy: ScrubPolicy) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.scrub.policy = policy;
+        inner.scrub.last = None;
     }
 
     /// Admit a model: encode its tensors once under `cfg`'s codec
@@ -156,15 +223,19 @@ impl BufferPool {
 
         let codec = WeightCodec::new(cfg.policy, cfg.granularity);
         let mut clean = Vec::with_capacity(weights.params.len());
+        let mut golden = Vec::with_capacity(weights.params.len());
         let mut specs = Vec::with_capacity(weights.params.len());
         let mut overhead_num = 0.0;
         let mut soft = 0u64;
+        let mut sse = 0.0f64;
         for p in &weights.params {
             let w = workers_for(cfg.threads, p.data.len(), MIN_WEIGHTS_PER_WORKER);
             let mut enc = Encoded::with_context(cfg.policy, cfg.granularity);
             codec.encode_into_threaded(&p.data, &mut enc, w);
             soft += enc.soft_cells();
             overhead_num += enc.metadata_overhead() * enc.len() as f64;
+            sse += estimate_impact(&enc, cfg.error_model.write_error_rate).expected_sse;
+            golden.push(shard_checksums(&enc.words));
             specs.push((p.name.clone(), p.shape.clone()));
             clean.push(enc);
         }
@@ -173,6 +244,8 @@ impl BufferPool {
         inner.tenants.push(Tenant {
             name: name.to_string(),
             clean,
+            golden,
+            sse_per_weight: sse / total as f64,
             specs,
             model: cfg.error_model.clone(),
             seed: cfg.seed,
@@ -288,6 +361,46 @@ impl BufferPool {
     /// Leveling quality across banks ([`SharedMlcBuffer::wear_spread`]).
     pub fn wear_spread(&self) -> f64 {
         self.inner.lock().unwrap().shared.wear_spread()
+    }
+
+    /// Run one full scrub pass right now — every resident tenant, every
+    /// region — regardless of the scheduler policy, and return the
+    /// updated telemetry. Holds the pool lock for the duration, so a
+    /// pass never races a rebuild or an eviction.
+    pub fn scrub_pass(&self) -> Result<ScrubTelemetry> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.scrub_pass()?;
+        Ok(inner.scrub_telemetry())
+    }
+
+    /// Point-in-time scrub telemetry (DESIGN.md §15): scheduler label,
+    /// lifetime pass counters, the per-bank corrected-flip EWMAs, and the
+    /// effective interval until the next scheduled pass.
+    pub fn scrub_telemetry(&self) -> ScrubTelemetry {
+        self.inner.lock().unwrap().scrub_telemetry()
+    }
+
+    /// Retention aging hook: re-run the write-path fault sampler over
+    /// every resident region in place (the pool's own seed stream),
+    /// returning the total flipped words. Demos and tests use this to
+    /// model time passing between leases; serving never calls it.
+    pub fn disturb(&self, model: &ErrorModel) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let PoolInner { tenants, shared, .. } = &mut *inner;
+        let mut total = 0u64;
+        for tenant in tenants.iter_mut() {
+            let Tenant { resident, stats, threads, .. } = tenant;
+            if let Some(regions) = resident {
+                for pr in regions.iter() {
+                    let workers = workers_for(*threads, pr.region.len, LOAD_SHARD_WORDS);
+                    total += shared
+                        .disturb_region(pr, model, workers, stats)?
+                        .iter()
+                        .sum::<u64>();
+                }
+            }
+        }
+        Ok(total)
     }
 
     /// Free extents right now (diagnostic).
@@ -433,6 +546,82 @@ impl PoolInner {
         }
     }
 
+    /// One scrub pass over every resident tenant's regions, folding the
+    /// per-pass telemetry into the estimator and lifetime counters. Runs
+    /// under the caller's pool lock (never racing a rebuild) and draws no
+    /// RNG, so tenant fault streams are untouched.
+    fn scrub_pass(&mut self) -> Result<()> {
+        let PoolInner { tenants, shared, scrub, .. } = self;
+        for tenant in tenants.iter_mut() {
+            let Tenant { resident, clean, golden, stats, .. } = tenant;
+            let Some(regions) = resident else { continue };
+            for (t, pr) in regions.iter().enumerate() {
+                let enc = &clean[t];
+                let prot = protection_for(enc.policy, enc.granularity);
+                let pass = shared.scrub_region(pr, &enc.words, &golden[t], prot.as_ref(), stats)?;
+                scrub.estimator.observe(&pass);
+                scrub.scrubbed_words += pass.scrubbed_words;
+                scrub.corrected_words += pass.corrected_words;
+                scrub.corrected_cells += pass.corrected_cells;
+                scrub.policy_detected += pass.policy_detected;
+                scrub.dirty_shards += pass.dirty_shards;
+            }
+        }
+        self.scrub.passes += 1;
+        Ok(())
+    }
+
+    /// Run a scheduled scrub pass if one is due. Called from the lease
+    /// path under the pool lock; with [`ScrubPolicy::Off`] this returns
+    /// before touching the clock, keeping the off path byte-for-byte the
+    /// pre-subsystem behavior.
+    fn maybe_scrub(&mut self) -> Result<()> {
+        if self.scrub.policy.is_off() {
+            return Ok(());
+        }
+        let interval = self
+            .scrub
+            .policy
+            .interval(self.scrub.estimator.observed_rate(), self.max_sse_per_weight())
+            .expect("non-off policy always has an interval");
+        let due = match self.scrub.last {
+            None => true,
+            Some(t) => t.elapsed() >= interval,
+        };
+        if due {
+            self.scrub_pass()?;
+            self.scrub.last = Some(Instant::now());
+        }
+        Ok(())
+    }
+
+    /// Worst admit-time E[SSE]-per-weight estimate among tenants — the
+    /// adaptive scheduler's second decay signal.
+    fn max_sse_per_weight(&self) -> f64 {
+        self.tenants
+            .iter()
+            .map(|t| t.sse_per_weight)
+            .fold(0.0, f64::max)
+    }
+
+    fn scrub_telemetry(&self) -> ScrubTelemetry {
+        let s = &self.scrub;
+        let max_sse = self.max_sse_per_weight();
+        ScrubTelemetry {
+            policy: s.policy.label(),
+            passes: s.passes,
+            scrubbed_words: s.scrubbed_words,
+            corrected_words: s.corrected_words,
+            corrected_cells: s.corrected_cells,
+            policy_detected: s.policy_detected,
+            dirty_shards: s.dirty_shards,
+            observed_rate: s.estimator.observed_rate(),
+            bank_rates: s.estimator.bank_rates(),
+            max_sse_per_weight: max_sse,
+            interval: s.policy.interval(s.estimator.observed_rate(), max_sse),
+        }
+    }
+
     fn report_of(&self, idx: usize) -> StoreReport {
         let t = &self.tenants[idx];
         StoreReport {
@@ -476,6 +665,7 @@ impl ModelLease {
         let idx = inner.idx(&self.name)?;
         let rebuilt = inner.make_resident(idx)?;
         inner.touch(idx);
+        inner.maybe_scrub()?;
         if rebuilt {
             Ok(Some(build(&inner.tenants[idx].tensors)?))
         } else {
@@ -493,6 +683,7 @@ impl ModelLease {
         let idx = inner.idx(&self.name)?;
         inner.make_resident(idx)?;
         inner.touch(idx);
+        inner.maybe_scrub()?;
         build(&inner.tenants[idx].tensors)
     }
 
@@ -648,6 +839,41 @@ mod tests {
         // The freed name can be admitted again (redelivery).
         pool.admit("a", &cfg(4), &wf).unwrap();
         assert!(pool.contains("a"));
+    }
+
+    #[test]
+    fn scrub_pass_repairs_disturbed_tenants_and_feeds_telemetry() {
+        let wf = weight_file(4096, 1.0);
+        let pool = BufferPool::new(8192 * 2, 16, 256, EvictPolicy::Lru);
+        pool.admit("m", &cfg(3), &wf).unwrap();
+
+        let flipped = pool.disturb(&ErrorModel::at_rate(0.5)).unwrap();
+        assert!(flipped > 0, "hot disturb must flip something");
+
+        let t = pool.scrub_pass().unwrap();
+        assert_eq!(t.passes, 1);
+        assert!(t.corrected_words > 0 && t.dirty_shards > 0);
+        assert!(t.corrected_cells >= t.corrected_words);
+        assert!(t.observed_rate > 0.0);
+        assert_eq!(t.bank_rates.len(), 16);
+        assert_eq!(pool.rebuilds(), 0, "repair is in place, not a rebuild");
+
+        // The repair restored the golden image: a second pass scans the
+        // same words but finds nothing left to correct.
+        let t2 = pool.scrub_pass().unwrap();
+        assert_eq!(t2.passes, 2);
+        assert_eq!(t2.scrubbed_words, 2 * t.scrubbed_words);
+        assert_eq!(t2.corrected_words, t.corrected_words);
+        assert_eq!(t2.dirty_shards, t.dirty_shards);
+
+        // The scheduler tightens under the observed decay.
+        pool.set_scrub(ScrubPolicy::Adaptive {
+            base: std::time::Duration::from_millis(1000),
+            threshold: 0.05,
+        });
+        let t3 = pool.scrub_telemetry();
+        assert_eq!(t3.policy, "adaptive");
+        assert!(t3.interval.unwrap() < std::time::Duration::from_millis(1000));
     }
 
     #[test]

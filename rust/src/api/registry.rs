@@ -34,6 +34,7 @@ use crate::coordinator::{
     Admission, BatchClassifier, FairGate, Server, ServerConfig, ServerReport,
 };
 use crate::runtime::artifacts::ParamSpec;
+use crate::scrub::ScrubTelemetry;
 
 use super::pool::{BufferPool, PooledEngine};
 use super::Deployment;
@@ -76,6 +77,9 @@ pub struct RegistryReport {
     /// Regions evicted from the pool under capacity pressure (0 without
     /// a pool).
     pub pool_evictions: u64,
+    /// Background-scrub telemetry of the attached [`BufferPool`] at
+    /// shutdown (DESIGN.md §15). `None` without a pool.
+    pub scrub: Option<ScrubTelemetry>,
     /// Serving reports of servers retired by hot swaps
     /// ([`ModelRegistry::swap`]), in retirement order: the pre-swap
     /// engine's traffic, fully drained — hot swaps never lose accounting.
@@ -359,10 +363,12 @@ impl ModelRegistry {
         // are in the ledger.
         let wear = self.pool.as_ref().map(BufferPool::bank_wear).unwrap_or_default();
         let pool_evictions = self.pool.as_ref().map(BufferPool::evictions).unwrap_or(0);
+        let scrub = self.pool.as_ref().map(BufferPool::scrub_telemetry);
         RegistryReport {
             sections,
             wear,
             pool_evictions,
+            scrub,
             retired: self.retired,
             swaps: self.swaps,
             rollbacks: self.rollbacks,
@@ -399,6 +405,12 @@ impl std::fmt::Display for RegistryReport {
             let wear = crate::metrics::wear_table("buffer lifetime under traffic", &self.wear);
             write!(f, "{wear}")?;
             writeln!(f, "pool evictions: {}", self.pool_evictions)?;
+        }
+        if let Some(s) = &self.scrub {
+            if s.passes > 0 || s.policy != "off" {
+                let t = crate::metrics::scrub_table("background scrub", s);
+                write!(f, "{t}")?;
+            }
         }
         Ok(())
     }

@@ -13,7 +13,7 @@
 
 use std::sync::mpsc;
 
-use crate::encoding::{codec, Encoded, Policy, Scheme};
+use crate::encoding::{codec, Encoded, Policy, ProtectionPolicy, Scheme};
 use crate::stt::{AccessKind, CostModel, Energy, ErrorModel};
 use crate::util::rng::Xoshiro256;
 use crate::util::threads;
@@ -408,6 +408,25 @@ impl MlcBuffer {
         model: &ErrorModel,
         workers: usize,
     ) -> Result<u64, BufferError> {
+        Ok(self
+            .corrupt_region_write_shards(region, model, workers)?
+            .iter()
+            .sum())
+    }
+
+    /// [`Self::corrupt_region_write`] reporting the flip count of **each**
+    /// fixed-size shard instead of the region total. Same seed stream,
+    /// same sampler, same stored image — callers that keep the vector can
+    /// later skip shards whose count is zero (the shard-grain flip-skip in
+    /// `WeightStore::materialize_reusing` and the scrub cursor, DESIGN.md
+    /// §15) while bit-identity to the summed variant is trivially
+    /// preserved.
+    pub fn corrupt_region_write_shards(
+        &mut self,
+        region: &Region,
+        model: &ErrorModel,
+        workers: usize,
+    ) -> Result<Vec<u64>, BufferError> {
         self.check_region(region)?;
         let n_shards = region.len.div_ceil(STORE_SHARD_WORDS);
         let seeds: Vec<u64> = (0..n_shards).map(|_| self.rng.next_u64()).collect();
@@ -415,15 +434,13 @@ impl MlcBuffer {
 
         let jobs: Vec<(usize, &mut [u16])> =
             words.chunks_mut(STORE_SHARD_WORDS).enumerate().collect();
-        let faults: u64 = threads::run_sharded(jobs, workers, |(k, shard)| {
+        let per_shard: Vec<u64> = threads::run_sharded(jobs, workers, |(k, shard)| {
             let mut rng = Xoshiro256::seeded(seeds[k]);
             let (words_changed, _) = model.corrupt_words_write(shard, &mut rng);
             words_changed
-        })
-        .into_iter()
-        .sum();
-        self.stats.injected_faults += faults;
-        Ok(faults)
+        });
+        self.stats.injected_faults += per_shard.iter().sum::<u64>();
+        Ok(per_shard)
     }
 
     /// Read a region and decode it straight to f32 — the serve path's
@@ -556,6 +573,219 @@ impl MlcBuffer {
         Ok(())
     }
 
+    /// FNV-1a 64 checksum of each fixed-size shard of a stored region —
+    /// the scrub cursor's view of what the region holds *now*. Boundaries
+    /// are the same [`LOAD_SHARD_WORDS`] multiples every other shard walk
+    /// uses, so these compare index-for-index against the golden vector
+    /// [`shard_checksums`] computes from a clean encoded image.
+    pub fn region_shard_checksums(&self, region: &Region) -> Result<Vec<u64>, BufferError> {
+        self.check_region(region)?;
+        Ok(shard_checksums(
+            &self.words[region.offset..region.offset + region.len],
+        ))
+    }
+
+    /// One scrub pass over a stored region (DESIGN.md §15): walk it in
+    /// [`LOAD_SHARD_WORDS`] steps, bill the scan as one region read (same
+    /// fixed-shard partials and shard-order carry-rule reduction as
+    /// [`Self::load_with_threads`], payload plane only — the tri-level
+    /// metadata plane is fault-free by construction and is not scanned),
+    /// compare each shard's FNV-1a checksum against `golden`, and rewrite
+    /// every dirty shard from `clean` through the store path's per-word
+    /// billing (shard-order energy adds, no fault injection, **no RNG
+    /// draws** — the buffer's seed stream is untouched, so later
+    /// stochastic stores and rebuild replays stay bit-identical whether
+    /// or not a scrub ran in between).
+    ///
+    /// `policy` supplies the in-word telemetry channel: its
+    /// [`ProtectionPolicy::detect`] verdict is counted per scanned word
+    /// (parity / sign-pair disagreement), rank-checkable against the
+    /// authoritative checksum detection.
+    pub fn scrub_region(
+        &mut self,
+        region: &Region,
+        clean: &[u16],
+        golden: &[u64],
+        policy: &dyn ProtectionPolicy,
+    ) -> Result<RegionScrub, BufferError> {
+        self.check_region(region)?;
+        let n_shards = region.len.div_ceil(LOAD_SHARD_WORDS);
+        if clean.len() != region.len || golden.len() != n_shards {
+            return Err(BufferError::BadRegion);
+        }
+        let banks = self.config.banks;
+        let cost = &self.config.cost;
+        let words = &mut self.words[region.offset..region.offset + region.len];
+
+        let mut scratch = vec![0u16; LOAD_SHARD_WORDS.min(region.len.max(1))];
+        let mut read_partials = Vec::with_capacity(n_shards);
+        let mut scrub = RegionScrub::new(banks);
+        scrub.scrubbed_words = region.len as u64;
+        for (k, (stored, clean_shard)) in words
+            .chunks_mut(LOAD_SHARD_WORDS)
+            .zip(clean.chunks(LOAD_SHARD_WORDS))
+            .enumerate()
+        {
+            let start = k * LOAD_SHARD_WORDS;
+            // Scan: a real shard read (copy-out + per-word billing).
+            read_partials.push(load_shard(
+                cost,
+                stored,
+                &mut scratch[..stored.len()],
+                start,
+                banks,
+            ));
+            for (i, &w) in stored.iter().enumerate() {
+                scrub.scrubbed_per_bank[(start + i) % banks] += 1;
+                if policy.detect(w) {
+                    scrub.policy_detected += 1;
+                }
+            }
+            // Detect: golden checksum disagreement is authoritative.
+            if fnv_words(stored) == golden[k] {
+                continue;
+            }
+            scrub.dirty_shards += 1;
+            for (i, (&s, &c)) in stored.iter().zip(clean_shard).enumerate() {
+                if s != c {
+                    scrub.corrected_words += 1;
+                    let x = s ^ c;
+                    // Junction flips turn intermediate cells into base
+                    // states: a changed cell shows in one (or both) of its
+                    // two bit positions.
+                    let cells = u64::from(((x | (x >> 1)) & 0x5555u16).count_ones());
+                    scrub.corrected_cells += cells;
+                    scrub.corrected_per_bank[(start + i) % banks] += cells;
+                }
+            }
+            // Repair: rewrite the whole shard from the clean image with
+            // the store path's content-dependent per-word write billing.
+            let mut energy = Energy::ZERO;
+            for &c in clean_shard {
+                energy.add(cost.word(c, AccessKind::Write));
+            }
+            stored.copy_from_slice(clean_shard);
+            scrub.rewritten_words += stored.len() as u64;
+            scrub.write_shards.push((k, energy));
+        }
+
+        scrub.read_energy = reduce_load_partials(&read_partials);
+        self.stats.read_energy.add(scrub.read_energy);
+        self.stats.reads += region.len as u64;
+        for &(_, energy) in &scrub.write_shards {
+            self.stats.write_energy.add(energy);
+        }
+        self.stats.writes += scrub.rewritten_words;
+        Ok(scrub)
+    }
+
+    /// Clean-image read partials of a region, computed **without billing**
+    /// — the capture half of the shard-grain flip-skip (DESIGN.md §10).
+    /// Stored content alone determines each partial, so as long as a shard
+    /// later proves flip-free its cached partial replays the exact bill a
+    /// fresh read of it would produce.
+    pub(crate) fn region_load_partials(
+        &self,
+        region: &Region,
+    ) -> Result<Vec<LoadPartial>, BufferError> {
+        self.check_region(region)?;
+        let banks = self.config.banks;
+        let cost = &self.config.cost;
+        let src_all = &self.words[region.offset..region.offset + region.len];
+        let mut scratch = vec![0u16; LOAD_SHARD_WORDS.min(region.len.max(1))];
+        Ok(src_all
+            .chunks(LOAD_SHARD_WORDS)
+            .enumerate()
+            .map(|(k, src)| {
+                load_shard(
+                    cost,
+                    src,
+                    &mut scratch[..src.len()],
+                    k * LOAD_SHARD_WORDS,
+                    banks,
+                )
+            })
+            .collect())
+    }
+
+    /// Shard-grain twin of [`Self::load_decoded`]: decode only the shards
+    /// `shard_flips` marks dirty, replaying `clean_partials` + `clean_f32`
+    /// for the rest. The bill — one payload [`Energy`] from the full
+    /// shard-order carry-rule reduction, then the per-group metadata
+    /// charges — is bit-identical to a fresh full read because a clean
+    /// shard's cached partial equals what re-reading it would compute,
+    /// and the reduction order is unchanged. Dirty shards decode over
+    /// their group-aligned hull (a group straddling a shard boundary pulls
+    /// in up to `granularity - 1` neighbouring clean words, which decode
+    /// to the same floats the clean cache already holds).
+    pub(crate) fn load_decoded_reusing(
+        &mut self,
+        region: &Region,
+        clean_partials: &[LoadPartial],
+        shard_flips: &[u64],
+        clean_f32: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<Energy, BufferError> {
+        self.check_region(region)?;
+        let n_shards = region.len.div_ceil(LOAD_SHARD_WORDS);
+        if clean_partials.len() != n_shards
+            || shard_flips.len() != n_shards
+            || clean_f32.len() != region.len
+        {
+            return Err(BufferError::BadRegion);
+        }
+        if out.len() != region.len {
+            out.resize(region.len, 0.0);
+        }
+        let schemes: Vec<Scheme> = self.meta
+            [region.meta_offset..region.meta_offset + region.meta_len]
+            .iter()
+            .map(|&sym| Scheme::from_symbol(sym).expect("tri-level symbol"))
+            .collect();
+        let banks = self.config.banks;
+        let cost = &self.config.cost;
+        let src_all = &self.words[region.offset..region.offset + region.len];
+        let g = if region.policy.has_metadata() {
+            region.granularity
+        } else {
+            1
+        };
+
+        let mut partials = Vec::with_capacity(n_shards);
+        let mut scratch: Vec<u16> = Vec::new();
+        for (k, src) in src_all.chunks(LOAD_SHARD_WORDS).enumerate() {
+            let start = k * LOAD_SHARD_WORDS;
+            if shard_flips[k] == 0 {
+                partials.push(clean_partials[k].clone());
+                out[start..start + src.len()]
+                    .copy_from_slice(&clean_f32[start..start + src.len()]);
+            } else {
+                scratch.resize(src.len(), 0);
+                partials.push(load_shard(cost, src, &mut scratch, start, banks));
+                let d_start = start / g * g;
+                let d_end = (start + src.len()).div_ceil(g).saturating_mul(g).min(region.len);
+                codec::decode_slice(
+                    region.policy,
+                    region.granularity,
+                    &schemes,
+                    d_start,
+                    &src_all[d_start..d_end],
+                    &mut out[d_start..d_end],
+                );
+            }
+        }
+
+        let energy = reduce_load_partials(&partials);
+        self.stats.read_energy.add(energy);
+        self.stats.reads += region.len as u64;
+        for _ in 0..region.meta_len {
+            self.stats
+                .read_energy
+                .add(self.config.cost.trilevel_cell(AccessKind::Read));
+        }
+        Ok(energy)
+    }
+
     /// Bounds-check a region against the current allocation.
     fn check_region(&self, region: &Region) -> Result<(), BufferError> {
         if region.offset + region.len > self.used_words
@@ -674,6 +904,103 @@ pub struct StoreBill {
     pub meta_writes: usize,
 }
 
+/// Outcome of one [`MlcBuffer::scrub_region`] pass, shaped like
+/// [`StoreBill`] so a shared-pool caller can replay the identical
+/// `Energy::add` sequence — one read add, then the dirty-shard write adds
+/// in shard order — into a per-tenant accumulator, and so the wear ledger
+/// can charge exactly the rewritten words (DESIGN.md §15).
+#[derive(Clone, Debug)]
+pub struct RegionScrub {
+    /// Payload read energy of the full scan (carry-rule reduction over
+    /// every shard, billed as one add before any write add).
+    pub read_energy: Energy,
+    /// `(shard index, write energy)` of each rewritten shard, in shard
+    /// order — empty when the region verified clean.
+    pub write_shards: Vec<(usize, Energy)>,
+    /// Words scanned (the region length).
+    pub scrubbed_words: u64,
+    /// Words rewritten (whole dirty shards, through the store path).
+    pub rewritten_words: u64,
+    /// Scanned words that differed from the clean image.
+    pub corrected_words: u64,
+    /// MLC cells restored to their intended state within those words.
+    pub corrected_cells: u64,
+    /// Scanned words the resident policy's in-word redundancy flagged
+    /// ([`ProtectionPolicy::detect`]) — telemetry, not the repair trigger.
+    pub policy_detected: u64,
+    /// Shards whose golden checksum disagreed.
+    pub dirty_shards: u64,
+    /// Corrected cells attributed to each bank (word index mod banks).
+    pub corrected_per_bank: Vec<u64>,
+    /// Words scanned per bank — the EWMA denominators.
+    pub scrubbed_per_bank: Vec<u64>,
+}
+
+impl RegionScrub {
+    fn new(banks: usize) -> Self {
+        RegionScrub {
+            read_energy: Energy::ZERO,
+            write_shards: Vec::new(),
+            scrubbed_words: 0,
+            rewritten_words: 0,
+            corrected_words: 0,
+            corrected_cells: 0,
+            policy_detected: 0,
+            dirty_shards: 0,
+            corrected_per_bank: vec![0; banks],
+            scrubbed_per_bank: vec![0; banks],
+        }
+    }
+
+    /// Fold another region's pass into this one (bank vectors must match —
+    /// both come from the same buffer geometry). Shard indices in
+    /// `write_shards` stay region-relative; aggregation is for telemetry,
+    /// not bill replay.
+    pub fn merge(&mut self, other: &RegionScrub) {
+        self.read_energy.add(other.read_energy);
+        // Shard indices are region-relative and meaningless after a merge;
+        // keep the per-shard energies (for replay-shaped consumers) under
+        // a sentinel index.
+        for &(_, e) in &other.write_shards {
+            self.write_shards.push((usize::MAX, e));
+        }
+        self.scrubbed_words += other.scrubbed_words;
+        self.rewritten_words += other.rewritten_words;
+        self.corrected_words += other.corrected_words;
+        self.corrected_cells += other.corrected_cells;
+        self.policy_detected += other.policy_detected;
+        self.dirty_shards += other.dirty_shards;
+        for (a, b) in self.corrected_per_bank.iter_mut().zip(&other.corrected_per_bank) {
+            *a += b;
+        }
+        for (a, b) in self.scrubbed_per_bank.iter_mut().zip(&other.scrubbed_per_bank) {
+            *a += b;
+        }
+    }
+}
+
+/// FNV-1a 64 over the little-endian bytes of each [`LOAD_SHARD_WORDS`]
+/// chunk of an f16 word stream — the golden per-shard checksum vector the
+/// scrub cursor compares against (same constants and byte discipline as
+/// the delivery manifest's chunk checksums, DESIGN.md §14/§15). Computed
+/// once from a clean encoded image; a rebuild reproduces the same words,
+/// so the vector survives eviction cycles unchanged.
+pub fn shard_checksums(words: &[u16]) -> Vec<u64> {
+    words.chunks(LOAD_SHARD_WORDS).map(fnv_words).collect()
+}
+
+/// FNV-1a 64 of one word slice (little-endian bytes).
+fn fnv_words(words: &[u16]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// Write one store shard: bill the energy of programming the *intended*
 /// image, then let the write/retention error model corrupt vulnerable
 /// cells in the stored copy via the packed geometric-skip sampler
@@ -702,7 +1029,8 @@ fn store_shard(
 /// (`head`), the summed maxes of slots fully inside it (`interior`), and —
 /// when it touches more than one slot — the possibly-partial slot it ends
 /// in (`tail`), which the next shard may continue.
-struct LoadPartial {
+#[derive(Clone, Debug)]
+pub(crate) struct LoadPartial {
     /// Read energy of this shard's words (nanojoules sum, in word order).
     nj: f64,
     /// Global index of the first bank slot this shard touches.
@@ -1215,5 +1543,223 @@ mod tests {
         // The disturbance is persistent: a plain load now sees the flips.
         let second = buf.load(&r).unwrap();
         assert_eq!(first.words, second.words);
+    }
+
+    #[test]
+    fn per_shard_flip_counts_sum_and_align() {
+        // The shard-resolved disturb reports exactly where the summed
+        // variant's flips landed, shard by shard, off the same seed stream.
+        let n = STORE_SHARD_WORDS * 2 + 123;
+        let enc = WeightCodec::new(Policy::Unprotected, 1).encode(&ramp(n));
+        let cfg = BufferConfig::new(enc.len() * 2, 4)
+            .with_error_model(ErrorModel::at_rate(0.0));
+        let rate = ErrorModel::at_rate(0.02);
+
+        let mut buf = MlcBuffer::new(cfg.clone(), 0xABCD);
+        let r = buf.store(&enc).unwrap();
+        let per_shard = buf.corrupt_region_write_shards(&r, &rate, 3).unwrap();
+        assert_eq!(per_shard.len(), n.div_ceil(STORE_SHARD_WORDS));
+
+        let mut twin = MlcBuffer::new(cfg, 0xABCD);
+        let rt = twin.store(&enc).unwrap();
+        let total = twin.corrupt_region_write(&rt, &rate, 1).unwrap();
+        assert_eq!(per_shard.iter().sum::<u64>(), total);
+        assert_eq!(buf.stats().injected_faults, total);
+
+        // Each count is the per-shard word diff against the clean image.
+        let stored = buf.load(&r).unwrap().words;
+        for (k, (got, clean)) in stored
+            .chunks(STORE_SHARD_WORDS)
+            .zip(enc.words.chunks(STORE_SHARD_WORDS))
+            .enumerate()
+        {
+            let diff = got.iter().zip(clean).filter(|(a, b)| a != b).count() as u64;
+            assert_eq!(diff, per_shard[k], "shard {k}");
+        }
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn shard_checksums_follow_stored_content() {
+        let n = LOAD_SHARD_WORDS + 500;
+        let enc = WeightCodec::hybrid(4).encode(&ramp(n));
+        let cfg = BufferConfig::new(enc.len() * 2, 4)
+            .with_error_model(ErrorModel::at_rate(0.0));
+        let mut buf = MlcBuffer::new(cfg, 3);
+        let r = buf.store(&enc).unwrap();
+        let golden = shard_checksums(&enc.words);
+        assert_eq!(golden.len(), 2);
+        assert_eq!(buf.region_shard_checksums(&r).unwrap(), golden);
+        // A single flip in shard 1 changes exactly that checksum.
+        buf.words[r.offset + LOAD_SHARD_WORDS] ^= 1 << 2;
+        let now = buf.region_shard_checksums(&r).unwrap();
+        assert_eq!(now[0], golden[0]);
+        assert_ne!(now[1], golden[1]);
+    }
+
+    #[test]
+    fn scrub_restores_clean_image_and_consumes_no_rng() {
+        let n = LOAD_SHARD_WORDS + 4000;
+        let ws = ramp(n);
+        for (policy, g) in [(Policy::Hybrid, 7usize), (Policy::ZeroSpaceParity, 1)] {
+            let enc = WeightCodec::new(policy, g).encode(&ws);
+            let cfg = BufferConfig::new(enc.len() * 2, 4)
+                .with_error_model(ErrorModel::at_rate(0.0));
+            let rate = ErrorModel::at_rate(0.02);
+            let golden = shard_checksums(&enc.words);
+            let prot = crate::encoding::protection_for(policy, g);
+
+            let mut buf = MlcBuffer::new(cfg.clone(), 42);
+            let r = buf.store(&enc).unwrap();
+            buf.corrupt_region_write(&r, &rate, 2).unwrap();
+
+            // Control: same seed stream, content fixed up by hand instead
+            // of by scrub — isolates the RNG-stream comparison below.
+            let mut ctrl = MlcBuffer::new(cfg.clone(), 42);
+            let rc = ctrl.store(&enc).unwrap();
+            ctrl.corrupt_region_write(&rc, &rate, 2).unwrap();
+            ctrl.words[rc.offset..rc.offset + rc.len].copy_from_slice(&enc.words);
+
+            let pass = buf
+                .scrub_region(&r, &enc.words, &golden, prot.as_ref())
+                .unwrap();
+            assert!(pass.dirty_shards > 0, "{policy:?}");
+            assert!(pass.corrected_words > 0 && pass.corrected_cells >= pass.corrected_words);
+            assert_eq!(pass.scrubbed_words, n as u64);
+            assert_eq!(buf.load(&r).unwrap().words, enc.words, "{policy:?}");
+
+            // A clean pass detects and rewrites nothing.
+            let second = buf
+                .scrub_region(&r, &enc.words, &golden, prot.as_ref())
+                .unwrap();
+            assert_eq!(second.dirty_shards, 0, "{policy:?}");
+            assert_eq!(second.corrected_words, 0);
+            assert_eq!(second.rewritten_words, 0);
+            assert_eq!(second.policy_detected, 0, "{policy:?} clean image flagged");
+
+            // Scrubbing drew no RNG: the next disturb lands identically to
+            // the control that never scrubbed.
+            buf.corrupt_region_write(&r, &rate, 1).unwrap();
+            ctrl.corrupt_region_write(&rc, &rate, 1).unwrap();
+            assert_eq!(
+                buf.load(&r).unwrap().words,
+                ctrl.load(&rc).unwrap().words,
+                "{policy:?} scrub consumed RNG state"
+            );
+        }
+    }
+
+    #[test]
+    fn scrub_billing_matches_read_and_store_oracles() {
+        let n = LOAD_SHARD_WORDS * 2 + 321;
+        let enc = WeightCodec::hybrid(4).encode(&ramp(n));
+        let cfg = BufferConfig::new(enc.len() * 2, 8)
+            .with_error_model(ErrorModel::at_rate(0.0));
+        let rate = ErrorModel::at_rate(0.02);
+
+        let mut buf = MlcBuffer::new(cfg.clone(), 7);
+        let r = buf.store(&enc).unwrap();
+        buf.corrupt_region_write(&r, &rate, 3).unwrap();
+
+        // Read oracle: the payload partial a real read of the corrupted
+        // region bills (same seed stream → same corrupted content).
+        let mut twin = MlcBuffer::new(cfg.clone(), 7);
+        let rt = twin.store(&enc).unwrap();
+        twin.corrupt_region_write(&rt, &rate, 3).unwrap();
+        let mut sink = Vec::new();
+        let read_oracle = twin.load_decoded(&rt, &mut sink, 1).unwrap();
+
+        buf.reset_stats();
+        let golden = shard_checksums(&enc.words);
+        let prot = crate::encoding::protection_for(Policy::Hybrid, 4);
+        let pass = buf
+            .scrub_region(&r, &enc.words, &golden, prot.as_ref())
+            .unwrap();
+        assert!(pass.dirty_shards >= 1);
+        assert_eq!(pass.read_energy, read_oracle);
+        assert_eq!(buf.stats().read_energy, read_oracle);
+        assert_eq!(buf.stats().reads, n as u64);
+
+        // Write oracle: each dirty shard bills exactly the clean words'
+        // content-dependent write costs, added in shard order.
+        let mut want_write = Energy::ZERO;
+        for &(k, e) in &pass.write_shards {
+            let lo = k * LOAD_SHARD_WORDS;
+            let hi = (lo + LOAD_SHARD_WORDS).min(enc.len());
+            let mut o = Energy::ZERO;
+            for &w in &enc.words[lo..hi] {
+                o.add(cfg.cost.word(w, AccessKind::Write));
+            }
+            assert_eq!(e, o, "shard {k}");
+            want_write.add(o);
+        }
+        assert_eq!(buf.stats().write_energy, want_write);
+        assert_eq!(buf.stats().writes, pass.rewritten_words);
+        assert_eq!(
+            pass.rewritten_words,
+            pass.write_shards
+                .iter()
+                .map(|&(k, _)| ((k * LOAD_SHARD_WORDS + LOAD_SHARD_WORDS).min(n)
+                    - k * LOAD_SHARD_WORDS) as u64)
+                .sum::<u64>()
+        );
+        assert_eq!(buf.stats().injected_faults, 0, "scrub never injects");
+    }
+
+    #[test]
+    fn load_decoded_reusing_matches_full_read() {
+        // Mixed clean/dirty shards: skipped shards replay cached partials
+        // and floats; dirty shards re-read and re-decode over their
+        // group-aligned hull. Bill and floats must equal a full fresh read
+        // — including g=7, whose groups straddle the shard boundary.
+        let n = LOAD_SHARD_WORDS * 3 + 777;
+        let ws = ramp(n);
+        for (policy, g) in [
+            (Policy::Hybrid, 7usize),
+            (Policy::Unprotected, 1),
+            (Policy::ZeroSpaceParity, 1),
+        ] {
+            let enc = WeightCodec::new(policy, g).encode(&ws);
+            let cfg = BufferConfig::new(enc.len() * 2, 12)
+                .with_error_model(ErrorModel::at_rate(0.0));
+            let rate = ErrorModel::at_rate(0.018);
+
+            let setup = |seed: u64| {
+                let mut b = MlcBuffer::new(cfg.clone(), seed);
+                let reg = b.store(&enc).unwrap();
+                let mut flips = b.corrupt_region_write_shards(&reg, &rate, 2).unwrap();
+                // Force shard 1 clean so the skip path actually runs.
+                b.words[reg.offset + LOAD_SHARD_WORDS..reg.offset + 2 * LOAD_SHARD_WORDS]
+                    .copy_from_slice(&enc.words[LOAD_SHARD_WORDS..2 * LOAD_SHARD_WORDS]);
+                flips[1] = 0;
+                (b, reg, flips)
+            };
+
+            let (mut clean_buf, clean_r, _) = {
+                let mut b = MlcBuffer::new(cfg.clone(), 9);
+                let reg = b.store(&enc).unwrap();
+                (b, reg, ())
+            };
+            let clean_partials = clean_buf.region_load_partials(&clean_r).unwrap();
+            let mut clean_f32 = Vec::new();
+            clean_buf.load_decoded(&clean_r, &mut clean_f32, 1).unwrap();
+
+            let (mut twin, rt, _) = setup(9);
+            twin.reset_stats();
+            let mut want = Vec::new();
+            let want_energy = twin.load_decoded(&rt, &mut want, 1).unwrap();
+
+            let (mut buf, r, flips) = setup(9);
+            assert!(flips.iter().any(|&f| f > 0), "{policy:?}: no dirty shard");
+            buf.reset_stats();
+            let mut got = Vec::new();
+            let e = buf
+                .load_decoded_reusing(&r, &clean_partials, &flips, &clean_f32, &mut got)
+                .unwrap();
+            assert_eq!(got, want, "{policy:?}");
+            assert_eq!(e, want_energy, "{policy:?}");
+            assert_eq!(buf.stats().read_energy, twin.stats().read_energy, "{policy:?}");
+            assert_eq!(buf.stats().reads, twin.stats().reads);
+        }
     }
 }

@@ -30,12 +30,14 @@
 //! [`EvictPolicy`] enum is defined here so `util::env` can parse
 //! `MLCSTT_EVICT` without reaching into the API layer.
 
-use crate::encoding::Encoded;
+use crate::encoding::{Encoded, ProtectionPolicy};
 use crate::stt::endurance::WearTracker;
 use crate::stt::{AccessKind, Energy, ErrorModel};
 use crate::util::rng::Xoshiro256;
 
-use super::{AccessStats, BufferConfig, BufferError, MlcBuffer, Region};
+use super::{
+    AccessStats, BufferConfig, BufferError, MlcBuffer, Region, RegionScrub, LOAD_SHARD_WORDS,
+};
 
 /// Default hot-extent threshold: an extent whose write count exceeds
 /// `LEVEL_RATIO ×` the mean extent write count is avoided by placement
@@ -267,6 +269,65 @@ impl SharedMlcBuffer {
         Ok(energy)
     }
 
+    /// One scrub pass over a tenant's pool region (DESIGN.md §15):
+    /// delegate detection + repair to [`MlcBuffer::scrub_region`], replay
+    /// the bill into `tenant` in the same order the pool-aggregate stats
+    /// were charged (scan read first, then the dirty-shard writes in shard
+    /// order), and — the part tenant churn alone would miss — charge every
+    /// rewritten word to the per-extent write ledger and the per-bank
+    /// [`WearTracker`]s, so wear-leveled placement sees scrub traffic
+    /// exactly like store traffic.
+    pub fn scrub_region(
+        &mut self,
+        pr: &PoolRegion,
+        clean: &[u16],
+        golden: &[u64],
+        policy: &dyn ProtectionPolicy,
+        tenant: &mut AccessStats,
+    ) -> Result<RegionScrub, BufferError> {
+        let pass = self.buf.scrub_region(&pr.region, clean, golden, policy)?;
+
+        tenant.read_energy.add(pass.read_energy);
+        tenant.reads += pr.region.len as u64;
+        for &(_, energy) in &pass.write_shards {
+            tenant.write_energy.add(energy);
+        }
+        tenant.writes += pass.rewritten_words;
+
+        // Wear ledger: scrub rewrites program real cells. Stress is paid
+        // for the intended (clean) image, like `alloc_store`.
+        let banks = self.buf.config.banks;
+        for &(k, _) in &pass.write_shards {
+            let lo = k * LOAD_SHARD_WORDS;
+            let hi = (lo + LOAD_SHARD_WORDS).min(pr.region.len);
+            for (i, &w) in clean[lo..hi].iter().enumerate() {
+                let e = pr.first_extent + (lo + i) / self.extent_words;
+                self.extents[e].writes += 1;
+                self.bank_wear[e % banks].record_word(w);
+            }
+        }
+        Ok(pass)
+    }
+
+    /// Retention aging hook: re-run the write-path fault sampler over a
+    /// resident region in place (the pool buffer's own seed stream, shard
+    /// order), reporting per-shard flip counts. Faults are environmental —
+    /// no energy is billed — but they count into both the pool-aggregate
+    /// and the tenant's `injected_faults`.
+    pub fn disturb_region(
+        &mut self,
+        pr: &PoolRegion,
+        model: &ErrorModel,
+        workers: usize,
+        tenant: &mut AccessStats,
+    ) -> Result<Vec<u64>, BufferError> {
+        let per_shard = self
+            .buf
+            .corrupt_region_write_shards(&pr.region, model, workers)?;
+        tenant.injected_faults += per_shard.iter().sum::<u64>();
+        Ok(per_shard)
+    }
+
     /// The "buffer lifetime under traffic" report: one row per bank with
     /// extent-write extremes and the endurance projection of the wear mix
     /// that bank has absorbed.
@@ -443,5 +504,46 @@ mod tests {
         }
         assert_eq!(placements, vec![0, 1, 2, 3, 4, 5, 6, 7]);
         assert!((pool.wear_spread() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scrub_rewrites_charge_wear_and_rotate_placement() {
+        use crate::encoding::{protection_for, Policy};
+        // 8 one-extent slots. Park a tenant in extent 0, disturb + scrub
+        // it repeatedly, then free it: the next allocation must avoid the
+        // scrub-burned extent exactly as it avoids store-churn wear.
+        let mut pool = SharedMlcBuffer::new(8 * 16 * 2, 4, 16, 1);
+        let enc = WeightCodec::hybrid(4).encode(&ramp(16));
+        let golden = super::super::shard_checksums(&enc.words);
+        let prot = protection_for(Policy::Hybrid, 4);
+        let model = ErrorModel::at_rate(0.0);
+        let hot = ErrorModel::at_rate(1.0);
+        let mut rng = Xoshiro256::seeded(7);
+        let mut stats = AccessStats::default();
+        let a = pool
+            .alloc_store(&enc, &model, &mut rng, 1, &mut stats)
+            .unwrap();
+        assert_eq!(a.first_extent, 0);
+        let before = pool.extent_writes()[0];
+        let mut rewrites = 0u64;
+        for _ in 0..6 {
+            let flips = pool.disturb_region(&a, &hot, 1, &mut stats).unwrap();
+            assert!(flips.iter().sum::<u64>() > 0);
+            let pass = pool
+                .scrub_region(&a, &enc.words, &golden, prot.as_ref(), &mut stats)
+                .unwrap();
+            rewrites += pass.rewritten_words;
+        }
+        assert!(rewrites > 0);
+        assert_eq!(
+            pool.extent_writes()[0],
+            before + rewrites,
+            "scrub rewrites missing from the extent ledger"
+        );
+        pool.free(&a);
+        let b = pool
+            .alloc_store(&enc, &model, &mut rng, 1, &mut stats)
+            .unwrap();
+        assert_ne!(b.first_extent, 0, "placement ignored scrub wear");
     }
 }

@@ -86,12 +86,15 @@ pub struct StoreSnapshot {
 
 /// A clean (fault-free) materialize captured for sweep reuse: the decoded
 /// tensors plus, per tensor, the payload-word read bill the buffer
-/// charged. [`WeightStore::materialize_reusing`] hands back the cached
-/// tensor — and replays the cached bill — for every region whose last
-/// re-injection took **zero** flips, since such a region still holds the
-/// snapshot's clean bytes and would decode (and bill) identically
-/// (DESIGN.md §10). Capture with [`WeightStore::materialize_clean_cache`]
-/// on the same clean store the [`StoreSnapshot`] was taken from.
+/// charged and the per-shard clean read partials.
+/// [`WeightStore::materialize_reusing`] hands back the cached tensor —
+/// and replays the cached bill — for every region whose last re-injection
+/// took **zero** flips; a region with *some* flips reuses the cache at
+/// **shard** grain ([`crate::buffer::LOAD_SHARD_WORDS`] steps): only its
+/// dirty shards re-read and re-decode, while clean shards replay their
+/// cached partials and floats (DESIGN.md §10). Capture with
+/// [`WeightStore::materialize_clean_cache`] on the same clean store the
+/// [`StoreSnapshot`] was taken from.
 #[derive(Clone, Debug)]
 pub struct CleanMaterialize {
     /// Policy of the store the cache was captured from — part of the
@@ -99,6 +102,10 @@ pub struct CleanMaterialize {
     policy: Policy,
     tensors: Vec<ParamSpec>,
     bills: Vec<Energy>,
+    /// Per tensor, the clean image's per-shard load partials — what a
+    /// fresh read of a flip-free shard would contribute to the carry-rule
+    /// reduction.
+    partials: Vec<Vec<crate::buffer::LoadPartial>>,
 }
 
 impl CleanMaterialize {
@@ -119,10 +126,10 @@ pub struct WeightStore {
     soft_cells: u64,
     /// Pinned codec worker count (0 = auto per tensor).
     threads: usize,
-    /// Per-region words-corrupted counts from the most recent
+    /// Per-region, per-shard words-corrupted counts from the most recent
     /// [`Self::reinject`] (`None` until one runs) — the validity signal
-    /// for [`Self::materialize_reusing`].
-    last_flips: Option<Vec<u64>>,
+    /// for [`Self::materialize_reusing`]'s shard-grain flip-skip.
+    last_flips: Option<Vec<Vec<u64>>>,
     /// Endurance stress of every intended stored word (the lifetime
     /// projection `mlcstt serve` prints; DESIGN.md §12).
     wear: WearTracker,
@@ -268,17 +275,20 @@ impl WeightStore {
     /// stores drew them — at none of the re-quantize/re-encode/re-store
     /// cost. Returns total words corrupted.
     pub fn reinject(&mut self, snap: &StoreSnapshot, model: &ErrorModel, seed: u64) -> Result<u64> {
+        // Fault shards and load shards are the same word ranges, which is
+        // what lets `materialize_reusing` map flip counts onto read shards.
+        const _: () = assert!(STORE_SHARD_WORDS == LOAD_SHARD_WORDS);
         self.buffer.restore(&snap.buffer, seed);
         let mut per_region = Vec::with_capacity(self.entries.len());
         let mut corrupted = 0u64;
         for (meta, region) in &self.entries {
             let w = workers_for(self.threads, region.len, STORE_SHARD_WORDS);
-            let n = self
+            let per_shard = self
                 .buffer
-                .corrupt_region_write(region, model, w)
+                .corrupt_region_write_shards(region, model, w)
                 .with_context(|| format!("re-injecting tensor {}", meta.name))?;
-            per_region.push(n);
-            corrupted += n;
+            corrupted += per_shard.iter().sum::<u64>();
+            per_region.push(per_shard);
         }
         self.last_flips = Some(per_region);
         Ok(corrupted)
@@ -294,24 +304,37 @@ impl WeightStore {
     pub fn materialize_clean_cache(&mut self) -> Result<CleanMaterialize> {
         let mut tensors = Vec::with_capacity(self.entries.len());
         let mut bills = Vec::with_capacity(self.entries.len());
+        let mut partials = Vec::with_capacity(self.entries.len());
         for i in 0..self.entries.len() {
             let (spec, bill) = self.load_entry(i)?;
             tensors.push(spec);
             bills.push(bill);
+            // Per-shard clean partials for the shard-grain reuse path —
+            // computed without billing, so capturing them leaves the
+            // accounting exactly where `load_entry` put it.
+            let (meta, region) = &self.entries[i];
+            let p = self
+                .buffer
+                .region_load_partials(region)
+                .with_context(|| format!("caching shard partials for {}", meta.name))?;
+            partials.push(p);
         }
         Ok(CleanMaterialize {
             policy: self.policy(),
             tensors,
             bills,
+            partials,
         })
     }
 
-    /// Flip-set-aware materialize: tensors whose regions took **zero**
-    /// flips in the preceding [`Self::reinject`] still hold the clean
-    /// snapshot bytes, so their decode is taken from `cache` and their
-    /// read bill replayed ([`MlcBuffer::replay_region_read`]) instead of
-    /// re-reading the buffer; every other tensor goes through the normal
-    /// fused load→decode. Output tensors and cumulative accounting are
+    /// Flip-set-aware materialize, at **shard** grain: tensors whose
+    /// regions took **zero** flips in the preceding [`Self::reinject`]
+    /// still hold the clean snapshot bytes, so their decode is taken from
+    /// `cache` and their read bill replayed
+    /// ([`MlcBuffer::replay_region_read`]) instead of re-reading the
+    /// buffer; a tensor with *some* flips skips just its clean shards
+    /// (cached partials + floats) and re-reads/re-decodes only the dirty
+    /// ones. Output tensors and cumulative accounting are
     /// **bit-identical** to a plain [`Self::materialize`] — the
     /// always-rematerialize oracle retained precisely to pin this
     /// (`experiments::run_rate_sweep_with_rematerialize`,
@@ -350,15 +373,29 @@ impl WeightStore {
         }
         let mut out = Vec::with_capacity(self.entries.len());
         for i in 0..self.entries.len() {
-            if flips[i] == 0 {
+            if flips[i].iter().all(|&n| n == 0) {
                 let (meta, region) = &self.entries[i];
                 self.buffer
                     .replay_region_read(region, cache.bills[i])
                     .with_context(|| format!("replaying read bill for {}", meta.name))?;
                 out.push(cache.tensors[i].clone());
             } else {
-                let (spec, _) = self.load_entry(i)?;
-                out.push(spec);
+                let (meta, region) = &self.entries[i];
+                let mut data = Vec::new();
+                self.buffer
+                    .load_decoded_reusing(
+                        region,
+                        &cache.partials[i],
+                        &flips[i],
+                        &cache.tensors[i].data,
+                        &mut data,
+                    )
+                    .with_context(|| format!("shard-reusing read of {}", meta.name))?;
+                out.push(ParamSpec {
+                    name: meta.name.clone(),
+                    shape: meta.shape.clone(),
+                    data,
+                });
             }
         }
         Ok(out)

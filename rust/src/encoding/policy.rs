@@ -24,6 +24,7 @@
 
 use super::codec::{Encoded, WeightCodec};
 use super::select::Policy;
+use super::{parity, scheme};
 
 /// One protection scheme's full codec surface, object-safe for dynamic
 /// dispatch through store/deployment/sweep plumbing.
@@ -54,6 +55,27 @@ pub trait ProtectionPolicy: Send + Sync {
     /// vulnerability lives in the stored pattern, not the scheme.
     fn vulnerable_mask(&self, stored: u16) -> u16 {
         (stored ^ (stored >> 1)) & 0x5555
+    }
+
+    /// Does this stored word carry evidence of corruption the policy can
+    /// see without the original? Sign-backup policies check the protected
+    /// pair (bits 15/14 must agree — every reformation preserves both);
+    /// zero-space parity checks the in-word parity code. The default —
+    /// no in-word redundancy — can never tell, so it reports `false`.
+    /// This is the scrub cursor's *telemetry* channel (DESIGN.md §15);
+    /// authoritative detection uses the retained golden shard checksums.
+    fn detect(&self, _stored: u16) -> bool {
+        false
+    }
+
+    /// Best-effort in-word repair of a stored image: return the closest
+    /// word the policy's redundancy can reconstruct. The default (no
+    /// redundancy) is the identity. Implementations must be idempotent
+    /// and leave clean words untouched, so calling this on an undamaged
+    /// region is a no-op. Authoritative repair in the scrub subsystem
+    /// rewrites from the tenant's retained clean image instead.
+    fn repair(&self, stored: u16) -> u16 {
+        stored
     }
 }
 
@@ -99,6 +121,23 @@ impl ProtectionPolicy for SchemeProtection {
         // One tri-level symbol (2 bits) per granularity group.
         2 * n.div_ceil(self.codec.granularity) as u64
     }
+
+    fn detect(&self, stored: u16) -> bool {
+        // Every reformation keeps the protected sign pair (bits 15/14) in
+        // place, so a stored disagreement is always damage.
+        self.codec.policy.protects_sign() && ((stored >> 15) ^ (stored >> 14)) & 1 != 0
+    }
+
+    fn repair(&self, stored: u16) -> u16 {
+        // A single soft error in the sign cell leaves the pair disagreeing;
+        // re-protecting restores the invariant the decoder relies on (the
+        // decode path trusts bit 15, so this is exactly idempotent).
+        if self.codec.policy.protects_sign() {
+            scheme::protect_sign(stored)
+        } else {
+            stored
+        }
+    }
 }
 
 /// In-place zero-space parity (Guan 2019) through the trait: granularity
@@ -129,6 +168,14 @@ impl ProtectionPolicy for ParityProtection {
     fn metadata_overhead_bits(&self, _n: usize) -> u64 {
         0
     }
+
+    fn detect(&self, stored: u16) -> bool {
+        parity::mismatch(stored)
+    }
+
+    // No `repair` override: the parity code locates no bit, so in-word
+    // reconstruction is impossible — detection feeds telemetry and the
+    // golden-image rewrite does the actual repair.
 }
 
 /// Build the implementation for an enum policy — the single construction
@@ -201,5 +248,45 @@ mod tests {
             assert_eq!(p.policy(), policy);
             assert_eq!(p.label(), policy.label());
         }
+    }
+
+    #[test]
+    fn detect_is_quiet_on_clean_stored_images() {
+        let ws = ramp(512);
+        for policy in Policy::EXTENDED {
+            let p = protection_for(policy, 4);
+            let mut enc = Encoded::with_context(policy, 4);
+            p.encode_into(&ws, &mut enc, 1);
+            for (i, &w) in enc.words.iter().enumerate() {
+                assert!(!p.detect(w), "{policy:?} word {i} ({w:#06x})");
+                assert_eq!(p.repair(w), w, "{policy:?} repair not identity on clean word {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn detect_sees_sign_pair_and_parity_damage() {
+        let ws = ramp(64);
+        // Sign-backup policies flag a flipped backup bit and repair it.
+        for policy in [Policy::ProtectRound, Policy::ProtectRotate, Policy::Hybrid] {
+            let p = protection_for(policy, 4);
+            let mut enc = Encoded::with_context(policy, 4);
+            p.encode_into(&ws, &mut enc, 1);
+            let hit = enc.words[3] ^ (1 << 14);
+            assert!(p.detect(hit), "{policy:?} missed a sign-pair flip");
+            let fixed = p.repair(hit);
+            assert_eq!(fixed, enc.words[3], "{policy:?} repair");
+            assert!(!p.detect(fixed));
+        }
+        // Parity flags a payload-bit flip but cannot locate it.
+        let p = protection_for(Policy::ZeroSpaceParity, 1);
+        let mut enc = Encoded::with_context(Policy::ZeroSpaceParity, 1);
+        p.encode_into(&ws, &mut enc, 1);
+        let hit = enc.words[5] ^ (1 << 9);
+        assert!(p.detect(hit), "parity missed an exponent-field flip");
+        assert_eq!(p.repair(hit), hit, "parity repair must be identity");
+        // Unprotected has no redundancy to consult.
+        let u = protection_for(Policy::Unprotected, 1);
+        assert!(!u.detect(0xFFFF ^ (1 << 14)));
     }
 }

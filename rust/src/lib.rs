@@ -22,6 +22,10 @@
 //! * [`runtime`] — PJRT executor for the AOT-lowered JAX/Pallas artifacts,
 //! * [`coordinator`] — the inference service that owns weights behind the
 //!   simulated buffer (encode → store → fault → decode → execute),
+//! * [`scrub`] — background integrity maintenance for data at rest:
+//!   golden-checksum scrub passes with in-place repair, per-bank
+//!   error-rate telemetry, and the adaptive scrub scheduler (DESIGN.md
+//!   §15),
 //! * [`metrics`] — report tables matching the paper's figures,
 //! * [`util`] — zero-dependency PRNG / JSON / CLI / stats / property-test
 //!   support (the offline vendor set carries only `xla` and `anyhow`).
@@ -46,6 +50,7 @@ pub mod fp;
 pub mod metrics;
 pub mod models;
 pub mod runtime;
+pub mod scrub;
 pub mod stt;
 pub mod systolic;
 pub mod util;

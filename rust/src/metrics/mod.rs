@@ -250,6 +250,42 @@ pub fn wear_table(title: &str, rows: &[crate::buffer::shared::BankWear]) -> Tabl
     t
 }
 
+/// Render background-scrub telemetry (DESIGN.md §15): one row per bank
+/// with its corrected-cells-per-word EWMA, then a totals row with the
+/// pass counters, the weighted observed rate, and the effective interval.
+/// Surfaced by [`crate::api::RegistryReport`]'s `Display` and the
+/// `mlcstt scrub` demo.
+pub fn scrub_table(title: &str, s: &crate::scrub::ScrubTelemetry) -> Table {
+    let mut t = Table::new(
+        title,
+        &["bank", "ewma c/w", "passes", "scrubbed", "corrected", "dirty", "interval"],
+    );
+    for (b, rate) in s.bank_rates.iter().enumerate() {
+        t.row(vec![
+            b.to_string(),
+            format!("{rate:.5}"),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    t.row(vec![
+        format!("all ({})", s.policy),
+        format!("{:.5}", s.observed_rate),
+        s.passes.to_string(),
+        s.scrubbed_words.to_string(),
+        format!("{}w/{}c", s.corrected_words, s.corrected_cells),
+        s.dirty_shards.to_string(),
+        match s.interval {
+            Some(d) => format!("{:.0?}", d),
+            None => "off".into(),
+        },
+    ]);
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

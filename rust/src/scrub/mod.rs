@@ -1,0 +1,314 @@
+//! Background scrubbing & retention maintenance (DESIGN.md §15).
+//!
+//! The paper's protection is applied once, at write time — but MLC
+//! STT-RAM soft errors accumulate over *retention*: a long-resident
+//! tenant in the shared pool silently decays between rebuilds. This
+//! module is the layer that acts on that time axis:
+//!
+//! * the **scrub cursor** lives in the buffer layer
+//!   ([`crate::buffer::MlcBuffer::scrub_region`] /
+//!   [`crate::buffer::shared::SharedMlcBuffer::scrub_region`]): it walks a
+//!   region in [`crate::buffer::LOAD_SHARD_WORDS`] steps, bills the scan
+//!   through the §8 carry rule, detects decay against retained
+//!   [`golden_checksums`] (FNV-1a per shard, the delivery-manifest
+//!   discipline) plus the resident policy's in-word redundancy
+//!   ([`crate::encoding::ProtectionPolicy::detect`]), and rewrites dirty
+//!   shards from the clean image with store-path billing;
+//! * [`RateEstimator`] — the **online error-rate telemetry**: a per-bank
+//!   EWMA of corrected cells per scrubbed word, rank-checkable against
+//!   the configured [`crate::stt::ErrorModel`] rate;
+//! * [`ScrubPolicy`] — the **adaptive scheduler**: `Off` is byte-for-byte
+//!   the status quo, `Fixed` scrubs on a constant interval, and
+//!   `Adaptive` tightens the interval as the observed rate or a tenant's
+//!   estimated E[SSE] per weight (from [`crate::faults::estimator`])
+//!   crosses a threshold. [`crate::api::BufferPool`] runs passes between
+//!   leases under its single lock, so a scrub never races a rebuild.
+//!
+//! Bit-identity contract (pinned by `rust/tests/scrub.rs`): a full scrub
+//! pass rewrites exactly the decayed shards from the tenant's retained
+//! clean image, drawing **no RNG**, so afterwards the buffer content,
+//! decoded tensors, and every future stochastic bill are bit-identical to
+//! a pool that was never disturbed — while `ScrubPolicy::Off` leaves
+//! every byte of the existing behavior in place.
+
+use std::time::Duration;
+
+use crate::buffer::RegionScrub;
+
+pub use crate::buffer::shard_checksums as golden_checksums;
+
+/// Default adaptive threshold: the decay signal (max of observed
+/// corrected-cells-per-word and estimated E[SSE] per weight) at which the
+/// adaptive interval has halved once (pressure 1.0). The paper-rate
+/// operating band ([`crate::stt::error::ERROR_RATE_LO`] ..
+/// [`crate::stt::error::ERROR_RATE_HI`]) lands above this for unprotected
+/// content and near it for protected.
+pub const DEFAULT_SCRUB_THRESHOLD: f64 = 0.05;
+
+/// Default EWMA smoothing factor for [`RateEstimator`].
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.3;
+
+/// When (and whether) the pool scrubs between leases.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScrubPolicy {
+    /// Never scrub — byte-for-byte the pre-subsystem behavior (no clock
+    /// reads, no RNG draws, no accounting).
+    Off,
+    /// Scrub every resident tenant once per fixed interval.
+    Fixed(Duration),
+    /// Start from `base` and tighten as the decay signal grows: the
+    /// effective interval is `base / (1 + signal / threshold)`, monotone
+    /// non-increasing in both the observed corrected-flip rate and the
+    /// estimated E[SSE] per weight.
+    Adaptive {
+        /// Interval when no decay has been observed.
+        base: Duration,
+        /// Signal level at which the interval has halved once.
+        threshold: f64,
+    },
+}
+
+/// Parseable scheduler kind — what `MLCSTT_SCRUB` names; the interval and
+/// threshold knobs complete it into a [`ScrubPolicy`]
+/// (see `api::Config::scrub_policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScrubMode {
+    /// Never scrub.
+    Off,
+    /// Fixed interval (the default when only an interval is given).
+    Fixed,
+    /// Adaptive interval.
+    Adaptive,
+}
+
+impl ScrubPolicy {
+    /// The effective interval until the next pass, given the current
+    /// decay signals, or `None` when scrubbing is off. For `Adaptive`
+    /// this is monotone non-increasing in `observed_rate` (and in
+    /// `sse_per_weight`), pinned by `rust/tests/scrub.rs`.
+    pub fn interval(&self, observed_rate: f64, sse_per_weight: f64) -> Option<Duration> {
+        match *self {
+            ScrubPolicy::Off => None,
+            ScrubPolicy::Fixed(d) => Some(d),
+            ScrubPolicy::Adaptive { base, threshold } => {
+                let signal = observed_rate.max(sse_per_weight);
+                let pressure = if threshold > 0.0 && signal.is_finite() && signal > 0.0 {
+                    signal / threshold
+                } else {
+                    0.0
+                };
+                Some(base.div_f64(1.0 + pressure))
+            }
+        }
+    }
+
+    /// Is this policy [`ScrubPolicy::Off`]?
+    pub fn is_off(&self) -> bool {
+        matches!(self, ScrubPolicy::Off)
+    }
+
+    /// Human-readable label (report/CLI key).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScrubPolicy::Off => "off",
+            ScrubPolicy::Fixed(_) => "fixed",
+            ScrubPolicy::Adaptive { .. } => "adaptive",
+        }
+    }
+}
+
+/// One bank's running error-rate estimate.
+#[derive(Clone, Debug, Default)]
+struct BankRate {
+    ewma: f64,
+    primed: bool,
+    corrected_cells: u64,
+    scrubbed_words: u64,
+}
+
+/// Per-bank EWMA of corrected cells per scrubbed word — the online
+/// counterpart of the configured write-error rate. Each scrub pass is one
+/// sample per bank (banks with nothing scanned contribute none); the
+/// first sample primes the EWMA, later samples blend in at
+/// [`DEFAULT_EWMA_ALPHA`]. Deterministic: state is a pure fold over the
+/// observed [`RegionScrub`] passes.
+#[derive(Clone, Debug)]
+pub struct RateEstimator {
+    alpha: f64,
+    banks: Vec<BankRate>,
+}
+
+impl RateEstimator {
+    /// An estimator over `banks` banks with the default smoothing factor.
+    pub fn new(banks: usize) -> Self {
+        Self::with_alpha(banks, DEFAULT_EWMA_ALPHA)
+    }
+
+    /// An estimator with an explicit smoothing factor in `(0, 1]`.
+    pub fn with_alpha(banks: usize, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        RateEstimator {
+            alpha,
+            banks: vec![BankRate::default(); banks],
+        }
+    }
+
+    /// Fold one scrub pass into the per-bank estimates. The pass's bank
+    /// vectors must come from the same geometry (`banks()` entries).
+    pub fn observe(&mut self, pass: &RegionScrub) {
+        for (b, (corr, scr)) in pass
+            .corrected_per_bank
+            .iter()
+            .zip(&pass.scrubbed_per_bank)
+            .enumerate()
+        {
+            if b >= self.banks.len() || *scr == 0 {
+                continue;
+            }
+            let bank = &mut self.banks[b];
+            bank.corrected_cells += corr;
+            bank.scrubbed_words += scr;
+            let sample = *corr as f64 / *scr as f64;
+            if bank.primed {
+                bank.ewma = self.alpha * sample + (1.0 - self.alpha) * bank.ewma;
+            } else {
+                bank.ewma = sample;
+                bank.primed = true;
+            }
+        }
+    }
+
+    /// Banks tracked.
+    pub fn banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Per-bank EWMA of corrected cells per scrubbed word (0 until a bank
+    /// has been scanned).
+    pub fn bank_rates(&self) -> Vec<f64> {
+        self.banks.iter().map(|b| b.ewma).collect()
+    }
+
+    /// Scrubbed-word-weighted mean of the per-bank EWMAs — the scheduler's
+    /// scalar decay signal.
+    pub fn observed_rate(&self) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for b in &self.banks {
+            if b.primed {
+                num += b.ewma * b.scrubbed_words as f64;
+                den += b.scrubbed_words as f64;
+            }
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+
+    /// Lifetime corrected cells across all banks.
+    pub fn corrected_cells(&self) -> u64 {
+        self.banks.iter().map(|b| b.corrected_cells).sum()
+    }
+
+    /// Lifetime scrubbed words across all banks.
+    pub fn scrubbed_words(&self) -> u64 {
+        self.banks.iter().map(|b| b.scrubbed_words).sum()
+    }
+}
+
+/// Point-in-time scrub telemetry, exposed through
+/// `api::BufferPool::scrub_telemetry` and rendered into the registry
+/// report by `metrics::scrub_table`.
+#[derive(Clone, Debug)]
+pub struct ScrubTelemetry {
+    /// Scheduler label in force (`off` / `fixed` / `adaptive`).
+    pub policy: &'static str,
+    /// Full passes completed.
+    pub passes: u64,
+    /// Words scanned across all passes.
+    pub scrubbed_words: u64,
+    /// Words found differing from the clean image and repaired.
+    pub corrected_words: u64,
+    /// MLC cells restored across all passes.
+    pub corrected_cells: u64,
+    /// Words the resident policy's in-word redundancy flagged.
+    pub policy_detected: u64,
+    /// Shards whose golden checksum disagreed.
+    pub dirty_shards: u64,
+    /// Scrubbed-word-weighted mean of the per-bank EWMAs.
+    pub observed_rate: f64,
+    /// Per-bank corrected-cells-per-word EWMAs.
+    pub bank_rates: Vec<f64>,
+    /// Worst estimated E[SSE] per weight among resident tenants (the
+    /// adaptive scheduler's second signal).
+    pub max_sse_per_weight: f64,
+    /// Effective interval until the next pass (`None` when off).
+    pub interval: Option<Duration>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stt::Energy;
+
+    fn pass(corrected: &[u64], scrubbed: &[u64]) -> RegionScrub {
+        RegionScrub {
+            read_energy: Energy::ZERO,
+            write_shards: Vec::new(),
+            scrubbed_words: scrubbed.iter().sum(),
+            rewritten_words: 0,
+            corrected_words: 0,
+            corrected_cells: corrected.iter().sum(),
+            policy_detected: 0,
+            dirty_shards: 0,
+            corrected_per_bank: corrected.to_vec(),
+            scrubbed_per_bank: scrubbed.to_vec(),
+        }
+    }
+
+    #[test]
+    fn adaptive_interval_monotone_in_rate() {
+        let base = Duration::from_millis(1000);
+        let p = ScrubPolicy::Adaptive {
+            base,
+            threshold: 0.05,
+        };
+        let mut last = Duration::MAX;
+        for step in 0..50 {
+            let rate = step as f64 * 0.005;
+            let d = p.interval(rate, 0.0).unwrap();
+            assert!(d <= last, "interval grew at rate {rate}");
+            assert!(d <= base);
+            last = d;
+        }
+        // Either signal alone tightens the schedule.
+        assert!(p.interval(0.0, 0.2).unwrap() < base);
+        assert_eq!(p.interval(0.0, 0.0).unwrap(), base);
+        // Fixed ignores the signals; Off stays off.
+        assert_eq!(ScrubPolicy::Fixed(base).interval(9.0, 9.0), Some(base));
+        assert_eq!(ScrubPolicy::Off.interval(9.0, 9.0), None);
+    }
+
+    #[test]
+    fn ewma_tracks_and_weights_banks() {
+        let mut est = RateEstimator::with_alpha(2, 0.5);
+        assert_eq!(est.observed_rate(), 0.0);
+        // Bank 0 sees 10 corrected cells over 100 words; bank 1 is idle.
+        est.observe(&pass(&[10, 0], &[100, 0]));
+        assert!((est.bank_rates()[0] - 0.1).abs() < 1e-12);
+        assert_eq!(est.bank_rates()[1], 0.0);
+        assert!((est.observed_rate() - 0.1).abs() < 1e-12);
+        // A cleaner second sample halves toward it (alpha 0.5); bank 1
+        // primes at its first sample.
+        est.observe(&pass(&[0, 30], &[100, 100]));
+        assert!((est.bank_rates()[0] - 0.05).abs() < 1e-12);
+        assert!((est.bank_rates()[1] - 0.3).abs() < 1e-12);
+        assert_eq!(est.corrected_cells(), 40);
+        assert_eq!(est.scrubbed_words(), 300);
+        // Weighted mean: bank 0 has 200 words at 0.05, bank 1 has 100 at 0.3.
+        let want = (0.05 * 200.0 + 0.3 * 100.0) / 300.0;
+        assert!((est.observed_rate() - want).abs() < 1e-12);
+    }
+}

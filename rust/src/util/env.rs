@@ -160,6 +160,36 @@ pub fn canary() -> Option<usize> {
     raw("MLCSTT_CANARY")?.parse().ok()
 }
 
+/// `MLCSTT_SCRUB_MS` — scrub interval for the shared pool's background
+/// integrity maintenance, in milliseconds ([`crate::scrub::ScrubPolicy`]).
+/// `0` disables scrubbing (the default). Unset/unparsable is `None`
+/// (scrubbing stays off unless the builder supplies an interval).
+pub fn scrub_ms() -> Option<u64> {
+    raw("MLCSTT_SCRUB_MS")?.parse().ok()
+}
+
+/// `MLCSTT_SCRUB` — scrub-scheduler kind: `off`, `fixed`, or `adaptive`
+/// ([`crate::scrub::ScrubMode`]). Unset or unrecognized is `None` (callers
+/// default to `fixed` when an interval is set), matching the `MLCSTT_F16`
+/// enum-parse pattern.
+pub fn scrub_mode() -> Option<crate::scrub::ScrubMode> {
+    match raw("MLCSTT_SCRUB")?.as_str() {
+        "off" => Some(crate::scrub::ScrubMode::Off),
+        "fixed" => Some(crate::scrub::ScrubMode::Fixed),
+        "adaptive" => Some(crate::scrub::ScrubMode::Adaptive),
+        _ => None,
+    }
+}
+
+/// `MLCSTT_SCRUB_THRESH` — adaptive-scheduler decay threshold: the
+/// observed corrected-cells-per-word (or estimated E[SSE] per weight) at
+/// which the adaptive interval has halved once. Unset/unparsable is
+/// `None` (callers default to
+/// [`crate::scrub::DEFAULT_SCRUB_THRESHOLD`]).
+pub fn scrub_thresh() -> Option<f64> {
+    raw("MLCSTT_SCRUB_THRESH")?.parse().ok()
+}
+
 /// `MLCSTT_EVICT` — shared-pool capacity-pressure policy: `lru` (evict
 /// the least-recently-served model, rebuild on demand) or `deny` (refuse
 /// the allocation). Unset or unrecognized is `None` (callers default to

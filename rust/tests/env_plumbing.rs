@@ -13,7 +13,7 @@
 
 use std::path::Path;
 
-use mlcstt::api::{Config, EvictPolicy};
+use mlcstt::api::{Config, EvictPolicy, ScrubMode, ScrubPolicy};
 use mlcstt::encoding::Policy;
 use mlcstt::coordinator::ServerConfig;
 use mlcstt::fp::{self, F16Mode};
@@ -246,4 +246,90 @@ fn mlcstt_env_layering_builder_beats_env_beats_default() {
         Config::from_env().canary_or(mlcstt::api::DEFAULT_CANARY_BATCHES),
         mlcstt::api::DEFAULT_CANARY_BATCHES
     );
+
+    // --- scrub interval (ISSUE 10): env value is milliseconds; unset or
+    // zero means scrubbing stays off (the pre-subsystem default).
+    std::env::set_var("MLCSTT_SCRUB_MS", "250");
+    assert_eq!(
+        Config::from_env().scrub_interval(),
+        Some(std::time::Duration::from_millis(250))
+    );
+    assert_eq!(
+        Config::from_env().scrub_policy(),
+        ScrubPolicy::Fixed(std::time::Duration::from_millis(250)),
+        "interval with no mode means fixed"
+    );
+    assert_eq!(
+        Config::builder()
+            .scrub_interval(std::time::Duration::from_millis(40))
+            .build()
+            .scrub_interval(),
+        Some(std::time::Duration::from_millis(40)),
+        "builder beats env"
+    );
+    std::env::set_var("MLCSTT_SCRUB_MS", "0");
+    assert_eq!(Config::from_env().scrub_policy(), ScrubPolicy::Off, "0 means off");
+    std::env::set_var("MLCSTT_SCRUB_MS", "junk");
+    assert_eq!(Config::from_env().scrub_interval(), None, "unparsable -> off");
+    assert_eq!(Config::from_env().scrub_policy(), ScrubPolicy::Off);
+    std::env::remove_var("MLCSTT_SCRUB_MS");
+    assert_eq!(Config::from_env().scrub_interval(), None);
+    assert_eq!(Config::from_env().scrub_policy(), ScrubPolicy::Off);
+
+    // --- scrub mode: the MLCSTT_F16 enum-parse pattern; a mode without
+    // an interval still resolves to Off (the interval is the master
+    // switch), and `off` wins even over a nonzero interval.
+    std::env::set_var("MLCSTT_SCRUB_MS", "100");
+    std::env::set_var("MLCSTT_SCRUB", "adaptive");
+    assert_eq!(
+        Config::from_env().scrub_policy(),
+        ScrubPolicy::Adaptive {
+            base: std::time::Duration::from_millis(100),
+            threshold: mlcstt::scrub::DEFAULT_SCRUB_THRESHOLD,
+        }
+    );
+    assert_eq!(
+        Config::builder().scrub_mode(ScrubMode::Fixed).build().scrub_policy(),
+        ScrubPolicy::Fixed(std::time::Duration::from_millis(100)),
+        "builder beats env"
+    );
+    std::env::set_var("MLCSTT_SCRUB", "off");
+    assert_eq!(Config::from_env().scrub_policy(), ScrubPolicy::Off, "off beats the interval");
+    std::env::set_var("MLCSTT_SCRUB", "aggressively");
+    assert_eq!(
+        Config::from_env().scrub_policy(),
+        ScrubPolicy::Fixed(std::time::Duration::from_millis(100)),
+        "unknown mode -> fixed default"
+    );
+    std::env::remove_var("MLCSTT_SCRUB");
+
+    // --- adaptive decay threshold: builder beats env beats the crate
+    // default; junk degrades to the default.
+    std::env::set_var("MLCSTT_SCRUB_THRESH", "0.2");
+    assert_eq!(Config::from_env().scrub_threshold(), 0.2);
+    std::env::set_var("MLCSTT_SCRUB", "adaptive");
+    assert_eq!(
+        Config::from_env().scrub_policy(),
+        ScrubPolicy::Adaptive {
+            base: std::time::Duration::from_millis(100),
+            threshold: 0.2,
+        },
+        "threshold reaches the assembled policy"
+    );
+    assert_eq!(
+        Config::builder().scrub_threshold(0.01).build().scrub_threshold(),
+        0.01,
+        "builder beats env"
+    );
+    std::env::set_var("MLCSTT_SCRUB_THRESH", "junk");
+    assert_eq!(
+        Config::from_env().scrub_threshold(),
+        mlcstt::scrub::DEFAULT_SCRUB_THRESHOLD,
+        "unparsable -> default"
+    );
+    std::env::remove_var("MLCSTT_SCRUB_THRESH");
+    std::env::remove_var("MLCSTT_SCRUB");
+    std::env::remove_var("MLCSTT_SCRUB_MS");
+    assert_eq!(Config::from_env().scrub_threshold(), mlcstt::scrub::DEFAULT_SCRUB_THRESHOLD);
+    assert_eq!(Config::from_env().scrub_policy(), ScrubPolicy::Off);
 }

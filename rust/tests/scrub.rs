@@ -1,0 +1,297 @@
+//! Background scrubbing & retention subsystem (ISSUE 10, DESIGN.md §15):
+//!
+//! * one scrub pass restores a disturbed region **bit-identically** to
+//!   its clean image for every [`Policy::EXTENDED`] member — stored
+//!   words, shard checksums, and decoded floats all match a
+//!   never-disturbed twin — and draws no RNG, so later fault injection
+//!   is unchanged by whether a scrub ran;
+//! * [`ScrubPolicy::Off`] is the byte-for-byte status quo: a pool with
+//!   the (default) off scheduler serves, bills, and decodes exactly like
+//!   one that has never heard of scrubbing;
+//! * the scheduled path fires between leases and leaves no residual
+//!   dirt, while an unscrubbed twin accumulates it — the retention
+//!   story of `examples/scrub_retention.rs` as a test;
+//! * the adaptive interval is monotone non-increasing in the decay
+//!   signal, halves exactly at the threshold, and treats the observed
+//!   rate and the E[SSE] channel symmetrically;
+//! * the per-bank EWMA telemetry ranks injected error rates correctly;
+//! * scrub repairs age the pool's banks through the same wear ledger as
+//!   serving writes.
+
+use std::time::Duration;
+
+use mlcstt::api::{BufferPool, EvictPolicy, ScrubPolicy};
+use mlcstt::buffer::{shard_checksums, BufferConfig, MlcBuffer, LOAD_SHARD_WORDS};
+use mlcstt::coordinator::StoreConfig;
+use mlcstt::encoding::{protection_for, Policy, WeightCodec};
+use mlcstt::fp;
+use mlcstt::runtime::artifacts::{ParamSpec, WeightFile};
+use mlcstt::stt::ErrorModel;
+use mlcstt::util::rng::Xoshiro256;
+
+/// Deterministic f16-representable weights (what a trained file holds).
+fn tensor(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|_| fp::quantize_f16((rng.next_gaussian() * 0.4) as f32))
+        .collect()
+}
+
+fn weight_file(n: usize, seed: u64) -> WeightFile {
+    WeightFile {
+        params: vec![ParamSpec {
+            name: "w".into(),
+            shape: vec![n],
+            data: tensor(n, seed),
+        }],
+    }
+}
+
+fn store_cfg(rate: f64, seed: u64) -> StoreConfig {
+    StoreConfig {
+        error_model: ErrorModel::at_rate(rate),
+        seed,
+        ..StoreConfig::default()
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+// --------------------------------------------------- buffer-level repair
+
+#[test]
+fn scrub_restores_bit_identity_for_every_policy() {
+    // Two shards (one partial) so the cursor crosses a shard boundary.
+    let ws = tensor(LOAD_SHARD_WORDS + 4321, 0xA11CE);
+    for policy in Policy::EXTENDED {
+        let enc = WeightCodec::new(policy, 4).encode(&ws);
+        let golden = shard_checksums(&enc.words);
+        let mk = || {
+            let cfg = BufferConfig::new(enc.len() * 2, 7)
+                .with_error_model(ErrorModel::at_rate(0.0));
+            let mut buf = MlcBuffer::new(cfg, 0x5EED);
+            let region = buf.store(&enc).unwrap();
+            (buf, region)
+        };
+        let (mut disturbed, dregion) = mk();
+        let (mut pristine, pregion) = mk();
+
+        let flips = disturbed
+            .corrupt_region_write_shards(&dregion, &ErrorModel::at_rate(0.3), 3)
+            .unwrap();
+        assert!(flips.iter().sum::<u64>() > 0, "{policy:?}: nothing flipped");
+        assert_ne!(
+            disturbed.region_shard_checksums(&dregion).unwrap(),
+            golden,
+            "{policy:?}: corruption must show in the checksums"
+        );
+
+        // One pass detects against the golden checksums and repairs the
+        // stored image in place.
+        let prot = protection_for(policy, enc.granularity);
+        let pass = disturbed
+            .scrub_region(&dregion, &enc.words, &golden, prot.as_ref())
+            .unwrap();
+        assert!(pass.dirty_shards > 0 && pass.corrected_words > 0, "{policy:?}");
+        assert_eq!(pass.scrubbed_words, dregion.len as u64, "{policy:?}");
+        assert!(pass.corrected_cells >= pass.corrected_words, "{policy:?}");
+        assert_eq!(
+            disturbed.region_shard_checksums(&dregion).unwrap(),
+            golden,
+            "{policy:?}: repair must restore the golden image"
+        );
+
+        // The decoded read after repair is bit-identical to the twin
+        // that was never disturbed.
+        let (mut got, mut want) = (Vec::new(), Vec::new());
+        disturbed.load_decoded(&dregion, &mut got, 2).unwrap();
+        pristine.load_decoded(&pregion, &mut want, 2).unwrap();
+        assert_eq!(bits(&got), bits(&want), "{policy:?}: decode differs after scrub");
+
+        // No RNG draws: a clean-region scrub is invisible to the fault
+        // stream, so the next injection matches a twin that never
+        // scrubbed — flip sets and resulting images both.
+        let spass = pristine
+            .scrub_region(&pregion, &enc.words, &golden, prot.as_ref())
+            .unwrap();
+        assert_eq!(spass.dirty_shards, 0, "{policy:?}");
+        assert_eq!(spass.corrected_words, 0, "{policy:?}");
+        let (mut plain, nregion) = mk();
+        let f_scrubbed = pristine
+            .corrupt_region_write_shards(&pregion, &ErrorModel::at_rate(0.02), 2)
+            .unwrap();
+        let f_plain = plain
+            .corrupt_region_write_shards(&nregion, &ErrorModel::at_rate(0.02), 2)
+            .unwrap();
+        assert_eq!(f_scrubbed, f_plain, "{policy:?}: scrub consumed RNG");
+        assert_eq!(
+            pristine.region_shard_checksums(&pregion).unwrap(),
+            plain.region_shard_checksums(&nregion).unwrap(),
+            "{policy:?}: post-injection images diverged"
+        );
+    }
+}
+
+// ------------------------------------------------------ off = status quo
+
+#[test]
+fn scrub_off_is_byte_for_byte_status_quo() {
+    let wf = weight_file(4096, 7);
+    let mk = || {
+        let pool = BufferPool::new(8192 * 2, 16, 256, EvictPolicy::Lru);
+        pool.admit("m", &store_cfg(0.01, 3), &wf).unwrap();
+        pool
+    };
+    let with_off = mk();
+    with_off.set_scrub(ScrubPolicy::Off); // explicit, same as the default
+    let untouched = mk(); // never calls any scrub API
+
+    for _ in 0..3 {
+        let a: Vec<f32> = with_off
+            .lease("m")
+            .unwrap()
+            .build_engine(&mut |t: &[ParamSpec]| Ok(t[0].data.clone()))
+            .unwrap();
+        let b: Vec<f32> = untouched
+            .lease("m")
+            .unwrap()
+            .build_engine(&mut |t: &[ParamSpec]| Ok(t[0].data.clone()))
+            .unwrap();
+        assert_eq!(bits(&a), bits(&b));
+    }
+    let (ra, rb) = (with_off.report("m").unwrap(), untouched.report("m").unwrap());
+    assert_eq!(ra.write_energy, rb.write_energy);
+    assert_eq!(ra.read_energy, rb.read_energy);
+    assert_eq!(ra.injected_faults, rb.injected_faults);
+
+    let t = with_off.scrub_telemetry();
+    assert_eq!(t.policy, "off");
+    assert_eq!(t.passes, 0);
+    assert!(t.interval.is_none());
+}
+
+// ----------------------------------------------- scheduled path + repair
+
+#[test]
+fn scheduled_scrub_fires_between_leases_and_repairs() {
+    let wf = weight_file(4096, 7);
+    let pool = BufferPool::new(8192 * 2, 16, 256, EvictPolicy::Lru);
+    pool.admit("m", &store_cfg(0.0, 3), &wf).unwrap();
+    pool.set_scrub(ScrubPolicy::Fixed(Duration::ZERO));
+
+    assert!(pool.disturb(&ErrorModel::at_rate(0.4)).unwrap() > 0);
+    let _: Vec<f32> = pool
+        .lease("m")
+        .unwrap()
+        .build_engine(&mut |t: &[ParamSpec]| Ok(t[0].data.clone()))
+        .unwrap();
+    let after_lease = pool.scrub_telemetry();
+    assert_eq!(after_lease.passes, 1, "zero-interval schedule must fire at the lease");
+    assert!(after_lease.corrected_words > 0 && after_lease.dirty_shards > 0);
+    assert_eq!(pool.rebuilds(), 0, "repair is in place, not a rebuild");
+
+    // The scheduled pass left nothing behind: a verification pass finds
+    // no new dirt.
+    let verify = pool.scrub_pass().unwrap();
+    assert_eq!(verify.dirty_shards, after_lease.dirty_shards);
+    assert_eq!(verify.corrected_words, after_lease.corrected_words);
+}
+
+#[test]
+fn retention_residual_dirt_scrubbed_vs_not() {
+    let wf = weight_file(4096, 7);
+    let mk = || {
+        let pool = BufferPool::new(8192 * 2, 16, 256, EvictPolicy::Lru);
+        pool.admit("m", &store_cfg(0.0, 3), &wf).unwrap();
+        pool
+    };
+    let scrubbed = mk();
+    let neglected = mk();
+    for _ in 0..4 {
+        scrubbed.disturb(&ErrorModel::at_rate(0.05)).unwrap();
+        scrubbed.scrub_pass().unwrap();
+        neglected.disturb(&ErrorModel::at_rate(0.05)).unwrap();
+    }
+
+    // Verification pass: the scrubbed pool holds a clean image; the
+    // neglected one has four cycles of decay still sitting in it.
+    let before = scrubbed.scrub_telemetry();
+    let after = scrubbed.scrub_pass().unwrap();
+    assert_eq!(after.dirty_shards, before.dirty_shards, "scrubbing must hold the image clean");
+    let t = neglected.scrub_pass().unwrap();
+    assert!(t.dirty_shards > 0, "unscrubbed decay must accumulate");
+}
+
+// ------------------------------------------------------ adaptive schedule
+
+#[test]
+fn adaptive_interval_monotone_in_decay_signal() {
+    let base = Duration::from_millis(800);
+    let p = ScrubPolicy::Adaptive { base, threshold: 0.05 };
+
+    assert_eq!(p.interval(0.0, 0.0).unwrap(), base, "no signal, no tightening");
+    let mut last = base;
+    for rate in [0.001, 0.01, 0.05, 0.2, 1.0] {
+        let d = p.interval(rate, 0.0).unwrap();
+        assert!(d <= last, "interval must tighten monotonically (rate {rate})");
+        last = d;
+    }
+    // Halved exactly at the threshold, through either signal channel —
+    // the effective signal is the max of the two.
+    assert_eq!(p.interval(0.05, 0.0).unwrap(), base / 2);
+    assert_eq!(p.interval(0.0, 0.05).unwrap(), base / 2);
+    assert_eq!(p.interval(0.02, 0.05).unwrap(), p.interval(0.05, 0.02).unwrap());
+
+    // Fixed ignores the signals entirely; Off has no interval.
+    assert_eq!(ScrubPolicy::Fixed(base).interval(1.0, 1.0).unwrap(), base);
+    assert!(ScrubPolicy::Off.interval(1.0, 1.0).is_none());
+}
+
+// ------------------------------------------------------ telemetry ranking
+
+#[test]
+fn ewma_tracks_injected_rate_rank() {
+    let wf = weight_file(4096, 9);
+    let mut observed = Vec::new();
+    for rate in [0.005, 0.03, 0.15] {
+        let pool = BufferPool::new(8192 * 2, 16, 256, EvictPolicy::Lru);
+        pool.admit("m", &store_cfg(0.0, 5), &wf).unwrap();
+        for _ in 0..3 {
+            pool.disturb(&ErrorModel::at_rate(rate)).unwrap();
+            pool.scrub_pass().unwrap();
+        }
+        let t = pool.scrub_telemetry();
+        assert!(t.observed_rate > 0.0, "rate {rate}: EWMA never primed");
+        assert_eq!(t.bank_rates.len(), 16);
+        observed.push(t.observed_rate);
+    }
+    assert!(
+        observed[0] < observed[1] && observed[1] < observed[2],
+        "EWMA must rank injected rates: {observed:?}"
+    );
+}
+
+// --------------------------------------------------------- wear coupling
+
+#[test]
+fn scrub_repairs_charge_pool_wear() {
+    let total_writes = |pool: &BufferPool| -> f64 {
+        pool.bank_wear()
+            .iter()
+            .map(|w| w.mean_writes * w.extents as f64)
+            .sum()
+    };
+    let wf = weight_file(4096, 7);
+    let pool = BufferPool::new(8192 * 2, 16, 256, EvictPolicy::Lru);
+    pool.admit("m", &store_cfg(0.0, 3), &wf).unwrap();
+    let before = total_writes(&pool);
+    assert!(pool.disturb(&ErrorModel::at_rate(0.4)).unwrap() > 0);
+    let t = pool.scrub_pass().unwrap();
+    assert!(t.corrected_words > 0);
+    assert!(
+        total_writes(&pool) > before,
+        "scrub rewrites must age the banks through the wear ledger"
+    );
+}
